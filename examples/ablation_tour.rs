@@ -1,0 +1,58 @@
+//! Tour of every serving method on the same workload — a narrative walk
+//! through the paper's §6.3/§6.4 story on one prompt batch: how gating,
+//! prefetching and DP caching each change where the time goes.
+//!
+//!     cargo run --release --example ablation_tour
+
+use anyhow::{Context, Result};
+
+use adapmoe::bench_support::{decode_eval, eval_stream, method_engine, timed_settings};
+use adapmoe::coordinator::policy::METHODS;
+use adapmoe::memory::quant::QuantKind;
+use adapmoe::util::timer::Table;
+
+fn main() -> Result<()> {
+    let dir = std::path::PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".into()),
+    );
+    eval_stream(&dir).context("run `make artifacts` first")?;
+    let eval = eval_stream(&dir)?;
+    let tokens = 32;
+
+    println!("ablation tour: {tokens} eval tokens per method (rtx4090, int4, cache 32/64)\n");
+    let mut table = Table::new(&[
+        "method",
+        "tok/s",
+        "p50 ms",
+        "stall %",
+        "on-demand/tok",
+        "cache hit %",
+        "single %",
+    ]);
+    for &m in METHODS {
+        let settings = timed_settings(32, QuantKind::Int4, "rtx4090");
+        let mut engine = method_engine(&dir, m, &settings)?;
+        decode_eval(&mut engine, &eval, tokens, 0)?;
+        let tr = &engine.trace;
+        let total = tr.token_latency.sum();
+        let stall = tr.stall_ns as f64 / 1e9;
+        let od: u64 = tr.on_demand.iter().sum();
+        let (h, miss, _) = engine.cache.stats();
+        table.row(&[
+            m.to_string(),
+            format!("{:.2}", tr.tokens_per_sec()),
+            format!("{:.1}", tr.token_latency.p50() * 1e3),
+            format!("{:.0}%", 100.0 * stall / total.max(1e-12)),
+            format!("{:.2}", od as f64 / tr.token_latency.len().max(1) as f64),
+            format!("{:.0}%", 100.0 * h as f64 / (h + miss).max(1) as f64),
+            format!("{:.0}%", 100.0 * tr.mean_single_ratio()),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nreading guide: baseline drowns in on-demand loads; prefetching converts\n\
+         them to hits; gating removes ~25% of expert work outright; DP caching\n\
+         shifts slots to early (sensitive, hard-to-prefetch) layers."
+    );
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! End-to-end serving demo (the E2E validation run recorded in
+//! EXPERIMENTS.md): starts the TCP server with the full AdapMoE stack and
+//! drives it with concurrent clients sampling prompts from the eval corpus,
+//! then reports latency/throughput.
+//!
+//!     cargo run --release --example serve_demo [-- --clients 6 --requests 12]
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use adapmoe::coordinator::engine::Engine;
+use adapmoe::coordinator::policy::{method, RunSettings};
+use adapmoe::coordinator::profile::Profile;
+use adapmoe::memory::platform::Platform;
+use adapmoe::memory::quant::QuantKind;
+use adapmoe::model::tokenizer::{ByteTokenizer, EvalStream};
+use adapmoe::server::tcp;
+use adapmoe::util::cli::Args;
+use adapmoe::util::rng::Rng;
+use adapmoe::util::stats::Summary;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let dir = std::path::PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let n_clients = args.usize_or("clients", 6);
+    let n_requests = args.usize_or("requests", 12);
+    let max_new = args.usize_or("max-new", 24);
+    let addr = args.str_or("addr", "127.0.0.1:17412");
+    let platform = args.str_or("platform", "rtx4090");
+
+    let eval = EvalStream::load(&dir.join("tokens_eval.bin"))
+        .context("run `make artifacts` first")?;
+
+    // server thread (PJRT is single-threaded: engine lives entirely there)
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let sd = Arc::clone(&shutdown);
+    let (sdir, saddr, splat) = (dir.clone(), addr.clone(), platform.clone());
+    let server = std::thread::spawn(move || -> Result<u64> {
+        let profile = Profile::load(&sdir)?;
+        let settings = RunSettings::new(
+            4,
+            32,
+            QuantKind::Int4,
+            Platform::preset(&splat).context("bad platform")?,
+        );
+        let ecfg = method("adapmoe", &settings, &profile).unwrap();
+        let engine = Engine::from_artifacts(&sdir, ecfg)?;
+        tcp::serve(engine, &saddr, sd)
+    });
+    // wait for bind + engine compile
+    std::thread::sleep(std::time::Duration::from_millis(2500));
+
+    println!(
+        "serve_demo: {n_clients} clients × {n_requests} requests, {max_new} tokens each, \
+         platform={platform}, batch=4, int4, cache 32/64"
+    );
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let addr = addr.clone();
+            let tokens = eval.tokens.clone();
+            std::thread::spawn(move || -> Result<Vec<(f64, f64)>> {
+                let eval = EvalStream::from_tokens(tokens);
+                let mut rng = Rng::new(c as u64 + 1);
+                let mut lat = Vec::new();
+                for _ in 0..n_requests {
+                    let prompt_toks = eval.sample_prompt(&mut rng, 12);
+                    let prompt = ByteTokenizer::decode(&prompt_toks);
+                    let (_text, queue_ms, total_ms) =
+                        tcp::client_request(&addr, &prompt, max_new)?;
+                    lat.push((queue_ms, total_ms));
+                }
+                Ok(lat)
+            })
+        })
+        .collect();
+
+    let mut queue = Summary::new();
+    let mut total = Summary::new();
+    for h in handles {
+        for (q, t) in h.join().unwrap()? {
+            queue.add(q);
+            total.add(t);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let completions = (n_clients * n_requests) as f64;
+
+    println!("\n== serving results ==");
+    println!("completions:      {completions}");
+    println!("wall time:        {wall:.2}s");
+    println!(
+        "throughput:       {:.2} req/s | {:.1} tok/s",
+        completions / wall,
+        completions * max_new as f64 / wall
+    );
+    println!(
+        "request latency:  p50 {:.0}ms  p99 {:.0}ms  mean {:.0}ms",
+        total.p50(),
+        total.p99(),
+        total.mean()
+    );
+    println!("queue wait:       p50 {:.0}ms  p99 {:.0}ms", queue.p50(), queue.p99());
+
+    shutdown.store(true, Ordering::SeqCst);
+    let served = server.join().unwrap()?;
+    println!("server saw {served} completions");
+    Ok(())
+}

@@ -1,0 +1,173 @@
+"""Build-time entry point: train -> profile -> AOT-export all artifacts.
+
+    cd python && python -m compile.aot --out-dir ../artifacts [--config tiny]
+                                       [--steps N] [--fast]
+
+Outputs (see DESIGN.md 'Artifacts contract'):
+    manifest.json     model config + artifact list + shapes
+    weights.bin       all trained tensors (f32)
+    profile.json      sensitivity / threshold / α / β / similarity / scores
+    tokens_eval.bin   held-out byte stream for rust-side accuracy evals
+    *.hlo.txt         one per serving component × batch size
+
+Python never runs after this; the rust binary consumes the directory.
+"""
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import CONFIGS, ModelConfig, TrainConfig
+from .export import lower_to_file, write_json, write_weights
+from .model import (attn_step, dense_step, embed_step, gate_step,
+                    pre_gate_step, unembed_step)
+from .train import fisher_sensitivity, train, train_pre_gate
+
+
+# Number of f-tiles per expert for tile-wise scheduling (must divide d_ff;
+# keep in sync with rust --n-tiles default).
+TILE_SPLIT = 4
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def export_components(cfg: ModelConfig, out_dir: str) -> dict:
+    """Lower every serving component to HLO text; return manifest entries."""
+    d, V, N, f = cfg.d_model, cfg.vocab_size, cfg.n_experts, cfg.d_ff
+    H, S, hd = cfg.n_heads, cfg.max_seq, cfg.head_dim
+    L = cfg.n_layers
+    arts = {}
+
+    for B in cfg.batch_sizes:
+        arts[f"embed_b{B}"] = lower_to_file(
+            embed_step,
+            (spec([B], jnp.int32), spec([V, d])),
+            f"{out_dir}/embed_b{B}.hlo.txt")
+
+        arts[f"attn_step_b{B}"] = lower_to_file(
+            lambda h, n, wq, wk, wv, wo, kc, vc, pos: attn_step(
+                cfg, h, n, wq, wk, wv, wo, kc, vc, pos),
+            (spec([B, d]), spec([d]), spec([d, d]), spec([d, d]),
+             spec([d, d]), spec([d, d]), spec([B, H, S, hd]),
+             spec([B, H, S, hd]), spec([B], jnp.int32)),
+            f"{out_dir}/attn_step_b{B}.hlo.txt")
+
+        arts[f"gate_b{B}"] = lower_to_file(
+            lambda h, n, wg: gate_step(cfg, h, n, wg),
+            (spec([B, d]), spec([d]), spec([d, N])),
+            f"{out_dir}/gate_b{B}.hlo.txt")
+
+        # L1 Pallas kernel is inside this one.
+        from .kernels.expert_ffn import expert_ffn
+        arts[f"expert_ffn_b{B}"] = lower_to_file(
+            lambda x, w1, w3, w2, coef: (expert_ffn(x, w1, w3, w2, coef),),
+            (spec([B, d]), spec([d, f]), spec([d, f]), spec([f, d]),
+             spec([B])),
+            f"{out_dir}/expert_ffn_b{B}.hlo.txt")
+
+        # Tile-shaped expert FFN: the unit of tile-wise scheduling (Fig. 6).
+        # SwiGLU f-tiles are independent and additive, so computing each
+        # arrived tile separately and summing reproduces the full expert.
+        ft = f // TILE_SPLIT
+        arts[f"expert_ffn_tile_b{B}"] = lower_to_file(
+            lambda x, w1, w3, w2, coef: (expert_ffn(x, w1, w3, w2, coef),),
+            (spec([B, d]), spec([d, ft]), spec([d, ft]), spec([ft, d]),
+             spec([B])),
+            f"{out_dir}/expert_ffn_tile_b{B}.hlo.txt")
+
+        arts[f"pre_gate_b{B}"] = lower_to_file(
+            lambda h, n, w: (pre_gate_step(cfg, h, n, w),),
+            (spec([B, d]), spec([d]), spec([d, N])),
+            f"{out_dir}/pre_gate_b{B}.hlo.txt")
+
+        arts[f"unembed_b{B}"] = lower_to_file(
+            lambda h, n, w: (unembed_step(cfg, h, n, w),),
+            (spec([B, d]), spec([d]), spec([d, V])),
+            f"{out_dir}/unembed_b{B}.hlo.txt")
+
+    # Monolithic dense reference, smallest batch only (it is L× bigger).
+    B = cfg.batch_sizes[0]
+
+    def dense_wrapper(tokens, kc, vc, pos, *flat):
+        params = dict(zip(param_order, flat))
+        return dense_step(cfg, params, tokens, kc, vc, pos)
+
+    from .model import init_params
+    # pre_gate is unused by dense_step; XLA prunes unused entry parameters
+    # at compile time, so keep the supplied argument list in sync.
+    param_order = [k for k in init_params(cfg, seed=0) if k != "pre_gate"]
+    flat_specs = [spec(init_params(cfg, seed=0)[k].shape) for k in param_order]
+    arts[f"dense_step_b{B}"] = lower_to_file(
+        dense_wrapper,
+        (spec([B], jnp.int32), spec([L, B, H, S, hd]), spec([L, B, H, S, hd]),
+         spec([B], jnp.int32), *flat_specs),
+        f"{out_dir}/dense_step_b{B}.hlo.txt")
+    arts[f"dense_step_b{B}"]["param_order"] = param_order
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--config", default="tiny", choices=list(CONFIGS))
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="cut training for CI smoke builds")
+    ap.add_argument("--target-ratio", type=float, default=0.24)
+    args = ap.parse_args()
+
+    cfg = CONFIGS[args.config]()
+    tc = TrainConfig()
+    if args.fast:
+        tc.steps, tc.pre_gate_steps, tc.fisher_batches = 60, 40, 4
+    if args.steps is not None:
+        tc.steps = args.steps
+
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    t0 = time.time()
+
+    print(f"[aot] training {cfg.name} ({tc.steps} steps)...")
+    params, info = train(cfg, tc)
+
+    print("[aot] fisher sensitivity...")
+    data = np.frombuffer(info["train_bytes"], np.uint8)
+    sens = fisher_sensitivity(cfg, params, data, tc)
+    print("  S_i =", np.array2string(sens, precision=4))
+
+    print("[aot] predictive gate (layer 0)...")
+    params["pre_gate"] = train_pre_gate(cfg, params, data, tc)
+
+    print("[aot] offline profile...")
+    from .profile_offline import build_profile
+    profile = build_profile(cfg, tc, params, sens, data, args.target_ratio)
+    profile["train_losses"] = info["losses"]
+    write_json(f"{out}/profile.json", profile)
+
+    print("[aot] exporting weights + eval tokens...")
+    write_weights(f"{out}/weights.bin",
+                  {k: np.asarray(v) for k, v in params.items()})
+    with open(f"{out}/tokens_eval.bin", "wb") as fh:
+        fh.write(info["eval_bytes"])
+
+    print("[aot] lowering components to HLO text...")
+    arts = export_components(cfg, out)
+
+    manifest = {
+        "config": cfg.to_dict(),
+        "train": {"steps": tc.steps, "final_ce": info["losses"][-1][1]},
+        "artifacts": arts,
+        "files": ["weights.bin", "profile.json", "tokens_eval.bin"],
+    }
+    write_json(f"{out}/manifest.json", manifest)
+    print(f"[aot] done in {time.time() - t0:.1f}s -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Model/architecture configuration shared by train.py, model.py and aot.py.
+
+The rust side reads the same values from artifacts/manifest.json — this file
+is the single source of truth at build time.
+"""
+
+from dataclasses import dataclass, asdict, field
+from typing import List
+
+
+@dataclass
+class ModelConfig:
+    """Mixtral-architecture MoE decoder configuration.
+
+    Defaults are the `tiny` build-time config: byte-level vocab, 8 layers of
+    8 experts with top-2 routing — small enough to train on CPU in minutes,
+    large enough that gate-score skew / cross-layer similarity / Fisher
+    sensitivities (everything AdapMoE keys on) emerge from training.
+    """
+
+    name: str = "tiny"
+    vocab_size: int = 256          # byte-level tokenizer
+    d_model: int = 128
+    n_heads: int = 4
+    head_dim: int = 32             # d_model / n_heads
+    n_layers: int = 8
+    n_experts: int = 8             # N in the paper
+    top_k: int = 2                 # K in the paper (Mixtral: 2 of 8)
+    d_ff: int = 256                # per-expert SwiGLU hidden dim
+    max_seq: int = 256             # KV-cache length
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+    batch_sizes: List[int] = field(default_factory=lambda: [1, 4, 8])
+
+    def __post_init__(self):
+        assert self.d_model == self.n_heads * self.head_dim
+        assert self.top_k <= self.n_experts
+
+    # -- derived sizes ------------------------------------------------------
+    @property
+    def expert_params(self) -> int:
+        """f32 parameter count of one expert (w1 + w3 + w2)."""
+        return 3 * self.d_model * self.d_ff
+
+    @property
+    def expert_bytes_f32(self) -> int:
+        return 4 * self.expert_params
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+@dataclass
+class TrainConfig:
+    """Build-time training hyperparameters (synthetic multi-domain corpus)."""
+
+    steps: int = 300
+    batch: int = 16
+    seq: int = 96
+    lr: float = 3e-3
+    warmup: int = 40
+    weight_decay: float = 0.01
+    aux_loss_coef: float = 0.02    # Switch-style load-balancing loss
+    seed: int = 0
+    corpus_bytes: int = 1 << 19    # 512 KiB synthetic corpus
+    eval_bytes: int = 1 << 15      # 32 KiB held-out split
+    fisher_batches: int = 12       # batches used for Fisher diag estimate
+    pre_gate_steps: int = 200      # predictive-gate (layer 0) training steps
+
+
+def small_config() -> ModelConfig:
+    """Larger config used to demonstrate scaling (Fig. 8 'model sizes')."""
+    return ModelConfig(
+        name="small",
+        d_model=256,
+        n_heads=8,
+        head_dim=32,
+        n_layers=12,
+        d_ff=512,
+    )
+
+
+def tiny_config() -> ModelConfig:
+    return ModelConfig()
+
+
+def micro_config() -> ModelConfig:
+    """2-layer smoke config for CI / export tests — not for experiments."""
+    return ModelConfig(
+        name="micro",
+        d_model=32,
+        n_heads=2,
+        head_dim=16,
+        n_layers=2,
+        d_ff=64,
+        max_seq=64,
+        batch_sizes=[1, 4],
+    )
+
+
+CONFIGS = {"tiny": tiny_config, "small": small_config, "micro": micro_config}

@@ -1,0 +1,115 @@
+"""Synthetic multi-domain byte corpus for build-time training.
+
+MMLU/ARC and the Mixtral pretraining mix are unavailable offline; the
+substitution (DESIGN.md) is a deterministic mixture of structurally distinct
+"domains" so the trained router has something real to specialize on — which
+is exactly the property AdapMoE's gate-score-skew and sensitivity analyses
+depend on. Domains interleave in paragraphs, mimicking multi-domain
+pretraining data.
+"""
+
+import numpy as np
+
+DOMAINS = ["arith", "json", "english", "dna", "brackets", "code"]
+
+_WORDS = (
+    "the of and to in is that it for on with as are this be at or from by "
+    "we you they model expert gate layer cache token load fetch memory fast "
+    "slow system paper result method test value state run time new old"
+).split()
+
+_IDENTS = "xyzabcij"
+
+
+def _gen_arith(rng: np.random.Generator, n: int) -> bytes:
+    out = []
+    while sum(len(s) for s in out) < n:
+        a, b = rng.integers(0, 100, 2)
+        op = rng.choice(["+", "-", "*"])
+        r = {"+": a + b, "-": a - b, "*": a * b}[op]
+        out.append(f"{a}{op}{b}={r};")
+    return "".join(out).encode()[:n]
+
+
+def _gen_json(rng: np.random.Generator, n: int) -> bytes:
+    out = []
+    while sum(len(s) for s in out) < n:
+        k = rng.choice(_WORDS)
+        v = rng.integers(0, 1000)
+        out.append('{"%s":%d,"ok":%s}' % (k, v, "true" if rng.random() < 0.5 else "false"))
+    return "".join(out).encode()[:n]
+
+
+def _gen_english(rng: np.random.Generator, n: int) -> bytes:
+    out = []
+    while sum(len(s) + 1 for s in out) < n:
+        ln = rng.integers(4, 12)
+        out.append(" ".join(rng.choice(_WORDS, ln)) + ".")
+    return " ".join(out).encode()[:n]
+
+
+def _gen_dna(rng: np.random.Generator, n: int) -> bytes:
+    return rng.choice([65, 67, 71, 84], n).astype(np.uint8).tobytes()  # ACGT
+
+
+def _gen_brackets(rng: np.random.Generator, n: int) -> bytes:
+    """Balanced bracket sequences — forces stack-like structure."""
+    out, depth = [], 0
+    pairs = [("(", ")"), ("[", "]"), ("{", "}")]
+    stack = []
+    while len(out) < n:
+        if depth > 0 and (depth > 8 or rng.random() < 0.45):
+            out.append(stack.pop())
+            depth -= 1
+        else:
+            o, c = pairs[rng.integers(0, 3)]
+            out.append(o)
+            stack.append(c)
+            depth += 1
+    return "".join(out).encode()[:n]
+
+
+def _gen_code(rng: np.random.Generator, n: int) -> bytes:
+    out = []
+    while sum(len(s) for s in out) < n:
+        a, b = rng.choice(list(_IDENTS), 2)
+        v = rng.integers(0, 256)
+        out.append(f"let {a}={b}+{v};\n")
+    return "".join(out).encode()[:n]
+
+
+_GENS = {
+    "arith": _gen_arith,
+    "json": _gen_json,
+    "english": _gen_english,
+    "dna": _gen_dna,
+    "brackets": _gen_brackets,
+    "code": _gen_code,
+}
+
+
+def generate_corpus(total_bytes: int, seed: int = 0, para: int = 256) -> bytes:
+    """Deterministic interleaved multi-domain corpus of `total_bytes`."""
+    rng = np.random.default_rng(seed)
+    chunks = []
+    size = 0
+    while size < total_bytes:
+        dom = DOMAINS[rng.integers(0, len(DOMAINS))]
+        c = _GENS[dom](rng, para) + b"\n"
+        chunks.append(c)
+        size += len(c)
+    return b"".join(chunks)[:total_bytes]
+
+
+def split_corpus(total_bytes: int, eval_bytes: int, seed: int = 0):
+    """(train_bytes, eval_bytes) — eval is a held-out tail with a fresh seed
+    so sequences never overlap the training stream."""
+    train = generate_corpus(total_bytes, seed=seed)
+    evald = generate_corpus(eval_bytes, seed=seed + 1)
+    return train, evald
+
+
+def sample_batch(data: np.ndarray, rng: np.random.Generator, batch: int, seq: int):
+    """Random contiguous windows -> int32 [batch, seq+1] (inputs+target)."""
+    starts = rng.integers(0, len(data) - seq - 1, batch)
+    return np.stack([data[s: s + seq + 1] for s in starts]).astype(np.int32)

@@ -1,0 +1,97 @@
+"""Artifact writers: HLO text lowering + the weights.bin tensor container.
+
+weights.bin layout (little-endian), read by rust/src/model/weights.rs:
+
+    magic   b"AMOE"
+    u32     version (1)
+    u32     n_tensors
+    repeat n_tensors:
+        u32         name_len
+        bytes       name (utf-8)
+        u8          dtype (0 = f32, 1 = i32, 2 = u8)
+        u8          ndim
+        u32 * ndim  dims
+        bytes       raw data (row-major, LE)
+"""
+
+import json
+import struct
+from typing import Dict
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+MAGIC = b"AMOE"
+VERSION = 1
+DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.uint8): 2}
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowered fn -> HLO text (the interchange the xla crate accepts).
+
+    HLO *text*, not a serialized HloModuleProto: jax ≥ 0.5 emits 64-bit
+    instruction ids that xla_extension 0.5.1 rejects; the text parser
+    reassigns ids. `return_tuple=True` so rust unwraps with to_tuple-N.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, example_args, path: str) -> dict:
+    """jit+lower fn at example_args, write HLO text, return shape metadata."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return {
+        "path": path.split("/")[-1],
+        "inputs": [
+            {"shape": list(a.shape), "dtype": str(a.dtype)} for a in example_args
+        ],
+    }
+
+
+def write_weights(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in DTYPES:
+                raise ValueError(f"unsupported dtype {arr.dtype} for {name}")
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", DTYPES[arr.dtype], arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes())
+
+
+def read_weights(path: str) -> Dict[str, np.ndarray]:
+    """Reader (python side — used by tests to round-trip the container)."""
+    inv = {v: k for k, v in DTYPES.items()}
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        version, n = struct.unpack("<II", f.read(8))
+        assert version == VERSION
+        for _ in range(n):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode()
+            dt, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dtype = inv[dt]
+            count = int(np.prod(dims)) if ndim else 1
+            out[name] = np.frombuffer(
+                f.read(count * dtype.itemsize), dtype
+            ).reshape(dims)
+    return out
+
+
+def write_json(path: str, obj) -> None:
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1)

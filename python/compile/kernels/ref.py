@@ -1,0 +1,43 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground-truth definitions the kernels (and the rust runtime,
+transitively) are tested against. Keep them boring and obviously correct.
+"""
+
+import jax.numpy as jnp
+
+
+def silu(x):
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def expert_ffn_ref(x, w1, w3, w2, coef):
+    """SwiGLU expert FFN, scaled per-row by `coef`.
+
+    x:    [B, d]   MoE-block input (already RMSNormed)
+    w1:   [d, f]   gate projection
+    w3:   [d, f]   up projection
+    w2:   [f, d]   down projection
+    coef: [B]      per-row routing weight (0 for rows not routed here)
+
+    returns [B, d] = coef[:, None] * ((silu(x @ w1) * (x @ w3)) @ w2)
+    """
+    h = silu(x @ w1) * (x @ w3)
+    return coef[:, None] * (h @ w2)
+
+
+def rmsnorm_ref(x, w, eps=1e-5):
+    """RMSNorm over the last axis. x: [..., d], w: [d]."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(ms + eps)) * w
+
+
+def softmax_ref(logits):
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def gate_ref(x, wg):
+    """Router probabilities. x: [B, d] (normed), wg: [d, N] -> [B, N]."""
+    return softmax_ref(x @ wg)

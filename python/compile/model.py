@@ -1,0 +1,315 @@
+"""L2: Mixtral-architecture MoE decoder in JAX.
+
+Two usage modes:
+
+1. **Training / profiling** (`forward_seq`, `loss_fn`): whole-sequence
+   teacher-forced forward with dense-weighted top-k MoE — used by train.py
+   and profile_offline.py at build time.
+
+2. **Serving components** (`embed_step`, `attn_step`, `gate_step`,
+   `pre_gate_step`, `unembed_step`, `dense_step`): per-decode-step functions
+   with explicit weight arguments, each AOT-lowered to its own HLO artifact
+   by aot.py. The rust L3 coordinator composes them and owns the residual
+   stream, so it can schedule each expert's `expert_ffn` call against the
+   expert cache / transfer engine (that is the whole point of AdapMoE).
+
+All expert math funnels through the L1 Pallas kernel
+(`kernels.expert_ffn.expert_ffn`), so the serving HLO contains the tiled
+kernel, and training/serving share one definition.
+"""
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .kernels.expert_ffn import expert_ffn
+from .kernels.ref import rmsnorm_ref, softmax_ref
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Initialize all model parameters as a flat name->array dict.
+
+    Flat naming (layer index embedded in the key) matches the weights.bin
+    container read by rust/src/model/weights.rs.
+    """
+    rng = np.random.default_rng(seed)
+    d, f, N = cfg.d_model, cfg.d_ff, cfg.n_experts
+
+    def dense(shape, scale=None):
+        scale = scale if scale is not None else (1.0 / np.sqrt(shape[0]))
+        return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+    p: Params = {
+        "embed": dense((cfg.vocab_size, d), 0.02),
+        "out_norm": jnp.ones((d,), jnp.float32),
+        "unembed": dense((d, cfg.vocab_size)),
+        # predictive gate for layer 0 (paper §4.3, eq. 9) — trained separately
+        "pre_gate": dense((d, N)),
+    }
+    for i in range(cfg.n_layers):
+        p[f"l{i}.attn_norm"] = jnp.ones((d,), jnp.float32)
+        p[f"l{i}.wq"] = dense((d, d))
+        p[f"l{i}.wk"] = dense((d, d))
+        p[f"l{i}.wv"] = dense((d, d))
+        p[f"l{i}.wo"] = dense((d, d))
+        p[f"l{i}.moe_norm"] = jnp.ones((d,), jnp.float32)
+        p[f"l{i}.gate"] = dense((d, N))
+        for e in range(N):
+            p[f"l{i}.e{e}.w1"] = dense((d, f))
+            p[f"l{i}.e{e}.w3"] = dense((d, f))
+            p[f"l{i}.e{e}.w2"] = dense((f, d))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+def rope_angles(cfg: ModelConfig, pos):
+    """pos [...,] int32 -> cos/sin tables [..., head_dim/2]."""
+    hd = cfg.head_dim
+    inv_freq = 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = pos[..., None].astype(jnp.float32) * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., hd], cos/sin broadcastable [..., hd/2] — rotate (even, odd) pairs."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1)
+    return out.reshape(x.shape)
+
+
+def topk_mask(probs, k: int):
+    """0/1 mask of the k largest entries along the last axis.
+
+    Implemented as k rounds of masked max rather than jnp.sort: selection is
+    non-differentiable anyway (the threshold sits under stop_gradient), and
+    this image's jaxlib cannot differentiate through lax.sort (its gather
+    lowering predates operand_batching_dims).
+    """
+    masked = probs
+    thresh = None
+    for _ in range(k):
+        thresh = jnp.max(masked, axis=-1, keepdims=True)
+        masked = jnp.where(masked >= thresh, -jnp.inf, masked)
+    return (probs >= jax.lax.stop_gradient(thresh)).astype(probs.dtype)
+
+
+def _moe_dense_mix(cfg: ModelConfig, params: Params, layer: int, xn,
+                   use_kernel: bool = False):
+    """Dense weighted top-k MoE over a [T, d] batch of normed inputs.
+
+    Mixes every expert with renormalized top-k gate probabilities.
+    use_kernel=True routes through the L1 Pallas kernel (serving artifacts);
+    training/profiling use the jnp oracle because pallas_call's program_id
+    has no JVP rule on this jax build — the two are assert_allclose-equal in
+    python/tests/test_kernel.py, so gradients are identical.
+    Returns (mix [T, d], probs [T, N]).
+    """
+    from .kernels.ref import expert_ffn_ref
+
+    N, K = cfg.n_experts, cfg.top_k
+    ffn = expert_ffn if use_kernel else expert_ffn_ref
+    probs = softmax_ref(xn @ params[f"l{layer}.gate"])          # [T, N]
+    # top-k mask + renormalization (Mixtral semantics)
+    wk = probs * topk_mask(probs, K)
+    wk = wk / jnp.sum(wk, axis=-1, keepdims=True)
+    mix = jnp.zeros_like(xn)
+    for e in range(N):
+        mix = mix + ffn(
+            xn,
+            params[f"l{layer}.e{e}.w1"],
+            params[f"l{layer}.e{e}.w3"],
+            params[f"l{layer}.e{e}.w2"],
+            wk[:, e],
+        )
+    return mix, probs
+
+
+# ---------------------------------------------------------------------------
+# Training-mode whole-sequence forward
+# ---------------------------------------------------------------------------
+
+def forward_seq(cfg: ModelConfig, params: Params, tokens, *, collect=False):
+    """Teacher-forced forward over tokens [B, S] -> logits [B, S, V].
+
+    collect=True additionally returns per-layer MoE-block inputs (for the
+    cross-layer similarity study, Fig. 3) and gate probs (Fig. 2 / α_i).
+    """
+    B, S = tokens.shape
+    d = cfg.d_model
+    h = params["embed"][tokens]                                  # [B, S, d]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    cos, sin = rope_angles(cfg, pos)                             # [S, hd/2]
+    causal = jnp.tril(jnp.ones((S, S), jnp.bool_))
+
+    moe_inputs: List[jnp.ndarray] = []
+    gate_probs: List[jnp.ndarray] = []
+
+    for i in range(cfg.n_layers):
+        # -- attention ------------------------------------------------------
+        xn = rmsnorm_ref(h, params[f"l{i}.attn_norm"], cfg.rms_eps)
+        q = (xn @ params[f"l{i}.wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+        k = (xn @ params[f"l{i}.wk"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+        v = (xn @ params[f"l{i}.wv"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+        q = apply_rope(q, cos[None, :, None, :], sin[None, :, None, :])
+        k = apply_rope(k, cos[None, :, None, :], sin[None, :, None, :])
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(cfg.head_dim)
+        att = jnp.where(causal[None, None], att, -1e30)
+        att = softmax_ref(att)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(B, S, d)
+        h = h + o @ params[f"l{i}.wo"]
+
+        # -- MoE FFN --------------------------------------------------------
+        if collect:
+            moe_inputs.append(h)
+        xn = rmsnorm_ref(h, params[f"l{i}.moe_norm"], cfg.rms_eps)
+        flat = xn.reshape(B * S, d)
+        mix, probs = _moe_dense_mix(cfg, params, i, flat)
+        if collect:
+            gate_probs.append(probs.reshape(B, S, cfg.n_experts))
+        h = h + mix.reshape(B, S, d)
+
+    hn = rmsnorm_ref(h, params["out_norm"], cfg.rms_eps)
+    logits = hn @ params["unembed"]
+    if collect:
+        return logits, {"moe_inputs": moe_inputs, "gate_probs": gate_probs,
+                        "final": hn}
+    return logits
+
+
+def loss_fn(cfg: ModelConfig, params: Params, tokens, aux_coef: float):
+    """Next-token CE + Switch-style load-balancing auxiliary loss."""
+    logits, extras = forward_seq(cfg, params, tokens[:, :-1], collect=True)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.mean(jnp.take_along_axis(logp, targets[..., None], axis=-1))
+
+    aux = 0.0
+    N, K = cfg.n_experts, cfg.top_k
+    for probs in extras["gate_probs"]:                # [B, S, N]
+        p = probs.reshape(-1, N)
+        # fraction of tokens whose top-k includes expert e
+        sel = topk_mask(p, K)
+        frac_tokens = jnp.mean(sel, axis=0) / K
+        frac_probs = jnp.mean(p, axis=0)
+        aux = aux + N * jnp.sum(frac_tokens * frac_probs)
+    aux = aux / cfg.n_layers
+    return ce + aux_coef * aux, (ce, aux)
+
+
+# ---------------------------------------------------------------------------
+# Serving components (one HLO artifact each; weights are ARGUMENTS)
+# ---------------------------------------------------------------------------
+# The rust engine owns the residual stream h [B, d] and the KV cache, and
+# calls these in sequence per decode step. Expert FFN calls are issued per
+# *expert* through the Pallas kernel, which is what lets L3 overlap expert
+# transfers with compute.
+
+def embed_step(tokens, embed):
+    """tokens [B] int32, embed [V, d] -> h [B, d]."""
+    return embed[tokens]
+
+
+def attn_step(cfg: ModelConfig, h, attn_norm, wq, wk, wv, wo,
+              k_cache, v_cache, pos):
+    """One decode step of causal attention with RoPE + KV cache.
+
+    h [B, d]; k_cache/v_cache [B, H, S, hd]; pos [B] int32 (index of the
+    current token for each row — rows may be at different positions under
+    continuous batching). Returns (h + attn_out, k_cache', v_cache').
+    """
+    B, d = h.shape
+    H, S, hd = cfg.n_heads, cfg.max_seq, cfg.head_dim
+    xn = rmsnorm_ref(h, attn_norm, cfg.rms_eps)
+    q = (xn @ wq).reshape(B, H, hd)
+    k = (xn @ wk).reshape(B, H, hd)
+    v = (xn @ wv).reshape(B, H, hd)
+    cos, sin = rope_angles(cfg, pos)                   # [B, hd/2]
+    q = apply_rope(q, cos[:, None, :], sin[:, None, :])
+    k = apply_rope(k, cos[:, None, :], sin[:, None, :])
+
+    def upd(cache_b, val_b, p):
+        # cache_b [H, S, hd], val_b [H, hd]
+        return jax.lax.dynamic_update_slice(cache_b, val_b[:, None, :], (0, p, 0))
+
+    k_cache = jax.vmap(upd)(k_cache, k, pos)
+    v_cache = jax.vmap(upd)(v_cache, v, pos)
+
+    att = jnp.einsum("bhd,bhsd->bhs", q, k_cache) / np.sqrt(hd)
+    valid = jnp.arange(S)[None, :] <= pos[:, None]     # [B, S]
+    att = jnp.where(valid[:, None, :], att, -1e30)
+    att = softmax_ref(att)
+    o = jnp.einsum("bhs,bhsd->bhd", att, v_cache).reshape(B, d)
+    return h + o @ wo, k_cache, v_cache
+
+
+def gate_step(cfg: ModelConfig, h, moe_norm, wg):
+    """h [B, d] -> (probs [B, N], xn [B, d]).
+
+    xn is the RMSNormed MoE-block input that the expert kernel consumes;
+    probs drive routing, adaptive gating, and (applied with the *next*
+    layer's wg) adaptive prefetching.
+    """
+    xn = rmsnorm_ref(h, moe_norm, cfg.rms_eps)
+    return softmax_ref(xn @ wg), xn
+
+
+def pre_gate_step(cfg: ModelConfig, h, out_norm, wpre):
+    """Predictive gate for layer 0 (paper eq. 9).
+
+    h [B, d] is the *unnormed* final residual of the previous token (what the
+    serving engine naturally holds after the last layer); the final RMSNorm
+    is folded in here so the serving path matches the training distribution
+    (train.py fits W_pre on normed final activations).
+    """
+    return softmax_ref(rmsnorm_ref(h, out_norm, cfg.rms_eps) @ wpre)
+
+
+def unembed_step(cfg: ModelConfig, h, out_norm, unembed):
+    """h [B, d] -> logits [B, V]."""
+    return rmsnorm_ref(h, out_norm, cfg.rms_eps) @ unembed
+
+
+def dense_step(cfg: ModelConfig, params: Params, tokens, k_caches, v_caches, pos):
+    """Monolithic single-step decode over ALL layers with dense top-k MoE.
+
+    The no-offloading reference: used by rust integration tests to check the
+    composed component path, and as the 'all weights resident' latency
+    reference. k_caches/v_caches: [L, B, H, S, hd].
+    """
+    h = embed_step(tokens, params["embed"])
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        h, kc, vc = attn_step(
+            cfg, h, params[f"l{i}.attn_norm"], params[f"l{i}.wq"],
+            params[f"l{i}.wk"], params[f"l{i}.wv"], params[f"l{i}.wo"],
+            k_caches[i], v_caches[i], pos)
+        new_k.append(kc)
+        new_v.append(vc)
+        probs, xn = gate_step(cfg, h, params[f"l{i}.moe_norm"], params[f"l{i}.gate"])
+        wk_ = probs * topk_mask(probs, cfg.top_k)
+        wk_ = wk_ / jnp.sum(wk_, axis=-1, keepdims=True)
+        for e in range(cfg.n_experts):
+            h = h + expert_ffn(
+                xn,
+                params[f"l{i}.e{e}.w1"],
+                params[f"l{i}.e{e}.w3"],
+                params[f"l{i}.e{e}.w2"],
+                wk_[:, e],
+            )
+    logits = unembed_step(cfg, h, params["out_norm"], params["unembed"])
+    return logits, jnp.stack(new_k), jnp.stack(new_v)

@@ -1,0 +1,200 @@
+"""Offline profiling pass (paper Fig. 4 'offline phase').
+
+From the trained model and a sample of the corpus, measure everything the
+online system needs as priors, plus the raw material for Figs. 2/3/9:
+
+  * per-layer gate-score stats (top-1 normalized score mean/histogram)
+  * cross-layer MoE-input cosine similarity (Observation 2 / Fig. 3)
+  * per-layer Fisher sensitivity (from train.fisher_sensitivity)
+  * α_i  — single-expert activation probability at the calibrated threshold
+  * β_i  — prefetch accuracy per layer (gate-reuse for i>0, predictive gate
+           for layer 0)
+  * threshold calibration: T such that the mean single-expert ratio hits a
+    target (the paper deploys 24%)
+
+Everything is computed with the *training-mode* forward on whole sequences —
+identical math to the serving path (shared components), enormously faster
+than stepping the AOT path in python.
+"""
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, TrainConfig
+from .corpus import sample_batch
+from .kernels.ref import rmsnorm_ref, softmax_ref
+from .model import Params, forward_seq
+
+
+def collect_traces(cfg: ModelConfig, params: Params, data: np.ndarray,
+                   seed: int, batches: int = 8, batch: int = 8, seq: int = 96):
+    """Run the model over samples; return stacked per-layer traces.
+
+    Returns dict with:
+      gate_probs   [L, T, N]  router probabilities per layer/token
+      moe_inputs   [L, T, d]  residual-stream inputs to each MoE block
+      final        [T, d]     final normed activations (for the pre-gate)
+      tokens       [T]        flattened token stream (aligned with traces)
+    """
+    rng = np.random.default_rng(seed)
+    fwd = jax.jit(lambda p, t: forward_seq(cfg, p, t, collect=True))
+    gp, mi, fin = [], [], []
+    for _ in range(batches):
+        tokens = jnp.asarray(sample_batch(data, rng, batch, seq)[:, :-1])
+        _, extras = fwd(params, tokens)
+        gp.append(np.stack([np.asarray(g).reshape(-1, cfg.n_experts)
+                            for g in extras["gate_probs"]]))
+        mi.append(np.stack([np.asarray(m).reshape(-1, cfg.d_model)
+                            for m in extras["moe_inputs"]]))
+        fin.append(np.asarray(extras["final"]).reshape(-1, cfg.d_model))
+    return {
+        "gate_probs": np.concatenate(gp, axis=1),   # [L, T, N]
+        "moe_inputs": np.concatenate(mi, axis=1),   # [L, T, d]
+        "final": np.concatenate(fin, axis=0),       # [T, d]
+        "batch": batch, "seq": seq,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Observation studies
+# ---------------------------------------------------------------------------
+
+def top1_score_stats(gate_probs: np.ndarray) -> Dict:
+    """Fig. 2(a): per-layer stats of the *normalized* top-1 score α.
+
+    α = p1 / (p1 + p2) — the top-1 share of the top-2 mass, the exact α in
+    paper eq. 3.
+    """
+    sorted_p = np.sort(gate_probs, axis=-1)
+    p1, p2 = sorted_p[..., -1], sorted_p[..., -2]
+    alpha = p1 / (p1 + p2 + 1e-12)                   # [L, T]
+    hist = [np.histogram(a, bins=20, range=(0.5, 1.0))[0].tolist()
+            for a in alpha]
+    return {
+        "alpha_mean": alpha.mean(axis=1).tolist(),
+        "alpha_p90": np.percentile(alpha, 90, axis=1).tolist(),
+        "alpha_hist20": hist,
+    }
+
+
+def cross_layer_similarity(moe_inputs: np.ndarray) -> list:
+    """Fig. 3: mean cosine similarity between MoE input of layer i and i+1."""
+    sims = []
+    for i in range(moe_inputs.shape[0] - 1):
+        a, b = moe_inputs[i], moe_inputs[i + 1]
+        num = np.sum(a * b, -1)
+        den = np.linalg.norm(a, axis=-1) * np.linalg.norm(b, axis=-1) + 1e-12
+        sims.append(float(np.mean(num / den)))
+    return sims
+
+
+# ---------------------------------------------------------------------------
+# Adaptive gating calibration (paper eq. 8)
+# ---------------------------------------------------------------------------
+
+def single_expert_mask(gate_probs: np.ndarray, sensitivity: np.ndarray,
+                       threshold: float) -> np.ndarray:
+    """(1-α)² · S_i ≤ T  -> bool [L, T] (True = activate only top-1)."""
+    sorted_p = np.sort(gate_probs, axis=-1)
+    p1, p2 = sorted_p[..., -1], sorted_p[..., -2]
+    alpha = p1 / (p1 + p2 + 1e-12)
+    return (1.0 - alpha) ** 2 * sensitivity[:, None] <= threshold
+
+
+def calibrate_threshold(gate_probs: np.ndarray, sensitivity: np.ndarray,
+                        target_ratio: float = 0.24) -> float:
+    """Binary-search T so the mean single-expert ratio hits target_ratio."""
+    lo, hi = 0.0, float(sensitivity.max()) + 1e-6
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        r = single_expert_mask(gate_probs, sensitivity, mid).mean()
+        if r < target_ratio:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+def per_layer_alpha(gate_probs: np.ndarray, sensitivity: np.ndarray,
+                    threshold: float) -> np.ndarray:
+    """α_i of the DP formulation: P(layer i activates a single expert)."""
+    return single_expert_mask(gate_probs, sensitivity, threshold).mean(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Prefetch accuracy β_i (paper §4.3 / Fig. 9(b))
+# ---------------------------------------------------------------------------
+
+def prefetch_accuracy(cfg: ModelConfig, params: Params,
+                      traces: Dict, wpre: np.ndarray) -> np.ndarray:
+    """β_i: fraction of layer-i top-2 experts found in the prefetch set.
+
+    Layer 0: predicted from the previous token's final activation via the
+    predictive gate (token-shifted). Layers i≥1: predicted by applying layer
+    i's own norm+gate to layer (i-1)'s MoE-block input (gate reuse —
+    the activations are nearly identical across layers, Observation 2).
+    """
+    L = cfg.n_layers
+    K = cfg.top_k
+    gate_probs = traces["gate_probs"]           # [L, T, N]
+    moe_inputs = traces["moe_inputs"]           # [L, T, d]
+    beta = np.zeros(L)
+
+    def topk(p, k=K):
+        return np.argsort(p, axis=-1)[..., -k:]
+
+    # layer 0: previous-token final activation -> predictive gate
+    final = traces["final"]                      # [T, d]
+    pred0 = softmax_np(final[:-1] @ np.asarray(wpre))
+    actual0 = topk(gate_probs[0][1:])
+    hits = np.mean([np.isin(actual0[t], topk(pred0[t])).mean()
+                    for t in range(actual0.shape[0])])
+    beta[0] = hits
+
+    for i in range(1, L):
+        xn = rmsnorm_np(moe_inputs[i - 1],
+                        np.asarray(params[f"l{i}.moe_norm"]), cfg.rms_eps)
+        pred = softmax_np(xn @ np.asarray(params[f"l{i}.gate"]))
+        actual = topk(gate_probs[i])
+        beta[i] = np.mean([np.isin(actual[t], topk(pred[t])).mean()
+                           for t in range(actual.shape[0])])
+    return beta
+
+
+def softmax_np(x):
+    m = x.max(axis=-1, keepdims=True)
+    e = np.exp(x - m)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def rmsnorm_np(x, w, eps):
+    ms = np.mean(np.square(x), axis=-1, keepdims=True)
+    return x / np.sqrt(ms + eps) * w
+
+
+# ---------------------------------------------------------------------------
+# Entry point used by aot.py
+# ---------------------------------------------------------------------------
+
+def build_profile(cfg: ModelConfig, tc: TrainConfig, params: Params,
+                  sensitivity: np.ndarray, train_data: np.ndarray,
+                  target_ratio: float = 0.24) -> Dict:
+    traces = collect_traces(cfg, params, train_data, tc.seed + 71)
+    gp = traces["gate_probs"]
+    thr = calibrate_threshold(gp, sensitivity, target_ratio)
+    alpha_i = per_layer_alpha(gp, sensitivity, thr)
+    beta_i = prefetch_accuracy(cfg, params, traces, params["pre_gate"])
+    score_stats = top1_score_stats(gp)
+    sims = cross_layer_similarity(traces["moe_inputs"])
+    return {
+        "sensitivity": sensitivity.tolist(),
+        "threshold": float(thr),
+        "target_single_ratio": target_ratio,
+        "alpha": alpha_i.tolist(),              # P(single expert) per layer
+        "beta": beta_i.tolist(),                # prefetch accuracy per layer
+        "similarity": sims,                     # Fig. 3 series
+        "score_stats": score_stats,             # Fig. 2 material
+    }

@@ -1,0 +1,206 @@
+"""Build-time training of the tiny Mixtral-style MoE + AdapMoE offline stats.
+
+Produces (in memory; aot.py writes them out):
+  * trained params
+  * per-layer Fisher sensitivity  S_i = Σ diag(F_i)      (paper eq. 5–8)
+  * trained predictive gate for layer 0                  (paper eq. 9)
+
+The Fisher diagonal is estimated exactly as the paper prescribes: F_i =
+E_d[g_d g_d^T] with g_d the gradient of the loss w.r.t. layer i's MoE-block
+*output*. We obtain those gradients by injecting zero-valued perturbations
+eps_i at each MoE output and differentiating w.r.t. eps_i.
+"""
+
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, TrainConfig
+from .corpus import sample_batch, split_corpus
+from .kernels.ref import rmsnorm_ref, softmax_ref
+from .model import (Params, apply_rope, forward_seq, init_params, loss_fn,
+                    rope_angles)
+
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam (no optax on this image)
+# ---------------------------------------------------------------------------
+
+def adam_init(params: Params):
+    z = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, wd, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * jnp.square(grads[k]) for k in params}
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+    new = {}
+    for k in params:
+        upd = (m[k] / bc1) / (jnp.sqrt(v[k] / bc2) + eps)
+        # no weight decay on norms / gates (keeps routing logits healthy)
+        if not (k.endswith("norm") or "gate" in k):
+            upd = upd + wd * params[k]
+        new[k] = params[k] - lr * upd
+    return new, {"m": m, "v": v, "t": t}
+
+
+def lr_schedule(tc: TrainConfig, step: int) -> float:
+    if step < tc.warmup:
+        return tc.lr * (step + 1) / tc.warmup
+    # cosine decay to 10%
+    frac = (step - tc.warmup) / max(1, tc.steps - tc.warmup)
+    return tc.lr * (0.1 + 0.9 * 0.5 * (1 + np.cos(np.pi * frac)))
+
+
+# ---------------------------------------------------------------------------
+# Main training loop
+# ---------------------------------------------------------------------------
+
+def train(cfg: ModelConfig, tc: TrainConfig, verbose: bool = True
+          ) -> Tuple[Params, Dict]:
+    """Train the model; returns (params, info dict with losses/corpus)."""
+    train_b, eval_b = split_corpus(tc.corpus_bytes, tc.eval_bytes, tc.seed)
+    data = np.frombuffer(train_b, np.uint8)
+    rng = np.random.default_rng(tc.seed + 17)
+
+    params = init_params(cfg, seed=tc.seed)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, tokens, lr):
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, tokens, tc.aux_loss_coef), has_aux=True
+        )(params)
+        params, opt = adam_update(params, grads, opt, lr, tc.weight_decay)
+        return params, opt, loss, ce, aux
+
+    losses = []
+    t0 = time.time()
+    for step in range(tc.steps):
+        tokens = jnp.asarray(sample_batch(data, rng, tc.batch, tc.seq))
+        lr = lr_schedule(tc, step)
+        params, opt, loss, ce, aux = step_fn(params, opt, tokens, lr)
+        if step % 50 == 0 or step == tc.steps - 1:
+            losses.append((step, float(ce)))
+            if verbose:
+                print(f"  step {step:4d}  ce={float(ce):.4f} "
+                      f"aux={float(aux):.4f}  ({time.time()-t0:.1f}s)")
+    return params, {"losses": losses, "train_bytes": train_b, "eval_bytes": eval_b}
+
+
+# ---------------------------------------------------------------------------
+# Fisher sensitivity (paper §4.2, eq. 5–8)
+# ---------------------------------------------------------------------------
+
+def _forward_with_eps(cfg: ModelConfig, params: Params, tokens, eps):
+    """forward_seq with additive perturbations at each MoE-block output.
+
+    d loss / d eps_i == d loss / d (MoE output of layer i). Re-implements the
+    training forward (kept in sync by test_train.py::test_eps_forward_matches).
+    """
+    from .model import _moe_dense_mix  # local import to avoid cycle at top
+
+    B, S = tokens.shape
+    d = cfg.d_model
+    h = params["embed"][tokens]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    cos, sin = rope_angles(cfg, pos)
+    causal = jnp.tril(jnp.ones((S, S), jnp.bool_))
+    for i in range(cfg.n_layers):
+        xn = rmsnorm_ref(h, params[f"l{i}.attn_norm"], cfg.rms_eps)
+        q = (xn @ params[f"l{i}.wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+        k = (xn @ params[f"l{i}.wk"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+        v = (xn @ params[f"l{i}.wv"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+        q = apply_rope(q, cos[None, :, None, :], sin[None, :, None, :])
+        k = apply_rope(k, cos[None, :, None, :], sin[None, :, None, :])
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(cfg.head_dim)
+        att = jnp.where(causal[None, None], att, -1e30)
+        att = softmax_ref(att)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(B, S, d)
+        h = h + o @ params[f"l{i}.wo"]
+
+        xn = rmsnorm_ref(h, params[f"l{i}.moe_norm"], cfg.rms_eps)
+        mix, _ = _moe_dense_mix(cfg, params, i, xn.reshape(B * S, d))
+        h = h + mix.reshape(B, S, d) + eps[i]          # <- perturbation point
+    hn = rmsnorm_ref(h, params["out_norm"], cfg.rms_eps)
+    logits = hn @ params["unembed"]
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    return -jnp.mean(jnp.take_along_axis(logp, tgt[..., None], axis=-1))
+
+
+def fisher_sensitivity(cfg: ModelConfig, params: Params, data: np.ndarray,
+                       tc: TrainConfig) -> np.ndarray:
+    """Per-layer Σ diag(F_i), F_i = E[g g^T], g = dL/d(MoE output of layer i).
+
+    diag(F)_k = E[g_k²], so Σdiag(F_i) = E[‖g_i‖²] over sample tokens.
+    """
+    rng = np.random.default_rng(tc.seed + 31)
+    L = cfg.n_layers
+
+    @jax.jit
+    def grads_fn(params, tokens):
+        B, S = tokens.shape
+        eps = [jnp.zeros((B, S, cfg.d_model), jnp.float32) for _ in range(L)]
+        g = jax.grad(lambda e: _forward_with_eps(cfg, params, tokens, e))(eps)
+        # mean over tokens of squared grad, summed over features
+        return jnp.stack([jnp.mean(jnp.sum(jnp.square(gi), -1)) for gi in g])
+
+    acc = np.zeros(L)
+    for _ in range(tc.fisher_batches):
+        tokens = jnp.asarray(sample_batch(data, rng, 8, 64)[:, :-1])
+        acc += np.asarray(grads_fn(params, tokens))
+    return acc / tc.fisher_batches
+
+
+# ---------------------------------------------------------------------------
+# Predictive gate for layer 0 (paper §4.3, eq. 9)
+# ---------------------------------------------------------------------------
+
+def train_pre_gate(cfg: ModelConfig, params: Params, data: np.ndarray,
+                   tc: TrainConfig, verbose: bool = True) -> jnp.ndarray:
+    """Train W_pre: last-layer activation of token t -> layer-0 gate of t+1.
+
+    Loss = KL(softmax(G_first(A_first))[:, 1:] || softmax(A_last @ W_pre)[:, :-1])
+    (paper eq. 9, shifted by one token). Only W_pre is trained.
+    """
+    rng = np.random.default_rng(tc.seed + 47)
+    wpre = params["pre_gate"]
+    m = jnp.zeros_like(wpre)
+    v = jnp.zeros_like(wpre)
+
+    @jax.jit
+    def batch_stats(params, tokens):
+        _, extras = forward_seq(cfg, params, tokens, collect=True)
+        target = extras["gate_probs"][0]        # [B, S, N] layer-0 gate probs
+        a_last = extras["final"]                # [B, S, d] last-layer normed acts
+        return target, a_last
+
+    @jax.jit
+    def step(wpre, m, v, t, target, a_last):
+        def kl_loss(w):
+            pred = jax.nn.log_softmax(a_last[:, :-1] @ w, axis=-1)
+            tgt = target[:, 1:]
+            return jnp.mean(jnp.sum(tgt * (jnp.log(tgt + 1e-9) - pred), -1))
+
+        loss, g = jax.value_and_grad(kl_loss)(wpre)
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * jnp.square(g)
+        mh = m / (1 - 0.9 ** t)
+        vh = v / (1 - 0.999 ** t)
+        return wpre - 1e-2 * mh / (jnp.sqrt(vh) + 1e-8), m, v, loss
+
+    for i in range(tc.pre_gate_steps):
+        tokens = jnp.asarray(sample_batch(data, rng, 8, 96)[:, :-1])
+        target, a_last = batch_stats(params, tokens)
+        wpre, m, v, loss = step(wpre, m, v, float(i + 1), target, a_last)
+        if verbose and (i % 100 == 0 or i == tc.pre_gate_steps - 1):
+            print(f"  pre_gate step {i:4d}  kl={float(loss):.4f}")
+    return wpre

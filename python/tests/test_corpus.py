@@ -1,0 +1,60 @@
+"""Synthetic corpus generator tests."""
+
+import numpy as np
+import pytest
+
+from compile.corpus import (DOMAINS, generate_corpus, sample_batch,
+                            split_corpus)
+
+
+class TestGenerate:
+    def test_deterministic(self):
+        a = generate_corpus(4096, seed=3)
+        b = generate_corpus(4096, seed=3)
+        assert a == b
+
+    def test_seed_changes_content(self):
+        assert generate_corpus(4096, seed=1) != generate_corpus(4096, seed=2)
+
+    def test_exact_length(self):
+        for n in [100, 1024, 5000]:
+            assert len(generate_corpus(n, seed=0)) == n
+
+    def test_multi_domain_content(self):
+        c = generate_corpus(1 << 16, seed=0)
+        # arithmetic domain
+        assert b"=" in c
+        # json domain
+        assert b'{"' in c
+        # dna domain: ACGT-only runs exist somewhere
+        assert any(
+            len(c[i:i + 20]) == 20 and all(ch in b"ACGT" for ch in c[i:i + 20])
+            for i in range(0, len(c) - 20)
+        )
+
+    def test_split_no_overlap_seeds(self):
+        train, evald = split_corpus(1 << 14, 1 << 10, seed=0)
+        assert len(train) == 1 << 14
+        assert len(evald) == 1 << 10
+        assert train[: 1 << 10] != evald
+
+
+class TestSampleBatch:
+    def test_shape_and_range(self):
+        data = np.frombuffer(generate_corpus(4096, 0), np.uint8)
+        rng = np.random.default_rng(0)
+        b = sample_batch(data, rng, 4, 16)
+        assert b.shape == (4, 17)
+        assert b.dtype == np.int32
+        assert (b >= 0).all() and (b < 256).all()
+
+    def test_windows_are_contiguous(self):
+        data = np.arange(300, dtype=np.uint8)
+        rng = np.random.default_rng(1)
+        b = sample_batch(data, rng, 2, 10)
+        for row in b:
+            assert (np.diff(row) == 1).all()
+
+
+def test_domains_list():
+    assert len(DOMAINS) >= 5

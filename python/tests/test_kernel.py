@@ -1,0 +1,154 @@
+"""L1 correctness: Pallas expert-FFN kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the whole stack — the serving HLO
+the rust engine executes contains exactly this kernel. hypothesis sweeps
+shapes/dtypes; fixed cases pin the behaviours the sweep may not hit.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.expert_ffn import _pick_f_block, expert_ffn
+from compile.kernels.ref import expert_ffn_ref, gate_ref, rmsnorm_ref, silu
+
+
+def _rand(rng, shape, dtype=np.float32, scale=0.05):
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+def _run_pair(B, d, f, dtype, seed, f_block=None, coef=None):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (B, d), dtype, 1.0)
+    w1 = _rand(rng, (d, f), dtype)
+    w3 = _rand(rng, (d, f), dtype)
+    w2 = _rand(rng, (f, d), dtype)
+    if coef is None:
+        coef = jnp.asarray(rng.uniform(0, 1, B), dtype)
+    out = expert_ffn(x, w1, w3, w2, coef, f_block=f_block)
+    ref = expert_ffn_ref(x, w1, w3, w2, coef)
+    return np.asarray(out), np.asarray(ref)
+
+
+class TestFixedCases:
+    def test_basic_f32(self):
+        out, ref = _run_pair(4, 128, 256, np.float32, 0)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_batch_one(self):
+        out, ref = _run_pair(1, 128, 256, np.float32, 1)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_zero_coef_rows_are_zero(self):
+        coef = jnp.asarray([1.0, 0.0, 0.5, 0.0], jnp.float32)
+        out, ref = _run_pair(4, 64, 128, np.float32, 2, coef=coef)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+        assert np.all(out[1] == 0.0) and np.all(out[3] == 0.0)
+
+    def test_all_zero_coef(self):
+        coef = jnp.zeros((4,), jnp.float32)
+        out, _ = _run_pair(4, 64, 128, np.float32, 3, coef=coef)
+        assert np.all(out == 0.0)
+
+    def test_single_grid_step(self):
+        # f == f_block -> grid of 1, accumulation init path only
+        out, ref = _run_pair(2, 64, 64, np.float32, 4, f_block=64)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_many_grid_steps(self):
+        out, ref = _run_pair(2, 32, 256, np.float32, 5, f_block=8)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_bf16(self):
+        out, ref = _run_pair(4, 128, 256, jnp.bfloat16, 6)
+        np.testing.assert_allclose(
+            out.astype(np.float32), ref.astype(np.float32), rtol=0.08, atol=0.08)
+
+    def test_linearity_in_coef(self):
+        """Scaling coef scales output — partial-sum scaling must be exact."""
+        rng = np.random.default_rng(7)
+        B, d, f = 3, 64, 128
+        x = _rand(rng, (B, d), np.float32, 1.0)
+        ws = [_rand(rng, s) for s in [(d, f), (d, f), (f, d)]]
+        c1 = jnp.ones((B,), jnp.float32)
+        c2 = 2.0 * c1
+        o1 = np.asarray(expert_ffn(x, *ws, c1))
+        o2 = np.asarray(expert_ffn(x, *ws, c2))
+        np.testing.assert_allclose(o2, 2 * o1, rtol=1e-6)
+
+    def test_jit_wrapped(self):
+        fn = jax.jit(lambda *a: expert_ffn(*a))
+        rng = np.random.default_rng(8)
+        B, d, f = 4, 128, 256
+        args = (_rand(rng, (B, d), np.float32, 1.0), _rand(rng, (d, f)),
+                _rand(rng, (d, f)), _rand(rng, (f, d)),
+                jnp.ones((B,), jnp.float32))
+        np.testing.assert_allclose(
+            np.asarray(fn(*args)), np.asarray(expert_ffn_ref(*args)),
+            rtol=2e-5, atol=2e-5)
+
+
+class TestPickFBlock:
+    def test_divides(self):
+        for f in [8, 16, 64, 128, 256, 384, 512, 1024]:
+            blk = _pick_f_block(f)
+            assert f % blk == 0 and blk <= 256
+
+    def test_prefers_large_tiles(self):
+        assert _pick_f_block(512) == 256
+        assert _pick_f_block(256) == 256
+        assert _pick_f_block(128) == 128
+
+    def test_odd_f(self):
+        assert _pick_f_block(24) == 8
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    B=st.integers(1, 8),
+    d=st.sampled_from([16, 32, 64, 128]),
+    f=st.sampled_from([16, 32, 64, 128, 256]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_shapes_f32(B, d, f, seed):
+    out, ref = _run_pair(B, d, f, np.float32, seed)
+    np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    B=st.integers(1, 4),
+    d=st.sampled_from([32, 64]),
+    f=st.sampled_from([32, 128]),
+    seed=st.integers(0, 2**16),
+    dtype=st.sampled_from([np.float32, jnp.bfloat16]),
+)
+def test_hypothesis_dtypes(B, d, f, seed, dtype):
+    out, ref = _run_pair(B, d, f, dtype, seed)
+    tol = 3e-5 if dtype == np.float32 else 0.1
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=tol, atol=tol)
+
+
+class TestRefHelpers:
+    def test_silu_matches_jax(self):
+        x = jnp.linspace(-5, 5, 64)
+        np.testing.assert_allclose(silu(x), jax.nn.silu(x), rtol=1e-6, atol=1e-6)
+
+    def test_rmsnorm_unit_scale(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((4, 32)), jnp.float32)
+        out = rmsnorm_ref(x, jnp.ones(32))
+        ms = np.mean(np.square(np.asarray(out)), -1)
+        np.testing.assert_allclose(ms, 1.0, rtol=1e-3)
+
+    def test_gate_rows_sum_to_one(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.standard_normal((6, 16)), jnp.float32)
+        wg = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+        p = np.asarray(gate_ref(x, wg))
+        np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-5)
+        assert (p >= 0).all()

@@ -1,0 +1,126 @@
+"""L2 model tests: shapes, component/serving-path equivalence, invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.config import ModelConfig
+from compile.kernels.ref import rmsnorm_ref, softmax_ref
+from compile.model import (attn_step, dense_step, embed_step, forward_seq,
+                           gate_step, init_params, pre_gate_step, topk_mask,
+                           unembed_step)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ModelConfig(n_layers=2, d_model=32, n_heads=2, head_dim=16,
+                      d_ff=64, max_seq=32, vocab_size=64)
+    return cfg, init_params(cfg, seed=0)
+
+
+class TestShapes:
+    def test_forward_seq(self, tiny):
+        cfg, params = tiny
+        tokens = jnp.zeros((2, 8), jnp.int32)
+        logits = forward_seq(cfg, params, tokens)
+        assert logits.shape == (2, 8, cfg.vocab_size)
+
+    def test_collect_extras(self, tiny):
+        cfg, params = tiny
+        tokens = jnp.zeros((2, 8), jnp.int32)
+        _, ex = forward_seq(cfg, params, tokens, collect=True)
+        assert len(ex["moe_inputs"]) == cfg.n_layers
+        assert ex["gate_probs"][0].shape == (2, 8, cfg.n_experts)
+        assert ex["final"].shape == (2, 8, cfg.d_model)
+
+    def test_components(self, tiny):
+        cfg, params = tiny
+        B = 3
+        h = embed_step(jnp.array([1, 2, 3]), params["embed"])
+        assert h.shape == (B, cfg.d_model)
+        probs, xn = gate_step(cfg, h, params["l0.moe_norm"], params["l0.gate"])
+        assert probs.shape == (B, cfg.n_experts)
+        np.testing.assert_allclose(np.asarray(probs).sum(-1), 1.0, rtol=1e-5)
+        logits = unembed_step(cfg, h, params["out_norm"], params["unembed"])
+        assert logits.shape == (B, cfg.vocab_size)
+        pre = pre_gate_step(cfg, h, params["out_norm"], params["pre_gate"])
+        assert pre.shape == (B, cfg.n_experts)
+        np.testing.assert_allclose(np.asarray(pre).sum(-1), 1.0, rtol=1e-5)
+
+
+class TestTopkMask:
+    def test_selects_k(self):
+        rng = np.random.default_rng(0)
+        p = softmax_ref(jnp.asarray(rng.standard_normal((16, 8)), jnp.float32))
+        for k in (1, 2, 3):
+            m = np.asarray(topk_mask(p, k))
+            assert (m.sum(-1) == k).all()
+
+    def test_matches_argsort(self):
+        rng = np.random.default_rng(1)
+        p = jnp.asarray(rng.uniform(size=(32, 8)), jnp.float32)
+        m = np.asarray(topk_mask(p, 2))
+        top2 = np.argsort(np.asarray(p), -1)[:, -2:]
+        for t in range(32):
+            assert set(np.nonzero(m[t])[0]) == set(top2[t])
+
+
+class TestAttnStep:
+    def test_kv_cache_write(self, tiny):
+        cfg, params = tiny
+        B, H, S, hd = 2, cfg.n_heads, cfg.max_seq, cfg.head_dim
+        h = jnp.asarray(np.random.default_rng(0).standard_normal((B, cfg.d_model)),
+                        jnp.float32)
+        kc = jnp.zeros((B, H, S, hd))
+        vc = jnp.zeros((B, H, S, hd))
+        pos = jnp.array([0, 3], jnp.int32)
+        out, kc2, vc2 = attn_step(cfg, h, params["l0.attn_norm"],
+                                  params["l0.wq"], params["l0.wk"],
+                                  params["l0.wv"], params["l0.wo"], kc, vc, pos)
+        assert out.shape == (B, cfg.d_model)
+        # row 0 wrote position 0; row 1 wrote position 3
+        assert np.abs(np.asarray(kc2)[0, :, 0]).sum() > 0
+        assert np.abs(np.asarray(kc2)[1, :, 3]).sum() > 0
+        assert np.abs(np.asarray(kc2)[1, :, 0]).sum() == 0
+
+    def test_masked_future_is_ignored(self, tiny):
+        """Garbage in cache positions > pos must not affect the output."""
+        cfg, params = tiny
+        rng = np.random.default_rng(2)
+        B, H, S, hd = 1, cfg.n_heads, cfg.max_seq, cfg.head_dim
+        h = jnp.asarray(rng.standard_normal((B, cfg.d_model)), jnp.float32)
+        kc = jnp.zeros((B, H, S, hd))
+        vc = jnp.zeros((B, H, S, hd))
+        pos = jnp.array([2], jnp.int32)
+        kc_g = kc.at[:, :, 5:].set(99.0)
+        vc_g = vc.at[:, :, 5:].set(-99.0)
+        args = (cfg, h, params["l0.attn_norm"], params["l0.wq"],
+                params["l0.wk"], params["l0.wv"], params["l0.wo"])
+        o1, _, _ = attn_step(*args, kc, vc, pos)
+        o2, _, _ = attn_step(*args, kc_g, vc_g, pos)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-5)
+
+
+class TestServingEqualsTraining:
+    """Stepping the serving components token-by-token must reproduce the
+    whole-sequence training forward (same math, different decomposition)."""
+
+    def test_stepwise_matches_forward_seq(self, tiny):
+        cfg, params = tiny
+        rng = np.random.default_rng(3)
+        S_in = 6
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, S_in)), jnp.int32)
+        ref_logits = np.asarray(forward_seq(cfg, params, tokens))  # [1, S, V]
+
+        B, H, S, hd = 1, cfg.n_heads, cfg.max_seq, cfg.head_dim
+        kcs = jnp.zeros((cfg.n_layers, B, H, S, hd))
+        vcs = jnp.zeros((cfg.n_layers, B, H, S, hd))
+        step_logits = []
+        for t in range(S_in):
+            logits, kcs, vcs = dense_step(cfg, params, tokens[:, t],
+                                          kcs, vcs, jnp.array([t], jnp.int32))
+            step_logits.append(np.asarray(logits)[0])
+        step_logits = np.stack(step_logits)
+        np.testing.assert_allclose(step_logits, ref_logits[0],
+                                   rtol=2e-4, atol=2e-4)

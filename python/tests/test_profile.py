@@ -1,0 +1,89 @@
+"""Offline profiling math tests (gating calibration, similarity, β)."""
+
+import numpy as np
+import pytest
+
+from compile.profile_offline import (calibrate_threshold,
+                                     cross_layer_similarity, per_layer_alpha,
+                                     rmsnorm_np, single_expert_mask,
+                                     softmax_np, top1_score_stats)
+
+
+@pytest.fixture
+def gate_probs():
+    rng = np.random.default_rng(0)
+    L, T, N = 4, 512, 8
+    logits = rng.standard_normal((L, T, N)) * 2.0
+    return softmax_np(logits)
+
+
+class TestSingleExpertMask:
+    def test_threshold_zero_keeps_two(self, gate_probs):
+        sens = np.ones(4)
+        mask = single_expert_mask(gate_probs, sens, 0.0)
+        assert mask.mean() < 0.01
+
+    def test_huge_threshold_all_single(self, gate_probs):
+        sens = np.ones(4)
+        mask = single_expert_mask(gate_probs, sens, 1e9)
+        assert mask.all()
+
+    def test_sensitive_layers_less_single(self, gate_probs):
+        sens = np.array([100.0, 0.01, 0.01, 0.01])
+        mask = single_expert_mask(gate_probs, sens, 0.05)
+        assert mask[0].mean() <= mask[1:].mean()
+
+
+class TestCalibration:
+    def test_hits_target(self, gate_probs):
+        sens = np.array([2.0, 1.0, 0.5, 0.25])
+        thr = calibrate_threshold(gate_probs, sens, target_ratio=0.24)
+        ratio = single_expert_mask(gate_probs, sens, thr).mean()
+        assert abs(ratio - 0.24) < 0.05
+
+    def test_alpha_per_layer_in_unit(self, gate_probs):
+        sens = np.ones(4)
+        thr = calibrate_threshold(gate_probs, sens, 0.3)
+        a = per_layer_alpha(gate_probs, sens, thr)
+        assert a.shape == (4,)
+        assert ((a >= 0) & (a <= 1)).all()
+
+
+class TestObservationStats:
+    def test_score_stats_shapes(self, gate_probs):
+        s = top1_score_stats(gate_probs)
+        assert len(s["alpha_mean"]) == 4
+        assert len(s["alpha_hist20"][0]) == 20
+        # α = p1/(p1+p2) ≥ 0.5 by construction
+        assert min(s["alpha_mean"]) >= 0.5
+
+    def test_similarity_identical_layers(self):
+        x = np.random.default_rng(1).standard_normal((3, 64, 16))
+        sims = cross_layer_similarity(np.concatenate([x[:1], x[:1]], axis=0))
+        assert sims[0] == pytest.approx(1.0, abs=1e-5)
+
+    def test_similarity_orthogonal(self):
+        a = np.zeros((1, 4, 4))
+        b = np.zeros((1, 4, 4))
+        a[0, :, 0] = 1.0
+        b[0, :, 1] = 1.0
+        sims = cross_layer_similarity(np.concatenate([a, b], axis=0))
+        assert abs(sims[0]) < 1e-6
+
+
+class TestNumpyHelpers:
+    def test_softmax_rows(self):
+        x = np.random.default_rng(2).standard_normal((5, 8))
+        p = softmax_np(x)
+        np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-6)
+
+    def test_rmsnorm_matches_jnp(self):
+        import jax.numpy as jnp
+
+        from compile.kernels.ref import rmsnorm_ref
+
+        x = np.random.default_rng(3).standard_normal((4, 16)).astype(np.float32)
+        w = np.random.default_rng(4).standard_normal(16).astype(np.float32)
+        got = rmsnorm_np(x, w, 1e-5)
+        want = np.asarray(rmsnorm_ref(jnp.asarray(x), jnp.asarray(w), 1e-5))
+        np.testing.assert_allclose(got, want, rtol=1e-5)

@@ -1,0 +1,101 @@
+"""Training-loop / Fisher / predictive-gate tests on the micro config."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.config import TrainConfig, micro_config
+from compile.corpus import sample_batch
+from compile.model import forward_seq, init_params, loss_fn
+from compile.train import (adam_init, adam_update, fisher_sensitivity,
+                           lr_schedule, train, train_pre_gate)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = micro_config()
+    tc = TrainConfig()
+    tc.steps, tc.pre_gate_steps, tc.fisher_batches = 25, 10, 2
+    tc.corpus_bytes, tc.eval_bytes = 1 << 15, 1 << 12
+    params, info = train(cfg, tc, verbose=False)
+    return cfg, tc, params, info
+
+
+class TestAdam:
+    def test_update_moves_params(self):
+        params = {"w": jnp.ones((4,))}
+        grads = {"w": jnp.full((4,), 0.5)}
+        st = adam_init(params)
+        new, st = adam_update(params, grads, st, lr=0.1, wd=0.0)
+        assert not np.allclose(np.asarray(new["w"]), 1.0)
+        assert int(st["t"]) == 1
+
+    def test_norms_skip_weight_decay(self):
+        params = {"l0.moe_norm": jnp.ones((4,)), "w": jnp.ones((4,))}
+        grads = {k: jnp.zeros((4,)) for k in params}
+        st = adam_init(params)
+        new, _ = adam_update(params, grads, st, lr=0.1, wd=0.5)
+        # zero grad + wd: plain weight shrinks, norm does not
+        np.testing.assert_allclose(np.asarray(new["l0.moe_norm"]), 1.0)
+        assert np.all(np.asarray(new["w"]) < 1.0)
+
+    def test_lr_schedule_warmup_and_decay(self):
+        tc = TrainConfig()
+        tc.steps, tc.warmup, tc.lr = 100, 10, 1.0
+        assert lr_schedule(tc, 0) < lr_schedule(tc, 9) <= 1.0
+        assert lr_schedule(tc, 99) < 0.2
+
+
+class TestTraining:
+    def test_loss_decreases(self, trained):
+        _, _, _, info = trained
+        losses = info["losses"]
+        assert losses[-1][1] < losses[0][1] * 0.8, f"no learning: {losses}"
+
+    def test_loss_fn_finite(self, trained):
+        cfg, tc, params, info = trained
+        data = np.frombuffer(info["train_bytes"], np.uint8)
+        rng = np.random.default_rng(0)
+        tokens = jnp.asarray(sample_batch(data, rng, 2, 32))
+        loss, (ce, aux) = loss_fn(cfg, params, tokens, 0.01)
+        assert np.isfinite(float(loss)) and float(aux) > 0
+
+
+class TestFisher:
+    def test_sensitivity_positive_per_layer(self, trained):
+        cfg, tc, params, info = trained
+        data = np.frombuffer(info["train_bytes"], np.uint8)
+        s = fisher_sensitivity(cfg, params, data, tc)
+        assert s.shape == (cfg.n_layers,)
+        assert (s > 0).all()
+
+    def test_eps_forward_matches_plain(self, trained):
+        """Zero perturbations must not change the loss — keeps the Fisher
+        forward in sync with the training forward."""
+        from compile.train import _forward_with_eps
+
+        cfg, tc, params, info = trained
+        data = np.frombuffer(info["train_bytes"], np.uint8)
+        rng = np.random.default_rng(1)
+        tokens = jnp.asarray(sample_batch(data, rng, 2, 24)[:, :-1])
+        eps = [jnp.zeros((2, 24, cfg.d_model)) for _ in range(cfg.n_layers)]
+        loss_eps = float(_forward_with_eps(cfg, params, tokens, eps))
+
+        logits = forward_seq(cfg, params, tokens)
+        logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        tgt = tokens[:, 1:]
+        loss_plain = float(
+            -jnp.mean(jnp.take_along_axis(logp, tgt[..., None], axis=-1))
+        )
+        assert loss_eps == pytest.approx(loss_plain, rel=1e-5)
+
+
+class TestPreGate:
+    def test_pre_gate_learns(self, trained):
+        cfg, tc, params, info = trained
+        data = np.frombuffer(info["train_bytes"], np.uint8)
+        before = np.asarray(params["pre_gate"]).copy()
+        wpre = train_pre_gate(cfg, params, data, tc, verbose=False)
+        assert not np.allclose(np.asarray(wpre), before)
+        assert np.isfinite(np.asarray(wpre)).all()

@@ -1,0 +1,36 @@
+//! Fig. 3 reproduction: cosine similarity between the input of layer i's
+//! MoE block and layer i+1's — the residual-stream consistency that makes
+//! gate-reuse prefetching accurate (Observation 2).
+//!
+//! Measured online by the engine during decode; compared against the
+//! offline python profile series. Run: `cargo bench --bench fig3_similarity`.
+
+use adapmoe::bench_support::{artifacts_dir, decode_eval, eval_stream, instant_settings, method_engine, scaled};
+use adapmoe::coordinator::profile::Profile;
+use adapmoe::memory::quant::QuantKind;
+use adapmoe::util::timer::Table;
+
+fn main() {
+    let Some(dir) = artifacts_dir() else { return };
+    let eval = eval_stream(&dir).expect("eval stream");
+    let profile = Profile::load(&dir).expect("profile");
+    let tokens = scaled(200);
+
+    let settings = instant_settings(32, QuantKind::Int4);
+    let mut engine = method_engine(&dir, "mixtral-offloading", &settings).expect("engine");
+    decode_eval(&mut engine, &eval, tokens, 0).expect("decode");
+
+    println!("\n== Fig. 3: successive-layer MoE-input cosine similarity ({tokens} eval tokens) ==");
+    let online = engine.trace.similarity();
+    let mut table = Table::new(&["layer pair", "online (rust)", "offline (python)"]);
+    for (i, &s) in online.iter().enumerate() {
+        let offline = profile
+            .similarity
+            .get(i)
+            .map(|v| format!("{v:.3}"))
+            .unwrap_or_else(|| "-".into());
+        table.row(&[format!("{i}->{}", i + 1), format!("{s:.3}"), offline]);
+    }
+    table.print();
+    println!("(paper shape: high similarity, rising with depth — enables gate reuse)");
+}

@@ -1,0 +1,79 @@
+//! Fig. 7 reproduction: model accuracy vs single-expert activation ratio
+//! for sensitivity-based (AdapMoE) vs score-based (Adap-gating) gating.
+//!
+//! MMLU/ARC substitution (DESIGN.md): held-out next-token top-1 accuracy +
+//! NLL on the synthetic eval split, measured through the full serving stack
+//! (instant link — gating changes outputs, not transfer timing).
+//!
+//! Expected shape: both curves flat near ratio 0; the score-based curve
+//! degrades earlier/steeper as the ratio grows; sensitivity-based holds
+//! accuracy to higher ratios. Run: `cargo bench --bench fig7_accuracy`.
+
+use adapmoe::bench_support::{artifacts_dir, eval_accuracy, eval_stream, instant_settings, scaled};
+use adapmoe::coordinator::engine::Engine;
+use adapmoe::coordinator::gating::GatingPolicy;
+use adapmoe::coordinator::policy;
+use adapmoe::coordinator::profile::Profile;
+use adapmoe::memory::quant::QuantKind;
+use adapmoe::util::timer::Table;
+
+fn main() {
+    let Some(dir) = artifacts_dir() else { return };
+    let eval = eval_stream(&dir).expect("eval stream");
+    let profile = Profile::load(&dir).expect("profile");
+    let window = 36;
+    let max_windows = scaled(24);
+
+    let settings = instant_settings(32, QuantKind::Int4);
+
+    // threshold sweeps spanning ratio ~0 .. ~0.9
+    let sens_scales = [0.0, 1.0, 16.0, 256.0, 8192.0];
+    let score_mins = [0.995, 0.8, 0.65, 0.55, 0.505];
+
+    println!(
+        "\n== Fig. 7: accuracy vs single-expert ratio ({max_windows} windows × {window} ctx tokens) =="
+    );
+    let mut table = Table::new(&["gating", "param", "single-ratio", "top1-acc", "nll"]);
+
+    for &scale in &sens_scales {
+        let gating = GatingPolicy::Sensitivity {
+            k: 2,
+            threshold: profile.threshold * scale,
+            sensitivity: profile.sensitivity.clone(),
+        };
+        run_row(&dir, &settings, gating, &format!("T={scale}xT0"), &eval, window, max_windows, &mut table);
+    }
+    for &amin in &score_mins {
+        let gating = GatingPolicy::Score { k: 2, alpha_min: amin };
+        run_row(&dir, &settings, gating, &format!("a>={amin}"), &eval, window, max_windows, &mut table);
+    }
+    table.print();
+    println!("(paper shape: sensitivity-based tolerates higher ratios at iso-accuracy)");
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_row(
+    dir: &std::path::PathBuf,
+    settings: &policy::RunSettings,
+    gating: GatingPolicy,
+    param: &str,
+    eval: &adapmoe::model::tokenizer::EvalStream,
+    window: usize,
+    max_windows: usize,
+    table: &mut Table,
+) {
+    let name = gating.name().to_string();
+    let profile = Profile::load(dir).expect("profile");
+    let mut ecfg = policy::method("adapmoe", settings, &profile).expect("cfg");
+    ecfg.gating = gating;
+    let mut engine = Engine::from_artifacts(dir, ecfg).expect("engine");
+    let (acc, nll) = eval_accuracy(&mut engine, eval, window, max_windows).expect("accuracy");
+    let ratio = engine.trace.mean_single_ratio();
+    table.row(&[
+        name,
+        param.to_string(),
+        format!("{:.1}%", ratio * 100.0),
+        format!("{:.1}%", acc * 100.0),
+        format!("{nll:.3}"),
+    ]);
+}

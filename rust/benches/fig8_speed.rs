@@ -1,0 +1,67 @@
+//! Fig. 8 reproduction: decode speed of AdapMoE vs baselines across
+//! quantization configs, cache sizes and platforms.
+//!
+//! Paper series: baseline offloading (whole-layer), Mixtral-offloading,
+//! Pre-gated MoE, AdapMoE w/o gating, AdapMoE. Expected shape: AdapMoE
+//! fastest everywhere (~1.35× over Mixtral-offloading), AdapMoE-no-gating
+//! ≈ Pre-gated, whole-layer baseline slowest; gaps shrink as the cache
+//! grows; everything scales with link bandwidth and quant byte volume.
+//!
+//! Run: `cargo bench --bench fig8_speed` (after `make artifacts`).
+
+use adapmoe::bench_support::{
+    artifacts_dir, decode_eval, eval_stream, fast_mode, method_engine, scaled, timed_settings,
+};
+use adapmoe::coordinator::policy::METHODS;
+use adapmoe::memory::quant::QuantKind;
+use adapmoe::util::timer::Table;
+
+fn main() {
+    let Some(dir) = artifacts_dir() else { return };
+    let eval = eval_stream(&dir).expect("eval stream");
+    let tokens = scaled(24);
+
+    // paper axes: 2 quant configs × cache sizes × 2 platforms
+    let quants = [("4bit", QuantKind::Int4), ("4+2bit", QuantKind::Int2)];
+    let caches: &[usize] = if fast_mode() { &[32] } else { &[16, 32, 48] };
+    // a6000-22b calibrates per-expert transfer times against Mixtral-8x22b
+    // experts — the paper's "model sizes" axis.
+    let platforms: &[&str] = if fast_mode() {
+        &["rtx4090"]
+    } else {
+        &["rtx4090", "a6000-22b"]
+    };
+
+    println!("\n== Fig. 8: decode speed (tokens/s; {tokens} eval tokens per config) ==");
+    for &platform in platforms {
+        for (qname, quant) in quants {
+            let mut headers: Vec<String> = vec!["method".into()];
+            headers.extend(caches.iter().map(|c| format!("cache={c}")));
+            let mut table = Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+
+            let mut base_speed = vec![0.0f64; caches.len()];
+            for &method in METHODS {
+                let mut cells = vec![method.to_string()];
+                for (ci, &cache) in caches.iter().enumerate() {
+                    let settings = timed_settings(cache, quant, platform);
+                    let mut engine = method_engine(&dir, method, &settings).expect("engine");
+                    decode_eval(&mut engine, &eval, tokens, 7 * ci).expect("decode");
+                    // p50-based rate: robust to single-core scheduler bursts
+                    let tps = 1.0 / engine.trace.token_latency.p50().max(1e-9);
+                    if method == "mixtral-offloading" {
+                        base_speed[ci] = tps;
+                    }
+                    let speedup = if base_speed[ci] > 0.0 && method != "mixtral-offloading" {
+                        format!(" ({:.2}x)", tps / base_speed[ci])
+                    } else {
+                        String::new()
+                    };
+                    cells.push(format!("{tps:.2}{speedup}"));
+                }
+                table.row(&cells);
+            }
+            println!("\n-- platform={platform} quant={qname} (speedup vs mixtral-offloading) --");
+            table.print();
+        }
+    }
+}

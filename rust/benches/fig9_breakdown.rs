@@ -1,0 +1,118 @@
+//! Fig. 9 reproduction: per-layer breakdown of the three adaptive
+//! mechanisms.
+//!
+//! (a) single-expert activation ratios, score-based vs sensitivity-based
+//!     at the same mean ratio (sensitivity keeps early layers conservative);
+//! (b) expert prefetch prediction accuracy per layer (layer 0 = trained
+//!     predictive gate, others = gate reuse);
+//! (c) DP cache allocation per layer at the paper's 50% budget.
+//!
+//! Run: `cargo bench --bench fig9_breakdown`.
+
+use adapmoe::bench_support::{artifacts_dir, decode_eval, eval_stream, instant_settings, scaled};
+use adapmoe::coordinator::cache_plan;
+use adapmoe::coordinator::engine::Engine;
+use adapmoe::coordinator::gating::{calibrate_score_threshold, GatingPolicy};
+use adapmoe::coordinator::policy;
+use adapmoe::coordinator::profile::Profile;
+use adapmoe::memory::quant::QuantKind;
+use adapmoe::util::timer::Table;
+
+fn main() {
+    let Some(dir) = artifacts_dir() else { return };
+    let eval = eval_stream(&dir).expect("eval stream");
+    let profile = Profile::load(&dir).expect("profile");
+    let tokens = scaled(240);
+    let settings = instant_settings(32, QuantKind::Int4);
+
+    // --- sensitivity-based engine (also yields Fig 9(b) β and the trace) ---
+    let ecfg = policy::method("adapmoe", &settings, &profile).expect("cfg");
+    let mut sens_engine = Engine::from_artifacts(&dir, ecfg).expect("engine");
+    decode_eval(&mut sens_engine, &eval, tokens, 0).expect("decode");
+    let sens_ratio = sens_engine.trace.mean_single_ratio();
+
+    // --- score-based engine calibrated to the same mean ratio -------------
+    // calibrate on an α trace gathered from the sensitivity run's histogram
+    // is biased; instead calibrate on a fresh top-k trace.
+    let mut probe = {
+        let c = policy::method("mixtral-offloading", &settings, &profile).expect("cfg");
+        Engine::from_artifacts(&dir, c).expect("probe engine")
+    };
+    decode_eval(&mut probe, &eval, scaled(120), 3).expect("probe decode");
+    // build a (layer, probs)-like trace from α means is not enough: use the
+    // analytic calibration over the recorded α histogram instead.
+    let trace_pairs = alpha_trace(&probe);
+    let alpha_min = calibrate_score_threshold(&trace_pairs, 2, sens_ratio);
+
+    let mut score_cfg = policy::method("adapmoe", &settings, &profile).expect("cfg");
+    score_cfg.gating = GatingPolicy::Score { k: 2, alpha_min };
+    let mut score_engine = Engine::from_artifacts(&dir, score_cfg).expect("engine");
+    decode_eval(&mut score_engine, &eval, tokens, 0).expect("decode");
+
+    println!("\n== Fig. 9(a): single-expert ratio per layer (mean ratio ≈ {:.0}%) ==", sens_ratio * 100.0);
+    let mut t = Table::new(&["layer", "score-based", "sensitivity-based"]);
+    let s1 = score_engine.trace.single_ratio();
+    let s2 = sens_engine.trace.single_ratio();
+    for l in 0..sens_engine.cfg.n_layers {
+        t.row(&[
+            format!("{l}"),
+            format!("{:.1}%", s1[l] * 100.0),
+            format!("{:.1}%", s2[l] * 100.0),
+        ]);
+    }
+    t.print();
+    println!("(paper shape: sensitivity-based activates MORE experts in early layers)");
+
+    println!("\n== Fig. 9(b): prefetch prediction accuracy per layer ==");
+    let mut t = Table::new(&["layer", "beta (online)", "beta (offline prior)", "predictor"]);
+    let beta = sens_engine.trace.beta();
+    for l in 0..sens_engine.cfg.n_layers {
+        t.row(&[
+            format!("{l}"),
+            format!("{:.2}", beta[l]),
+            format!("{:.2}", profile.beta[l]),
+            if l == 0 { "pre-gate (trained)".into() } else { "gate reuse".to_string() },
+        ]);
+    }
+    t.print();
+
+    println!("\n== Fig. 9(c): DP cache allocation (budget 32 of 64 experts) ==");
+    let inputs = cache_plan::PlanInputs {
+        n_experts: sens_engine.cfg.n_experts,
+        budget: 32,
+        alpha: profile.alpha.clone(),
+        beta: profile.beta.clone(),
+    };
+    let plan = cache_plan::plan(&inputs);
+    let mut t = Table::new(&["layer", "alpha", "beta", "cache slots"]);
+    for l in 0..plan.allocation.len() {
+        t.row(&[
+            format!("{l}"),
+            format!("{:.2}", profile.alpha[l]),
+            format!("{:.2}", profile.beta[l]),
+            format!("{} {}", plan.allocation[l], "#".repeat(plan.allocation[l])),
+        ]);
+    }
+    t.print();
+    println!(
+        "expected on-demand loads/token: {:.3} (uniform: {:.3})",
+        plan.expected_loads,
+        cache_plan::allocation_cost(&inputs, &vec![4; plan.allocation.len()])
+    );
+}
+
+/// Reconstruct (layer, top2-prob-pair) samples from the probe's α histogram
+/// for score-threshold calibration.
+fn alpha_trace(engine: &Engine) -> Vec<(usize, Vec<f32>)> {
+    let mut out = Vec::new();
+    for (layer, hist) in engine.trace.alpha_hist.iter().enumerate() {
+        for (bin, &count) in hist.counts.iter().enumerate() {
+            let alpha = 0.5 + (bin as f32 + 0.5) * 0.5 / hist.counts.len() as f32;
+            // represent α by a 2-expert prob row; decide() only uses p1/(p1+p2)
+            for _ in 0..count {
+                out.push((layer, vec![alpha, 1.0 - alpha]));
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,129 @@
+//! Shared support for the `rust/benches/*` paper-reproduction binaries and
+//! the examples: artifact discovery, engine construction from method names,
+//! eval-stream decoding and accuracy measurement.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::engine::Engine;
+use crate::coordinator::policy::{self, RunSettings};
+use crate::coordinator::profile::Profile;
+use crate::memory::platform::Platform;
+use crate::memory::quant::QuantKind;
+use crate::model::sampling;
+use crate::model::tokenizer::EvalStream;
+
+/// Locate the artifacts directory (repo root). None => print a skip notice.
+pub fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built — run `make artifacts` first");
+        None
+    }
+}
+
+/// Reduced-size run for CI (`ADAPMOE_BENCH_FAST=1` / `make bench-fast`).
+pub fn fast_mode() -> bool {
+    std::env::var("ADAPMOE_BENCH_FAST").is_ok()
+}
+
+/// Scale a token/window count down in fast mode.
+pub fn scaled(n: usize) -> usize {
+    if fast_mode() {
+        (n / 4).max(4)
+    } else {
+        n
+    }
+}
+
+/// Build an engine for a named method at the given settings.
+pub fn method_engine(
+    dir: &PathBuf,
+    method: &str,
+    settings: &RunSettings,
+) -> Result<Engine> {
+    let profile = Profile::load(dir)?;
+    let ecfg = policy::method(method, settings, &profile)
+        .with_context(|| format!("unknown method {method}"))?;
+    Engine::from_artifacts(dir, ecfg)
+}
+
+/// Settings with the simulated link active (performance benches).
+pub fn timed_settings(
+    cache: usize,
+    quant: QuantKind,
+    platform: &str,
+) -> RunSettings {
+    RunSettings::new(1, cache, quant, Platform::preset(platform).unwrap())
+}
+
+/// Settings with an instant link (logic/accuracy benches).
+pub fn instant_settings(cache: usize, quant: QuantKind) -> RunSettings {
+    let mut s = RunSettings::new(1, cache, quant, Platform::preset("instant").unwrap());
+    s.time_scale = 0.0;
+    s
+}
+
+/// Load the held-out eval stream.
+pub fn eval_stream(dir: &PathBuf) -> Result<EvalStream> {
+    EvalStream::load(&dir.join("tokens_eval.bin"))
+}
+
+/// Decode `n` eval tokens through one slot (teacher-forced). Returns decoded
+/// token count. Wraps to a fresh slot when the KV cache fills.
+pub fn decode_eval(engine: &mut Engine, eval: &EvalStream, n: usize, offset: usize) -> Result<usize> {
+    let window = engine.cfg.max_seq - 1;
+    let mut fed = 0;
+    let mut idx = offset % (eval.len() / 2);
+    while fed < n {
+        let take = (n - fed).min(window).min(eval.len() - idx - 1);
+        let row = engine.acquire_slot().context("no slot")?;
+        for &t in &eval.tokens[idx..idx + take] {
+            engine.decode_step(&[(row, t)])?;
+        }
+        engine.release_slot(row);
+        fed += take;
+        idx = (idx + take) % (eval.len() / 2);
+    }
+    Ok(fed)
+}
+
+/// Accuracy measurement on held-out windows: feed `window` context tokens,
+/// then score the model's greedy prediction of the next token. Also returns
+/// mean negative log-likelihood of the target (a perplexity proxy).
+pub fn eval_accuracy(
+    engine: &mut Engine,
+    eval: &EvalStream,
+    window: usize,
+    max_windows: usize,
+) -> Result<(f64, f64)> {
+    let windows = eval.eval_windows(window, max_windows);
+    let mut correct = 0usize;
+    let mut nll = 0f64;
+    let total = windows.len();
+    for (ctx, target) in windows {
+        let row = engine.acquire_slot().context("no slot")?;
+        let mut last = Vec::new();
+        for &t in ctx {
+            let outs = engine.decode_step(&[(row, t)])?;
+            last = outs.into_iter().next().unwrap().1;
+        }
+        if sampling::greedy(&last) == target {
+            correct += 1;
+        }
+        // log-softmax of the target logit
+        let max = last.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let logsum: f64 = last
+            .iter()
+            .map(|&l| ((l - max) as f64).exp())
+            .sum::<f64>()
+            .ln()
+            + max as f64;
+        nll += logsum - last[target as usize] as f64;
+        engine.release_slot(row);
+    }
+    Ok((correct as f64 / total as f64, nll / total as f64))
+}

@@ -1,0 +1,206 @@
+//! Request batching for the serving front-end (vLLM-router-style continuous
+//! batching, scaled to this engine's fixed batch buckets).
+//!
+//! Requests enter a FIFO admission queue; the decode loop drains them into
+//! free engine slots between steps, decodes all active rows together, and
+//! retires rows on EOS/length. The batcher is engine-agnostic (pure state
+//! machine) so its invariants are property-testable without PJRT.
+
+use std::collections::VecDeque;
+
+/// One generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+}
+
+/// Lifecycle of an admitted request.
+#[derive(Debug)]
+pub struct ActiveRequest {
+    pub req: Request,
+    pub row: usize,
+    /// Next prompt token index to feed (prompt is consumed step by step).
+    pub fed: usize,
+    pub generated: Vec<u32>,
+}
+
+impl ActiveRequest {
+    /// The token to feed this step: next prompt token, or the last
+    /// generated one.
+    pub fn next_input(&self) -> u32 {
+        if self.fed < self.req.prompt.len() {
+            self.req.prompt[self.fed]
+        } else {
+            *self.generated.last().expect("past prompt implies a sample")
+        }
+    }
+
+    /// Are we still pre-filling the prompt (no sampling yet)?
+    pub fn prefilling(&self) -> bool {
+        self.fed < self.req.prompt.len()
+    }
+
+    pub fn done(&self) -> bool {
+        self.generated.len() >= self.req.max_new
+    }
+}
+
+/// FIFO admission + active set management.
+#[derive(Default)]
+pub struct Batcher {
+    queue: VecDeque<Request>,
+    pub active: Vec<ActiveRequest>,
+    next_id: u64,
+}
+
+impl Batcher {
+    pub fn new() -> Batcher {
+        Batcher::default()
+    }
+
+    /// Enqueue a request; returns its id.
+    pub fn submit(&mut self, prompt: Vec<u32>, max_new: usize) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(Request { id, prompt, max_new });
+        id
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Admit queued requests into the given free rows (in order).
+    pub fn admit(&mut self, free_rows: &[usize]) -> usize {
+        let mut admitted = 0;
+        for &row in free_rows {
+            let Some(req) = self.queue.pop_front() else { break };
+            self.active.push(ActiveRequest { req, row, fed: 0, generated: Vec::new() });
+            admitted += 1;
+        }
+        admitted
+    }
+
+    /// (row, token) pairs to feed this step.
+    pub fn step_inputs(&self) -> Vec<(usize, u32)> {
+        self.active.iter().map(|a| (a.row, a.next_input())).collect()
+    }
+
+    /// Apply one step's sampled tokens (row -> sampled token). During
+    /// prefill the sample is discarded (teacher forcing over the prompt).
+    pub fn apply_step(&mut self, sampled: &[(usize, u32)]) {
+        for a in self.active.iter_mut() {
+            let Some(&(_, tok)) = sampled.iter().find(|(r, _)| *r == a.row) else {
+                continue;
+            };
+            if a.prefilling() {
+                a.fed += 1;
+                if !a.prefilling() {
+                    // prompt consumed: this step's sample is the first output
+                    a.generated.push(tok);
+                }
+            } else {
+                a.generated.push(tok);
+            }
+        }
+    }
+
+    /// Remove finished requests; returns them.
+    pub fn retire(&mut self) -> Vec<ActiveRequest> {
+        let mut done = Vec::new();
+        let mut keep = Vec::new();
+        for a in self.active.drain(..) {
+            if a.done() {
+                done.push(a);
+            } else {
+                keep.push(a);
+            }
+        }
+        self.active = keep;
+        done
+    }
+
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty() && self.active.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn fifo_admission() {
+        let mut b = Batcher::new();
+        let i1 = b.submit(vec![1, 2], 3);
+        let i2 = b.submit(vec![3], 2);
+        assert_eq!(b.admit(&[0]), 1);
+        assert_eq!(b.active[0].req.id, i1);
+        assert_eq!(b.admit(&[1]), 1);
+        assert_eq!(b.active[1].req.id, i2);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn prefill_then_generate() {
+        let mut b = Batcher::new();
+        b.submit(vec![10, 11], 2);
+        b.admit(&[0]);
+        assert_eq!(b.step_inputs(), vec![(0, 10)]);
+        b.apply_step(&[(0, 99)]); // sample during prefill: discarded
+        assert_eq!(b.step_inputs(), vec![(0, 11)]);
+        b.apply_step(&[(0, 42)]); // prompt consumed: first real token
+        assert_eq!(b.active[0].generated, vec![42]);
+        assert_eq!(b.step_inputs(), vec![(0, 42)]);
+        b.apply_step(&[(0, 43)]);
+        assert!(b.active[0].done());
+        let done = b.retire();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].generated, vec![42, 43]);
+        assert!(b.idle());
+    }
+
+    #[test]
+    fn prop_batcher_invariants() {
+        prop::check("batcher-invariants", 100, |rng| {
+            let mut b = Batcher::new();
+            let slots = 1 + rng.usize_below(8);
+            let mut free: Vec<usize> = (0..slots).collect();
+            let n_req = 1 + rng.usize_below(12);
+            for _ in 0..n_req {
+                let plen = 1 + rng.usize_below(4);
+                let prompt = (0..plen).map(|_| rng.below(64) as u32).collect();
+                b.submit(prompt, 1 + rng.usize_below(4));
+            }
+            let mut produced = 0;
+            let mut steps = 0;
+            while !b.idle() && steps < 10_000 {
+                steps += 1;
+                let admitted = b.admit(&free);
+                free.drain(..admitted.min(free.len()));
+                for a in &b.active {
+                    crate::prop_assert!(a.row < slots, "row out of range");
+                }
+                // rows must be unique among active requests
+                let mut rows: Vec<usize> = b.active.iter().map(|a| a.row).collect();
+                rows.sort_unstable();
+                rows.dedup();
+                crate::prop_assert!(rows.len() == b.active.len(), "duplicate rows");
+                let inputs = b.step_inputs();
+                let sampled: Vec<(usize, u32)> =
+                    inputs.iter().map(|&(r, _)| (r, rng.below(64) as u32)).collect();
+                b.apply_step(&sampled);
+                for a in b.retire() {
+                    crate::prop_assert!(a.generated.len() == a.req.max_new);
+                    produced += 1;
+                    free.push(a.row);
+                }
+            }
+            crate::prop_assert!(produced == n_req, "finished {produced}/{n_req}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,265 @@
+//! DP-based expert cache allocation (paper §4.4, eq. 10–19).
+//!
+//! Given the total cache budget T (in experts), per-layer single-expert
+//! gating probability α_i and prefetch accuracy β_i (offline profile or
+//! online trace), computes per-layer cache sizes t_i minimizing the expected
+//! number of on-demand expert loads per token:
+//!
+//!   f_{i,t} = α_i · f¹ + (1-α_i) · (f² + f³ + f⁴)        (eq. 15)
+//!
+//! with the four cases of §4.4.2, then the knapsack DP
+//!   F[i][j] = min_k ( F[i-1][j-k] + f_{i,k} )             (eq. 19)
+//! and a backtrace for the argmin allocation.
+
+/// Per-layer inputs to the planner.
+#[derive(Clone, Debug)]
+pub struct PlanInputs {
+    /// Number of experts per layer (N).
+    pub n_experts: usize,
+    /// Total cache budget in experts (T).
+    pub budget: usize,
+    /// P(layer i activates a single expert) — α_i.
+    pub alpha: Vec<f64>,
+    /// Prefetch accuracy of layer i — β_i.
+    pub beta: Vec<f64>,
+}
+
+/// Expected on-demand loads for layer `i` with cache size `t` (eq. 11–15).
+pub fn on_demand_cost(inp: &PlanInputs, i: usize, t: usize) -> f64 {
+    let n = inp.n_experts as f64;
+    let t = t.min(inp.n_experts) as f64;
+    let alpha = inp.alpha[i];
+    let beta = inp.beta[i];
+
+    // Cache hit probability of one specified expert: t/N (eq. 10).
+    let p_hit1 = t / n;
+    // Both of two specified experts miss (eq. 12 numerator).
+    let p_miss2 = (((n - t) * (n - t - 1.0)) / (n * (n - 1.0))).max(0.0);
+    // Exactly one of two specified experts hits.
+    let p_one = (2.0 * (n - t) * t) / (n * (n - 1.0));
+
+    // One expert required (eq. 11): miss and prefetch wrong.
+    let f1 = (1.0 - p_hit1) * (1.0 - beta);
+    // Two required, both miss, prefetch wrong -> load 2 (eq. 12).
+    let f2 = 2.0 * p_miss2 * (1.0 - beta);
+    // Two required, both miss, prefetch right for one -> load 1 (eq. 13).
+    let f3 = p_miss2 * beta;
+    // Two required, one hits, prefetch wrong for the other (eq. 14).
+    let f4 = p_one * (1.0 - beta);
+
+    alpha * f1 + (1.0 - alpha) * (f2 + f3 + f4)
+}
+
+/// Result of the DP.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// Per-layer cache sizes t_i.
+    pub allocation: Vec<usize>,
+    /// Minimum total expected on-demand loads per token, Σ f_{i,t_i}.
+    pub expected_loads: f64,
+}
+
+/// Solve the knapsack DP (eq. 16–19) and backtrace the allocation.
+pub fn plan(inp: &PlanInputs) -> Plan {
+    let l = inp.alpha.len();
+    assert_eq!(inp.beta.len(), l, "alpha/beta length mismatch");
+    let n = inp.n_experts;
+    let t_total = inp.budget.min(l * n);
+
+    // F[i][j]: min cost over first i layers using ≤ j cache slots.
+    // choice[i][j]: the k chosen for layer i at budget j.
+    let mut f_prev = vec![0.0f64; t_total + 1];
+    let mut f_cur = vec![0.0f64; t_total + 1];
+    let mut choice = vec![vec![0usize; t_total + 1]; l];
+
+    for i in 0..l {
+        for j in 0..=t_total {
+            let mut best = f64::INFINITY;
+            let mut best_k = 0;
+            for k in 0..=n.min(j) {
+                let c = f_prev[j - k] + on_demand_cost(inp, i, k);
+                if c < best - 1e-15 {
+                    best = c;
+                    best_k = k;
+                }
+            }
+            f_cur[j] = best;
+            choice[i][j] = best_k;
+        }
+        std::mem::swap(&mut f_prev, &mut f_cur);
+    }
+
+    // backtrace from (l-1, t_total)
+    let mut allocation = vec![0usize; l];
+    let mut j = t_total;
+    for i in (0..l).rev() {
+        allocation[i] = choice[i][j];
+        j -= choice[i][j];
+    }
+    Plan { allocation, expected_loads: f_prev[t_total] }
+}
+
+/// Expected loads of an arbitrary allocation (baseline comparison).
+pub fn allocation_cost(inp: &PlanInputs, allocation: &[usize]) -> f64 {
+    allocation
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| on_demand_cost(inp, i, t))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::device_cache::DeviceCache;
+    use crate::util::prop;
+
+    fn inputs(l: usize, budget: usize) -> PlanInputs {
+        PlanInputs {
+            n_experts: 8,
+            budget,
+            alpha: (0..l).map(|i| 0.1 + 0.04 * i as f64).collect(),
+            beta: (0..l).map(|i| 0.6 + 0.03 * i as f64).collect(),
+        }
+    }
+
+    #[test]
+    fn cost_decreases_with_cache() {
+        let inp = inputs(4, 16);
+        for i in 0..4 {
+            for t in 0..8 {
+                assert!(
+                    on_demand_cost(&inp, i, t + 1) <= on_demand_cost(&inp, i, t) + 1e-12,
+                    "layer {i}: cost not monotone at t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn full_cache_costs_zero_misses_only_on_prefetch() {
+        let inp = inputs(2, 16);
+        // t = N: p_hit = 1, p_miss2 = 0, p_one = 0 -> cost 0
+        assert!(on_demand_cost(&inp, 0, 8) < 1e-12);
+    }
+
+    #[test]
+    fn plan_respects_budget_and_bounds() {
+        let inp = inputs(8, 24);
+        let p = plan(&inp);
+        assert_eq!(p.allocation.len(), 8);
+        assert!(p.allocation.iter().sum::<usize>() <= 24);
+        assert!(p.allocation.iter().all(|&t| t <= 8));
+    }
+
+    #[test]
+    fn plan_beats_uniform() {
+        // strongly heterogeneous β: DP must shift cache to hard layers
+        let inp = PlanInputs {
+            n_experts: 8,
+            budget: 16,
+            alpha: vec![0.1, 0.4, 0.4, 0.4],
+            beta: vec![0.3, 0.95, 0.95, 0.95],
+        };
+        let p = plan(&inp);
+        let uniform = DeviceCache::uniform_allocation(16, 4, 8);
+        assert!(
+            p.expected_loads <= allocation_cost(&inp, &uniform) + 1e-12,
+            "DP {} vs uniform {}",
+            p.expected_loads,
+            allocation_cost(&inp, &uniform)
+        );
+        // the low-β layer gets at least as much as any high-β layer
+        assert!(p.allocation[0] >= p.allocation[1]);
+    }
+
+    #[test]
+    fn low_prefetch_accuracy_attracts_cache() {
+        let inp = PlanInputs {
+            n_experts: 8,
+            budget: 8,
+            alpha: vec![0.2; 4],
+            beta: vec![0.2, 0.9, 0.9, 0.9],
+        };
+        let p = plan(&inp);
+        let max_other = p.allocation[1..].iter().max().unwrap();
+        assert!(
+            p.allocation[0] >= *max_other,
+            "hard-to-prefetch layer under-cached: {:?}",
+            p.allocation
+        );
+    }
+
+    #[test]
+    fn prop_dp_optimal_vs_exhaustive() {
+        // On small instances the DP must match brute force exactly.
+        prop::check("dp-matches-bruteforce", 40, |rng| {
+            let l = 2 + rng.usize_below(2); // 2..3 layers
+            let n = 3;
+            let budget = rng.usize_below(7);
+            let inp = PlanInputs {
+                n_experts: n,
+                budget,
+                alpha: (0..l).map(|_| rng.f64()).collect(),
+                beta: (0..l).map(|_| rng.f64()).collect(),
+            };
+            let p = plan(&inp);
+            // brute force over all allocations with t_i <= n
+            let mut best = f64::INFINITY;
+            let mut stack = vec![Vec::<usize>::new()];
+            while let Some(cur) = stack.pop() {
+                if cur.len() == l {
+                    if cur.iter().sum::<usize>() <= budget {
+                        best = best.min(allocation_cost(&inp, &cur));
+                    }
+                    continue;
+                }
+                for t in 0..=n {
+                    let mut nxt = cur.clone();
+                    nxt.push(t);
+                    stack.push(nxt);
+                }
+            }
+            crate::prop_assert!(
+                (p.expected_loads - best).abs() < 1e-9,
+                "dp={} brute={} inp={:?}",
+                p.expected_loads,
+                best,
+                inp
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_more_budget_never_hurts() {
+        prop::check("budget-monotone", 60, |rng| {
+            let l = 4;
+            let b1 = rng.usize_below(24);
+            let b2 = b1 + rng.usize_below(8);
+            let mk = |budget| PlanInputs {
+                n_experts: 8,
+                budget,
+                alpha: (0..l).map(|i| 0.05 * i as f64).collect(),
+                beta: (0..l).map(|i| 0.5 + 0.1 * i as f64).collect(),
+            };
+            let p1 = plan(&mk(b1));
+            let p2 = plan(&mk(b2));
+            crate::prop_assert!(
+                p2.expected_loads <= p1.expected_loads + 1e-12,
+                "budget {b1} -> {}, {b2} -> {}",
+                p1.expected_loads,
+                p2.expected_loads
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_budget_allocates_nothing() {
+        let inp = inputs(4, 0);
+        let p = plan(&inp);
+        assert_eq!(p.allocation, vec![0; 4]);
+        assert!(p.expected_loads > 0.0);
+    }
+}

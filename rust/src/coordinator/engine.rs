@@ -1,0 +1,646 @@
+//! The decode engine — the compute "stream" of Algorithm 1.
+//!
+//! Owns the PJRT runtime, the resident (non-expert) weights, the KV cache
+//! and the memory hierarchy, and drives batched decode steps: for each
+//! layer, attention → gate → adaptive gating decisions → prefetch for
+//! upcoming layers → expert execution overlapped with on-demand transfers
+//! (expert-wise or tile-wise). Everything the paper's §4–5 describe meets
+//! here; the policy knobs live in [`EngineConfig`] so baselines and
+//! ablations are just different configs (see [`super::policy`]).
+
+use std::collections::HashSet;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::coordinator::cache_plan;
+use crate::coordinator::gating::GatingPolicy;
+use crate::coordinator::prefetch::{self, PrefetchConfig};
+use crate::coordinator::profile::Profile;
+use crate::coordinator::scheduler::{build_plan, ScheduleMode};
+use crate::coordinator::trace::{Phase, TraceCollector};
+use crate::memory::device_cache::DeviceCache;
+use crate::memory::host_store::{ExpertF32, HostStore};
+use crate::memory::platform::Platform;
+use crate::memory::quant::QuantKind;
+use crate::memory::transfer::{Priority, TransferEngine};
+use crate::model::config::ModelConfig;
+use crate::model::weights::Weights;
+use crate::runtime::{f32_literal, i32_literal, literal_to_tensor, tensor_to_literal, Runtime};
+use crate::tensor::Tensor;
+use crate::util::stats::cosine;
+
+/// Per-layer cache budget policy.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AllocPolicy {
+    /// Equal split across layers (Mixtral-offloading / baselines).
+    Uniform,
+    /// Knapsack DP over the offline α/β profile (AdapMoE §4.4).
+    Planned,
+}
+
+/// Everything that distinguishes AdapMoE from its baselines and ablations.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Fixed decode batch (must be one of the exported batch buckets).
+    pub batch: usize,
+    pub gating: GatingPolicy,
+    pub prefetch: PrefetchConfig,
+    pub alloc: AllocPolicy,
+    /// Total expert-cache budget (in experts) — the paper's T.
+    pub cache_budget: usize,
+    pub schedule: ScheduleMode,
+    pub quant: QuantKind,
+    pub platform: Platform,
+    /// Tiles per expert transfer (must match the exported tile artifact).
+    pub n_tiles: usize,
+    /// Simulated-time multiplier (1.0 calibrated; 0.0 logic-only tests).
+    pub time_scale: f64,
+    /// DeepSpeed/FlexGen-style baseline: load ALL experts of each layer.
+    pub whole_layer: bool,
+}
+
+/// Non-expert weights kept device-resident as literals.
+struct Resident {
+    embed: Literal,
+    out_norm: Literal,
+    unembed: Literal,
+    pre_gate: Literal,
+    attn_norm: Vec<Literal>,
+    wq: Vec<Literal>,
+    wk: Vec<Literal>,
+    wv: Vec<Literal>,
+    wo: Vec<Literal>,
+    moe_norm: Vec<Literal>,
+    gate: Vec<Literal>,
+}
+
+impl Resident {
+    fn build(cfg: &ModelConfig, w: &Weights) -> Result<Resident> {
+        let lit = |name: &str| -> Result<Literal> { tensor_to_literal(w.get(name)?) };
+        let per_layer = |field: &str| -> Result<Vec<Literal>> {
+            (0..cfg.n_layers).map(|l| lit(&format!("l{l}.{field}"))).collect()
+        };
+        Ok(Resident {
+            embed: lit("embed")?,
+            out_norm: lit("out_norm")?,
+            unembed: lit("unembed")?,
+            pre_gate: lit("pre_gate")?,
+            attn_norm: per_layer("attn_norm")?,
+            wq: per_layer("wq")?,
+            wk: per_layer("wk")?,
+            wv: per_layer("wv")?,
+            wo: per_layer("wo")?,
+            moe_norm: per_layer("moe_norm")?,
+            gate: per_layer("gate")?,
+        })
+    }
+}
+
+/// Row slot bookkeeping for continuous batching.
+struct Slots {
+    pos: Vec<usize>,
+    active: Vec<bool>,
+}
+
+pub struct Engine {
+    pub cfg: ModelConfig,
+    pub ecfg: EngineConfig,
+    rt: Runtime,
+    resident: Resident,
+    pub store: Arc<HostStore>,
+    pub cache: Arc<DeviceCache>,
+    pub xfer: TransferEngine,
+    pub profile: Profile,
+    kv_k: Vec<Literal>,
+    kv_v: Vec<Literal>,
+    slots: Slots,
+    /// Literal-converted expert weights, keyed by expert id and the Arc
+    /// identity of the host tensor (invalidates automatically when the
+    /// cache entry is replaced by a fresh transfer). Saves re-converting
+    /// ~400 KB of f32 per expert call on the hot path.
+    lit_cache: std::collections::HashMap<crate::model::ExpertId, (usize, [Literal; 3])>,
+    pub trace: TraceCollector,
+    /// Latest per-layer predicted expert sets (per row), for β tracking and
+    /// the prefetch-extension rule.
+    predicted: Vec<Option<Vec<HashSet<usize>>>>,
+    /// Artifact name suffix for the configured batch.
+    suffix: String,
+}
+
+impl Engine {
+    /// Build an engine from an artifacts directory.
+    pub fn from_artifacts(dir: &Path, ecfg: EngineConfig) -> Result<Engine> {
+        let (cfg, manifest) = ModelConfig::load_manifest(dir)?;
+        let weights = Weights::load(&dir.join("weights.bin"))?;
+        let profile = Profile::load(dir)?;
+        Self::new(dir, cfg, manifest_names(&ecfg), &weights, profile, ecfg, &manifest)
+    }
+
+    fn new(
+        dir: &Path,
+        cfg: ModelConfig,
+        names: Vec<String>,
+        weights: &Weights,
+        profile: Profile,
+        ecfg: EngineConfig,
+        manifest: &crate::util::json::Json,
+    ) -> Result<Engine> {
+        if !cfg.batch_sizes.contains(&ecfg.batch) {
+            bail!("batch {} not among exported buckets {:?}", ecfg.batch, cfg.batch_sizes);
+        }
+        let rt = Runtime::load(dir, manifest, &names)
+            .context("loading runtime artifacts")?;
+        let resident = Resident::build(&cfg, weights)?;
+        let store = Arc::new(HostStore::build(&cfg, weights, ecfg.quant)?);
+
+        let allocation = match ecfg.alloc {
+            AllocPolicy::Uniform => DeviceCache::uniform_allocation(
+                ecfg.cache_budget,
+                cfg.n_layers,
+                cfg.n_experts,
+            ),
+            AllocPolicy::Planned => {
+                let inputs = cache_plan::PlanInputs {
+                    n_experts: cfg.n_experts,
+                    budget: ecfg.cache_budget,
+                    // no adaptive gating -> no single-expert tokens
+                    alpha: if matches!(ecfg.gating, GatingPolicy::TopK { .. }) {
+                        vec![0.0; cfg.n_layers]
+                    } else {
+                        profile.alpha.clone()
+                    },
+                    // β comes from the *offline* profiling phase even when
+                    // online prefetching is disabled: with β = 0, eq. 11–15
+                    // degenerate to a linear knapsack that dumps the whole
+                    // budget into a few layers and leaves others at t = 0 —
+                    // catastrophic under real LRU locality. The profiled β
+                    // keeps the curvature the paper's allocator relies on.
+                    beta: profile.beta.clone(),
+                };
+                cache_plan::plan(&inputs).allocation
+            }
+        };
+        let cache = Arc::new(DeviceCache::new(allocation));
+        let xfer = TransferEngine::new(
+            Arc::clone(&store),
+            Arc::clone(&cache),
+            ecfg.platform.clone(),
+            ecfg.n_tiles,
+            ecfg.time_scale,
+        );
+
+        let b = ecfg.batch;
+        let kv_dims = [b, cfg.n_heads, cfg.max_seq, cfg.head_dim];
+        let zeros = vec![0f32; kv_dims.iter().product()];
+        let kv_k = (0..cfg.n_layers)
+            .map(|_| f32_literal(&zeros, &kv_dims))
+            .collect::<Result<Vec<_>>>()?;
+        let kv_v = (0..cfg.n_layers)
+            .map(|_| f32_literal(&zeros, &kv_dims))
+            .collect::<Result<Vec<_>>>()?;
+
+        let n_layers = cfg.n_layers;
+        Ok(Engine {
+            cfg,
+            suffix: format!("b{b}"),
+            rt,
+            resident,
+            store,
+            cache,
+            xfer,
+            profile,
+            kv_k,
+            kv_v,
+            slots: Slots { pos: vec![0; b], active: vec![false; b] },
+            lit_cache: std::collections::HashMap::new(),
+            trace: TraceCollector::new(n_layers),
+            predicted: (0..n_layers).map(|_| None).collect(),
+            ecfg,
+        })
+    }
+
+    // -- slots ---------------------------------------------------------------
+
+    pub fn acquire_slot(&mut self) -> Option<usize> {
+        let row = self.slots.active.iter().position(|a| !a)?;
+        self.slots.active[row] = true;
+        self.slots.pos[row] = 0;
+        Some(row)
+    }
+
+    pub fn release_slot(&mut self, row: usize) {
+        self.slots.active[row] = false;
+        self.slots.pos[row] = 0;
+    }
+
+    pub fn slot_pos(&self, row: usize) -> usize {
+        self.slots.pos[row]
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.slots.active.iter().filter(|a| !**a).count()
+    }
+
+    pub fn slot_full(&self, row: usize) -> bool {
+        self.slots.pos[row] >= self.cfg.max_seq
+    }
+
+    // -- decode ---------------------------------------------------------------
+
+    /// One decode step for the given (row, token) pairs. Rows must hold
+    /// active slots. Returns (row, logits) for each input row.
+    pub fn decode_step(&mut self, inputs: &[(usize, u32)]) -> Result<Vec<(usize, Vec<f32>)>> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let t0 = Instant::now();
+        let b = self.ecfg.batch;
+        let l_total = self.cfg.n_layers;
+        let mut tok = vec![0i32; b];
+        let mut stepping = vec![false; b];
+        for &(row, t) in inputs {
+            assert!(self.slots.active[row], "row {row} not active");
+            assert!(!self.slot_full(row), "row {row} KV cache full");
+            tok[row] = t as i32;
+            stepping[row] = true;
+        }
+
+        // embed
+        let t_phase = Instant::now();
+        let tok_lit = i32_literal(&tok, &[b])?;
+        let mut outs = self.rt.run(
+            &format!("embed_{}", self.suffix),
+            &[&tok_lit, &self.resident.embed],
+        )?;
+        let mut h = outs.remove(0);
+        self.trace
+            .record_phase(Phase::EmbedUnembed, t_phase.elapsed().as_nanos() as u64);
+
+        let pos: Vec<i32> = self.slots.pos.iter().map(|&p| p as i32).collect();
+        let pos_lit = i32_literal(&pos, &[b])?;
+        let mut prev_h_host: Option<Tensor> = None;
+
+        for layer in 0..l_total {
+            // ---- attention ----
+            let t_phase = Instant::now();
+            let mut outs = self.rt.run(
+                &format!("attn_step_{}", self.suffix),
+                &[
+                    &h,
+                    &self.resident.attn_norm[layer],
+                    &self.resident.wq[layer],
+                    &self.resident.wk[layer],
+                    &self.resident.wv[layer],
+                    &self.resident.wo[layer],
+                    &self.kv_k[layer],
+                    &self.kv_v[layer],
+                    &pos_lit,
+                ],
+            )?;
+            h = outs.remove(0);
+            self.kv_k[layer] = outs.remove(0);
+            self.kv_v[layer] = outs.remove(0);
+            self.trace
+                .record_phase(Phase::Attn, t_phase.elapsed().as_nanos() as u64);
+
+            // ---- gate ----
+            let t_phase = Instant::now();
+            let mut outs = self.rt.run(
+                &format!("gate_{}", self.suffix),
+                &[
+                    &h,
+                    &self.resident.moe_norm[layer],
+                    &self.resident.gate[layer],
+                ],
+            )?;
+            let probs = literal_to_tensor(&outs[0])?; // [B, N]
+            let xn = outs.remove(1); // [B, d] normed MoE input
+
+            let mut h_host = literal_to_tensor(&h)?;
+            self.trace
+                .record_phase(Phase::Gate, t_phase.elapsed().as_nanos() as u64);
+            let t_phase = Instant::now();
+
+            // Fig. 3 trace: similarity between successive MoE-block inputs.
+            if let Some(prev) = &prev_h_host {
+                let mut sims = 0.0;
+                let mut cnt = 0;
+                for r in 0..b {
+                    if stepping[r] {
+                        sims += cosine(prev.row(r), h_host.row(r));
+                        cnt += 1;
+                    }
+                }
+                if cnt > 0 {
+                    self.trace.record_similarity(layer - 1, sims / cnt as f64);
+                }
+            }
+            prev_h_host = Some(h_host.clone());
+
+            // ---- adaptive gating decisions ----
+            let n = self.cfg.n_experts;
+            let mut coef: Vec<Vec<f32>> = vec![vec![0.0; b]; n];
+            let mut needed: HashSet<usize> = HashSet::new();
+            let mut actual_per_row: Vec<Vec<usize>> = vec![Vec::new(); b];
+            for r in 0..b {
+                if !stepping[r] {
+                    continue;
+                }
+                let row = probs.row(r);
+                let decision = self.ecfg.gating.decide(layer, row);
+                let sorted = crate::model::sampling::top_k_indices(row, 2);
+                let p1 = row[sorted[0]];
+                let p2 = if sorted.len() > 1 { row[sorted[1]] } else { 0.0 };
+                self.trace.record_decision(
+                    layer,
+                    (p1 / (p1 + p2 + 1e-12)) as f64,
+                    decision.single(),
+                );
+                for &(e, w) in &decision.experts {
+                    coef[e][r] = w;
+                    needed.insert(e);
+                    actual_per_row[r].push(e);
+                }
+            }
+
+            // β tracking against the prediction made earlier for this layer.
+            if let Some(pred) = self.predicted[layer].take() {
+                self.trace.record_prefetch_outcome(layer, &pred, &actual_per_row);
+            }
+
+            // ---- build exec plan (issues on-demand transfers) ----
+            let computes: Vec<usize> = {
+                let mut v: Vec<usize> = needed.iter().copied().collect();
+                v.sort_unstable();
+                v
+            };
+            let extra: Vec<usize> = if self.ecfg.whole_layer {
+                (0..n).filter(|e| !needed.contains(e)).collect()
+            } else {
+                Vec::new()
+            };
+            let plan = build_plan(layer, &computes, &extra, &self.cache, &self.xfer);
+            self.trace.record_on_demand(layer, plan.on_demand_issued);
+            self.trace
+                .record_phase(Phase::Decide, t_phase.elapsed().as_nanos() as u64);
+
+            // ---- prefetch upcoming layers (comm overlaps what follows) ----
+            if self.ecfg.prefetch.enabled {
+                let t_phase = Instant::now();
+                self.issue_prefetches(layer, &h, &stepping)?;
+                self.trace
+                    .record_phase(Phase::Predict, t_phase.elapsed().as_nanos() as u64);
+            }
+
+            // ---- execute MoE: ready experts first, then pending ----
+            let t_phase = Instant::now();
+            let mut acc = Tensor::zeros(vec![b, self.cfg.d_model]);
+            for (e, wts) in &plan.ready {
+                let y = self.run_expert_cached(layer, *e, &xn, wts, &coef[*e])?;
+                acc.add_assign(&y);
+            }
+            self.trace
+                .record_phase(Phase::MoeReady, t_phase.elapsed().as_nanos() as u64);
+            let t_phase = Instant::now();
+            for (e, handle) in &plan.pending {
+                match self.ecfg.schedule {
+                    ScheduleMode::ExpertWise => {
+                        let t_wait = Instant::now();
+                        let wts = handle.wait_full();
+                        self.trace.record_stall(t_wait.elapsed().as_nanos() as u64);
+                        let y = self.run_expert_full(&xn, &wts, &coef[*e])?;
+                        acc.add_assign(&y);
+                        // a joined prefetch was *used*: promote to the cache
+                        self.cache.insert((layer, *e), wts);
+                    }
+                    ScheduleMode::TileWise => {
+                        for t in 0..self.ecfg.n_tiles {
+                            let t_wait = Instant::now();
+                            let tile = handle.wait_tile(t);
+                            self.trace.record_stall(t_wait.elapsed().as_nanos() as u64);
+                            let y = self.run_expert_tile(&xn, &tile, &coef[*e])?;
+                            acc.add_assign(&y);
+                        }
+                        let wts = handle.wait_full(); // already complete
+                        self.cache.insert((layer, *e), wts);
+                    }
+                }
+            }
+
+            self.trace
+                .record_phase(Phase::MoeWait, t_phase.elapsed().as_nanos() as u64);
+
+            let t_phase = Instant::now();
+            h_host.add_assign(&acc);
+            h = tensor_to_literal(&h_host)?;
+            self.trace
+                .record_phase(Phase::Residual, t_phase.elapsed().as_nanos() as u64);
+        }
+
+        // ---- pre-gate prefetch for the next token's first layer ----
+        if self.ecfg.prefetch.enabled
+            && self.ecfg.prefetch.use_pre_gate
+            && self.xfer.pending() < self.ecfg.prefetch.max_outstanding
+        {
+            let outs = self.rt.run(
+                &format!("pre_gate_{}", self.suffix),
+                &[&h, &self.resident.out_norm, &self.resident.pre_gate],
+            )?;
+            let probs = literal_to_tensor(&outs[0])?;
+            self.predict_and_request(0, &probs, &stepping)?;
+        }
+
+        // ---- unembed ----
+        let t_phase = Instant::now();
+        let outs = self.rt.run(
+            &format!("unembed_{}", self.suffix),
+            &[&h, &self.resident.out_norm, &self.resident.unembed],
+        )?;
+        let logits = literal_to_tensor(&outs[0])?;
+        self.trace
+            .record_phase(Phase::EmbedUnembed, t_phase.elapsed().as_nanos() as u64);
+
+        // advance positions for stepped rows
+        for &(row, _) in inputs {
+            self.slots.pos[row] += 1;
+        }
+
+        self.trace
+            .record_token(t0.elapsed().as_secs_f64(), inputs.len() as u64);
+
+        Ok(inputs
+            .iter()
+            .map(|&(row, _)| (row, logits.row(row).to_vec()))
+            .collect())
+    }
+
+    /// Predict expert needs for layers `layer+1 ..= layer+lookahead` and
+    /// request prefetches. Horizon extends past depth 1 only while the
+    /// shallower predicted layers are fully satisfied (paper §4.3).
+    fn issue_prefetches(&mut self, layer: usize, h: &Literal, stepping: &[bool]) -> Result<()> {
+        for depth in 1..=self.ecfg.prefetch.lookahead {
+            let j = layer + depth;
+            if j >= self.cfg.n_layers {
+                break;
+            }
+            // Serial link: don't pile prefetches past what it can drain.
+            if self.xfer.pending() >= self.ecfg.prefetch.max_outstanding {
+                break;
+            }
+            let outs = self.rt.run(
+                &format!("gate_{}", self.suffix),
+                &[h, &self.resident.moe_norm[j], &self.resident.gate[j]],
+            )?;
+            let probs = literal_to_tensor(&outs[0])?;
+            let satisfied = self.predict_and_request(j, &probs, stepping)?;
+            if !satisfied {
+                break; // don't extend the horizon past an unsatisfied layer
+            }
+        }
+        Ok(())
+    }
+
+    /// Decide predicted sets for `layer` from router probs, issue prefetch
+    /// requests, store the prediction for β tracking. Returns whether the
+    /// layer was already fully satisfied (all predicted experts resident).
+    fn predict_and_request(
+        &mut self,
+        layer: usize,
+        probs: &Tensor,
+        stepping: &[bool],
+    ) -> Result<bool> {
+        let b = self.ecfg.batch;
+        let rows: Vec<Vec<f32>> = (0..b).map(|r| probs.row(r).to_vec()).collect();
+        let sets = prefetch::predict_sets(&self.ecfg.gating, layer, &rows, stepping);
+        // Extension rule evaluated BEFORE issuing this layer's requests:
+        // the horizon only moves past layers whose predictions were already
+        // covered (resident / staged / in flight from earlier steps).
+        let satisfied = prefetch::layer_satisfied(layer, &sets, &self.cache, &self.xfer);
+        let reqs = prefetch::plan_requests(layer, &sets, &rows, &self.cache, &self.xfer);
+        for id in reqs {
+            self.xfer.request(id, Priority::Prefetch);
+        }
+        self.predicted[layer] = Some(sets);
+        Ok(satisfied)
+    }
+
+    fn run_expert_full(&self, xn: &Literal, wts: &ExpertF32, coef: &[f32]) -> Result<Tensor> {
+        let w1 = tensor_to_literal(&wts.w1)?;
+        let w3 = tensor_to_literal(&wts.w3)?;
+        let w2 = tensor_to_literal(&wts.w2)?;
+        let c = f32_literal(coef, &[coef.len()])?;
+        let outs = self.rt.run(
+            &format!("expert_ffn_{}", self.suffix),
+            &[xn, &w1, &w3, &w2, &c],
+        )?;
+        literal_to_tensor(&outs[0])
+    }
+
+    /// Like run_expert_full, but memoizes the tensor→literal conversion of
+    /// the expert weights keyed by the cache entry's Arc identity.
+    fn run_expert_cached(
+        &mut self,
+        layer: usize,
+        e: usize,
+        xn: &Literal,
+        wts: &std::sync::Arc<ExpertF32>,
+        coef: &[f32],
+    ) -> Result<Tensor> {
+        let key = (layer, e);
+        let ident = std::sync::Arc::as_ptr(wts) as usize;
+        let fresh = match self.lit_cache.get(&key) {
+            Some((id, _)) if *id == ident => false,
+            _ => true,
+        };
+        if fresh {
+            let lits = [
+                tensor_to_literal(&wts.w1)?,
+                tensor_to_literal(&wts.w3)?,
+                tensor_to_literal(&wts.w2)?,
+            ];
+            self.lit_cache.insert(key, (ident, lits));
+        }
+        let (_, lits) = &self.lit_cache[&key];
+        let c = f32_literal(coef, &[coef.len()])?;
+        let outs = self.rt.run(
+            &format!("expert_ffn_{}", self.suffix),
+            &[xn, &lits[0], &lits[1], &lits[2], &c],
+        )?;
+        literal_to_tensor(&outs[0])
+    }
+
+    fn run_expert_tile(&self, xn: &Literal, tile: &ExpertF32, coef: &[f32]) -> Result<Tensor> {
+        let w1 = tensor_to_literal(&tile.w1)?;
+        let w3 = tensor_to_literal(&tile.w3)?;
+        let w2 = tensor_to_literal(&tile.w2)?;
+        let c = f32_literal(coef, &[coef.len()])?;
+        let outs = self.rt.run(
+            &format!("expert_ffn_tile_{}", self.suffix),
+            &[xn, &w1, &w3, &w2, &c],
+        )?;
+        literal_to_tensor(&outs[0])
+    }
+
+    // -- conveniences ----------------------------------------------------------
+
+    /// Feed a prompt through one slot and greedily generate `max_new` tokens.
+    /// Returns the generated tokens (prompt excluded).
+    pub fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<Vec<u32>> {
+        let row = self
+            .acquire_slot()
+            .context("no free slot for generate()")?;
+        let mut last_logits: Option<Vec<f32>> = None;
+        for &t in prompt {
+            let outs = self.decode_step(&[(row, t)])?;
+            last_logits = Some(outs.into_iter().next().unwrap().1);
+        }
+        let mut out = Vec::with_capacity(max_new);
+        let mut next = crate::model::sampling::greedy(
+            last_logits.as_ref().context("empty prompt")?,
+        );
+        for _ in 0..max_new {
+            out.push(next);
+            if self.slot_full(row) {
+                break;
+            }
+            let outs = self.decode_step(&[(row, next)])?;
+            next = crate::model::sampling::greedy(&outs[0].1);
+        }
+        self.release_slot(row);
+        Ok(out)
+    }
+
+    /// Re-run the DP planner on the *online* trace and apply the resulting
+    /// allocation (the adaptive-caching feedback loop).
+    pub fn replan_cache(&mut self) {
+        let inputs = self.trace.plan_inputs(
+            self.cfg.n_experts,
+            self.ecfg.cache_budget,
+            if self.ecfg.prefetch.enabled { 0.5 } else { 0.0 },
+        );
+        let plan = cache_plan::plan(&inputs);
+        self.cache.set_allocation(&plan.allocation);
+    }
+
+    pub fn reset_trace(&mut self) {
+        self.trace = TraceCollector::new(self.cfg.n_layers);
+    }
+}
+
+/// Artifact names needed for a config's batch bucket.
+fn manifest_names(ecfg: &EngineConfig) -> Vec<String> {
+    let b = ecfg.batch;
+    let mut names: Vec<String> = [
+        "embed", "attn_step", "gate", "expert_ffn", "expert_ffn_tile", "pre_gate", "unembed",
+    ]
+    .iter()
+    .map(|n| format!("{n}_b{b}"))
+    .collect();
+    names.dedup();
+    names
+}
+

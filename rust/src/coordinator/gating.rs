@@ -1,0 +1,294 @@
+//! Expert gating policies (paper §4.2).
+//!
+//! Given a token's router probabilities over N experts, decide which experts
+//! to activate and with what mixing weights:
+//!
+//! * [`GatingPolicy::TopK`] — fixed Mixtral top-k routing (the accuracy
+//!   reference; every baseline in §6 uses it).
+//! * [`GatingPolicy::Score`] — the Adap-gating baseline (Li et al. 2023):
+//!   drop to a single expert whenever the top-1's normalized score α exceeds
+//!   a score threshold, regardless of which layer it is.
+//! * [`GatingPolicy::Sensitivity`] — AdapMoE's contribution: drop to a
+//!   single expert when the *loss perturbation* bound
+//!   `(1-α)² · Σdiag(F_i) ≤ T` (eq. 8) holds, where `Σdiag(F_i)` is the
+//!   offline Fisher sensitivity of layer i. Early (sensitive) layers keep
+//!   two experts; late layers shed them aggressively — same mean activation
+//!   ratio, better accuracy (Fig. 7).
+
+use crate::model::sampling::top_k_indices;
+
+/// One token-row's routing decision: (expert index, mixing weight) pairs,
+/// weights renormalized over the selected set.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GateDecision {
+    pub experts: Vec<(usize, f32)>,
+}
+
+impl GateDecision {
+    pub fn single(&self) -> bool {
+        self.experts.len() == 1
+    }
+
+    pub fn contains(&self, e: usize) -> bool {
+        self.experts.iter().any(|&(x, _)| x == e)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub enum GatingPolicy {
+    /// Always the top `k` experts (weights renormalized over the k).
+    TopK { k: usize },
+    /// Score-based adaptive gating: single expert iff α ≥ `alpha_min`.
+    Score { k: usize, alpha_min: f64 },
+    /// Sensitivity-based adaptive gating (eq. 8): single expert iff
+    /// (1-α)² · sensitivity\[layer\] ≤ threshold.
+    Sensitivity {
+        k: usize,
+        threshold: f64,
+        sensitivity: Vec<f64>,
+    },
+}
+
+impl GatingPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GatingPolicy::TopK { .. } => "topk",
+            GatingPolicy::Score { .. } => "score",
+            GatingPolicy::Sensitivity { .. } => "sensitivity",
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        match self {
+            GatingPolicy::TopK { k }
+            | GatingPolicy::Score { k, .. }
+            | GatingPolicy::Sensitivity { k, .. } => *k,
+        }
+    }
+
+    /// Decide routing for one token row of router probabilities at `layer`.
+    pub fn decide(&self, layer: usize, probs: &[f32]) -> GateDecision {
+        let k = self.k().min(probs.len());
+        let top = top_k_indices(probs, k);
+        let p1 = probs[top[0]];
+        let p2 = if k > 1 { probs[top[1]] } else { 0.0 };
+        // α: top-1 share of the top-2 mass (paper eq. 3 normalization).
+        let alpha = (p1 / (p1 + p2 + 1e-12)) as f64;
+
+        let single = match self {
+            GatingPolicy::TopK { .. } => false,
+            GatingPolicy::Score { alpha_min, .. } => alpha >= *alpha_min,
+            GatingPolicy::Sensitivity { threshold, sensitivity, .. } => {
+                let s = sensitivity.get(layer).copied().unwrap_or(f64::INFINITY);
+                (1.0 - alpha).powi(2) * s <= *threshold
+            }
+        };
+
+        if single || k == 1 {
+            GateDecision { experts: vec![(top[0], 1.0)] }
+        } else {
+            let mass: f32 = top.iter().map(|&i| probs[i]).sum();
+            GateDecision {
+                experts: top.iter().map(|&i| (i, probs[i] / mass)).collect(),
+            }
+        }
+    }
+
+    /// Average single-expert ratio this policy yields on a probability
+    /// trace (rows of router probs per layer) — the x-axis of Fig. 7.
+    pub fn single_ratio(&self, trace: &[(usize, Vec<f32>)]) -> f64 {
+        if trace.is_empty() {
+            return 0.0;
+        }
+        let singles = trace
+            .iter()
+            .filter(|(layer, probs)| self.decide(*layer, probs).single())
+            .count();
+        singles as f64 / trace.len() as f64
+    }
+}
+
+/// Calibrate a sensitivity threshold T that achieves `target_ratio` mean
+/// single-expert activations on a trace (paper: binary search on the
+/// validation set; 24% is the deployed setting).
+pub fn calibrate_threshold(
+    sensitivity: &[f64],
+    trace: &[(usize, Vec<f32>)],
+    k: usize,
+    target_ratio: f64,
+) -> f64 {
+    let mut lo = 0.0f64;
+    let mut hi = sensitivity.iter().cloned().fold(0.0, f64::max).max(1e-30) + 1e-30;
+    for _ in 0..64 {
+        let mid = 0.5 * (lo + hi);
+        let pol = GatingPolicy::Sensitivity {
+            k,
+            threshold: mid,
+            sensitivity: sensitivity.to_vec(),
+        };
+        if pol.single_ratio(trace) < target_ratio {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Calibrate the score-based baseline's α threshold for the same ratio.
+pub fn calibrate_score_threshold(
+    trace: &[(usize, Vec<f32>)],
+    k: usize,
+    target_ratio: f64,
+) -> f64 {
+    let mut lo = 0.5f64;
+    let mut hi = 1.0f64;
+    for _ in 0..64 {
+        let mid = 0.5 * (lo + hi);
+        let pol = GatingPolicy::Score { k, alpha_min: mid };
+        if pol.single_ratio(trace) > target_ratio {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn topk_always_k_and_normalized() {
+        let pol = GatingPolicy::TopK { k: 2 };
+        let d = pol.decide(0, &[0.1, 0.6, 0.2, 0.1]);
+        assert_eq!(d.experts.len(), 2);
+        assert_eq!(d.experts[0].0, 1);
+        assert_eq!(d.experts[1].0, 2);
+        let w: f32 = d.experts.iter().map(|&(_, w)| w).sum();
+        assert!((w - 1.0).abs() < 1e-6);
+        assert!((d.experts[0].1 - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn score_gate_drops_to_single_on_skew() {
+        let pol = GatingPolicy::Score { k: 2, alpha_min: 0.8 };
+        // α = 0.9/(0.9+0.05) ≈ 0.947 -> single
+        assert!(pol.decide(0, &[0.9, 0.05, 0.03, 0.02]).single());
+        // α = 0.5 -> keep both
+        assert!(!pol.decide(0, &[0.4, 0.4, 0.1, 0.1]).single());
+    }
+
+    #[test]
+    fn sensitivity_gate_is_layer_aware() {
+        // same probs, different layers: sensitive layer keeps 2 experts
+        let pol = GatingPolicy::Sensitivity {
+            k: 2,
+            threshold: 1e-2,
+            sensitivity: vec![10.0, 0.01],
+        };
+        let probs = [0.7f32, 0.2, 0.05, 0.05];
+        assert!(!pol.decide(0, &probs).single(), "sensitive layer must keep 2");
+        assert!(pol.decide(1, &probs).single(), "insensitive layer can drop");
+    }
+
+    #[test]
+    fn sensitivity_reduces_to_topk_at_zero_threshold() {
+        let pol = GatingPolicy::Sensitivity {
+            k: 2,
+            threshold: 0.0,
+            sensitivity: vec![1.0; 4],
+        };
+        let mut rng = Rng::new(0);
+        for _ in 0..100 {
+            let probs = prop::simplex(&mut rng, 8);
+            let d = pol.decide(rng.usize_below(4), &probs);
+            // α<1 strictly (ties aside) so (1-α)²·S > 0 ≥ T fails -> top-2
+            assert_eq!(d.experts.len(), 2);
+        }
+    }
+
+    #[test]
+    fn calibration_hits_target_ratio() {
+        let mut rng = Rng::new(42);
+        let sens: Vec<f64> = (0..8).map(|i| 1.0 / (1.0 + i as f64)).collect();
+        let trace: Vec<(usize, Vec<f32>)> = (0..4000)
+            .map(|_| (rng.usize_below(8), prop::simplex(&mut rng, 8)))
+            .collect();
+        let t = calibrate_threshold(&sens, &trace, 2, 0.24);
+        let pol = GatingPolicy::Sensitivity { k: 2, threshold: t, sensitivity: sens };
+        let r = pol.single_ratio(&trace);
+        assert!((r - 0.24).abs() < 0.03, "ratio={r}");
+    }
+
+    #[test]
+    fn score_calibration_hits_target_ratio() {
+        let mut rng = Rng::new(43);
+        let trace: Vec<(usize, Vec<f32>)> = (0..4000)
+            .map(|_| (rng.usize_below(8), prop::simplex(&mut rng, 8)))
+            .collect();
+        let t = calibrate_score_threshold(&trace, 2, 0.3);
+        let pol = GatingPolicy::Score { k: 2, alpha_min: t };
+        let r = pol.single_ratio(&trace);
+        assert!((r - 0.3).abs() < 0.03, "ratio={r}");
+    }
+
+    #[test]
+    fn prop_decisions_are_valid() {
+        prop::check("gate-decision-valid", 200, |rng| {
+            let n = 4 + rng.usize_below(8);
+            let probs = prop::simplex(rng, n);
+            let layer = rng.usize_below(8);
+            let sens: Vec<f64> = (0..8).map(|_| rng.f64()).collect();
+            let pol = match rng.usize_below(3) {
+                0 => GatingPolicy::TopK { k: 2 },
+                1 => GatingPolicy::Score { k: 2, alpha_min: 0.5 + rng.f64() / 2.0 },
+                _ => GatingPolicy::Sensitivity {
+                    k: 2,
+                    threshold: rng.f64() * 0.5,
+                    sensitivity: sens,
+                },
+            };
+            let d = pol.decide(layer, &probs);
+            crate::prop_assert!(!d.experts.is_empty() && d.experts.len() <= 2);
+            let w: f32 = d.experts.iter().map(|&(_, w)| w).sum();
+            crate::prop_assert!((w - 1.0).abs() < 1e-5, "weights sum {w}");
+            // experts must be distinct and in range
+            let mut seen = std::collections::HashSet::new();
+            for &(e, _) in &d.experts {
+                crate::prop_assert!(e < n, "expert {e} out of range {n}");
+                crate::prop_assert!(seen.insert(e), "duplicate expert {e}");
+            }
+            // top-1 is always included
+            let top1 = top_k_indices(&probs, 1)[0];
+            crate::prop_assert!(d.contains(top1), "top-1 missing");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_sensitivity_monotone_in_threshold() {
+        prop::check("sensitivity-monotone", 100, |rng| {
+            let probs = prop::simplex(rng, 8);
+            let layer = rng.usize_below(4);
+            let sens: Vec<f64> = (0..4).map(|_| rng.f64() + 0.1).collect();
+            let t1 = rng.f64() * 0.2;
+            let t2 = t1 + rng.f64() * 0.5;
+            let d1 = GatingPolicy::Sensitivity { k: 2, threshold: t1, sensitivity: sens.clone() }
+                .decide(layer, &probs);
+            let d2 = GatingPolicy::Sensitivity { k: 2, threshold: t2, sensitivity: sens }
+                .decide(layer, &probs);
+            // a higher threshold can only shed experts, never add
+            crate::prop_assert!(
+                d2.experts.len() <= d1.experts.len(),
+                "t1={t1} kept {}, t2={t2} kept {}",
+                d1.experts.len(),
+                d2.experts.len()
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,22 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! * [`gating`] — fixed top-k / score-based / sensitivity-based adaptive
+//!   gating (§4.2, eq. 8)
+//! * [`prefetch`] — gate-reuse multi-layer prefetch + predictive gate (§4.3)
+//! * [`cache_plan`] — knapsack-DP cache allocation (§4.4, eq. 10–19)
+//! * [`scheduler`] — compute/comm overlap, expert- and tile-wise (§5)
+//! * [`engine`] — the decode engine tying it all together
+//! * [`policy`] — paper-method presets (baselines + AdapMoE + ablations)
+//! * [`batcher`] — continuous batching for the serving front
+//! * [`trace`] — online profiling (α, β, scores, similarity, latency)
+//! * [`profile`] — offline profile loader (artifacts/profile.json)
+
+pub mod batcher;
+pub mod cache_plan;
+pub mod engine;
+pub mod gating;
+pub mod policy;
+pub mod prefetch;
+pub mod profile;
+pub mod scheduler;
+pub mod trace;

@@ -1,0 +1,193 @@
+//! Method presets: every serving method evaluated in §6 as an
+//! [`EngineConfig`] factory, so benches and the CLI talk in paper terms.
+//!
+//! | preset | gating | prefetch | cache alloc | schedule | layer load |
+//! |---|---|---|---|---|---|
+//! | `baseline` (DeepSpeed/FlexGen-style) | top-k | off | uniform | expert-wise | whole layer |
+//! | `mixtral-offloading` | top-k | off | uniform LRU | expert-wise | needed only |
+//! | `pre-gated` | top-k | next layer, no pre-gate | uniform | expert-wise | needed only |
+//! | `adapmoe-nogate` | top-k | 3-layer + pre-gate | DP | tile-wise | needed only |
+//! | `adapmoe` | sensitivity | 3-layer + pre-gate | DP | tile-wise | needed only |
+//!
+//! Ablation rows of Table 2 are built with [`ablation`].
+
+use crate::coordinator::engine::{AllocPolicy, EngineConfig};
+use crate::coordinator::gating::GatingPolicy;
+use crate::coordinator::prefetch::PrefetchConfig;
+use crate::coordinator::profile::Profile;
+use crate::coordinator::scheduler::ScheduleMode;
+use crate::memory::platform::Platform;
+use crate::memory::quant::QuantKind;
+
+/// Shared knobs independent of the serving method.
+#[derive(Clone, Debug)]
+pub struct RunSettings {
+    pub batch: usize,
+    pub cache_budget: usize,
+    pub quant: QuantKind,
+    pub platform: Platform,
+    pub n_tiles: usize,
+    pub time_scale: f64,
+    pub top_k: usize,
+}
+
+impl RunSettings {
+    pub fn new(batch: usize, cache_budget: usize, quant: QuantKind, platform: Platform) -> Self {
+        RunSettings {
+            batch,
+            cache_budget,
+            quant,
+            platform,
+            n_tiles: 4,
+            time_scale: 1.0,
+            top_k: 2,
+        }
+    }
+}
+
+pub const METHODS: &[&str] = &[
+    "baseline",
+    "mixtral-offloading",
+    "pre-gated",
+    "adapmoe-nogate",
+    "adapmoe",
+];
+
+/// Build the EngineConfig for a named method.
+pub fn method(name: &str, s: &RunSettings, profile: &Profile) -> Option<EngineConfig> {
+    let topk = GatingPolicy::TopK { k: s.top_k };
+    let sens = GatingPolicy::Sensitivity {
+        k: s.top_k,
+        threshold: profile.threshold,
+        sensitivity: profile.sensitivity.clone(),
+    };
+    let base = EngineConfig {
+        batch: s.batch,
+        gating: topk.clone(),
+        prefetch: PrefetchConfig::disabled(),
+        alloc: AllocPolicy::Uniform,
+        cache_budget: s.cache_budget,
+        schedule: ScheduleMode::ExpertWise,
+        quant: s.quant,
+        platform: s.platform.clone(),
+        n_tiles: s.n_tiles,
+        time_scale: s.time_scale,
+        whole_layer: false,
+    };
+    Some(match name {
+        // DeepSpeed/FlexGen-style dense offloading: loads every expert of
+        // every layer on demand.
+        "baseline" => EngineConfig { whole_layer: true, ..base },
+        // Eliseev & Mazur: LRU expert cache, on-demand needed experts only,
+        // fixed (uniform) per-layer cache split, no prefetch, no gating.
+        "mixtral-offloading" => base,
+        // Hwang et al.: previous-layer activations select + prefetch the
+        // next layer's experts; first layer stays on-demand.
+        "pre-gated" => EngineConfig {
+            prefetch: PrefetchConfig::next_layer_only(),
+            ..base
+        },
+        // AdapMoE without adaptive gating (output-identical to top-k).
+        "adapmoe-nogate" => EngineConfig {
+            prefetch: PrefetchConfig::standard(),
+            alloc: AllocPolicy::Planned,
+            schedule: ScheduleMode::TileWise,
+            ..base
+        },
+        // Full AdapMoE.
+        "adapmoe" => EngineConfig {
+            gating: sens,
+            prefetch: PrefetchConfig::standard(),
+            alloc: AllocPolicy::Planned,
+            schedule: ScheduleMode::TileWise,
+            ..base
+        },
+        _ => return None,
+    })
+}
+
+/// Table 2 ablation row: toggle gating / prefetch / DP-cache independently
+/// on top of the tuned Mixtral-offloading baseline (tile-wise scheduling is
+/// part of the system implementation, kept on for all rows as in §6.4).
+pub fn ablation(
+    gating: bool,
+    prefetching: bool,
+    dp_cache: bool,
+    s: &RunSettings,
+    profile: &Profile,
+) -> EngineConfig {
+    let mut cfg = method("mixtral-offloading", s, profile).unwrap();
+    cfg.schedule = ScheduleMode::TileWise;
+    if gating {
+        cfg.gating = GatingPolicy::Sensitivity {
+            k: s.top_k,
+            threshold: profile.threshold,
+            sensitivity: profile.sensitivity.clone(),
+        };
+    }
+    if prefetching {
+        cfg.prefetch = PrefetchConfig::standard();
+    }
+    if dp_cache {
+        cfg.alloc = AllocPolicy::Planned;
+    }
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn settings() -> RunSettings {
+        RunSettings::new(1, 8, QuantKind::Int4, Platform::preset("instant").unwrap())
+    }
+
+    #[test]
+    fn all_methods_resolve() {
+        let p = Profile::synthetic(4);
+        for m in METHODS {
+            assert!(method(m, &settings(), &p).is_some(), "{m}");
+        }
+        assert!(method("nope", &settings(), &p).is_none());
+    }
+
+    #[test]
+    fn baseline_loads_whole_layers() {
+        let p = Profile::synthetic(4);
+        assert!(method("baseline", &settings(), &p).unwrap().whole_layer);
+        assert!(!method("mixtral-offloading", &settings(), &p).unwrap().whole_layer);
+    }
+
+    #[test]
+    fn pregated_has_no_first_layer_prediction() {
+        let p = Profile::synthetic(4);
+        let cfg = method("pre-gated", &settings(), &p).unwrap();
+        assert!(cfg.prefetch.enabled);
+        assert_eq!(cfg.prefetch.lookahead, 1);
+        assert!(!cfg.prefetch.use_pre_gate);
+    }
+
+    #[test]
+    fn adapmoe_uses_sensitivity_and_dp() {
+        let p = Profile::synthetic(4);
+        let cfg = method("adapmoe", &settings(), &p).unwrap();
+        assert_eq!(cfg.gating.name(), "sensitivity");
+        assert_eq!(cfg.alloc, AllocPolicy::Planned);
+        assert_eq!(cfg.schedule, ScheduleMode::TileWise);
+        let ng = method("adapmoe-nogate", &settings(), &p).unwrap();
+        assert_eq!(ng.gating.name(), "topk");
+    }
+
+    #[test]
+    fn ablation_combos() {
+        let p = Profile::synthetic(4);
+        let all = ablation(true, true, true, &settings(), &p);
+        assert_eq!(all.gating.name(), "sensitivity");
+        assert!(all.prefetch.enabled);
+        assert_eq!(all.alloc, AllocPolicy::Planned);
+        let none = ablation(false, false, false, &settings(), &p);
+        assert_eq!(none.gating.name(), "topk");
+        assert!(!none.prefetch.enabled);
+        assert_eq!(none.alloc, AllocPolicy::Uniform);
+    }
+}

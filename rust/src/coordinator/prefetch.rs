@@ -1,0 +1,196 @@
+//! Adaptive expert prefetching (paper §4.3, Fig. 5).
+//!
+//! The engine predicts upcoming layers' expert needs by applying layer j's
+//! own norm+gate to the *current* activations (valid because successive
+//! MoE-block inputs are nearly parallel — Observation 2), and layer 0's
+//! needs for the next token via the trained predictive gate. This module
+//! holds the pure planning logic: which predicted experts to actually
+//! request, in what order, given cache/in-flight state and the gating
+//! policy (adaptive gating shrinks the prediction set too — the paper's
+//! "incorporating adaptive gating into predictions").
+
+use std::collections::HashSet;
+
+use crate::coordinator::gating::{GateDecision, GatingPolicy};
+use crate::memory::device_cache::DeviceCache;
+use crate::memory::transfer::TransferEngine;
+use crate::model::ExpertId;
+
+#[derive(Clone, Debug)]
+pub struct PrefetchConfig {
+    pub enabled: bool,
+    /// How many layers ahead to predict (paper: next two/three layers).
+    pub lookahead: usize,
+    /// Use the trained predictive gate for layer 0 (next token).
+    pub use_pre_gate: bool,
+    /// Max in-flight transfers before the engine stops issuing prefetches.
+    /// The link is serial: without a cap, deep lookahead floods the comm
+    /// queue faster than the (calibrated, slow) link drains it and the
+    /// backlog grows without bound.
+    pub max_outstanding: usize,
+}
+
+impl PrefetchConfig {
+    pub fn disabled() -> PrefetchConfig {
+        PrefetchConfig { enabled: false, lookahead: 0, use_pre_gate: false, max_outstanding: 0 }
+    }
+
+    pub fn standard() -> PrefetchConfig {
+        PrefetchConfig { enabled: true, lookahead: 3, use_pre_gate: true, max_outstanding: 4 }
+    }
+
+    /// Pre-gated MoE baseline: strictly next-layer prediction, no layer-0
+    /// predictive gate (it on-demand loads the first layer).
+    pub fn next_layer_only() -> PrefetchConfig {
+        PrefetchConfig { enabled: true, lookahead: 1, use_pre_gate: false, max_outstanding: 4 }
+    }
+}
+
+/// Turn per-row router probabilities for a future layer into per-row
+/// predicted expert sets under the gating policy.
+pub fn predict_sets(
+    policy: &GatingPolicy,
+    layer: usize,
+    probs_rows: &[Vec<f32>],
+    active: &[bool],
+) -> Vec<HashSet<usize>> {
+    probs_rows
+        .iter()
+        .enumerate()
+        .map(|(r, probs)| {
+            if !active[r] {
+                return HashSet::new();
+            }
+            let d: GateDecision = policy.decide(layer, probs);
+            d.experts.iter().map(|&(e, _)| e).collect()
+        })
+        .collect()
+}
+
+/// Experts to request for a predicted layer: union over rows, minus those
+/// already resident or in flight. Order: by total predicted probability
+/// mass (most-likely first) so partial budget goes to the likeliest.
+pub fn plan_requests(
+    layer: usize,
+    predicted: &[HashSet<usize>],
+    probs_rows: &[Vec<f32>],
+    cache: &DeviceCache,
+    xfer: &TransferEngine,
+) -> Vec<ExpertId> {
+    let mut mass: Vec<(usize, f64)> = Vec::new();
+    let mut union: HashSet<usize> = HashSet::new();
+    for set in predicted {
+        union.extend(set.iter().copied());
+    }
+    for &e in &union {
+        let m: f64 = probs_rows.iter().map(|p| p.get(e).copied().unwrap_or(0.0) as f64).sum();
+        mass.push((e, m));
+    }
+    mass.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    mass.into_iter()
+        .map(|(e, _)| (layer, e))
+        .filter(|&id| {
+            !cache.contains(id)
+                && xfer.in_flight(id).is_none()
+                && !xfer.staging_contains(id)
+        })
+        .collect()
+}
+
+/// True when every predicted expert for `layer` is resident or staged —
+/// the paper's condition for extending the prefetch horizon to the layer
+/// after ("if the experts needed by the next layer are already cached,
+/// preemptively fetch for subsequent layers"). In-flight transfers do NOT
+/// count: extending past a still-loading layer floods the serial link.
+pub fn layer_satisfied(
+    layer: usize,
+    predicted: &[HashSet<usize>],
+    cache: &DeviceCache,
+    xfer: &TransferEngine,
+) -> bool {
+    predicted.iter().flat_map(|s| s.iter()).all(|&e| {
+        let id = (layer, e);
+        cache.contains(id) || xfer.staging_contains(id)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    use crate::memory::host_store::HostStore;
+    use crate::memory::platform::Platform;
+    use crate::memory::quant::QuantKind;
+    use crate::testutil::{micro_config, synthetic_weights};
+
+    fn fixture() -> (Arc<DeviceCache>, TransferEngine) {
+        let cfg = micro_config();
+        let w = synthetic_weights(&cfg, 11);
+        let store = Arc::new(HostStore::build(&cfg, &w, QuantKind::F32).unwrap());
+        let cache = Arc::new(DeviceCache::new(vec![4; cfg.n_layers]));
+        let xfer = TransferEngine::new(
+            Arc::clone(&store),
+            Arc::clone(&cache),
+            Platform::preset("instant").unwrap(),
+            4,
+            0.0,
+        );
+        (cache, xfer)
+    }
+
+    #[test]
+    fn predict_sets_respects_active_mask() {
+        let pol = GatingPolicy::TopK { k: 2 };
+        let probs = vec![vec![0.5, 0.3, 0.2], vec![0.1, 0.1, 0.8]];
+        let sets = predict_sets(&pol, 0, &probs, &[true, false]);
+        assert_eq!(sets[0], HashSet::from([0, 1]));
+        assert!(sets[1].is_empty());
+    }
+
+    #[test]
+    fn plan_orders_by_mass_and_filters() {
+        let (cache, xfer) = fixture();
+        let probs = vec![vec![0.05, 0.6, 0.35], vec![0.05, 0.55, 0.40]];
+        let predicted = vec![HashSet::from([1, 2]), HashSet::from([1, 2])];
+        let reqs = plan_requests(1, &predicted, &probs, &cache, &xfer);
+        assert_eq!(reqs, vec![(1, 1), (1, 2)]); // expert 1 has more mass
+
+        // cached experts are filtered out
+        cache.insert((1, 1), Arc::new(crate::memory::host_store::ExpertF32 {
+            w1: crate::tensor::Tensor::zeros(vec![1, 1]),
+            w3: crate::tensor::Tensor::zeros(vec![1, 1]),
+            w2: crate::tensor::Tensor::zeros(vec![1, 1]),
+        }));
+        let reqs = plan_requests(1, &predicted, &probs, &cache, &xfer);
+        assert_eq!(reqs, vec![(1, 2)]);
+    }
+
+    #[test]
+    fn in_flight_not_requested_twice() {
+        let (cache, xfer) = fixture();
+        let h = xfer.request((0, 3), crate::memory::transfer::Priority::Prefetch);
+        let probs = vec![vec![0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0]];
+        let predicted = vec![HashSet::from([3])];
+        // depending on timing the transfer may already have completed; both
+        // outcomes (filtered by in-flight or by cache) yield an empty plan.
+        h.wait_full();
+        let reqs = plan_requests(0, &predicted, &probs, &cache, &xfer);
+        assert!(reqs.is_empty());
+    }
+
+    #[test]
+    fn satisfied_detects_full_coverage() {
+        let (cache, xfer) = fixture();
+        let predicted = vec![HashSet::from([0]), HashSet::from([1])];
+        assert!(!layer_satisfied(0, &predicted, &cache, &xfer));
+        for e in 0..2 {
+            cache.insert((0, e), Arc::new(crate::memory::host_store::ExpertF32 {
+                w1: crate::tensor::Tensor::zeros(vec![1, 1]),
+                w3: crate::tensor::Tensor::zeros(vec![1, 1]),
+                w2: crate::tensor::Tensor::zeros(vec![1, 1]),
+            }));
+        }
+        assert!(layer_satisfied(0, &predicted, &cache, &xfer));
+    }
+}

@@ -1,0 +1,92 @@
+//! Offline profile (artifacts/profile.json) — the output of the paper's
+//! offline phase: Fisher sensitivities, calibrated gating threshold, and
+//! the α/β priors that seed the DP cache planner before online traces
+//! accumulate.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct Profile {
+    /// Σ diag(F_i) per layer (paper eq. 6–7).
+    pub sensitivity: Vec<f64>,
+    /// Calibrated threshold T for the target single-expert ratio.
+    pub threshold: f64,
+    pub target_single_ratio: f64,
+    /// Offline single-expert probability per layer (α_i prior).
+    pub alpha: Vec<f64>,
+    /// Offline prefetch accuracy per layer (β_i prior).
+    pub beta: Vec<f64>,
+    /// Cross-layer activation similarity (Fig. 3 reference series).
+    pub similarity: Vec<f64>,
+}
+
+impl Profile {
+    pub fn load(dir: &Path) -> Result<Profile> {
+        let text = std::fs::read_to_string(dir.join("profile.json"))
+            .with_context(|| format!("reading profile.json in {}", dir.display()))?;
+        Self::from_json(&Json::parse(&text).context("parsing profile.json")?)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Profile> {
+        let vec = |k: &str| -> Result<Vec<f64>> {
+            j.get(k)
+                .and_then(|v| v.as_f64_vec())
+                .with_context(|| format!("profile missing '{k}'"))
+        };
+        Ok(Profile {
+            sensitivity: vec("sensitivity")?,
+            threshold: j
+                .get("threshold")
+                .and_then(|v| v.as_f64())
+                .context("profile missing 'threshold'")?,
+            target_single_ratio: j
+                .get("target_single_ratio")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.24),
+            alpha: vec("alpha")?,
+            beta: vec("beta")?,
+            similarity: vec("similarity").unwrap_or_default(),
+        })
+    }
+
+    /// Flat profile for tests / runs without artifacts.
+    pub fn synthetic(n_layers: usize) -> Profile {
+        Profile {
+            sensitivity: (0..n_layers).map(|i| 1.0 / (1.0 + i as f64)).collect(),
+            threshold: 0.05,
+            target_single_ratio: 0.24,
+            alpha: vec![0.24; n_layers],
+            beta: vec![0.7; n_layers],
+            similarity: vec![0.9; n_layers.saturating_sub(1)],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_profile_json() {
+        let j = Json::parse(
+            r#"{"sensitivity":[2.0,1.0],"threshold":0.1,
+                "target_single_ratio":0.24,
+                "alpha":[0.2,0.3],"beta":[0.6,0.8],"similarity":[0.9]}"#,
+        )
+        .unwrap();
+        let p = Profile::from_json(&j).unwrap();
+        assert_eq!(p.sensitivity, vec![2.0, 1.0]);
+        assert_eq!(p.beta[1], 0.8);
+        assert_eq!(p.similarity, vec![0.9]);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let j = Json::parse(r#"{"threshold": 0.1}"#).unwrap();
+        assert!(Profile::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! Compute/comm overlap scheduling (paper §5, Algorithm 1 + Fig. 6).
+//!
+//! For one MoE block, partitions the experts to execute into
+//! `ready` (resident — compute immediately, overlapping the transfers of
+//! the rest) and `pending` (enqueued as on-demand loads). The engine then
+//! consumes `pending` either **expert-wise** (wait for the whole expert)
+//! or **tile-wise** (consume each f-tile as it arrives — Fig. 6(b)).
+
+use std::sync::Arc;
+
+use crate::memory::device_cache::DeviceCache;
+use crate::memory::host_store::ExpertF32;
+use crate::memory::transfer::{Priority, TransferEngine, TransferHandle};
+use crate::model::ExpertId;
+
+/// How the engine consumes on-demand experts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleMode {
+    /// Wait for the full expert, then one kernel call (Fig. 6(a)).
+    ExpertWise,
+    /// Kernel call per arrived tile, overlapping compute with the rest of
+    /// the transfer (Fig. 6(b)).
+    TileWise,
+}
+
+/// Execution plan for one layer's MoE block.
+pub struct ExecPlan {
+    /// Experts resident right now (compute first — Algorithm 1 line 11).
+    pub ready: Vec<(usize, Arc<ExpertF32>)>,
+    /// Experts being loaded on-demand (compute as they arrive — line 12).
+    pub pending: Vec<(usize, Arc<TransferHandle>)>,
+    /// On-demand loads issued by this plan (for trace accounting).
+    pub on_demand_issued: u64,
+}
+
+/// Build the plan: look up each compute target in the cache; request
+/// on-demand transfers for misses (joining in-flight transfers); request
+/// (but do not compute) `extra_loads` — the whole-layer baseline's
+/// load-everything behaviour.
+pub fn build_plan(
+    layer: usize,
+    computes: &[usize],
+    extra_loads: &[usize],
+    cache: &DeviceCache,
+    xfer: &TransferEngine,
+) -> ExecPlan {
+    let mut ready = Vec::new();
+    let mut pending = Vec::new();
+    let mut issued = 0;
+
+    for &e in computes {
+        let id: ExpertId = (layer, e);
+        if let Some(w) = cache.get(id) {
+            ready.push((e, w));
+        } else if let Some(w) = xfer.staging.take(id) {
+            // prefetched earlier, parked in the staging buffers (the cache
+            // may have had no room for this layer) — consume it now and give
+            // the cache another chance to keep it.
+            cache.insert(id, Arc::clone(&w));
+            ready.push((e, w));
+        } else if let Some(h) = xfer.in_flight(id) {
+            // already being loaded (e.g. by a prefetch): join it
+            pending.push((e, h));
+        } else {
+            pending.push((e, xfer.request(id, Priority::OnDemand)));
+            issued += 1;
+        }
+    }
+    for &e in extra_loads {
+        let id: ExpertId = (layer, e);
+        if !cache.contains(id) && xfer.in_flight(id).is_none() {
+            xfer.request(id, Priority::OnDemand);
+            issued += 1;
+        }
+    }
+    ExecPlan { ready, pending, on_demand_issued: issued }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::host_store::HostStore;
+    use crate::memory::platform::Platform;
+    use crate::memory::quant::QuantKind;
+    use crate::testutil::{micro_config, synthetic_weights};
+
+    fn fixture(alloc: Vec<usize>, platform: &str) -> (Arc<HostStore>, Arc<DeviceCache>, TransferEngine) {
+        let cfg = micro_config();
+        let w = synthetic_weights(&cfg, 21);
+        let store = Arc::new(HostStore::build(&cfg, &w, QuantKind::F32).unwrap());
+        let cache = Arc::new(DeviceCache::new(alloc));
+        let xfer = TransferEngine::new(
+            Arc::clone(&store),
+            Arc::clone(&cache),
+            Platform::preset(platform).unwrap(),
+            4,
+            1.0,
+        );
+        (store, cache, xfer)
+    }
+
+    #[test]
+    fn cached_experts_are_ready() {
+        let (store, cache, xfer) = fixture(vec![8, 8], "instant");
+        cache.insert((0, 2), Arc::new(store.dequantize((0, 2))));
+        let plan = build_plan(0, &[2, 5], &[], &cache, &xfer);
+        assert_eq!(plan.ready.len(), 1);
+        assert_eq!(plan.ready[0].0, 2);
+        assert_eq!(plan.pending.len(), 1);
+        assert_eq!(plan.pending[0].0, 5);
+        assert_eq!(plan.on_demand_issued, 1);
+        plan.pending[0].1.wait_full();
+    }
+
+    #[test]
+    fn joins_in_flight_without_reissuing() {
+        // slow (calibrated) link so the prefetch is still in flight
+        let (_store, cache, xfer) = fixture(vec![8, 8], "rtx4090");
+        let _pf = xfer.request((0, 3), Priority::Prefetch);
+        let plan = build_plan(0, &[3], &[], &cache, &xfer);
+        // Either the prefetch already completed (instant platform) and it is
+        // a cache hit, or the plan joined the in-flight transfer; in neither
+        // case may a *new* on-demand transfer be issued.
+        assert_eq!(plan.on_demand_issued, 0);
+        for (_, h) in &plan.pending {
+            h.wait_full();
+        }
+    }
+
+    #[test]
+    fn staged_prefetch_is_consumed_as_ready_and_cached() {
+        let (_store, cache, xfer) = fixture(vec![8, 8], "instant");
+        xfer.request((0, 6), crate::memory::transfer::Priority::Prefetch)
+            .wait_full();
+        xfer.quiesce();
+        assert!(xfer.staging_contains((0, 6)));
+        assert!(!cache.contains((0, 6)));
+        let plan = build_plan(0, &[6], &[], &cache, &xfer);
+        assert_eq!(plan.ready.len(), 1, "staged expert should be ready");
+        assert_eq!(plan.on_demand_issued, 0);
+        assert!(cache.contains((0, 6)), "use promotes staged expert to cache");
+        assert!(!xfer.staging_contains((0, 6)));
+    }
+
+    #[test]
+    fn extra_loads_are_issued_not_computed() {
+        let (_store, cache, xfer) = fixture(vec![8, 8], "instant");
+        let plan = build_plan(1, &[0], &[1, 2, 3], &cache, &xfer);
+        assert_eq!(plan.pending.len(), 1);
+        assert_eq!(plan.on_demand_issued, 4);
+        xfer.quiesce();
+        // extra loads landed in cache even though not computed
+        assert!(cache.contains((1, 1)) && cache.contains((1, 2)) && cache.contains((1, 3)));
+    }
+}

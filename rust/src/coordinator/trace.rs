@@ -1,0 +1,260 @@
+//! Online trace collection (the paper's offline-phase profiling, plus all
+//! the raw material for Figs. 2/3/9 and the DP planner inputs).
+
+use std::collections::HashSet;
+
+use crate::coordinator::cache_plan::PlanInputs;
+use crate::util::stats::{Histogram, Summary};
+
+/// Decode-step phases for the time breakdown (perf-pass instrumentation).
+#[derive(Clone, Copy, Debug)]
+pub enum Phase {
+    Attn = 0,
+    Gate = 1,
+    Decide = 2,
+    Predict = 3,
+    MoeReady = 4,
+    MoeWait = 5,
+    Residual = 6,
+    EmbedUnembed = 7,
+}
+
+impl Phase {
+    pub const COUNT: usize = 8;
+
+    pub const NAMES: [&'static str; Phase::COUNT] = [
+        "attn", "gate", "decide", "predict", "moe_ready", "moe_wait",
+        "residual", "embed/unembed",
+    ];
+}
+
+/// Per-layer accumulators gathered while the engine decodes.
+pub struct TraceCollector {
+    n_layers: usize,
+    /// decisions: (single-expert count, total decisions) per layer.
+    pub singles: Vec<u64>,
+    pub decisions: Vec<u64>,
+    /// Normalized top-1 score α samples per layer (Fig. 2).
+    pub alpha_hist: Vec<Histogram>,
+    pub alpha_sum: Vec<f64>,
+    /// Cosine similarity between successive MoE-block inputs (Fig. 3):
+    /// entry i = sim(input of layer i, input of layer i+1).
+    pub sim: Vec<Summary>,
+    /// Prefetch accuracy per layer: (predicted-hit experts, needed experts).
+    pub prefetch_hits: Vec<u64>,
+    pub prefetch_needed: Vec<u64>,
+    /// On-demand loads issued per layer.
+    pub on_demand: Vec<u64>,
+    /// Wall-clock the compute stream spent blocked on transfers (ns).
+    pub stall_ns: u64,
+    /// Per-phase decode-step time (ns): see [`Phase`].
+    pub phase_ns: [u64; Phase::COUNT],
+    /// Per-token decode latency (seconds).
+    pub token_latency: Summary,
+    /// Tokens decoded.
+    pub tokens: u64,
+}
+
+impl TraceCollector {
+    pub fn new(n_layers: usize) -> TraceCollector {
+        TraceCollector {
+            n_layers,
+            singles: vec![0; n_layers],
+            decisions: vec![0; n_layers],
+            alpha_hist: (0..n_layers).map(|_| Histogram::new(0.5, 1.0, 20)).collect(),
+            alpha_sum: vec![0.0; n_layers],
+            sim: (0..n_layers.saturating_sub(1)).map(|_| Summary::new()).collect(),
+            prefetch_hits: vec![0; n_layers],
+            prefetch_needed: vec![0; n_layers],
+            on_demand: vec![0; n_layers],
+            stall_ns: 0,
+            phase_ns: [0; Phase::COUNT],
+            token_latency: Summary::new(),
+            tokens: 0,
+        }
+    }
+
+    pub fn record_decision(&mut self, layer: usize, alpha: f64, single: bool) {
+        self.decisions[layer] += 1;
+        if single {
+            self.singles[layer] += 1;
+        }
+        self.alpha_hist[layer].add(alpha);
+        self.alpha_sum[layer] += alpha;
+    }
+
+    pub fn record_similarity(&mut self, layer: usize, cos: f64) {
+        if layer < self.sim.len() {
+            self.sim[layer].add(cos);
+        }
+    }
+
+    /// Compare a layer's actual per-row needed experts against the predicted
+    /// sets (same row order). β accounting is per *expert*: each needed
+    /// expert found in the prediction counts as a hit (paper Fig. 9(b)).
+    pub fn record_prefetch_outcome(
+        &mut self,
+        layer: usize,
+        predicted: &[HashSet<usize>],
+        actual: &[Vec<usize>],
+    ) {
+        for (pred, act) in predicted.iter().zip(actual) {
+            for e in act {
+                self.prefetch_needed[layer] += 1;
+                if pred.contains(e) {
+                    self.prefetch_hits[layer] += 1;
+                }
+            }
+        }
+    }
+
+    pub fn record_on_demand(&mut self, layer: usize, count: u64) {
+        self.on_demand[layer] += count;
+    }
+
+    pub fn record_stall(&mut self, ns: u64) {
+        self.stall_ns += ns;
+    }
+
+    pub fn record_phase(&mut self, phase: Phase, ns: u64) {
+        self.phase_ns[phase as usize] += ns;
+    }
+
+    /// (name, seconds) pairs for the phase breakdown.
+    pub fn phase_seconds(&self) -> Vec<(&'static str, f64)> {
+        Phase::NAMES
+            .iter()
+            .zip(self.phase_ns.iter())
+            .map(|(n, &ns)| (*n, ns as f64 / 1e9))
+            .collect()
+    }
+
+    pub fn record_token(&mut self, latency_s: f64, rows: u64) {
+        self.token_latency.add(latency_s);
+        self.tokens += rows;
+    }
+
+    // -- derived metrics -----------------------------------------------------
+
+    /// Single-expert activation ratio per layer (Fig. 9(a)).
+    pub fn single_ratio(&self) -> Vec<f64> {
+        (0..self.n_layers)
+            .map(|i| {
+                if self.decisions[i] == 0 {
+                    0.0
+                } else {
+                    self.singles[i] as f64 / self.decisions[i] as f64
+                }
+            })
+            .collect()
+    }
+
+    /// Mean single-expert ratio across layers.
+    pub fn mean_single_ratio(&self) -> f64 {
+        let d: u64 = self.decisions.iter().sum();
+        if d == 0 {
+            return 0.0;
+        }
+        self.singles.iter().sum::<u64>() as f64 / d as f64
+    }
+
+    /// Prefetch accuracy β_i per layer (Fig. 9(b)).
+    pub fn beta(&self) -> Vec<f64> {
+        (0..self.n_layers)
+            .map(|i| {
+                if self.prefetch_needed[i] == 0 {
+                    0.0
+                } else {
+                    self.prefetch_hits[i] as f64 / self.prefetch_needed[i] as f64
+                }
+            })
+            .collect()
+    }
+
+    /// Mean α per layer (Fig. 2(a) series).
+    pub fn alpha_mean(&self) -> Vec<f64> {
+        (0..self.n_layers)
+            .map(|i| {
+                if self.decisions[i] == 0 {
+                    0.0
+                } else {
+                    self.alpha_sum[i] / self.decisions[i] as f64
+                }
+            })
+            .collect()
+    }
+
+    /// Mean cross-layer similarity series (Fig. 3).
+    pub fn similarity(&self) -> Vec<f64> {
+        self.sim.iter().map(|s| s.mean()).collect()
+    }
+
+    /// DP planner inputs measured from this trace; `fallback_beta` fills
+    /// layers with no prefetch data (e.g. prefetch disabled).
+    pub fn plan_inputs(&self, n_experts: usize, budget: usize, fallback_beta: f64) -> PlanInputs {
+        let beta = (0..self.n_layers)
+            .map(|i| {
+                if self.prefetch_needed[i] == 0 {
+                    fallback_beta
+                } else {
+                    self.prefetch_hits[i] as f64 / self.prefetch_needed[i] as f64
+                }
+            })
+            .collect();
+        PlanInputs { n_experts, budget, alpha: self.single_ratio(), beta }
+    }
+
+    /// Tokens decoded per second of recorded latency.
+    pub fn tokens_per_sec(&self) -> f64 {
+        let total = self.token_latency.sum();
+        if total == 0.0 {
+            return 0.0;
+        }
+        self.tokens as f64 / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios_and_beta() {
+        let mut t = TraceCollector::new(2);
+        t.record_decision(0, 0.9, true);
+        t.record_decision(0, 0.6, false);
+        t.record_decision(1, 0.7, false);
+        assert_eq!(t.single_ratio(), vec![0.5, 0.0]);
+        assert!((t.mean_single_ratio() - 1.0 / 3.0).abs() < 1e-9);
+
+        let pred = vec![HashSet::from([1usize, 2]), HashSet::from([3usize])];
+        let actual = vec![vec![1, 4], vec![3]];
+        t.record_prefetch_outcome(0, &pred, &actual);
+        assert_eq!(t.beta()[0], 2.0 / 3.0);
+    }
+
+    #[test]
+    fn plan_inputs_fallback() {
+        let mut t = TraceCollector::new(2);
+        t.record_decision(0, 0.8, true);
+        t.record_decision(1, 0.8, false);
+        let p = t.plan_inputs(8, 10, 0.55);
+        assert_eq!(p.beta, vec![0.55, 0.55]);
+        assert_eq!(p.alpha, vec![1.0, 0.0]);
+        assert_eq!(p.budget, 10);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let mut t = TraceCollector::new(1);
+        t.record_token(0.5, 4);
+        t.record_token(0.5, 4);
+        assert!((t.tokens_per_sec() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn similarity_series_len() {
+        let t = TraceCollector::new(4);
+        assert_eq!(t.similarity().len(), 3);
+    }
+}

@@ -1,0 +1,31 @@
+//! # AdapMoE — adaptive expert gating & management for MoE inference
+//!
+//! Reproduction of *AdapMoE: Adaptive Sensitivity-based Expert Gating and
+//! Management for Efficient MoE Inference* (Zhong et al., ICCAD '24) as a
+//! three-layer rust + JAX + Pallas serving stack:
+//!
+//! * **L3 (this crate)** — the serving coordinator: adaptive gating,
+//!   multi-layer prefetching, DP cache allocation, two-stream overlap
+//!   scheduling, batching, and the offloading memory hierarchy.
+//! * **L2 (`python/compile/model.py`)** — the Mixtral-style MoE decoder,
+//!   AOT-lowered per component to HLO text at build time.
+//! * **L1 (`python/compile/kernels/expert_ffn.py`)** — the Pallas-tiled
+//!   SwiGLU expert kernel embedded in those artifacts.
+//!
+//! The request path is pure rust: [`runtime`] loads the artifacts onto a
+//! PJRT CPU client and [`coordinator::engine`] drives decode steps against
+//! the [`memory`] hierarchy. See DESIGN.md for the experiment index and
+//! EXPERIMENTS.md for measured results.
+
+pub mod bench_support;
+pub mod coordinator;
+pub mod memory;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod testutil;
+pub mod util;
+
+/// Default artifacts directory relative to the repo root.
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";

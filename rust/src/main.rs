@@ -1,0 +1,219 @@
+//! adapmoe — CLI leader for the AdapMoE serving stack.
+//!
+//! Subcommands:
+//!   generate    one prompt through a chosen serving method
+//!   serve       TCP serving front-end (line-delimited JSON)
+//!   plan-cache  print the DP cache allocation for a budget
+//!   profile     decode eval tokens and print the online trace (α/β/…)
+//!
+//! Common flags: --artifacts DIR --method NAME --platform NAME --quant KIND
+//!               --cache N --batch B --time-scale X --seed S
+
+use std::path::PathBuf;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use adapmoe::coordinator::cache_plan;
+use adapmoe::coordinator::engine::Engine;
+use adapmoe::coordinator::policy::{self, RunSettings};
+use adapmoe::coordinator::profile::Profile;
+use adapmoe::memory::platform::Platform;
+use adapmoe::memory::quant::QuantKind;
+use adapmoe::model::tokenizer::{ByteTokenizer, EvalStream};
+use adapmoe::server::tcp;
+use adapmoe::util::cli::Args;
+use adapmoe::util::rng::Rng;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+        return;
+    }
+    let cmd = argv.remove(0);
+    let args = Args::parse(argv);
+    let r = match cmd.as_str() {
+        "generate" => cmd_generate(&args),
+        "serve" => cmd_serve(&args),
+        "plan-cache" => cmd_plan_cache(&args),
+        "profile" => cmd_profile(&args),
+        "help" | "--help" | "-h" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            usage();
+            Err(anyhow::anyhow!("unknown subcommand '{other}'"))
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "adapmoe — AdapMoE (ICCAD'24) serving stack\n\
+         \n\
+         USAGE: adapmoe <generate|serve|plan-cache|profile> [flags]\n\
+         \n\
+         flags:\n\
+           --artifacts DIR   artifacts directory (default: artifacts)\n\
+           --method NAME     {} (default: adapmoe)\n\
+           --platform NAME   {:?} (default: rtx4090)\n\
+           --quant KIND      f32|int8|4bit|4+2bit (default: 4bit)\n\
+           --cache N         total cached experts (default: half of all)\n\
+           --batch B         batch bucket (default: 1 generate, 4 serve)\n\
+           --time-scale X    simulated-link time multiplier (default: 1.0)\n\
+           --prompt TEXT     (generate) prompt text\n\
+           --max-new N       (generate) tokens to generate (default: 64)\n\
+           --addr HOST:PORT  (serve) bind address (default: 127.0.0.1:7411)\n\
+           --tokens N        (profile) eval tokens to decode (default: 200)\n\
+           --budget N        (plan-cache) cache budget in experts",
+        policy::METHODS.join("|"),
+        Platform::names(),
+    );
+}
+
+/// Build an engine from CLI flags (shared by generate/serve/profile).
+fn build_engine(args: &Args, default_batch: usize) -> Result<Engine> {
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let profile = Profile::load(&dir)?;
+    let n_layers = profile.sensitivity.len();
+    let platform = Platform::preset(&args.str_or("platform", "rtx4090"))
+        .context("unknown platform (see --help)")?;
+    let quant = QuantKind::from_name(&args.str_or("quant", "4bit"))
+        .context("unknown quant kind (see --help)")?;
+    let mut settings = RunSettings::new(
+        args.usize_or("batch", default_batch),
+        args.usize_or("cache", n_layers * 8 / 2),
+        quant,
+        platform,
+    );
+    settings.time_scale = args.f64_or("time-scale", 1.0);
+    let method = args.str_or("method", "adapmoe");
+    let ecfg = policy::method(&method, &settings, &profile)
+        .with_context(|| format!("unknown method '{method}'"))?;
+    eprintln!(
+        "[adapmoe] method={method} platform={} quant={} cache={} batch={}",
+        settings.platform.name,
+        settings.quant.name(),
+        settings.cache_budget,
+        settings.batch
+    );
+    Engine::from_artifacts(&dir, ecfg)
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let mut engine = build_engine(args, 1)?;
+    let prompt_text = args.str_or("prompt", "the model expert gate ");
+    let max_new = args.usize_or("max-new", 64);
+    let prompt = ByteTokenizer::encode(&prompt_text);
+    if prompt.is_empty() {
+        bail!("--prompt must be non-empty");
+    }
+    let t0 = std::time::Instant::now();
+    let out = engine.generate(&prompt, max_new)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{}{}", prompt_text, ByteTokenizer::decode(&out));
+    let (h, m, _) = engine.cache.stats();
+    eprintln!(
+        "\n[adapmoe] {} tokens in {:.2}s ({:.1} tok/s) | per-token p50 {:.1}ms | \
+         cache hit {:.0}% | single-expert {:.0}%",
+        out.len(),
+        dt,
+        out.len() as f64 / dt,
+        engine.trace.token_latency.p50() * 1e3,
+        100.0 * h as f64 / (h + m).max(1) as f64,
+        100.0 * engine.trace.mean_single_ratio(),
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let engine = build_engine(args, 4)?;
+    let addr = args.str_or("addr", "127.0.0.1:7411");
+    eprintln!("[adapmoe] serving on {addr} (Ctrl-C to stop)");
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let served = tcp::serve(engine, &addr, shutdown)?;
+    eprintln!("[adapmoe] served {served} completions");
+    Ok(())
+}
+
+fn cmd_plan_cache(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let profile = Profile::load(&dir)?;
+    let l = profile.sensitivity.len();
+    let budget = args.usize_or("budget", l * 8 / 2);
+    let inputs = cache_plan::PlanInputs {
+        n_experts: args.usize_or("experts", 8),
+        budget,
+        alpha: profile.alpha.clone(),
+        beta: profile.beta.clone(),
+    };
+    let plan = cache_plan::plan(&inputs);
+    println!("layer  alpha  beta   cache");
+    for i in 0..l {
+        println!(
+            "{:5}  {:.3}  {:.3}  {:5}",
+            i, profile.alpha[i], profile.beta[i], plan.allocation[i]
+        );
+    }
+    println!(
+        "total {budget} experts -> expected on-demand loads/token: {:.4}",
+        plan.expected_loads
+    );
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let mut engine = build_engine(args, 1)?;
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let eval = EvalStream::load(&dir.join("tokens_eval.bin"))?;
+    let n = args.usize_or("tokens", 200);
+    let mut rng = Rng::new(args.u64_or("seed", 0));
+    let window = engine.cfg.max_seq - 1;
+    let mut remaining = n;
+    while remaining > 0 {
+        let take = remaining.min(window);
+        let prompt = eval.sample_prompt(&mut rng, take);
+        let row = engine.acquire_slot().context("no slot")?;
+        for &t in &prompt {
+            engine.decode_step(&[(row, t)])?;
+        }
+        engine.release_slot(row);
+        remaining -= take;
+    }
+    let tr = &engine.trace;
+    println!("layer  single%  beta   alpha_mean  on_demand");
+    let sr = tr.single_ratio();
+    let beta = tr.beta();
+    let am = tr.alpha_mean();
+    for i in 0..engine.cfg.n_layers {
+        println!(
+            "{:5}  {:6.1}%  {:.3}  {:9.3}  {:9}",
+            i,
+            100.0 * sr[i],
+            beta[i],
+            am[i],
+            tr.on_demand[i]
+        );
+    }
+    println!(
+        "similarity: {:?}",
+        tr.similarity()
+            .iter()
+            .map(|s| (s * 1000.0).round() / 1000.0)
+            .collect::<Vec<_>>()
+    );
+    println!(
+        "tokens/s {:.2} | p50 {:.1}ms | stall {:.1}ms total",
+        tr.tokens_per_sec(),
+        tr.token_latency.p50() * 1e3,
+        tr.stall_ns as f64 / 1e6
+    );
+    Ok(())
+}

@@ -1,0 +1,251 @@
+//! Device-side ("GPU memory") expert cache with per-layer budgets + LRU.
+//!
+//! Capacity is counted in experts, matching the paper's formulation (total
+//! cache size T split into per-layer sizes t_i). Within a layer, eviction is
+//! LRU — the elimination policy every method in §6 uses. The per-layer
+//! allocation vector is produced either uniformly (Mixtral-offloading
+//! baseline) or by the DP planner ([`crate::coordinator::cache_plan`]).
+//!
+//! Shared between the compute thread and the transfer engine's comm thread;
+//! all state sits behind one mutex (operations are O(small) map/queue
+//! updates, never compute).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::memory::host_store::ExpertF32;
+use crate::model::ExpertId;
+
+struct LayerState {
+    capacity: usize,
+    /// LRU order: front = least recently used.
+    order: Vec<usize>,
+}
+
+struct Inner {
+    layers: Vec<LayerState>,
+    entries: HashMap<ExpertId, Arc<ExpertF32>>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Thread-safe expert cache.
+pub struct DeviceCache {
+    inner: Mutex<Inner>,
+}
+
+impl DeviceCache {
+    /// `allocation[i]` = experts of layer i that may be resident.
+    pub fn new(allocation: Vec<usize>) -> DeviceCache {
+        DeviceCache {
+            inner: Mutex::new(Inner {
+                layers: allocation
+                    .into_iter()
+                    .map(|capacity| LayerState { capacity, order: Vec::new() })
+                    .collect(),
+                entries: HashMap::new(),
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    /// Uniform split of `total` experts across `layers` (baseline policy);
+    /// remainder goes to the earliest layers.
+    pub fn uniform_allocation(total: usize, layers: usize, max_per_layer: usize) -> Vec<usize> {
+        let base = total / layers;
+        let extra = total % layers;
+        (0..layers)
+            .map(|i| (base + usize::from(i < extra)).min(max_per_layer))
+            .collect()
+    }
+
+    pub fn allocation(&self) -> Vec<usize> {
+        self.inner.lock().unwrap().layers.iter().map(|l| l.capacity).collect()
+    }
+
+    /// Replace the per-layer budgets (the DP planner path). Shrinking a
+    /// layer evicts its LRU tail immediately.
+    pub fn set_allocation(&self, allocation: &[usize]) {
+        let mut g = self.inner.lock().unwrap();
+        assert_eq!(allocation.len(), g.layers.len());
+        for (i, &cap) in allocation.iter().enumerate() {
+            g.layers[i].capacity = cap;
+            while g.layers[i].order.len() > cap {
+                let victim = g.layers[i].order.remove(0);
+                g.entries.remove(&(i, victim));
+                g.evictions += 1;
+            }
+        }
+    }
+
+    /// Look up an expert; updates LRU recency and hit/miss counters.
+    pub fn get(&self, id: ExpertId) -> Option<Arc<ExpertF32>> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(v) = g.entries.get(&id).cloned() {
+            let order = &mut g.layers[id.0].order;
+            if let Some(pos) = order.iter().position(|&e| e == id.1) {
+                let e = order.remove(pos);
+                order.push(e);
+            }
+            g.hits += 1;
+            Some(v)
+        } else {
+            g.misses += 1;
+            None
+        }
+    }
+
+    /// Peek without touching recency or counters (prefetch planning).
+    pub fn contains(&self, id: ExpertId) -> bool {
+        self.inner.lock().unwrap().entries.contains_key(&id)
+    }
+
+    /// Insert a ready expert, evicting the layer's LRU entry if at capacity.
+    /// A zero-capacity layer ignores inserts. Returns the evicted id.
+    pub fn insert(&self, id: ExpertId, value: Arc<ExpertF32>) -> Option<ExpertId> {
+        let mut g = self.inner.lock().unwrap();
+        let cap = g.layers[id.0].capacity;
+        if cap == 0 {
+            return None;
+        }
+        if g.entries.contains_key(&id) {
+            // refresh recency only
+            let order = &mut g.layers[id.0].order;
+            if let Some(pos) = order.iter().position(|&e| e == id.1) {
+                let e = order.remove(pos);
+                order.push(e);
+            }
+            g.entries.insert(id, value);
+            return None;
+        }
+        let mut evicted = None;
+        if g.layers[id.0].order.len() >= cap {
+            let victim = g.layers[id.0].order.remove(0);
+            g.entries.remove(&(id.0, victim));
+            g.evictions += 1;
+            evicted = Some((id.0, victim));
+        }
+        g.layers[id.0].order.push(id.1);
+        g.entries.insert(id, value);
+        evicted
+    }
+
+    /// Resident experts of one layer.
+    pub fn resident(&self, layer: usize) -> Vec<usize> {
+        self.inner.lock().unwrap().layers[layer].order.clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (hits, misses, evictions) counters.
+    pub fn stats(&self) -> (u64, u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.hits, g.misses, g.evictions)
+    }
+
+    pub fn reset_stats(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.hits = 0;
+        g.misses = 0;
+        g.evictions = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn dummy() -> Arc<ExpertF32> {
+        Arc::new(ExpertF32 {
+            w1: Tensor::zeros(vec![2, 2]),
+            w3: Tensor::zeros(vec![2, 2]),
+            w2: Tensor::zeros(vec![2, 2]),
+        })
+    }
+
+    #[test]
+    fn uniform_allocation_sums() {
+        let a = DeviceCache::uniform_allocation(10, 4, 8);
+        assert_eq!(a, vec![3, 3, 2, 2]);
+        assert_eq!(a.iter().sum::<usize>(), 10);
+        // clamped by per-layer max
+        let b = DeviceCache::uniform_allocation(100, 2, 8);
+        assert_eq!(b, vec![8, 8]);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let c = DeviceCache::new(vec![2]);
+        c.insert((0, 1), dummy());
+        c.insert((0, 2), dummy());
+        assert!(c.get((0, 1)).is_some()); // 1 is now MRU
+        let evicted = c.insert((0, 3), dummy());
+        assert_eq!(evicted, Some((0, 2)));
+        assert!(c.get((0, 2)).is_none());
+        assert!(c.get((0, 1)).is_some());
+    }
+
+    #[test]
+    fn capacity_respected_per_layer() {
+        let c = DeviceCache::new(vec![1, 2]);
+        c.insert((0, 0), dummy());
+        c.insert((0, 1), dummy());
+        c.insert((1, 0), dummy());
+        c.insert((1, 1), dummy());
+        assert_eq!(c.resident(0).len(), 1);
+        assert_eq!(c.resident(1).len(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_layer_never_caches() {
+        let c = DeviceCache::new(vec![0]);
+        assert_eq!(c.insert((0, 0), dummy()), None);
+        assert!(c.get((0, 0)).is_none());
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn reinsert_refreshes_not_duplicates() {
+        let c = DeviceCache::new(vec![2]);
+        c.insert((0, 0), dummy());
+        c.insert((0, 1), dummy());
+        c.insert((0, 0), dummy()); // refresh
+        let evicted = c.insert((0, 2), dummy());
+        assert_eq!(evicted, Some((0, 1))); // 1 was LRU after 0's refresh
+        assert_eq!(c.resident(0).len(), 2);
+    }
+
+    #[test]
+    fn shrink_allocation_evicts_lru_tail() {
+        let c = DeviceCache::new(vec![3]);
+        for e in 0..3 {
+            c.insert((0, e), dummy());
+        }
+        c.set_allocation(&[1]);
+        assert_eq!(c.resident(0), vec![2]); // only the MRU survives
+        let (_, _, ev) = c.stats();
+        assert_eq!(ev, 2);
+    }
+
+    #[test]
+    fn stats_count() {
+        let c = DeviceCache::new(vec![2]);
+        c.insert((0, 0), dummy());
+        c.get((0, 0));
+        c.get((0, 5));
+        let (h, m, _) = c.stats();
+        assert_eq!((h, m), (1, 1));
+        c.reset_stats();
+        assert_eq!(c.stats(), (0, 0, 0));
+    }
+}

@@ -1,0 +1,211 @@
+//! Host-side ("CPU memory") store of all expert weights, quantized.
+//!
+//! The offloading premise of the paper: every expert lives here; only a
+//! bounded set is resident in [`super::device_cache::DeviceCache`] at a
+//! time. The store is immutable after construction and shared by reference
+//! with the transfer engine's comm thread.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::memory::quant::{QuantKind, QuantTensor};
+use crate::model::config::ModelConfig;
+use crate::model::weights::Weights;
+use crate::model::ExpertId;
+use crate::tensor::Tensor;
+
+/// One expert's three matrices, quantized for storage/transfer.
+#[derive(Clone, Debug)]
+pub struct QuantExpert {
+    pub w1: QuantTensor, // [d, f] flattened
+    pub w3: QuantTensor, // [d, f]
+    pub w2: QuantTensor, // [f, d]
+    pub d: usize,
+    pub f: usize,
+}
+
+impl QuantExpert {
+    pub fn size_bytes(&self) -> usize {
+        self.w1.size_bytes() + self.w3.size_bytes() + self.w2.size_bytes()
+    }
+}
+
+/// One expert's dequantized, compute-ready f32 weights.
+#[derive(Clone, Debug)]
+pub struct ExpertF32 {
+    pub w1: Tensor, // [d, f]
+    pub w3: Tensor, // [d, f]
+    pub w2: Tensor, // [f, d]
+}
+
+pub struct HostStore {
+    experts: HashMap<ExpertId, QuantExpert>,
+    pub kind: QuantKind,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    /// f32 expert size of this model — the platform calibration input.
+    pub expert_bytes_f32: usize,
+}
+
+impl HostStore {
+    /// Quantize every expert in `weights` into the store.
+    pub fn build(cfg: &ModelConfig, weights: &Weights, kind: QuantKind) -> Result<HostStore> {
+        let mut experts = HashMap::new();
+        for l in 0..cfg.n_layers {
+            for e in 0..cfg.n_experts {
+                let (w1, w3, w2) = weights.expert(l, e)?;
+                if w1.dims != vec![cfg.d_model, cfg.d_ff] || w2.dims != vec![cfg.d_ff, cfg.d_model]
+                {
+                    bail!("expert ({l},{e}) has unexpected dims {:?}/{:?}", w1.dims, w2.dims);
+                }
+                experts.insert(
+                    (l, e),
+                    QuantExpert {
+                        w1: QuantTensor::quantize(&w1.data, kind),
+                        w3: QuantTensor::quantize(&w3.data, kind),
+                        w2: QuantTensor::quantize(&w2.data, kind),
+                        d: cfg.d_model,
+                        f: cfg.d_ff,
+                    },
+                );
+            }
+        }
+        Ok(HostStore {
+            experts,
+            kind,
+            n_layers: cfg.n_layers,
+            n_experts: cfg.n_experts,
+            expert_bytes_f32: cfg.expert_bytes_f32(),
+        })
+    }
+
+    pub fn get(&self, id: ExpertId) -> &QuantExpert {
+        &self.experts[&id]
+    }
+
+    /// Bytes that cross the simulated link when loading this expert.
+    pub fn expert_transfer_bytes(&self, id: ExpertId) -> usize {
+        self.get(id).size_bytes()
+    }
+
+    /// Full dequantization of one expert (the non-tiled transfer path).
+    pub fn dequantize(&self, id: ExpertId) -> ExpertF32 {
+        let q = self.get(id);
+        ExpertF32 {
+            w1: Tensor { dims: vec![q.d, q.f], data: q.w1.dequantize() },
+            w3: Tensor { dims: vec![q.d, q.f], data: q.w3.dequantize() },
+            w2: Tensor { dims: vec![q.f, q.d], data: q.w2.dequantize() },
+        }
+    }
+
+    /// Dequantize the f-tile [f_start, f_end) of one expert — the tile-wise
+    /// transfer unit of §5/Fig. 6. Row-major layouts make w1/w3 tiles
+    /// column slices and the w2 tile a row slice.
+    pub fn dequantize_tile(&self, id: ExpertId, f_start: usize, f_end: usize) -> ExpertF32 {
+        let q = self.get(id);
+        let (d, f) = (q.d, q.f);
+        assert!(f_end <= f && f_start < f_end);
+        let w = f_end - f_start;
+        // w1/w3 are [d, f]: tile is strided. Decode the covering range once,
+        // then gather the columns.
+        let mut full1 = vec![0f32; d * f];
+        let mut full3 = vec![0f32; d * f];
+        q.w1.dequantize_range(0, d * f, &mut full1);
+        q.w3.dequantize_range(0, d * f, &mut full3);
+        let mut t1 = Vec::with_capacity(d * w);
+        let mut t3 = Vec::with_capacity(d * w);
+        for r in 0..d {
+            t1.extend_from_slice(&full1[r * f + f_start..r * f + f_end]);
+            t3.extend_from_slice(&full3[r * f + f_start..r * f + f_end]);
+        }
+        // w2 is [f, d]: tile rows are contiguous.
+        let mut full2 = vec![0f32; f * d];
+        q.w2.dequantize_range(f_start * d, f_end * d, &mut full2);
+        let t2 = full2[f_start * d..f_end * d].to_vec();
+        ExpertF32 {
+            w1: Tensor { dims: vec![d, w], data: t1 },
+            w3: Tensor { dims: vec![d, w], data: t3 },
+            w2: Tensor { dims: vec![w, d], data: t2 },
+        }
+    }
+
+    pub fn total_experts(&self) -> usize {
+        self.n_layers * self.n_experts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{micro_config as test_config, synthetic_weights as fake_weights};
+
+    #[test]
+    fn build_and_sizes() {
+        let cfg = test_config();
+        let w = fake_weights(&cfg, 1);
+        let hs = HostStore::build(&cfg, &w, QuantKind::Int4).unwrap();
+        assert_eq!(hs.total_experts(), cfg.total_experts());
+        let b = hs.expert_transfer_bytes((0, 0));
+        // int4 ≈ f32/8 plus block params
+        assert!(b < cfg.expert_bytes_f32() / 6, "b={b}");
+    }
+
+    #[test]
+    fn f32_roundtrip_exact() {
+        let cfg = test_config();
+        let w = fake_weights(&cfg, 2);
+        let hs = HostStore::build(&cfg, &w, QuantKind::F32).unwrap();
+        let d = hs.dequantize((1, 3));
+        assert_eq!(&d.w1.data, &w.get("l1.e3.w1").unwrap().data);
+        assert_eq!(&d.w2.data, &w.get("l1.e3.w2").unwrap().data);
+    }
+
+    #[test]
+    fn tiles_reassemble_to_full() {
+        let cfg = test_config();
+        let w = fake_weights(&cfg, 3);
+        let hs = HostStore::build(&cfg, &w, QuantKind::Int8).unwrap();
+        let full = hs.dequantize((0, 1));
+        let n_tiles = 4;
+        let step = cfg.d_ff / n_tiles;
+        let mut w1 = vec![0f32; cfg.d_model * cfg.d_ff];
+        let mut w2 = vec![0f32; cfg.d_ff * cfg.d_model];
+        for t in 0..n_tiles {
+            let tile = hs.dequantize_tile((0, 1), t * step, (t + 1) * step);
+            for r in 0..cfg.d_model {
+                w1[r * cfg.d_ff + t * step..r * cfg.d_ff + (t + 1) * step]
+                    .copy_from_slice(&tile.w1.data[r * step..(r + 1) * step]);
+            }
+            w2[t * step * cfg.d_model..(t + 1) * step * cfg.d_model]
+                .copy_from_slice(&tile.w2.data);
+        }
+        assert_eq!(w1, full.w1.data);
+        assert_eq!(w2, full.w2.data);
+    }
+
+    #[test]
+    fn quant_error_bounded() {
+        let cfg = test_config();
+        let w = fake_weights(&cfg, 4);
+        let hs = HostStore::build(&cfg, &w, QuantKind::Int8).unwrap();
+        let deq = hs.dequantize((0, 0));
+        let orig = w.get("l0.e0.w1").unwrap();
+        let max_err = deq
+            .w1
+            .data
+            .iter()
+            .zip(&orig.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 0.002, "max_err={max_err}");
+    }
+
+    #[test]
+    fn missing_expert_fails_build() {
+        let cfg = test_config();
+        let mut w = fake_weights(&cfg, 5);
+        w.tensors.remove("l0.e0.w1");
+        assert!(HostStore::build(&cfg, &w, QuantKind::Int4).is_err());
+    }
+}

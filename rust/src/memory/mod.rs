@@ -1,0 +1,11 @@
+//! The simulated device memory hierarchy (DESIGN.md 'Substitutions'):
+//! [`host_store`] is "CPU memory" holding every expert quantized,
+//! [`device_cache`] is the bounded "GPU memory" expert cache, and
+//! [`transfer`] is the PCIe link + comm stream, paced by a [`platform`]
+//! preset calibrated so per-expert load times match the paper's testbeds.
+
+pub mod device_cache;
+pub mod host_store;
+pub mod platform;
+pub mod quant;
+pub mod transfer;

@@ -1,0 +1,130 @@
+//! Platform presets: the simulated CPU→GPU link.
+//!
+//! The paper's testbeds are RTX 4090 / A6000 boxes moving Mixtral-8x7b or
+//! -8x22b experts over PCIe 4.0 x16. We run a tiny trained MoE, so using raw
+//! PCIe bandwidth would make expert loads ~1000× cheaper *relative to
+//! compute* than in the paper and invert the regime it studies. The
+//! calibration (DESIGN.md 'Substitutions') scales the link bandwidth by the
+//! model-size ratio, i.e. per-expert transfer *time* matches the paper's
+//! testbed while byte volumes track our real (quantized) expert sizes:
+//!
+//!   eff_bw = pcie_bw × (our_f32_expert_bytes / mixtral_f32_expert_bytes)
+//!
+//! so who-wins / crossover behaviour vs cache size, quantization and
+//! platform is preserved.
+
+/// Mixtral-8x7b expert: 3 matrices of 4096×14336 f32.
+pub const MIXTRAL_8X7B_EXPERT_BYTES_F32: f64 = 3.0 * 4096.0 * 14336.0 * 4.0;
+/// Mixtral-8x22b expert: 3 matrices of 6144×16384 f32.
+pub const MIXTRAL_8X22B_EXPERT_BYTES_F32: f64 = 3.0 * 6144.0 * 16384.0 * 4.0;
+
+#[derive(Clone, Debug)]
+pub struct Platform {
+    pub name: String,
+    /// Effective host→device bandwidth of the real testbed, bytes/s.
+    pub pcie_bytes_per_sec: f64,
+    /// Per-transfer setup latency, seconds (DMA setup + driver).
+    pub latency_sec: f64,
+    /// Paper-model expert size this platform is calibrated against.
+    pub ref_expert_bytes_f32: f64,
+}
+
+impl Platform {
+    /// Named presets. `rtx4090` / `a6000` follow the paper's §6.1 platforms;
+    /// `a6000-22b` calibrates against Mixtral-8x22b experts (paper also runs
+    /// 8x22b on A6000); `jetson` is an edge-class sanity point.
+    pub fn preset(name: &str) -> Option<Platform> {
+        let (bw_gbps, latency_us, ref_bytes) = match name {
+            "rtx4090" => (21.0, 15.0, MIXTRAL_8X7B_EXPERT_BYTES_F32),
+            "a6000" => (24.0, 15.0, MIXTRAL_8X7B_EXPERT_BYTES_F32),
+            "a6000-22b" => (24.0, 15.0, MIXTRAL_8X22B_EXPERT_BYTES_F32),
+            "jetson" => (8.0, 30.0, MIXTRAL_8X7B_EXPERT_BYTES_F32),
+            // Instant link: logical correctness testing without timing noise.
+            "instant" => {
+                return Some(Platform {
+                    name: "instant".into(),
+                    pcie_bytes_per_sec: f64::INFINITY,
+                    latency_sec: 0.0,
+                    ref_expert_bytes_f32: MIXTRAL_8X7B_EXPERT_BYTES_F32,
+                })
+            }
+            _ => return None,
+        };
+        Some(Platform {
+            name: name.to_string(),
+            pcie_bytes_per_sec: bw_gbps * 1e9,
+            latency_sec: latency_us * 1e-6,
+            ref_expert_bytes_f32: ref_bytes,
+        })
+    }
+
+    pub fn names() -> &'static [&'static str] {
+        &["rtx4090", "a6000", "a6000-22b", "jetson", "instant"]
+    }
+
+    /// Model-scaled effective bandwidth for a model whose f32 expert is
+    /// `our_expert_bytes_f32` bytes. See module docs.
+    pub fn effective_bandwidth(&self, our_expert_bytes_f32: usize) -> f64 {
+        if self.pcie_bytes_per_sec.is_infinite() {
+            return f64::INFINITY;
+        }
+        self.pcie_bytes_per_sec * (our_expert_bytes_f32 as f64 / self.ref_expert_bytes_f32)
+    }
+
+    /// Simulated wall-clock for moving `bytes` of a model with the given
+    /// f32 expert size across this link.
+    pub fn transfer_time(&self, bytes: usize, our_expert_bytes_f32: usize) -> f64 {
+        let bw = self.effective_bandwidth(our_expert_bytes_f32);
+        if bw.is_infinite() {
+            return 0.0;
+        }
+        self.latency_sec + bytes as f64 / bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY_EXPERT: usize = 3 * 128 * 256 * 4; // tiny config f32 expert
+
+    #[test]
+    fn presets_exist() {
+        for name in Platform::names() {
+            assert!(Platform::preset(name).is_some(), "{name}");
+        }
+        assert!(Platform::preset("tpu-v9000").is_none());
+    }
+
+    #[test]
+    fn per_expert_time_matches_paper_scale() {
+        // Paper: 4-bit Mixtral-8x7b expert ≈ 88 MB over ~21 GB/s ≈ 4.2 ms.
+        let p = Platform::preset("rtx4090").unwrap();
+        let int4_bytes = TINY_EXPERT / 8 + TINY_EXPERT / 64 / 4 * 8; // codes + params
+        let t = p.transfer_time(int4_bytes, TINY_EXPERT);
+        assert!(t > 2e-3 && t < 8e-3, "expert load {t}s out of paper range");
+    }
+
+    #[test]
+    fn quantization_cuts_transfer_time() {
+        let p = Platform::preset("a6000").unwrap();
+        let t_f32 = p.transfer_time(TINY_EXPERT, TINY_EXPERT);
+        let t_int4 = p.transfer_time(TINY_EXPERT / 8, TINY_EXPERT);
+        assert!(t_int4 < t_f32 / 4.0);
+    }
+
+    #[test]
+    fn instant_is_free() {
+        let p = Platform::preset("instant").unwrap();
+        assert_eq!(p.transfer_time(1 << 30, TINY_EXPERT), 0.0);
+    }
+
+    #[test]
+    fn faster_platform_faster_transfer() {
+        let fast = Platform::preset("a6000").unwrap();
+        let slow = Platform::preset("jetson").unwrap();
+        assert!(
+            fast.transfer_time(1 << 20, TINY_EXPERT) < slow.transfer_time(1 << 20, TINY_EXPERT)
+        );
+    }
+}

@@ -1,0 +1,660 @@
+//! Transfer engine: the paper's comm CUDA stream, as a dedicated OS thread.
+//!
+//! Implements the COMMSTREAM half of Algorithm 1: a queue of expert-load
+//! jobs, each transferred **tile by tile** (Fig. 6) with per-tile arrival
+//! notification so the compute stream can start consuming an expert before
+//! it has fully arrived. On-demand loads travel in a higher-priority queue
+//! than prefetches.
+//!
+//! The PCIe link is simulated (DESIGN.md 'Substitutions'): each tile does
+//! its *real* work (dequantizing the quantized bytes to f32) and then sleeps
+//! out the remainder of the simulated wire time given by the platform's
+//! calibrated bandwidth. Completed experts are published into the
+//! [`DeviceCache`] and handed to waiters through [`TransferHandle`].
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::memory::device_cache::DeviceCache;
+use crate::memory::host_store::{ExpertF32, HostStore};
+use crate::memory::platform::Platform;
+use crate::model::ExpertId;
+use crate::tensor::Tensor;
+
+/// Priority class of a transfer job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Priority {
+    /// Needed by the layer currently executing — compute is stalling on it.
+    OnDemand,
+    /// Speculative load for an upcoming layer.
+    Prefetch,
+}
+
+/// Shared state of one in-flight expert transfer.
+pub struct TransferHandle {
+    state: Mutex<HandleState>,
+    cond: Condvar,
+    pub id: ExpertId,
+    pub n_tiles: usize,
+}
+
+struct HandleState {
+    tiles: Vec<Option<Arc<ExpertF32>>>,
+    full: Option<Arc<ExpertF32>>,
+    tiles_done: usize,
+}
+
+impl TransferHandle {
+    fn new(id: ExpertId, n_tiles: usize) -> TransferHandle {
+        TransferHandle {
+            state: Mutex::new(HandleState {
+                tiles: vec![None; n_tiles],
+                full: None,
+                tiles_done: 0,
+            }),
+            cond: Condvar::new(),
+            id,
+            n_tiles,
+        }
+    }
+
+    /// Block until tile `t` has arrived; returns its dequantized slice
+    /// (w1/w3 column tile + w2 row tile — see HostStore::dequantize_tile).
+    pub fn wait_tile(&self, t: usize) -> Arc<ExpertF32> {
+        let mut g = self.state.lock().unwrap();
+        while g.tiles[t].is_none() {
+            g = self.cond.wait(g).unwrap();
+        }
+        g.tiles[t].clone().unwrap()
+    }
+
+    /// Block until the whole expert has arrived.
+    pub fn wait_full(&self) -> Arc<ExpertF32> {
+        let mut g = self.state.lock().unwrap();
+        while g.full.is_none() {
+            g = self.cond.wait(g).unwrap();
+        }
+        g.full.clone().unwrap()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.state.lock().unwrap().full.is_some()
+    }
+
+    pub fn tiles_done(&self) -> usize {
+        self.state.lock().unwrap().tiles_done
+    }
+
+    fn publish_tile(&self, t: usize, data: Arc<ExpertF32>) {
+        let mut g = self.state.lock().unwrap();
+        g.tiles[t] = Some(data);
+        g.tiles_done += 1;
+        self.cond.notify_all();
+    }
+
+    fn publish_full(&self, data: Arc<ExpertF32>) {
+        let mut g = self.state.lock().unwrap();
+        g.full = Some(data);
+        self.cond.notify_all();
+    }
+}
+
+struct Job {
+    id: ExpertId,
+    handle: Arc<TransferHandle>,
+    priority: Priority,
+}
+
+/// Counters exported to benches/metrics.
+#[derive(Default)]
+pub struct TransferStats {
+    pub transfers: AtomicU64,
+    pub bytes: AtomicU64,
+    pub on_demand: AtomicU64,
+    pub prefetch: AtomicU64,
+    pub sim_busy_ns: AtomicU64,
+    pub skipped_cached: AtomicU64,
+}
+
+/// Completed prefetches parked until the target layer consumes them —
+/// the paper's transient GPU-side landing buffers, distinct from the
+/// managed cache (so a layer with a zero cache allocation still benefits
+/// from prefetching). Bounded FIFO.
+pub struct Staging {
+    map: Mutex<(HashMap<ExpertId, Arc<ExpertF32>>, Vec<ExpertId>)>,
+    cap: usize,
+}
+
+impl Staging {
+    fn new(cap: usize) -> Staging {
+        Staging { map: Mutex::new((HashMap::new(), Vec::new())), cap }
+    }
+
+    fn put(&self, id: ExpertId, v: Arc<ExpertF32>) {
+        let mut g = self.map.lock().unwrap();
+        if g.0.insert(id, v).is_none() {
+            g.1.push(id);
+        }
+        while g.1.len() > self.cap {
+            let victim = g.1.remove(0);
+            g.0.remove(&victim);
+        }
+    }
+
+    /// Consume a staged expert (single use — it moves to the cache or dies).
+    pub fn take(&self, id: ExpertId) -> Option<Arc<ExpertF32>> {
+        let mut g = self.map.lock().unwrap();
+        let v = g.0.remove(&id);
+        if v.is_some() {
+            if let Some(pos) = g.1.iter().position(|&e| e == id) {
+                g.1.remove(pos);
+            }
+        }
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+pub struct TransferEngine {
+    urgent_tx: Sender<Job>,
+    prefetch_tx: Sender<Job>,
+    wake_tx: Sender<()>,
+    worker: Option<JoinHandle<()>>,
+    in_flight: Arc<Mutex<HashMap<ExpertId, Arc<TransferHandle>>>>,
+    /// Prefetch jobs the compute stream is now blocked on — the comm loop
+    /// lifts these to the urgent queue (CUDA-stream-priority analogue).
+    promotions: Arc<Mutex<std::collections::HashSet<ExpertId>>>,
+    pub stats: Arc<TransferStats>,
+    pub staging: Arc<Staging>,
+    pub n_tiles: usize,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl TransferEngine {
+    /// Spawn the comm thread. `time_scale` multiplies simulated wire time
+    /// (1.0 = calibrated; tests use 0.0 for logic-only runs).
+    pub fn new(
+        store: Arc<HostStore>,
+        cache: Arc<DeviceCache>,
+        platform: Platform,
+        n_tiles: usize,
+        time_scale: f64,
+    ) -> TransferEngine {
+        assert!(n_tiles >= 1);
+        let (urgent_tx, urgent_rx) = channel::<Job>();
+        let (prefetch_tx, prefetch_rx) = channel::<Job>();
+        let (wake_tx, wake_rx) = channel::<()>();
+        let in_flight: Arc<Mutex<HashMap<ExpertId, Arc<TransferHandle>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let stats = Arc::new(TransferStats::default());
+        let staging = Arc::new(Staging::new(4 * store.n_experts));
+        let promotions = Arc::new(Mutex::new(std::collections::HashSet::new()));
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        let worker = {
+            let in_flight = Arc::clone(&in_flight);
+            let stats = Arc::clone(&stats);
+            let staging = Arc::clone(&staging);
+            let promotions = Arc::clone(&promotions);
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::Builder::new()
+                .name("adapmoe-comm".into())
+                .spawn(move || {
+                    comm_loop(CommCtx {
+                        store,
+                        cache,
+                        platform,
+                        n_tiles,
+                        time_scale,
+                        urgent_rx,
+                        prefetch_rx,
+                        wake_rx,
+                        in_flight,
+                        stats,
+                        staging,
+                        promotions,
+                        shutdown,
+                    })
+                })
+                .expect("spawn comm thread")
+        };
+
+        TransferEngine {
+            urgent_tx,
+            prefetch_tx,
+            wake_tx,
+            worker: Some(worker),
+            in_flight,
+            promotions,
+            stats,
+            staging,
+            n_tiles,
+            shutdown,
+        }
+    }
+
+    /// Enqueue a load (idempotent: joins an in-flight transfer if any; an
+    /// on-demand request for an in-flight *prefetch* promotes it to the
+    /// urgent queue).
+    pub fn request(&self, id: ExpertId, priority: Priority) -> Arc<TransferHandle> {
+        let mut g = self.in_flight.lock().unwrap();
+        if let Some(h) = g.get(&id) {
+            let h = Arc::clone(h);
+            drop(g);
+            if priority == Priority::OnDemand {
+                self.promotions.lock().unwrap().insert(id);
+                let _ = self.wake_tx.send(());
+            }
+            return h;
+        }
+        let handle = Arc::new(TransferHandle::new(id, self.n_tiles));
+        g.insert(id, Arc::clone(&handle));
+        drop(g);
+        let job = Job { id, handle: Arc::clone(&handle), priority };
+        match priority {
+            Priority::OnDemand => self.urgent_tx.send(job).expect("comm thread alive"),
+            Priority::Prefetch => self.prefetch_tx.send(job).expect("comm thread alive"),
+        }
+        let _ = self.wake_tx.send(());
+        handle
+    }
+
+    /// Handle for an in-flight transfer, if any.
+    pub fn in_flight(&self, id: ExpertId) -> Option<Arc<TransferHandle>> {
+        self.in_flight.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Whether a completed prefetch is parked in staging for `id`.
+    pub fn staging_contains(&self, id: ExpertId) -> bool {
+        // peek without consuming
+        let g = self.staging.map.lock().unwrap();
+        g.0.contains_key(&id)
+    }
+
+    pub fn pending(&self) -> usize {
+        self.in_flight.lock().unwrap().len()
+    }
+
+    /// Block until the queue drains (tests / end-of-run barrier).
+    pub fn quiesce(&self) {
+        while self.pending() > 0 {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+}
+
+impl Drop for TransferEngine {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _ = self.wake_tx.send(());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+struct CommCtx {
+    store: Arc<HostStore>,
+    cache: Arc<DeviceCache>,
+    platform: Platform,
+    n_tiles: usize,
+    time_scale: f64,
+    urgent_rx: std::sync::mpsc::Receiver<Job>,
+    prefetch_rx: std::sync::mpsc::Receiver<Job>,
+    wake_rx: std::sync::mpsc::Receiver<()>,
+    in_flight: Arc<Mutex<HashMap<ExpertId, Arc<TransferHandle>>>>,
+    stats: Arc<TransferStats>,
+    staging: Arc<Staging>,
+    promotions: Arc<Mutex<std::collections::HashSet<ExpertId>>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+/// An in-progress transfer (tiles published so far).
+struct Active {
+    job: Job,
+    next_tile: usize,
+    tiles: Vec<Arc<ExpertF32>>,
+    tile_time: f64,
+    bytes: usize,
+}
+
+/// The comm stream. The unit of work is one *tile*: after every tile the
+/// loop re-checks the urgent queue, so an on-demand load preempts an
+/// in-progress prefetch within one tile's wire time (the tile-wise
+/// scheduling of §5 applied to the link itself, like CUDA stream priority
+/// at copy-chunk granularity). Preempted prefetches resume afterwards.
+fn comm_loop(ctx: CommCtx) {
+    let mut urgent: Vec<Active> = Vec::new();
+    let mut background: Vec<Active> = Vec::new();
+
+    loop {
+        if ctx.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        // Drain newly arrived jobs.
+        while let Ok(job) = ctx.urgent_rx.try_recv() {
+            if let Some(a) = admit(&ctx, job) {
+                urgent.push(a);
+            }
+        }
+        while let Ok(job) = ctx.prefetch_rx.try_recv() {
+            if let Some(a) = admit(&ctx, job) {
+                background.push(a);
+            }
+        }
+        // Lift prefetches the compute stream is now blocked on.
+        {
+            let mut promoted = ctx.promotions.lock().unwrap();
+            if !promoted.is_empty() {
+                let mut i = 0;
+                while i < background.len() {
+                    if promoted.remove(&background[i].job.id) {
+                        let a = background.remove(i);
+                        urgent.push(a);
+                    } else {
+                        i += 1;
+                    }
+                }
+                promoted.clear(); // ids not found were already done/urgent
+            }
+        }
+
+        // Pick the next tile of work: urgent FIFO first, else background.
+        let (queue_is_urgent, slot) = if !urgent.is_empty() {
+            (true, &mut urgent)
+        } else if !background.is_empty() {
+            (false, &mut background)
+        } else {
+            match ctx.wake_rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(()) | Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(_) => break, // engine dropped
+            }
+        };
+        let _ = queue_is_urgent;
+
+        let done = transfer_tile(&ctx, &mut slot[0]);
+        if done {
+            let a = slot.remove(0);
+            finish(&ctx, a);
+        }
+    }
+}
+
+/// Set up an Active transfer, or complete it immediately from the cache
+/// (prefetch no-op path).
+fn admit(ctx: &CommCtx, job: Job) -> Option<Active> {
+    if job.priority == Priority::Prefetch && ctx.cache.contains(job.id) {
+        let full = ctx
+            .cache
+            .get(job.id)
+            .unwrap_or_else(|| Arc::new(ctx.store.dequantize(job.id)));
+        for t in 0..ctx.n_tiles {
+            job.handle.publish_tile(t, Arc::clone(&full));
+        }
+        job.handle.publish_full(full);
+        ctx.in_flight.lock().unwrap().remove(&job.id);
+        ctx.stats.skipped_cached.fetch_add(1, Ordering::Relaxed);
+        return None;
+    }
+    let q = ctx.store.get(job.id);
+    let bytes = q.size_bytes();
+    let total_time = ctx.platform.transfer_time(bytes, ctx.store.expert_bytes_f32) * ctx.time_scale;
+    Some(Active {
+        job,
+        next_tile: 0,
+        tiles: Vec::with_capacity(ctx.n_tiles),
+        tile_time: total_time / ctx.n_tiles as f64,
+        bytes,
+    })
+}
+
+/// Move one tile of `a` across the simulated link. Returns completion.
+fn transfer_tile(ctx: &CommCtx, a: &mut Active) -> bool {
+    let q = ctx.store.get(a.job.id);
+    let f = q.f;
+    let f_step = f / ctx.n_tiles;
+    let t = a.next_tile;
+    let t_start = Instant::now();
+    let f_lo = t * f_step;
+    let f_hi = if t + 1 == ctx.n_tiles { f } else { (t + 1) * f_step };
+    // Real work: decode this tile's bytes.
+    let tile = Arc::new(ctx.store.dequantize_tile(a.job.id, f_lo, f_hi));
+    // Simulated wire time for the remainder of the tile.
+    let elapsed = t_start.elapsed().as_secs_f64();
+    if a.tile_time > elapsed {
+        std::thread::sleep(Duration::from_secs_f64(a.tile_time - elapsed));
+    }
+    ctx.stats
+        .sim_busy_ns
+        .fetch_add((a.tile_time.max(elapsed) * 1e9) as u64, Ordering::Relaxed);
+    a.job.handle.publish_tile(t, Arc::clone(&tile));
+    a.tiles.push(tile);
+    a.next_tile += 1;
+    a.next_tile == ctx.n_tiles
+}
+
+/// Assemble + publish a completed transfer.
+fn finish(ctx: &CommCtx, a: Active) {
+    let q = ctx.store.get(a.job.id);
+    let (d, f) = (q.d, q.f);
+    let full = Arc::new(assemble(d, f, f / ctx.n_tiles, &a.tiles));
+    match a.job.priority {
+        // On-demand loads were needed *now*: straight into the LRU cache.
+        Priority::OnDemand => {
+            ctx.cache.insert(a.job.id, Arc::clone(&full));
+        }
+        // Prefetches are speculative: park them in staging only. They are
+        // promoted into the LRU cache at first use (scheduler::build_plan);
+        // inserting them eagerly would evict known-recently-useful experts
+        // for predicted ones — measurable cache pollution.
+        Priority::Prefetch => {
+            ctx.staging.put(a.job.id, Arc::clone(&full));
+        }
+    }
+    a.job.handle.publish_full(full);
+    ctx.in_flight.lock().unwrap().remove(&a.job.id);
+
+    ctx.stats.transfers.fetch_add(1, Ordering::Relaxed);
+    ctx.stats.bytes.fetch_add(a.bytes as u64, Ordering::Relaxed);
+    match a.job.priority {
+        Priority::OnDemand => ctx.stats.on_demand.fetch_add(1, Ordering::Relaxed),
+        Priority::Prefetch => ctx.stats.prefetch.fetch_add(1, Ordering::Relaxed),
+    };
+}
+
+/// Stitch f-tiles back into full [d,f]/[f,d] matrices.
+fn assemble(d: usize, f: usize, f_step: usize, tiles: &[Arc<ExpertF32>]) -> ExpertF32 {
+    let mut w1 = vec![0f32; d * f];
+    let mut w3 = vec![0f32; d * f];
+    let mut w2 = vec![0f32; f * d];
+    for (t, tile) in tiles.iter().enumerate() {
+        let f_lo = t * f_step;
+        let w = tile.w1.dims[1];
+        for r in 0..d {
+            w1[r * f + f_lo..r * f + f_lo + w]
+                .copy_from_slice(&tile.w1.data[r * w..(r + 1) * w]);
+            w3[r * f + f_lo..r * f + f_lo + w]
+                .copy_from_slice(&tile.w3.data[r * w..(r + 1) * w]);
+        }
+        w2[f_lo * d..(f_lo + w) * d].copy_from_slice(&tile.w2.data);
+    }
+    ExpertF32 {
+        w1: Tensor { dims: vec![d, f], data: w1 },
+        w3: Tensor { dims: vec![d, f], data: w3 },
+        w2: Tensor { dims: vec![f, d], data: w2 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::quant::QuantKind;
+    use crate::testutil::{micro_config as test_config, synthetic_weights as fake_weights};
+
+    fn setup(kind: QuantKind, alloc: Vec<usize>, platform: &str, scale: f64)
+        -> (Arc<HostStore>, Arc<DeviceCache>, TransferEngine) {
+        let cfg = test_config();
+        let w = fake_weights(&cfg, 7);
+        let store = Arc::new(HostStore::build(&cfg, &w, kind).unwrap());
+        let cache = Arc::new(DeviceCache::new(alloc));
+        let engine = TransferEngine::new(
+            Arc::clone(&store),
+            Arc::clone(&cache),
+            Platform::preset(platform).unwrap(),
+            4,
+            scale,
+        );
+        (store, cache, engine)
+    }
+
+    #[test]
+    fn transfer_lands_in_cache_and_handle() {
+        let (store, cache, engine) = setup(QuantKind::F32, vec![4, 4], "instant", 0.0);
+        let h = engine.request((0, 3), Priority::OnDemand);
+        let full = h.wait_full();
+        assert!(cache.contains((0, 3)));
+        // F32 roundtrip must match the store exactly
+        let direct = store.dequantize((0, 3));
+        assert_eq!(full.w1.data, direct.w1.data);
+        assert_eq!(full.w2.data, direct.w2.data);
+    }
+
+    #[test]
+    fn tiles_arrive_incrementally_and_match() {
+        let (store, _cache, engine) = setup(QuantKind::Int8, vec![4, 4], "instant", 0.0);
+        let h = engine.request((1, 2), Priority::OnDemand);
+        let cfg = test_config();
+        let step = cfg.d_ff / 4;
+        for t in 0..4 {
+            let tile = h.wait_tile(t);
+            let want = store.dequantize_tile((1, 2), t * step, (t + 1) * step);
+            assert_eq!(tile.w1.data, want.w1.data);
+            assert_eq!(tile.w2.data, want.w2.data);
+        }
+        assert_eq!(h.wait_full().w1.data, store.dequantize((1, 2)).w1.data);
+    }
+
+    #[test]
+    fn duplicate_requests_share_handle() {
+        let (_store, _cache, engine) = setup(QuantKind::Int4, vec![8, 8], "rtx4090", 1.0);
+        let h1 = engine.request((0, 0), Priority::OnDemand);
+        let h2 = engine.request((0, 0), Priority::Prefetch);
+        assert!(Arc::ptr_eq(&h1, &h2));
+        h1.wait_full();
+    }
+
+    #[test]
+    fn simulated_time_is_enforced() {
+        let (store, _cache, engine) = setup(QuantKind::Int4, vec![8, 8], "rtx4090", 1.0);
+        let bytes = store.expert_transfer_bytes((0, 0));
+        let expect = Platform::preset("rtx4090")
+            .unwrap()
+            .transfer_time(bytes, store.expert_bytes_f32);
+        let t0 = Instant::now();
+        engine.request((0, 0), Priority::OnDemand).wait_full();
+        let elapsed = t0.elapsed().as_secs_f64();
+        assert!(
+            elapsed >= expect * 0.8,
+            "transfer finished too fast: {elapsed}s < {expect}s"
+        );
+    }
+
+    #[test]
+    fn prefetch_skipped_when_already_cached() {
+        let (store, cache, engine) = setup(QuantKind::F32, vec![8, 8], "instant", 0.0);
+        cache.insert((0, 1), Arc::new(store.dequantize((0, 1))));
+        let h = engine.request((0, 1), Priority::Prefetch);
+        h.wait_full();
+        engine.quiesce();
+        assert_eq!(engine.stats.skipped_cached.load(Ordering::Relaxed), 1);
+        assert_eq!(engine.stats.transfers.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn stats_track_priorities() {
+        let (_store, _cache, engine) = setup(QuantKind::F32, vec![8, 8], "instant", 0.0);
+        engine.request((0, 0), Priority::OnDemand).wait_full();
+        engine.request((1, 1), Priority::Prefetch).wait_full();
+        engine.quiesce();
+        assert_eq!(engine.stats.on_demand.load(Ordering::Relaxed), 1);
+        assert_eq!(engine.stats.prefetch.load(Ordering::Relaxed), 1);
+        assert!(engine.stats.bytes.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn prefetch_parks_in_staging_not_cache() {
+        let (_store, cache, engine) = setup(QuantKind::F32, vec![8, 8], "instant", 0.0);
+        engine.request((0, 4), Priority::Prefetch).wait_full();
+        engine.quiesce();
+        assert!(!cache.contains((0, 4)), "speculative load must not pollute LRU");
+        assert!(engine.staging_contains((0, 4)));
+        // consuming it removes it from staging
+        let w = engine.staging.take((0, 4));
+        assert!(w.is_some());
+        assert!(!engine.staging_contains((0, 4)));
+        assert!(engine.staging.take((0, 4)).is_none(), "single-use");
+    }
+
+    #[test]
+    fn on_demand_lands_in_cache_directly() {
+        let (_store, cache, engine) = setup(QuantKind::F32, vec![8, 8], "instant", 0.0);
+        engine.request((1, 5), Priority::OnDemand).wait_full();
+        engine.quiesce();
+        assert!(cache.contains((1, 5)));
+    }
+
+    #[test]
+    fn staging_capacity_bounded_fifo() {
+        let staging = Staging::new(2);
+        let dummy = |_: usize| {
+            Arc::new(ExpertF32 {
+                w1: Tensor::zeros(vec![1]),
+                w3: Tensor::zeros(vec![1]),
+                w2: Tensor::zeros(vec![1]),
+            })
+        };
+        staging.put((0, 0), dummy(0));
+        staging.put((0, 1), dummy(1));
+        staging.put((0, 2), dummy(2)); // evicts (0,0)
+        assert_eq!(staging.len(), 2);
+        assert!(staging.take((0, 0)).is_none());
+        assert!(staging.take((0, 1)).is_some());
+        assert!(staging.take((0, 2)).is_some());
+    }
+
+    #[test]
+    fn on_demand_promotes_joined_prefetch() {
+        // Slow link: queue prefetch A then B; A starts transferring. An
+        // on-demand request for B must lift it over A's remaining tiles.
+        let (_store, _cache, engine) = setup(QuantKind::Int4, vec![8, 8], "rtx4090", 1.0);
+        let a = engine.request((0, 0), Priority::Prefetch);
+        std::thread::sleep(Duration::from_millis(1)); // let A become active
+        let b = engine.request((0, 1), Priority::Prefetch);
+        let b2 = engine.request((0, 1), Priority::OnDemand); // promote B
+        assert!(Arc::ptr_eq(&b, &b2));
+        b.wait_full();
+        assert!(
+            !a.is_complete(),
+            "promoted on-demand should finish before the preempted prefetch"
+        );
+        a.wait_full();
+    }
+
+    #[test]
+    fn drop_shuts_down_cleanly() {
+        let (_store, _cache, engine) = setup(QuantKind::F32, vec![4, 4], "instant", 0.0);
+        engine.request((0, 0), Priority::OnDemand).wait_full();
+        drop(engine); // must join without hanging
+    }
+}

@@ -1,0 +1,147 @@
+//! Model configuration, parsed from `artifacts/manifest.json`.
+//! Mirrors `python/compile/config.py::ModelConfig`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rms_eps: f64,
+    pub batch_sizes: Vec<usize>,
+}
+
+impl ModelConfig {
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
+        let g = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .with_context(|| format!("manifest config missing '{k}'"))
+        };
+        Ok(ModelConfig {
+            name: j
+                .get("name")
+                .and_then(|v| v.as_str())
+                .unwrap_or("unknown")
+                .to_string(),
+            vocab_size: g("vocab_size")?,
+            d_model: g("d_model")?,
+            n_heads: g("n_heads")?,
+            head_dim: g("head_dim")?,
+            n_layers: g("n_layers")?,
+            n_experts: g("n_experts")?,
+            top_k: g("top_k")?,
+            d_ff: g("d_ff")?,
+            max_seq: g("max_seq")?,
+            rms_eps: j.get("rms_eps").and_then(|v| v.as_f64()).unwrap_or(1e-5),
+            batch_sizes: j
+                .get("batch_sizes")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_else(|| vec![1]),
+        })
+    }
+
+    pub fn load_manifest(dir: &Path) -> Result<(ModelConfig, Json)> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let manifest = Json::parse(&text).context("parsing manifest.json")?;
+        let cfg = ModelConfig::from_json(
+            manifest.get("config").context("manifest missing 'config'")?,
+        )?;
+        Ok((cfg, manifest))
+    }
+
+    /// Total experts across all layers (the paper's cache budget unit).
+    pub fn total_experts(&self) -> usize {
+        self.n_layers * self.n_experts
+    }
+
+    /// f32 parameter count of one expert.
+    pub fn expert_params(&self) -> usize {
+        3 * self.d_model * self.d_ff
+    }
+
+    pub fn expert_bytes_f32(&self) -> usize {
+        4 * self.expert_params()
+    }
+
+    /// Largest exported batch bucket that fits `n` rows, or the max bucket.
+    pub fn batch_bucket(&self, n: usize) -> usize {
+        let mut sizes = self.batch_sizes.clone();
+        sizes.sort_unstable();
+        for &b in &sizes {
+            if b >= n {
+                return b;
+            }
+        }
+        *sizes.last().expect("batch_sizes non-empty")
+    }
+}
+
+/// Test-only config builder matching python's micro config.
+#[cfg(test)]
+pub fn test_config() -> ModelConfig {
+    ModelConfig {
+        name: "test".into(),
+        vocab_size: 64,
+        d_model: 32,
+        n_heads: 2,
+        head_dim: 16,
+        n_layers: 2,
+        n_experts: 8,
+        top_k: 2,
+        d_ff: 64,
+        max_seq: 64,
+        rms_eps: 1e-5,
+        batch_sizes: vec![1, 4],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_config() {
+        let j = Json::parse(
+            r#"{"name":"tiny","vocab_size":256,"d_model":128,"n_heads":4,
+                "head_dim":32,"n_layers":8,"n_experts":8,"top_k":2,
+                "d_ff":256,"max_seq":256,"rms_eps":1e-5,
+                "batch_sizes":[1,4,8]}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(c.d_model, 128);
+        assert_eq!(c.total_experts(), 64);
+        assert_eq!(c.expert_bytes_f32(), 4 * 3 * 128 * 256);
+        assert_eq!(c.batch_sizes, vec![1, 4, 8]);
+    }
+
+    #[test]
+    fn batch_bucket_selection() {
+        let c = test_config();
+        assert_eq!(c.batch_bucket(1), 1);
+        assert_eq!(c.batch_bucket(2), 4);
+        assert_eq!(c.batch_bucket(4), 4);
+        assert_eq!(c.batch_bucket(9), 4); // clamps to max bucket
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        let j = Json::parse(r#"{"vocab_size": 10}"#).unwrap();
+        assert!(ModelConfig::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! KV-cache manager for the batched decode loop.
+//!
+//! Per layer, holds K and V caches of shape [B, H, S, hd] as host tensors;
+//! they round-trip through the `attn_step` HLO executable each decode step.
+//! Slot management supports continuous batching: rows are leased to
+//! requests, reset on completion, and each row tracks its own position.
+
+use crate::model::config::ModelConfig;
+use crate::tensor::Tensor;
+
+pub struct KvCache {
+    pub batch: usize,
+    /// k\[layer\], v\[layer\]: [B, H, S, hd]
+    pub k: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    /// Next write position per row (== tokens processed so far).
+    pub pos: Vec<usize>,
+    /// Whether a row is currently leased to a request.
+    pub active: Vec<bool>,
+    max_seq: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig, batch: usize) -> KvCache {
+        let dims = vec![batch, cfg.n_heads, cfg.max_seq, cfg.head_dim];
+        KvCache {
+            batch,
+            k: (0..cfg.n_layers).map(|_| Tensor::zeros(dims.clone())).collect(),
+            v: (0..cfg.n_layers).map(|_| Tensor::zeros(dims.clone())).collect(),
+            pos: vec![0; batch],
+            active: vec![false; batch],
+            max_seq: cfg.max_seq,
+        }
+    }
+
+    /// Lease a free row; None if the batch is full.
+    pub fn acquire_row(&mut self) -> Option<usize> {
+        let row = self.active.iter().position(|a| !a)?;
+        self.active[row] = true;
+        self.pos[row] = 0;
+        Some(row)
+    }
+
+    /// Release a row and zero its position (cache contents are masked out by
+    /// position anyway, so no need to scrub the tensors).
+    pub fn release_row(&mut self, row: usize) {
+        self.active[row] = false;
+        self.pos[row] = 0;
+    }
+
+    pub fn active_rows(&self) -> Vec<usize> {
+        (0..self.batch).filter(|&r| self.active[r]).collect()
+    }
+
+    pub fn row_full(&self, row: usize) -> bool {
+        self.pos[row] >= self.max_seq
+    }
+
+    /// Advance positions for the given rows after a decode step.
+    pub fn advance(&mut self, rows: &[usize]) {
+        for &r in rows {
+            debug_assert!(self.active[r]);
+            self.pos[r] += 1;
+        }
+    }
+
+    /// Positions vector (i32) for the HLO call — inactive rows get 0.
+    pub fn positions_i32(&self) -> Vec<i32> {
+        self.pos.iter().map(|&p| p as i32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::test_config;
+
+    #[test]
+    fn shapes() {
+        let cfg = test_config();
+        let kv = KvCache::new(&cfg, 4);
+        assert_eq!(kv.k.len(), cfg.n_layers);
+        assert_eq!(kv.k[0].dims, vec![4, cfg.n_heads, cfg.max_seq, cfg.head_dim]);
+    }
+
+    #[test]
+    fn acquire_release_cycle() {
+        let cfg = test_config();
+        let mut kv = KvCache::new(&cfg, 2);
+        let a = kv.acquire_row().unwrap();
+        let b = kv.acquire_row().unwrap();
+        assert_ne!(a, b);
+        assert!(kv.acquire_row().is_none());
+        kv.release_row(a);
+        assert_eq!(kv.acquire_row(), Some(a));
+    }
+
+    #[test]
+    fn advance_only_listed_rows() {
+        let cfg = test_config();
+        let mut kv = KvCache::new(&cfg, 3);
+        let a = kv.acquire_row().unwrap();
+        let b = kv.acquire_row().unwrap();
+        kv.advance(&[a]);
+        kv.advance(&[a, b]);
+        assert_eq!(kv.pos[a], 2);
+        assert_eq!(kv.pos[b], 1);
+    }
+
+    #[test]
+    fn row_full_at_max_seq() {
+        let cfg = test_config();
+        let mut kv = KvCache::new(&cfg, 1);
+        let r = kv.acquire_row().unwrap();
+        for _ in 0..cfg.max_seq {
+            assert!(!kv.row_full(r));
+            kv.advance(&[r]);
+        }
+        assert!(kv.row_full(r));
+    }
+}

@@ -1,0 +1,13 @@
+//! Model-facing substrates: config, weight container, tokenizer, KV cache,
+//! sampling. (The compute itself lives in AOT-compiled HLO artifacts, run by
+//! [`crate::runtime`]; the decode loop composing everything is
+//! [`crate::coordinator::engine`].)
+
+pub mod config;
+pub mod kv;
+pub mod sampling;
+pub mod tokenizer;
+pub mod weights;
+
+/// Identifier of one expert: (layer, expert index).
+pub type ExpertId = (usize, usize);

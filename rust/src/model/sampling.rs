@@ -1,0 +1,77 @@
+//! Token sampling over logits rows.
+
+use crate::util::rng::Rng;
+
+/// Greedy argmax.
+pub fn greedy(logits: &[f32]) -> u32 {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as u32)
+        .unwrap()
+}
+
+/// Temperature sampling (temperature <= 0 degrades to greedy).
+pub fn sample(logits: &[f32], temperature: f64, rng: &mut Rng) -> u32 {
+    if temperature <= 0.0 {
+        return greedy(logits);
+    }
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let probs: Vec<f64> = logits
+        .iter()
+        .map(|&l| (((l - max) as f64) / temperature).exp())
+        .collect();
+    let total: f64 = probs.iter().sum();
+    let mut u = rng.f64() * total;
+    for (i, p) in probs.iter().enumerate() {
+        u -= p;
+        if u <= 0.0 {
+            return i as u32;
+        }
+    }
+    (probs.len() - 1) as u32
+}
+
+/// Top-k indices (descending by value). Small k, small n — selection sort.
+pub fn top_k_indices(values: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..values.len()).collect();
+    idx.sort_by(|&a, &b| values[b].partial_cmp(&values[a]).unwrap());
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        assert_eq!(greedy(&[0.1, 3.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn zero_temperature_is_greedy() {
+        let mut rng = Rng::new(0);
+        assert_eq!(sample(&[0.0, 9.0, 1.0], 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn sampling_respects_distribution() {
+        let mut rng = Rng::new(1);
+        let logits = [0.0f32, 5.0, 0.0];
+        let mut hits = 0;
+        for _ in 0..500 {
+            if sample(&logits, 1.0, &mut rng) == 1 {
+                hits += 1;
+            }
+        }
+        assert!(hits > 450, "hits={hits}");
+    }
+
+    #[test]
+    fn top_k_ordering() {
+        assert_eq!(top_k_indices(&[0.1, 0.9, 0.5, 0.7], 2), vec![1, 3]);
+        assert_eq!(top_k_indices(&[1.0], 3), vec![0]);
+    }
+}

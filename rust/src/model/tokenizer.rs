@@ -1,0 +1,111 @@
+//! Byte-level tokenizer + workload (prompt) sampling from the eval stream.
+//!
+//! The build-time model is a byte LM (vocab 256), so tokenization is
+//! identity over bytes; this module exists to give the serving layer a
+//! stable interface and to source realistic prompts (the MT-Bench
+//! substitution — see DESIGN.md) from the held-out corpus.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Rng;
+
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn encode(text: &str) -> Vec<u32> {
+        text.as_bytes().iter().map(|&b| b as u32).collect()
+    }
+
+    pub fn decode(tokens: &[u32]) -> String {
+        let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xff) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+/// Held-out token stream (tokens_eval.bin) + prompt sampling.
+pub struct EvalStream {
+    pub tokens: Vec<u32>,
+}
+
+impl EvalStream {
+    pub fn load(path: &Path) -> Result<EvalStream> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.is_empty() {
+            bail!("empty eval stream");
+        }
+        Ok(EvalStream { tokens: bytes.iter().map(|&b| b as u32).collect() })
+    }
+
+    pub fn from_tokens(tokens: Vec<u32>) -> EvalStream {
+        EvalStream { tokens }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Random contiguous window of `len` tokens — a "prompt".
+    pub fn sample_prompt(&self, rng: &mut Rng, len: usize) -> Vec<u32> {
+        assert!(len < self.tokens.len());
+        let start = rng.usize_below(self.tokens.len() - len);
+        self.tokens[start..start + len].to_vec()
+    }
+
+    /// Deterministic evaluation windows covering the stream without overlap:
+    /// (context, next-token) pairs for the accuracy benches.
+    pub fn eval_windows(&self, window: usize, max_windows: usize) -> Vec<(&[u32], u32)> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i + window + 1 < self.tokens.len() && out.len() < max_windows {
+            out.push((&self.tokens[i..i + window], self.tokens[i + window]));
+            i += window + 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = "hello {x:1}";
+        assert_eq!(ByteTokenizer::decode(&ByteTokenizer::encode(s)), s);
+    }
+
+    #[test]
+    fn sample_prompt_in_range() {
+        let es = EvalStream::from_tokens((0..1000).map(|i| (i % 256) as u32).collect());
+        let mut rng = Rng::new(0);
+        for _ in 0..50 {
+            let p = es.sample_prompt(&mut rng, 16);
+            assert_eq!(p.len(), 16);
+            assert!(p.iter().all(|&t| t < 256));
+        }
+    }
+
+    #[test]
+    fn eval_windows_disjoint() {
+        let es = EvalStream::from_tokens((0..100).map(|i| i as u32).collect());
+        let ws = es.eval_windows(9, 100);
+        assert!(!ws.is_empty());
+        // windows step by window+1, so contexts are disjoint
+        assert_eq!(ws[0].0[0], 0);
+        assert_eq!(ws[0].1, 9);
+        assert_eq!(ws[1].0[0], 10);
+    }
+
+    #[test]
+    fn eval_windows_respects_cap() {
+        let es = EvalStream::from_tokens((0..1000).map(|i| i as u32).collect());
+        assert_eq!(es.eval_windows(8, 5).len(), 5);
+    }
+}

@@ -1,0 +1,177 @@
+//! Reader for the `weights.bin` tensor container written by
+//! `python/compile/export.py` (see its docstring for the layout).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"AMOE";
+const VERSION: u32 = 1;
+
+/// All named tensors from a weights.bin file.
+#[derive(Debug, Default)]
+pub struct Weights {
+    pub tensors: HashMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn load(path: &Path) -> Result<Weights> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_bytes(&bytes)
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Weights> {
+        let mut r = Cursor { b: bytes, i: 0 };
+        if r.take(4)? != MAGIC {
+            bail!("bad magic in weights container");
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            bail!("unsupported weights version {version}");
+        }
+        let n = r.u32()? as usize;
+        let mut tensors = HashMap::with_capacity(n);
+        for _ in 0..n {
+            let name_len = r.u32()? as usize;
+            let name = String::from_utf8(r.take(name_len)?.to_vec())
+                .context("tensor name not utf-8")?;
+            let dtype = r.u8()?;
+            let ndim = r.u8()? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(r.u32()? as usize);
+            }
+            let count: usize = dims.iter().product::<usize>().max(1);
+            let data = match dtype {
+                0 => {
+                    let raw = r.take(count * 4)?;
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect::<Vec<f32>>()
+                }
+                1 => {
+                    // i32 stored as f32 host-side (only used for metadata)
+                    let raw = r.take(count * 4)?;
+                    raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f32)
+                        .collect()
+                }
+                2 => r.take(count)?.iter().map(|&b| b as f32).collect(),
+                d => bail!("unknown dtype tag {d} for tensor {name}"),
+            };
+            tensors.insert(name, Tensor::new(dims, data)?);
+        }
+        Ok(Weights { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("missing tensor '{name}'"))
+    }
+
+    /// Expert FFN weights for (layer, expert): (w1 [d,f], w3 [d,f], w2 [f,d]).
+    pub fn expert(&self, layer: usize, expert: usize) -> Result<(&Tensor, &Tensor, &Tensor)> {
+        Ok((
+            self.get(&format!("l{layer}.e{expert}.w1"))?,
+            self.get(&format!("l{layer}.e{expert}.w3"))?,
+            self.get(&format!("l{layer}.e{expert}.w2"))?,
+        ))
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("weights container truncated at byte {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a container in-memory mirroring export.py's writer.
+    fn container(tensors: &[(&str, &[usize], &[f32])]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+        for (name, dims, data) in tensors {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.push(0u8); // f32
+            out.push(dims.len() as u8);
+            for d in *dims {
+                out.extend_from_slice(&(*d as u32).to_le_bytes());
+            }
+            for v in *data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn parses_container() {
+        let bytes = container(&[
+            ("a", &[2, 2], &[1.0, 2.0, 3.0, 4.0]),
+            ("l0.e1.w1", &[2], &[5.0, 6.0]),
+        ]);
+        let w = Weights::from_bytes(&bytes).unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.get("a").unwrap().dims, vec![2, 2]);
+        assert_eq!(w.get("l0.e1.w1").unwrap().data, vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = container(&[("a", &[1], &[0.0])]);
+        bytes[0] = b'X';
+        assert!(Weights::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let bytes = container(&[("a", &[4], &[0.0; 4])]);
+        assert!(Weights::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_is_error() {
+        let bytes = container(&[("a", &[1], &[0.0])]);
+        let w = Weights::from_bytes(&bytes).unwrap();
+        assert!(w.get("nope").is_err());
+        assert!(w.expert(0, 0).is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! PJRT runtime: loads the AOT-compiled HLO text artifacts and executes
+//! them from the serving hot path.
+//!
+//! One `PjRtClient` (CPU) per process; every artifact listed in
+//! `manifest.json` is parsed from HLO *text* (`HloModuleProto::from_text_file`
+//! — jax ≥0.5 serialized protos are rejected by xla_extension 0.5.1, text
+//! round-trips) and compiled once at startup. After that, Python is out of
+//! the picture entirely.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+pub struct Runtime {
+    pub client: PjRtClient,
+    exes: HashMap<String, PjRtLoadedExecutable>,
+    pub dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load + compile the named artifacts (keys of `manifest.artifacts`).
+    pub fn load(dir: &Path, manifest: &Json, names: &[String]) -> Result<Runtime> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let arts = manifest
+            .get("artifacts")
+            .context("manifest missing 'artifacts'")?;
+        let mut exes = HashMap::new();
+        for name in names {
+            let entry = arts
+                .get(name)
+                .with_context(|| format!("manifest has no artifact '{name}'"))?;
+            let file = entry
+                .get("path")
+                .and_then(|p| p.as_str())
+                .with_context(|| format!("artifact '{name}' missing path"))?;
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Runtime { client, exes, dir: dir.to_path_buf() })
+    }
+
+    /// Load every artifact in the manifest.
+    pub fn load_all(dir: &Path, manifest: &Json) -> Result<Runtime> {
+        let arts = manifest
+            .get("artifacts")
+            .context("manifest missing 'artifacts'")?;
+        let names: Vec<String> = match arts {
+            Json::Obj(m) => m.keys().cloned().collect(),
+            _ => bail!("manifest.artifacts must be an object"),
+        };
+        Self::load(dir, manifest, &names)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.exes.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute an artifact; returns the flattened tuple outputs.
+    /// (All artifacts are lowered with `return_tuple=True`.)
+    ///
+    /// Implementation note: this goes through `execute_b` with buffers this
+    /// function owns, NOT `PjRtLoadedExecutable::execute` — the crate's
+    /// `execute` leaks every input buffer (`xla_rs.cc` `buffer.release()`
+    /// with no matching delete; ≈0.5 MB per attention step, OOM within
+    /// minutes of decoding). Our owned buffers are dropped (and freed by
+    /// PJRT's deferred-deletion machinery) after the call.
+    pub fn run(&self, name: &str, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|l| self.client.buffer_from_host_literal(None, l))
+            .collect::<std::result::Result<_, _>>()
+            .with_context(|| format!("uploading inputs for '{name}'"))?;
+        self.run_b(name, &bufs.iter().collect::<Vec<_>>())
+    }
+
+    /// Execute with caller-managed device buffers (persistent weights path).
+    pub fn run_b(&self, name: &str, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))?;
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .with_context(|| format!("executing '{name}'"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching output of '{name}'"))?;
+        lit.to_tuple().context("decomposing output tuple")
+    }
+
+    /// Upload a literal to a device buffer (persistent weights path).
+    pub fn to_buffer(&self, l: &Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, l)
+            .context("uploading literal")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal <-> host tensor conversions
+// ---------------------------------------------------------------------------
+
+/// f32 host tensor -> literal of the same shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
+    let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+    Literal::vec1(&t.data)
+        .reshape(&dims)
+        .context("reshaping f32 literal")
+}
+
+/// f32 slice + dims -> literal.
+pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+    Literal::vec1(data).reshape(&d).context("reshaping f32 literal")
+}
+
+/// i32 slice + dims -> literal.
+pub fn i32_literal(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+    Literal::vec1(data).reshape(&d).context("reshaping i32 literal")
+}
+
+/// literal -> f32 host tensor (shape recovered from the literal).
+pub fn literal_to_tensor(l: &Literal) -> Result<Tensor> {
+    let shape = l.array_shape().context("literal has no array shape")?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = l.to_vec::<f32>().context("reading f32 literal")?;
+    Tensor::new(dims, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn i32_literal_shape() {
+        let l = i32_literal(&[1, 2, 3, 4], &[4]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+    }
+
+    // Execution against real artifacts is covered by rust/tests/integration.rs
+    // (requires `make artifacts`).
+}

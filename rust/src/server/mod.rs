@@ -1,0 +1,3 @@
+//! TCP serving front-end (wired up after the engine: see server::tcp).
+
+pub mod tcp;

@@ -1,0 +1,250 @@
+//! Line-delimited-JSON TCP serving front-end.
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"prompt": "...", "max_new": 32}
+//!   <- {"id": 0, "text": "...", "tokens": [..], "queue_ms": .., "total_ms": ..}
+//!   -> {"cmd": "stats"}
+//!   <- {"tokens_per_sec": .., "p50_ms": .., "p99_ms": .., ...}
+//!
+//! One engine thread drives continuous batching (admit → decode → retire);
+//! connection threads only parse/enqueue/respond. This is the E2E serving
+//! path used by `examples/serve_demo.rs`.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::engine::Engine;
+use crate::model::sampling;
+use crate::model::tokenizer::ByteTokenizer;
+use crate::util::json::Json;
+
+/// Completed generation sent back to the connection thread.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub queued_at: Instant,
+    pub started_at: Instant,
+    pub finished_at: Instant,
+}
+
+struct Shared {
+    batcher: Batcher,
+    responders: HashMap<u64, Sender<Completion>>,
+    submit_times: HashMap<u64, Instant>,
+    start_times: HashMap<u64, Instant>,
+}
+
+/// Serve `engine` on `addr` until `shutdown` flips. Blocks the caller
+/// (spawn a thread if needed). Returns total completions served.
+pub fn serve(mut engine: Engine, addr: &str, shutdown: Arc<AtomicBool>) -> Result<u64> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    listener.set_nonblocking(true).context("nonblocking listener")?;
+    let shared = Arc::new(Mutex::new(Shared {
+        batcher: Batcher::new(),
+        responders: HashMap::new(),
+        submit_times: HashMap::new(),
+        start_times: HashMap::new(),
+    }));
+
+    // acceptor thread
+    let acceptor = {
+        let shared = Arc::clone(&shared);
+        let shutdown = Arc::clone(&shutdown);
+        std::thread::Builder::new()
+            .name("adapmoe-accept".into())
+            .spawn(move || {
+                while !shutdown.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let shared = Arc::clone(&shared);
+                            let _ = std::thread::Builder::new()
+                                .name("adapmoe-conn".into())
+                                .spawn(move || handle_conn(stream, shared));
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn acceptor")
+    };
+
+    // engine loop (this thread)
+    let mut served = 0u64;
+    while !shutdown.load(Ordering::SeqCst) {
+        // admit new work into free slots
+        {
+            let mut g = shared.lock().unwrap();
+            while g.batcher.queued() > 0 {
+                let Some(row) = engine.acquire_slot() else { break };
+                g.batcher.admit(&[row]);
+                let started = g.batcher.active.last().map(|a| a.req.id);
+                if let Some(id) = started {
+                    g.start_times.insert(id, Instant::now());
+                }
+            }
+            if g.batcher.active.is_empty() {
+                drop(g);
+                std::thread::sleep(Duration::from_millis(2));
+                continue;
+            }
+        }
+
+        // decode one step for all active rows
+        let inputs = { shared.lock().unwrap().batcher.step_inputs() };
+        let outs = engine.decode_step(&inputs)?;
+        let sampled: Vec<(usize, u32)> = outs
+            .iter()
+            .map(|(row, logits)| (*row, sampling::greedy(logits)))
+            .collect();
+
+        let mut g = shared.lock().unwrap();
+        g.batcher.apply_step(&sampled);
+        // rows whose KV is exhausted must retire regardless of max_new
+        for a in g.batcher.active.iter_mut() {
+            if engine.slot_full(a.row) {
+                a.req.max_new = a.generated.len();
+            }
+        }
+        for done in g.batcher.retire() {
+            engine.release_slot(done.row);
+            served += 1;
+            let id = done.req.id;
+            let queued_at = g.submit_times.remove(&id).unwrap_or_else(Instant::now);
+            let started_at = g.start_times.remove(&id).unwrap_or(queued_at);
+            if let Some(tx) = g.responders.remove(&id) {
+                let _ = tx.send(Completion {
+                    id,
+                    tokens: done.generated,
+                    queued_at,
+                    started_at,
+                    finished_at: Instant::now(),
+                });
+            }
+        }
+    }
+    drop(shared);
+    let _ = acceptor.join();
+    Ok(served)
+}
+
+fn handle_conn(stream: TcpStream, shared: Arc<Mutex<Shared>>) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match handle_line(&line, &shared) {
+            Ok(j) => j,
+            Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]),
+        };
+        if writeln!(writer, "{}", reply.to_string()).is_err() {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+fn handle_line(line: &str, shared: &Arc<Mutex<Shared>>) -> Result<Json> {
+    let req = Json::parse(line).context("bad request json")?;
+    if let Some(prompt) = req.get("prompt").and_then(|p| p.as_str()) {
+        let max_new = req.get("max_new").and_then(|v| v.as_usize()).unwrap_or(32);
+        let tokens = ByteTokenizer::encode(prompt);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let id = {
+            let mut g = shared.lock().unwrap();
+            let id = g.batcher.submit(tokens, max_new);
+            g.responders.insert(id, tx);
+            g.submit_times.insert(id, Instant::now());
+            id
+        };
+        let done = rx
+            .recv_timeout(Duration::from_secs(600))
+            .context("generation timed out")?;
+        let text = ByteTokenizer::decode(&done.tokens);
+        Ok(Json::obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("text", Json::Str(text)),
+            (
+                "tokens",
+                Json::Arr(done.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ),
+            (
+                "queue_ms",
+                Json::Num(
+                    done.started_at.duration_since(done.queued_at).as_secs_f64() * 1e3,
+                ),
+            ),
+            (
+                "total_ms",
+                Json::Num(
+                    done.finished_at.duration_since(done.queued_at).as_secs_f64() * 1e3,
+                ),
+            ),
+        ]))
+    } else if req.get("cmd").and_then(|c| c.as_str()) == Some("ping") {
+        Ok(Json::obj(vec![("pong", Json::Bool(true))]))
+    } else {
+        anyhow::bail!("unknown request: expected 'prompt' or 'cmd'")
+    }
+}
+
+/// Blocking client for examples/benches: one request, one completion.
+pub fn client_request(addr: &str, prompt: &str, max_new: usize) -> Result<(String, f64, f64)> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    let req = Json::obj(vec![
+        ("prompt", Json::Str(prompt.to_string())),
+        ("max_new", Json::Num(max_new as f64)),
+    ]);
+    writeln!(stream, "{}", req.to_string())?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let j = Json::parse(&line).context("bad response json")?;
+    if let Some(err) = j.get("error").and_then(|e| e.as_str()) {
+        anyhow::bail!("server error: {err}");
+    }
+    Ok((
+        j.get("text").and_then(|t| t.as_str()).unwrap_or_default().to_string(),
+        j.get("queue_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        j.get("total_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_protocol_rejects_garbage() {
+        let shared = Arc::new(Mutex::new(Shared {
+            batcher: Batcher::new(),
+            responders: HashMap::new(),
+            submit_times: HashMap::new(),
+            start_times: HashMap::new(),
+        }));
+        assert!(handle_line("not json", &shared).is_err());
+        assert!(handle_line("{\"x\":1}", &shared).is_err());
+        let pong = handle_line("{\"cmd\":\"ping\"}", &shared).unwrap();
+        assert_eq!(pong.get("pong").and_then(|b| b.as_bool()), Some(true));
+    }
+
+    // Full server round-trips run in rust/tests/integration.rs (need artifacts).
+}

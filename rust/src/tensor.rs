@@ -1,0 +1,136 @@
+//! Host-side tensor type shared by the weights container, the memory
+//! hierarchy and the PJRT runtime boundary.
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", dims, n, data.len());
+        }
+        Ok(Tensor { dims, data })
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Tensor {
+        let n = dims.iter().product();
+        Tensor { dims, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Row `i` of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.rank(), 2);
+        let w = self.dims[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Column-slice [start, end) of the second axis of a rank-2 tensor:
+    /// returns a new [rows, end-start] tensor (used for f-tile slicing).
+    pub fn col_slice(&self, start: usize, end: usize) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (r, c) = (self.dims[0], self.dims[1]);
+        assert!(start < end && end <= c);
+        let w = end - start;
+        let mut data = Vec::with_capacity(r * w);
+        for i in 0..r {
+            data.extend_from_slice(&self.data[i * c + start..i * c + end]);
+        }
+        Tensor { dims: vec![r, w], data }
+    }
+
+    /// Row-slice [start, end) of the first axis of a rank-2 tensor.
+    pub fn row_slice(&self, start: usize, end: usize) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let c = self.dims[1];
+        assert!(start < end && end <= self.dims[0]);
+        Tensor {
+            dims: vec![end - start, c],
+            data: self.data[start * c..end * c].to_vec(),
+        }
+    }
+
+    /// Element-wise in-place add.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.dims, other.dims);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    /// argmax over the last axis for each row of a rank-2 tensor.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.rank(), 2);
+        (0..self.dims[0])
+            .map(|i| {
+                let row = self.row(i);
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn row_and_slices() {
+        let t = Tensor::new(vec![2, 4], (0..8).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.row(1), &[4.0, 5.0, 6.0, 7.0]);
+        let c = t.col_slice(1, 3);
+        assert_eq!(c.dims, vec![2, 2]);
+        assert_eq!(c.data, vec![1.0, 2.0, 5.0, 6.0]);
+        let r = t.row_slice(1, 2);
+        assert_eq!(r.data, vec![4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn add_and_scale() {
+        let mut a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::new(vec![3], vec![0.5, 0.5, 0.5]).unwrap();
+        a.add_assign(&b);
+        a.scale(2.0);
+        assert_eq!(a.data, vec![3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn argmax_rows() {
+        let t = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.0, 5.0, -1.0, 2.0]).unwrap();
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+}

@@ -1,0 +1,71 @@
+//! Test support: synthetic weights/configs shared by unit tests,
+//! integration tests and property tests. Compiled into the lib (it has no
+//! cost at runtime) so `rust/tests/` can use it too.
+
+use crate::model::config::ModelConfig;
+use crate::model::weights::Weights;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Micro config mirroring `python/compile/config.py::micro_config`.
+pub fn micro_config() -> ModelConfig {
+    ModelConfig {
+        name: "micro".into(),
+        vocab_size: 64,
+        d_model: 32,
+        n_heads: 2,
+        head_dim: 16,
+        n_layers: 2,
+        n_experts: 8,
+        top_k: 2,
+        d_ff: 64,
+        max_seq: 64,
+        rms_eps: 1e-5,
+        batch_sizes: vec![1, 4],
+    }
+}
+
+/// Random full model weights (experts + attention + norms + gates) for a
+/// config — enough for every host-side substrate test.
+pub fn synthetic_weights(cfg: &ModelConfig, seed: u64) -> Weights {
+    let mut rng = Rng::new(seed);
+    let mut w = Weights::default();
+    let d = cfg.d_model;
+    let mut put = |name: String, dims: Vec<usize>, rng: &mut Rng, scale: f32| {
+        let n: usize = dims.iter().product();
+        let data: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 2.0 * scale).collect();
+        w.tensors.insert(name, Tensor::new(dims, data).unwrap());
+    };
+    put("embed".into(), vec![cfg.vocab_size, d], &mut rng, 0.02);
+    put("out_norm".into(), vec![d], &mut rng, 1.0);
+    put("unembed".into(), vec![d, cfg.vocab_size], &mut rng, 0.1);
+    put("pre_gate".into(), vec![d, cfg.n_experts], &mut rng, 0.1);
+    for l in 0..cfg.n_layers {
+        put(format!("l{l}.attn_norm"), vec![d], &mut rng, 1.0);
+        for m in ["wq", "wk", "wv", "wo"] {
+            put(format!("l{l}.{m}"), vec![d, d], &mut rng, 0.1);
+        }
+        put(format!("l{l}.moe_norm"), vec![d], &mut rng, 1.0);
+        put(format!("l{l}.gate"), vec![d, cfg.n_experts], &mut rng, 0.1);
+        for e in 0..cfg.n_experts {
+            put(format!("l{l}.e{e}.w1"), vec![d, cfg.d_ff], &mut rng, 0.1);
+            put(format!("l{l}.e{e}.w3"), vec![d, cfg.d_ff], &mut rng, 0.1);
+            put(format!("l{l}.e{e}.w2"), vec![cfg.d_ff, d], &mut rng, 0.1);
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_weights_complete() {
+        let cfg = micro_config();
+        let w = synthetic_weights(&cfg, 0);
+        assert!(w.get("embed").is_ok());
+        assert!(w.expert(1, 7).is_ok());
+        assert_eq!(w.get("l0.wq").unwrap().dims, vec![32, 32]);
+    }
+}

@@ -1,0 +1,125 @@
+//! Tiny CLI argument parser — first-party stand-in for `clap`.
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments. Typed getters with defaults keep call sites short.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.bools.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key) || self.flags.contains_key(key)
+    }
+
+    /// Comma-separated list: `--sizes 8,16,32`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            Some(v) => v
+                .split(',')
+                .filter_map(|p| p.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn flag_value_pairs() {
+        let a = parse(&["--name", "x", "--n=5", "pos1"]);
+        assert_eq!(a.get("name"), Some("x"));
+        assert_eq!(a.usize_or("n", 0), 5);
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse(&["--verbose", "--x", "1"]);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("x"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn trailing_bool_flag() {
+        let a = parse(&["--a", "1", "--fast"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.usize_or("a", 0), 1);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.str_or("m", "d"), "d");
+        assert_eq!(a.f64_or("f", 2.5), 2.5);
+        assert_eq!(a.usize_list_or("l", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--sizes", "8,16,32"]);
+        assert_eq!(a.usize_list_or("sizes", &[]), vec![8, 16, 32]);
+    }
+}

@@ -1,0 +1,15 @@
+//! First-party substrate utilities.
+//!
+//! The offline build image vendors only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates are re-implemented here at the
+//! size this project needs: [`json`] (serde_json), [`cli`] (clap),
+//! [`rng`] (rand), [`timer`] (criterion), [`prop`] (proptest),
+//! [`threadpool`] + OS threads (tokio), [`stats`] (hdrhistogram).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;

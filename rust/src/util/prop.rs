@@ -1,0 +1,108 @@
+//! Mini property-testing harness — first-party stand-in for `proptest`.
+//!
+//! `check(name, cases, |rng| ...)` runs the closure against `cases`
+//! independently-seeded RNGs; on failure it reports the failing seed so the
+//! case can be replayed deterministically with `replay(seed, f)`.
+//! Coordinator invariants (routing, batching, cache state) are tested with
+//! this throughout `coordinator/`.
+
+use crate::util::rng::Rng;
+
+/// Result of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `f` against `cases` seeds; panic with the first failing seed + message.
+pub fn check<F: FnMut(&mut Rng) -> CaseResult>(name: &str, cases: u64, mut f: F) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64 ^ (case.wrapping_mul(0x9E37_79B9)) ^ case;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}): {msg}\n\
+                 replay with util::prop::replay({seed:#x}, f)"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F: FnMut(&mut Rng) -> CaseResult>(seed: u64, mut f: F) -> CaseResult {
+    let mut rng = Rng::new(seed);
+    f(&mut rng)
+}
+
+/// Assert helper producing `CaseResult`s inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+/// Random f32 vector with entries in [-scale, scale).
+pub fn vec_f32(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| (rng.f32() * 2.0 - 1.0) * scale).collect()
+}
+
+/// Random probability simplex of dimension n (Dirichlet-ish via exp).
+pub fn simplex(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let raw: Vec<f32> = (0..n).map(|_| rng.exp(1.0) as f32 + 1e-6).collect();
+    let sum: f32 = raw.iter().sum();
+    raw.iter().map(|x| x / sum).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check("trivial", 50, |rng| {
+            let v = rng.f64();
+            prop_assert!((0.0..1.0).contains(&v), "out of range: {v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn replay_reproduces() {
+        // replay() with the reported seed must see the same stream the
+        // failing case saw.
+        let seed = 0x5EED_0000u64 ^ 0x9E37_79B9 ^ 1; // case 1's derived seed
+        let mut seen = 0u64;
+        let _ = replay(seed, |rng| {
+            seen = rng.next_u64();
+            Ok(())
+        });
+        let mut again = 0u64;
+        let _ = replay(seed, |rng| {
+            again = rng.next_u64();
+            Ok(())
+        });
+        assert_eq!(seen, again);
+    }
+
+    #[test]
+    fn simplex_sums_to_one() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let s = simplex(&mut rng, 8);
+            let sum: f32 = s.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(s.iter().all(|&p| p > 0.0));
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! Bench harness — first-party stand-in for `criterion`.
+//!
+//! `cargo bench` runs our `harness = false` bench binaries; each uses
+//! [`Bench`] to time closures with warmup + repeated measurement and print
+//! aligned result tables that mirror the paper's tables/figures.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// Measure a closure: `warmup` unrecorded runs, then `iters` timed runs.
+pub fn measure<F: FnMut()>(mut f: F, warmup: usize, iters: usize) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        s.add(t.elapsed().as_secs_f64());
+    }
+    s
+}
+
+/// Measure until `budget` elapses (at least `min_iters` runs).
+pub fn measure_for<F: FnMut()>(mut f: F, budget: Duration, min_iters: usize) -> Summary {
+    let mut s = Summary::new();
+    let start = Instant::now();
+    let mut i = 0;
+    while i < min_iters || start.elapsed() < budget {
+        let t = Instant::now();
+        f();
+        s.add(t.elapsed().as_secs_f64());
+        i += 1;
+        if i > 100_000 {
+            break;
+        }
+    }
+    s
+}
+
+/// Pretty duration: picks ns/µs/ms/s.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.3}s", secs)
+    }
+}
+
+/// Aligned table printer for bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut out = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                let pad = widths[i] - c.chars().count();
+                out.push_str("| ");
+                out.push_str(c);
+                out.push_str(&" ".repeat(pad + 1));
+            }
+            out.push('|');
+            out
+        };
+        println!("{}", line(&self.headers));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("{}", line(&sep));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+/// Named bench group: prints a heading, collects rows of (name, Summary).
+pub struct Bench {
+    name: String,
+    results: Vec<(String, Summary)>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        println!("\n=== bench: {name} ===");
+        Bench { name: name.to_string(), results: Vec::new() }
+    }
+
+    pub fn run<F: FnMut()>(&mut self, case: &str, f: F) {
+        let s = measure(f, 2, 10);
+        println!(
+            "  {case:40} {:>10} ± {:>8}  (p50 {})",
+            fmt_duration(s.mean()),
+            fmt_duration(s.std()),
+            fmt_duration(s.p50()),
+        );
+        self.results.push((case.to_string(), s));
+    }
+
+    pub fn run_with<F: FnMut()>(&mut self, case: &str, warmup: usize, iters: usize, f: F) {
+        let s = measure(f, warmup, iters);
+        println!(
+            "  {case:40} {:>10} ± {:>8}  (p50 {})",
+            fmt_duration(s.mean()),
+            fmt_duration(s.std()),
+            fmt_duration(s.p50()),
+        );
+        self.results.push((case.to_string(), s));
+    }
+
+    pub fn results(&self) -> &[(String, Summary)] {
+        &self.results
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iters() {
+        let mut n = 0;
+        let s = measure(|| n += 1, 3, 7);
+        assert_eq!(n, 10);
+        assert_eq!(s.len(), 7);
+    }
+
+    #[test]
+    fn measure_for_respects_min() {
+        let mut n = 0;
+        let s = measure_for(|| n += 1, Duration::from_millis(0), 5);
+        assert!(s.len() >= 5);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(5e-9).ends_with("ns"));
+        assert!(fmt_duration(5e-6).ends_with("µs"));
+        assert!(fmt_duration(5e-3).ends_with("ms"));
+        assert!(fmt_duration(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(&["only-one".into()]);
+        }));
+        assert!(r.is_err());
+    }
+}
