@@ -18,6 +18,7 @@ fn main() {
 
     let settings = instant_settings(32, QuantKind::Int4);
     let mut engine = method_engine(&dir, "mixtral-offloading", &settings).expect("engine");
+    engine.trace.enable_similarity(); // gated off by default on the hot path
     decode_eval(&mut engine, &eval, tokens, 0).expect("decode");
 
     println!("\n== Fig. 3: successive-layer MoE-input cosine similarity ({tokens} eval tokens) ==");

@@ -9,7 +9,9 @@
 //!
 //! Run: `cargo bench --bench fig9_breakdown`.
 
-use adapmoe::bench_support::{artifacts_dir, decode_eval, eval_stream, instant_settings, scaled};
+use adapmoe::bench_support::{
+    artifacts_dir, decode_eval, eval_stream, instant_settings, scaled, timed_settings,
+};
 use adapmoe::coordinator::cache_plan;
 use adapmoe::coordinator::engine::Engine;
 use adapmoe::coordinator::gating::{calibrate_score_threshold, GatingPolicy};
@@ -99,6 +101,29 @@ fn main() {
         plan.expected_loads,
         cache_plan::allocation_cost(&inputs, &vec![4; plan.allocation.len()])
     );
+
+    // --- pipeline attribution: queue delay vs stall per layer --------------
+    // Timed run on the calibrated link: shows how much of the MoE wait is
+    // head-of-line queueing (removed by arrival-order consumption) vs the
+    // irreducible wait for the simulated PCIe link.
+    println!("\n== completion-driven pipeline: where the MoE wait goes (rtx4090, int4) ==");
+    let timed = timed_settings(16, QuantKind::Int4, "rtx4090");
+    let mut pipe_engine = {
+        let cfg = policy::method("adapmoe", &timed, &profile).expect("cfg");
+        Engine::from_artifacts(&dir, cfg).expect("engine")
+    };
+    decode_eval(&mut pipe_engine, &eval, scaled(48), 0).expect("decode");
+    let mut t = Table::new(&["layer", "on-demand", "queue-delay (ms)", "stall (ms)"]);
+    for (l, (q, s)) in pipe_engine.trace.stall_attribution().iter().enumerate() {
+        t.row(&[
+            format!("{l}"),
+            format!("{}", pipe_engine.trace.on_demand[l]),
+            format!("{:.2}", q * 1e3),
+            format!("{:.2}", s * 1e3),
+        ]);
+    }
+    t.print();
+    println!("(queue delay = arrived data waiting on compute; stall = compute idle on the link)");
 }
 
 /// Reconstruct (layer, top2-prob-pair) samples from the probe's α histogram

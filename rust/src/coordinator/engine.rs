@@ -1,12 +1,34 @@
-//! The decode engine — the compute "stream" of Algorithm 1.
+//! The decode engine — the compute "stream" of Algorithm 1, driven as a
+//! **completion-driven pipeline**.
 //!
 //! Owns the PJRT runtime, the resident (non-expert) weights, the KV cache
 //! and the memory hierarchy, and drives batched decode steps: for each
 //! layer, attention → gate → adaptive gating decisions → prefetch for
-//! upcoming layers → expert execution overlapped with on-demand transfers
-//! (expert-wise or tile-wise). Everything the paper's §4–5 describe meets
-//! here; the policy knobs live in [`EngineConfig`] so baselines and
-//! ablations are just different configs (see [`super::policy`]).
+//! upcoming layers → MoE execution. The MoE half works off the unified
+//! work queue emitted by [`super::scheduler::build_plan`]:
+//!
+//! 1. **Ready** (cache/staging-resident) experts compute first, overlapping
+//!    whatever the comm stream is still moving.
+//! 2. **Pending** experts are consumed in **arrival order**: the engine
+//!    parks on the transfer engine's completion board and picks up
+//!    whichever expert — or, in tile-wise mode, whichever f-tile — lands
+//!    next, rather than blocking on plan order (no head-of-line blocking).
+//!    Arrived-but-unconsumed time is traced as per-layer *queue delay*,
+//!    true idle time as *stall*, so `fig9_breakdown` can show where the
+//!    overlap win comes from.
+//! 3. Consumed experts are promoted into the [`DeviceCache`] on
+//!    completion; whole-layer "extra" loads ride the same queue but are
+//!    never waited on.
+//!
+//! Expert kernels run on this thread (PJRT handles are not `Send`). With
+//! [`EngineConfig::compute_workers`] > 0 the engine instead fans host-side
+//! SwiGLU FFNs across the [`ThreadPool`] via
+//! [`super::executor::run_layer_parallel`], computing cached experts in
+//! parallel while pending transfers stream in (partial results are reduced
+//! in canonical order at the end of the layer, so output bits do not
+//! depend on scheduling). Everything the paper's §4–5 describe meets here;
+//! the policy knobs live in [`EngineConfig`] so baselines and ablations
+//! are just different configs (see [`super::policy`]).
 
 use std::collections::HashSet;
 use std::path::Path;
@@ -17,6 +39,7 @@ use anyhow::{bail, Context, Result};
 use xla::Literal;
 
 use crate::coordinator::cache_plan;
+use crate::coordinator::executor;
 use crate::coordinator::gating::GatingPolicy;
 use crate::coordinator::prefetch::{self, PrefetchConfig};
 use crate::coordinator::profile::Profile;
@@ -26,12 +49,13 @@ use crate::memory::device_cache::DeviceCache;
 use crate::memory::host_store::{ExpertF32, HostStore};
 use crate::memory::platform::Platform;
 use crate::memory::quant::QuantKind;
-use crate::memory::transfer::{Priority, TransferEngine};
+use crate::memory::transfer::{Priority, TransferEngine, TransferHandle};
 use crate::model::config::ModelConfig;
 use crate::model::weights::Weights;
 use crate::runtime::{f32_literal, i32_literal, literal_to_tensor, tensor_to_literal, Runtime};
 use crate::tensor::Tensor;
 use crate::util::stats::cosine;
+use crate::util::threadpool::ThreadPool;
 
 /// Per-layer cache budget policy.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -61,6 +85,12 @@ pub struct EngineConfig {
     pub time_scale: f64,
     /// DeepSpeed/FlexGen-style baseline: load ALL experts of each layer.
     pub whole_layer: bool,
+    /// Worker threads for host-side parallel expert FFNs (see
+    /// [`super::executor`]). 0 (default for every preset) keeps expert
+    /// compute on the engine thread via the XLA kernel path; PJRT handles
+    /// are not `Send`, so the parallel path trades the Pallas kernel for
+    /// host math with identical-bits reduction.
+    pub compute_workers: usize,
 }
 
 /// Non-expert weights kept device-resident as literals.
@@ -123,6 +153,8 @@ pub struct Engine {
     /// cache entry is replaced by a fresh transfer). Saves re-converting
     /// ~400 KB of f32 per expert call on the hot path.
     lit_cache: std::collections::HashMap<crate::model::ExpertId, (usize, [Literal; 3])>,
+    /// Host-FFN worker pool (only when `compute_workers > 0`).
+    pool: Option<ThreadPool>,
     pub trace: TraceCollector,
     /// Latest per-layer predicted expert sets (per row), for β tracking and
     /// the prefetch-extension rule.
@@ -204,6 +236,11 @@ impl Engine {
             .collect::<Result<Vec<_>>>()?;
 
         let n_layers = cfg.n_layers;
+        let pool = if ecfg.compute_workers > 0 {
+            Some(ThreadPool::new(ecfg.compute_workers))
+        } else {
+            None
+        };
         Ok(Engine {
             cfg,
             suffix: format!("b{b}"),
@@ -217,6 +254,7 @@ impl Engine {
             kv_v,
             slots: Slots { pos: vec![0; b], active: vec![false; b] },
             lit_cache: std::collections::HashMap::new(),
+            pool,
             trace: TraceCollector::new(n_layers),
             predicted: (0..n_layers).map(|_| None).collect(),
             ecfg,
@@ -282,7 +320,10 @@ impl Engine {
 
         let pos: Vec<i32> = self.slots.pos.iter().map(|&p| p as i32).collect();
         let pos_lit = i32_literal(&pos, &[b])?;
-        let mut prev_h_host: Option<Tensor> = None;
+        // Fig. 3 similarity needs last layer's MoE input; keep only the
+        // stepped rows, and only when the trace asks for it — copying the
+        // full hidden state every layer is pure overhead when serving.
+        let mut prev_rows: Option<Vec<(usize, Vec<f32>)>> = None;
 
         for layer in 0..l_total {
             // ---- attention ----
@@ -326,20 +367,27 @@ impl Engine {
             let t_phase = Instant::now();
 
             // Fig. 3 trace: similarity between successive MoE-block inputs.
-            if let Some(prev) = &prev_h_host {
-                let mut sims = 0.0;
-                let mut cnt = 0;
-                for r in 0..b {
-                    if stepping[r] {
-                        sims += cosine(prev.row(r), h_host.row(r));
-                        cnt += 1;
+            if self.trace.similarity_enabled() {
+                if let Some(prev) = &prev_rows {
+                    let mut sims = 0.0;
+                    let mut cnt = 0;
+                    for (r, row) in prev {
+                        if stepping[*r] {
+                            sims += cosine(row, h_host.row(*r));
+                            cnt += 1;
+                        }
+                    }
+                    if cnt > 0 {
+                        self.trace.record_similarity(layer - 1, sims / cnt as f64);
                     }
                 }
-                if cnt > 0 {
-                    self.trace.record_similarity(layer - 1, sims / cnt as f64);
-                }
+                prev_rows = Some(
+                    (0..b)
+                        .filter(|&r| stepping[r])
+                        .map(|r| (r, h_host.row(r).to_vec()))
+                        .collect(),
+                );
             }
-            prev_h_host = Some(h_host.clone());
 
             // ---- adaptive gating decisions ----
             let n = self.cfg.n_experts;
@@ -396,43 +444,95 @@ impl Engine {
                     .record_phase(Phase::Predict, t_phase.elapsed().as_nanos() as u64);
             }
 
-            // ---- execute MoE: ready experts first, then pending ----
-            let t_phase = Instant::now();
-            let mut acc = Tensor::zeros(vec![b, self.cfg.d_model]);
-            for (e, wts) in &plan.ready {
-                let y = self.run_expert_cached(layer, *e, &xn, wts, &coef[*e])?;
-                acc.add_assign(&y);
-            }
-            self.trace
-                .record_phase(Phase::MoeReady, t_phase.elapsed().as_nanos() as u64);
-            let t_phase = Instant::now();
-            for (e, handle) in &plan.pending {
-                match self.ecfg.schedule {
-                    ScheduleMode::ExpertWise => {
-                        let t_wait = Instant::now();
-                        let wts = handle.wait_full();
-                        self.trace.record_stall(t_wait.elapsed().as_nanos() as u64);
-                        let y = self.run_expert_full(&xn, &wts, &coef[*e])?;
-                        acc.add_assign(&y);
-                        // a joined prefetch was *used*: promote to the cache
-                        self.cache.insert((layer, *e), wts);
-                    }
-                    ScheduleMode::TileWise => {
-                        for t in 0..self.ecfg.n_tiles {
-                            let t_wait = Instant::now();
-                            let tile = handle.wait_tile(t);
-                            self.trace.record_stall(t_wait.elapsed().as_nanos() as u64);
-                            let y = self.run_expert_tile(&xn, &tile, &coef[*e])?;
-                            acc.add_assign(&y);
-                        }
-                        let wts = handle.wait_full(); // already complete
-                        self.cache.insert((layer, *e), wts);
-                    }
+            // ---- execute MoE: completion-driven drain of the work queue ----
+            let acc = if self.ecfg.compute_workers > 0 {
+                // Host-math path: ready experts fan out across the pool
+                // immediately; pending experts/tiles are dispatched in
+                // arrival order (see executor.rs for the determinism story).
+                // Ready compute overlaps the drain here, so there is no
+                // separate ready phase: MoeReady covers only the host-side
+                // input conversion and the whole drain lands in MoeWait.
+                let t_phase = Instant::now();
+                let xn_host = literal_to_tensor(&xn)?;
+                self.trace
+                    .record_phase(Phase::MoeReady, t_phase.elapsed().as_nanos() as u64);
+                let t_phase = Instant::now();
+                let outcome = executor::run_layer_parallel(
+                    &plan,
+                    &xn_host,
+                    &coef,
+                    self.ecfg.schedule,
+                    self.ecfg.n_tiles,
+                    &self.cache,
+                    &self.xfer,
+                    self.pool.as_ref().expect("pool exists when compute_workers > 0"),
+                );
+                self.trace.record_layer_stall(layer, outcome.stall_ns);
+                self.trace.record_queue_delay(layer, outcome.queue_delay_ns);
+                self.trace
+                    .record_phase(Phase::MoeWait, t_phase.elapsed().as_nanos() as u64);
+                outcome.acc
+            } else {
+                // Kernel path (PJRT handles are not Send, so kernels stay on
+                // this thread): ready experts first — their compute overlaps
+                // the in-flight transfers — then pending via the shared
+                // arrival-order drain.
+                let t_phase = Instant::now();
+                let mut acc = Tensor::zeros(vec![b, self.cfg.d_model]);
+                let ready: Vec<(usize, Arc<ExpertF32>)> = plan
+                    .ready_items()
+                    .map(|(e, w)| (e, Arc::clone(w)))
+                    .collect();
+                for (e, wts) in &ready {
+                    let y = self.run_expert_cached(layer, *e, &xn, wts, &coef[*e])?;
+                    acc.add_assign(&y);
                 }
-            }
+                self.trace
+                    .record_phase(Phase::MoeReady, t_phase.elapsed().as_nanos() as u64);
 
-            self.trace
-                .record_phase(Phase::MoeWait, t_phase.elapsed().as_nanos() as u64);
+                let t_phase = Instant::now();
+                let pending: Vec<(usize, Arc<TransferHandle>)> = plan
+                    .pending_items()
+                    .map(|(e, h)| (e, Arc::clone(h)))
+                    .collect();
+                // Per-pending partial accumulators, reduced in plan order at
+                // the end: consumption follows arrival order (which varies
+                // run to run), but the float summation order — and thus the
+                // output bits — must not.
+                let mut parts: std::collections::HashMap<usize, Tensor> = pending
+                    .iter()
+                    .map(|(e, _)| (*e, Tensor::zeros(vec![b, self.cfg.d_model])))
+                    .collect();
+                let stats = executor::drain_arrival_order(
+                    layer,
+                    &pending,
+                    self.ecfg.schedule,
+                    self.ecfg.n_tiles,
+                    &self.cache,
+                    &self.xfer.completions,
+                    |arrived| {
+                        let (expert, y) = match arrived {
+                            executor::Arrived::Full { expert, weights } => {
+                                (expert, self.run_expert_full(&xn, weights, &coef[expert])?)
+                            }
+                            executor::Arrived::Tile { expert, tile, .. } => {
+                                (expert, self.run_expert_tile(&xn, tile, &coef[expert])?)
+                            }
+                        };
+                        parts.get_mut(&expert).expect("pending expert").add_assign(&y);
+                        Ok(())
+                    },
+                    || true, // no worker pool here: every idle wait is a stall
+                )?;
+                for (e, _) in &pending {
+                    acc.add_assign(&parts[e]);
+                }
+                self.trace.record_queue_delay(layer, stats.queue_delay_ns);
+                self.trace.record_layer_stall(layer, stats.stall_ns);
+                self.trace
+                    .record_phase(Phase::MoeWait, t_phase.elapsed().as_nanos() as u64);
+                acc
+            };
 
             let t_phase = Instant::now();
             h_host.add_assign(&acc);
@@ -627,7 +727,8 @@ impl Engine {
     }
 
     pub fn reset_trace(&mut self) {
-        self.trace = TraceCollector::new(self.cfg.n_layers);
+        let sim = self.trace.similarity_enabled();
+        self.trace = TraceCollector::new(self.cfg.n_layers).with_similarity(sim);
     }
 }
 

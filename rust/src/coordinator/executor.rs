@@ -1,0 +1,629 @@
+//! Completion-driven MoE layer execution (the compute half of Algorithm 1,
+//! restructured to kill head-of-line blocking).
+//!
+//! The core primitive is [`drain_arrival_order`]: consume a layer's
+//! pending transfers — whole experts, or individual f-tiles in
+//! [`ScheduleMode::TileWise`] — in **arrival order** as announced on the
+//! [`CompletionBoard`], promoting completed experts into the cache and
+//! attributing arrived-but-unconsumed time (queue delay) separately from
+//! true idle waits (stall). Both MoE execution paths share it, so the
+//! fig9 attribution means the same thing everywhere:
+//!
+//! * the engine's kernel path (engine.rs) passes a consume callback that
+//!   runs the XLA expert kernel on the engine thread (PJRT handles are
+//!   not `Send`);
+//! * [`run_layer_parallel`] passes a callback that fans host-side SwiGLU
+//!   FFNs ([`expert_ffn_host`]) out across the [`ThreadPool`], computing
+//!   cached (ready) experts in parallel while pending transfers stream in.
+//!
+//! [`run_layer_serial`] is the historical baseline kept for benches and
+//! tests: ready experts first, then pending transfers **in plan order**,
+//! blocking on each — if expert *i+1* lands before expert *i*, its data
+//! sits idle while the compute stream stalls on *i*, the head-of-line
+//! term HOBBIT / EdgeMoE identify as the dominant decode-latency cost.
+//!
+//! Worker results in the parallel drain are reduced in **canonical queue
+//! order** (per expert, per tile index) at the end of the layer, so the
+//! accumulated residual is bit-for-bit identical to the serial drain no
+//! matter which worker computed what or in which order transfers arrived.
+
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::scheduler::{ExecPlan, ScheduleMode, WorkItem};
+use crate::memory::device_cache::DeviceCache;
+use crate::memory::host_store::ExpertF32;
+use crate::memory::transfer::{CompletionBoard, TransferEngine, TransferHandle};
+use crate::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
+
+/// How long the executor parks on the completion board per wait. A timeout
+/// (not pure blocking) makes the drain robust to dropped/stale events.
+const WAIT_SLICE: Duration = Duration::from_millis(2);
+
+/// Result of draining one layer's MoE work queue.
+pub struct LayerOutcome {
+    /// Accumulated expert outputs, [batch, d_model].
+    pub acc: Tensor,
+    /// Time the compute stream truly idled waiting for transfers (ns).
+    pub stall_ns: u64,
+    /// Time transferred data sat ready before compute consumed it (ns),
+    /// summed per expert/tile — the head-of-line-blocking cost.
+    pub queue_delay_ns: u64,
+    /// Pending experts in the order they were consumed (completion order
+    /// for the arrival-order drain, plan order for the serial one).
+    pub consumed: Vec<usize>,
+}
+
+/// Wait accounting from [`drain_arrival_order`].
+pub struct DrainStats {
+    pub stall_ns: u64,
+    pub queue_delay_ns: u64,
+    /// Pending experts in consumption (arrival) order.
+    pub consumed: Vec<usize>,
+}
+
+/// A unit of pending work handed to the consume callback, in arrival order.
+pub enum Arrived<'a> {
+    Full { expert: usize, weights: &'a Arc<ExpertF32> },
+    Tile {
+        expert: usize,
+        index: usize,
+        tile: &'a Arc<ExpertF32>,
+    },
+}
+
+/// Host-side expert FFN: `y[r] = coef[r] * (silu(x[r]·w1) ⊙ (x[r]·w3)) · w2`.
+///
+/// Works for full experts (`w1 [d,f]`, `w2 [f,d]`) and f-tiles
+/// (`w1 [d,w]`, `w2 [w,d]`): tile outputs sum to the full output because
+/// the second matmul is linear over the f dimension. Rows with a zero
+/// coefficient are skipped (their output is exactly zero).
+pub fn expert_ffn_host(x: &Tensor, w: &ExpertF32, coef: &[f32]) -> Tensor {
+    let (b, d) = (x.dims[0], x.dims[1]);
+    let f = w.w1.dims[1];
+    let d_out = w.w2.dims[1];
+    debug_assert_eq!(w.w1.dims[0], d);
+    debug_assert_eq!(w.w2.dims[0], f);
+    let mut y = Tensor::zeros(vec![b, d_out]);
+    let mut h = vec![0f32; f];
+    for r in 0..b {
+        let c = coef[r];
+        if c == 0.0 {
+            continue;
+        }
+        let xr = x.row(r);
+        for (j, hj) in h.iter_mut().enumerate() {
+            let (mut a, mut g) = (0f32, 0f32);
+            for (i, &xi) in xr.iter().enumerate() {
+                a += xi * w.w1.data[i * f + j];
+                g += xi * w.w3.data[i * f + j];
+            }
+            let silu = a / (1.0 + (-a).exp());
+            *hj = silu * g;
+        }
+        let yr = &mut y.data[r * d_out..(r + 1) * d_out];
+        for (j, &hj) in h.iter().enumerate() {
+            let w2_row = &w.w2.data[j * d_out..(j + 1) * d_out];
+            for (yk, &wk) in yr.iter_mut().zip(w2_row) {
+                *yk += hj * wk;
+            }
+        }
+        for yk in yr.iter_mut() {
+            *yk *= c;
+        }
+    }
+    y
+}
+
+fn since(at: Instant) -> u64 {
+    Instant::now().saturating_duration_since(at).as_nanos() as u64
+}
+
+/// Consume `pending` transfers in arrival order: sweep the handles for
+/// newly landed experts/tiles, feed each to `consume` on the calling
+/// thread, promote completed experts into `cache`, and park on `board`
+/// when nothing is consumable. A wait only counts toward `stall_ns` when
+/// `count_wait()` is true at its start — the parallel path passes a
+/// pool-idle check there so waits that overlap worker compute are not
+/// misattributed as stalls.
+#[allow(clippy::too_many_arguments)]
+pub fn drain_arrival_order(
+    layer: usize,
+    pending: &[(usize, Arc<TransferHandle>)],
+    mode: ScheduleMode,
+    n_tiles: usize,
+    cache: &DeviceCache,
+    board: &CompletionBoard,
+    mut consume: impl FnMut(Arrived<'_>) -> Result<()>,
+    mut count_wait: impl FnMut() -> bool,
+) -> Result<DrainStats> {
+    // Anything already landed is found by the first sweep; queued stale
+    // events would only cause harmless extra sweeps, so drop them.
+    board.clear();
+
+    struct Pend {
+        expert: usize,
+        handle: Arc<TransferHandle>,
+        tiles: usize,
+        done: bool,
+    }
+    let mut pend: Vec<Pend> = pending
+        .iter()
+        .map(|(e, h)| Pend { expert: *e, handle: Arc::clone(h), tiles: 0, done: false })
+        .collect();
+
+    let mut stats = DrainStats { stall_ns: 0, queue_delay_ns: 0, consumed: Vec::new() };
+    let mut remaining = pend.len();
+    while remaining > 0 {
+        let mut progress = false;
+        for p in pend.iter_mut().filter(|p| !p.done) {
+            match mode {
+                ScheduleMode::ExpertWise => {
+                    if let Some((wts, at)) = p.handle.try_full() {
+                        stats.queue_delay_ns += since(at);
+                        consume(Arrived::Full { expert: p.expert, weights: &wts })?;
+                        cache.insert((layer, p.expert), wts);
+                        stats.consumed.push(p.expert);
+                        p.done = true;
+                        remaining -= 1;
+                        progress = true;
+                    }
+                }
+                ScheduleMode::TileWise => {
+                    while p.tiles < n_tiles {
+                        let Some((tile, at)) = p.handle.try_tile(p.tiles) else {
+                            break;
+                        };
+                        stats.queue_delay_ns += since(at);
+                        consume(Arrived::Tile {
+                            expert: p.expert,
+                            index: p.tiles,
+                            tile: &tile,
+                        })?;
+                        p.tiles += 1;
+                        progress = true;
+                    }
+                    if p.tiles == n_tiles {
+                        // assemble+publish of the full expert trails the
+                        // last tile by microseconds
+                        let wts = p.handle.wait_full();
+                        cache.insert((layer, p.expert), wts);
+                        stats.consumed.push(p.expert);
+                        p.done = true;
+                        remaining -= 1;
+                    }
+                }
+            }
+        }
+        if remaining > 0 && !progress {
+            let counts = count_wait();
+            let t_wait = Instant::now();
+            let _ = board.wait_pop(WAIT_SLICE);
+            if counts {
+                stats.stall_ns += t_wait.elapsed().as_nanos() as u64;
+            }
+        }
+    }
+    Ok(stats)
+}
+
+/// Plan-order drain (the head-of-line-blocking baseline): compute ready
+/// experts serially, then block on each pending transfer in queue order.
+pub fn run_layer_serial(
+    plan: &ExecPlan,
+    x: &Tensor,
+    coef: &[Vec<f32>],
+    mode: ScheduleMode,
+    n_tiles: usize,
+    cache: &DeviceCache,
+) -> LayerOutcome {
+    let mut acc = Tensor::zeros(x.dims.clone());
+    let mut stall_ns = 0u64;
+    let mut queue_delay_ns = 0u64;
+    let mut consumed = Vec::new();
+
+    for (e, wts) in plan.ready_items() {
+        acc.add_assign(&expert_ffn_host(x, wts, &coef[e]));
+    }
+    for (e, handle) in plan.pending_items() {
+        match mode {
+            ScheduleMode::ExpertWise => {
+                let t_wait = Instant::now();
+                let wts = handle.wait_full();
+                stall_ns += t_wait.elapsed().as_nanos() as u64;
+                let (_, at) = handle.try_full().expect("full just landed");
+                queue_delay_ns += since(at);
+                acc.add_assign(&expert_ffn_host(x, &wts, &coef[e]));
+                cache.insert((plan.layer, e), wts);
+            }
+            ScheduleMode::TileWise => {
+                for t in 0..n_tiles {
+                    let t_wait = Instant::now();
+                    let tile = handle.wait_tile(t);
+                    stall_ns += t_wait.elapsed().as_nanos() as u64;
+                    let (_, at) = handle.try_tile(t).expect("tile just landed");
+                    queue_delay_ns += since(at);
+                    acc.add_assign(&expert_ffn_host(x, &tile, &coef[e]));
+                }
+                let wts = handle.wait_full(); // already complete
+                cache.insert((plan.layer, e), wts);
+            }
+        }
+        consumed.push(e);
+    }
+    LayerOutcome { acc, stall_ns, queue_delay_ns, consumed }
+}
+
+/// Completion-driven drain: ready experts fan out across the pool at once;
+/// pending experts/tiles are dispatched in arrival order via
+/// [`drain_arrival_order`]. Returns the same bits as [`run_layer_serial`]
+/// thanks to canonical-order reduction.
+#[allow(clippy::too_many_arguments)]
+pub fn run_layer_parallel(
+    plan: &ExecPlan,
+    x: &Tensor,
+    coef: &[Vec<f32>],
+    mode: ScheduleMode,
+    n_tiles: usize,
+    cache: &DeviceCache,
+    xfer: &TransferEngine,
+    pool: &ThreadPool,
+) -> LayerOutcome {
+    let x = Arc::new(x.clone());
+
+    // One result slot per compute item, in queue order; tile-wise pending
+    // slots hold one sub-result per tile. Reduction walks slots (then subs)
+    // in order, which is what makes the output independent of scheduling.
+    let (tx, rx) = channel::<(usize, usize, Tensor)>();
+    let mut slot_subs: Vec<usize> = Vec::new();
+    let mut expert_slot: HashMap<usize, usize> = HashMap::new();
+    let mut pending: Vec<(usize, Arc<TransferHandle>)> = Vec::new();
+    // Dispatched/finished job counts: board waits while workers still
+    // crunch are *overlap*, not stall — only waits with a drained pool
+    // count (see count_wait below). Cell, because both the consume and
+    // count_wait closures need it.
+    let jobs = Cell::new(0usize);
+    let done = Arc::new(AtomicUsize::new(0));
+
+    let dispatch = |slot: usize, sub: usize, wts: Arc<ExpertF32>, c: Vec<f32>| {
+        let x = Arc::clone(&x);
+        let tx = tx.clone();
+        let done = Arc::clone(&done);
+        pool.submit(move || {
+            let y = expert_ffn_host(&x, &wts, &c);
+            let _ = tx.send((slot, sub, y));
+            done.fetch_add(1, Ordering::SeqCst);
+        });
+        jobs.set(jobs.get() + 1);
+    };
+
+    for item in &plan.queue {
+        match item {
+            WorkItem::Ready { expert, weights } => {
+                let slot = slot_subs.len();
+                slot_subs.push(1);
+                dispatch(slot, 0, Arc::clone(weights), coef[*expert].clone());
+            }
+            WorkItem::Pending { expert, handle } => {
+                let slot = slot_subs.len();
+                slot_subs.push(match mode {
+                    ScheduleMode::ExpertWise => 1,
+                    ScheduleMode::TileWise => n_tiles,
+                });
+                expert_slot.insert(*expert, slot);
+                pending.push((*expert, Arc::clone(handle)));
+            }
+            // Extra loads are the comm stream's business: they land in the
+            // cache when they land; the layer never waits on them.
+            WorkItem::ExtraLoad { .. } => {}
+        }
+    }
+
+    let stats = drain_arrival_order(
+        plan.layer,
+        &pending,
+        mode,
+        n_tiles,
+        cache,
+        &xfer.completions,
+        |arrived| {
+            match arrived {
+                Arrived::Full { expert, weights } => {
+                    dispatch(expert_slot[&expert], 0, Arc::clone(weights), coef[expert].clone());
+                }
+                Arrived::Tile { expert, index, tile } => {
+                    dispatch(expert_slot[&expert], index, Arc::clone(tile), coef[expert].clone());
+                }
+            }
+            Ok(())
+        },
+        || done.load(Ordering::SeqCst) >= jobs.get(),
+    )
+    .expect("dispatch consume cannot fail");
+
+    // Gather worker results and reduce in canonical (queue, tile) order.
+    drop(tx);
+    let mut slots: Vec<Vec<Option<Tensor>>> =
+        slot_subs.iter().map(|&n| (0..n).map(|_| None).collect()).collect();
+    for _ in 0..jobs.get() {
+        let (slot, sub, y) = rx.recv().expect("ffn worker died");
+        slots[slot][sub] = Some(y);
+    }
+    let mut acc = Tensor::zeros(x.dims.clone());
+    for subs in slots {
+        for y in subs {
+            acc.add_assign(&y.expect("every dispatched sub-result lands"));
+        }
+    }
+    LayerOutcome {
+        acc,
+        stall_ns: stats.stall_ns,
+        queue_delay_ns: stats.queue_delay_ns,
+        consumed: stats.consumed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::build_plan;
+    use crate::memory::host_store::HostStore;
+    use crate::memory::platform::Platform;
+    use crate::memory::quant::QuantKind;
+    use crate::memory::transfer::Priority;
+    use crate::testutil::{micro_config, synthetic_weights};
+    use crate::util::rng::Rng;
+
+    fn fixture(
+        quant: QuantKind,
+        platform: &str,
+        scale: f64,
+    ) -> (Arc<HostStore>, Arc<DeviceCache>, TransferEngine) {
+        let cfg = micro_config();
+        let w = synthetic_weights(&cfg, 11);
+        let store = Arc::new(HostStore::build(&cfg, &w, quant).unwrap());
+        let cache = Arc::new(DeviceCache::new(vec![8, 8]));
+        let xfer = TransferEngine::new(
+            Arc::clone(&store),
+            Arc::clone(&cache),
+            Platform::preset(platform).unwrap(),
+            4,
+            scale,
+        );
+        (store, cache, xfer)
+    }
+
+    fn inputs(b: usize, n_experts: usize, seed: u64) -> (Tensor, Vec<Vec<f32>>) {
+        let cfg = micro_config();
+        let mut rng = Rng::new(seed);
+        let x = Tensor::new(
+            vec![b, cfg.d_model],
+            (0..b * cfg.d_model).map(|_| rng.f32() - 0.5).collect(),
+        )
+        .unwrap();
+        let coef: Vec<Vec<f32>> = (0..n_experts)
+            .map(|_| (0..b).map(|_| rng.f32()).collect())
+            .collect();
+        (x, coef)
+    }
+
+    #[test]
+    fn host_ffn_matches_scalar_oracle() {
+        let cfg = micro_config();
+        let w = synthetic_weights(&cfg, 3);
+        let store = HostStore::build(&cfg, &w, QuantKind::F32).unwrap();
+        let e = store.dequantize((0, 0));
+        let (x, _) = inputs(2, 1, 5);
+        let coef = vec![0.75f32, 0.0];
+        let y = expert_ffn_host(&x, &e, &coef);
+        // row 1 has zero coef -> exactly zero
+        assert!(y.row(1).iter().all(|&v| v == 0.0));
+        // row 0: scalar oracle
+        let (d, f) = (cfg.d_model, cfg.d_ff);
+        let xr = x.row(0);
+        let mut want = vec![0f32; d];
+        let mut h = vec![0f32; f];
+        for j in 0..f {
+            let (mut a, mut g) = (0f32, 0f32);
+            for i in 0..d {
+                a += xr[i] * e.w1.data[i * f + j];
+                g += xr[i] * e.w3.data[i * f + j];
+            }
+            h[j] = (a / (1.0 + (-a).exp())) * g;
+        }
+        for (j, &hj) in h.iter().enumerate() {
+            for k in 0..d {
+                want[k] += hj * e.w2.data[j * d + k];
+            }
+        }
+        for (k, &got) in y.row(0).iter().enumerate() {
+            let exp = 0.75 * want[k];
+            assert!((got - exp).abs() < 1e-5, "k={k}: {got} vs {exp}");
+        }
+    }
+
+    #[test]
+    fn tile_outputs_sum_close_to_full() {
+        let cfg = micro_config();
+        let w = synthetic_weights(&cfg, 4);
+        let store = HostStore::build(&cfg, &w, QuantKind::F32).unwrap();
+        let full = store.dequantize((1, 2));
+        let (x, _) = inputs(2, 1, 6);
+        let coef = vec![1.0f32, 0.5];
+        let want = expert_ffn_host(&x, &full, &coef);
+        let step = cfg.d_ff / 4;
+        let mut got = Tensor::zeros(x.dims.clone());
+        for t in 0..4 {
+            let tile = store.dequantize_tile((1, 2), t * step, (t + 1) * step);
+            got.add_assign(&expert_ffn_host(&x, &tile, &coef));
+        }
+        for (a, b) in got.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn parallel_reduction_matches_serial_bit_for_bit() {
+        // All-ready layer: fan-out across the pool must reproduce the
+        // serial accumulation exactly (canonical-order reduction).
+        let (store, cache, xfer) = fixture(QuantKind::F32, "instant", 0.0);
+        for e in 0..6 {
+            cache.insert((0, e), Arc::new(store.dequantize((0, e))));
+        }
+        let computes: Vec<usize> = (0..6).collect();
+        let (x, coef) = inputs(4, 8, 7);
+        let pool = ThreadPool::new(4);
+
+        let plan_a = build_plan(0, &computes, &[], &cache, &xfer);
+        let serial = run_layer_serial(&plan_a, &x, &coef, ScheduleMode::ExpertWise, 4, &cache);
+        let plan_b = build_plan(0, &computes, &[], &cache, &xfer);
+        let par = run_layer_parallel(
+            &plan_b,
+            &x,
+            &coef,
+            ScheduleMode::ExpertWise,
+            4,
+            &cache,
+            &xfer,
+            &pool,
+        );
+        assert_eq!(serial.acc.data, par.acc.data, "partial-sum reduction must be exact");
+        assert_eq!(serial.stall_ns, 0);
+        assert_eq!(par.stall_ns, 0);
+    }
+
+    #[test]
+    fn out_of_order_completion_is_consumed_in_arrival_order() {
+        // Transfers are enqueued so they ARRIVE in the order 2, 1, 0 while
+        // the plan lists them 0, 1, 2. The serial drain head-of-line blocks
+        // on expert 0 (the last to arrive) and accrues large queue delay on
+        // 1 and 2; the completion-driven drain consumes 2, 1, 0 as they
+        // land with (near-)zero queue delay.
+        let serial_out = {
+            let (_store, cache, xfer) = fixture(QuantKind::Int4, "rtx4090", 1.0);
+            for e in [2usize, 1, 0] {
+                xfer.request((0, e), Priority::Prefetch);
+            }
+            let plan = build_plan(0, &[0, 1, 2], &[], &cache, &xfer);
+            assert_eq!(plan.n_pending(), 3, "prefetches still in flight must be joined");
+            let (x, coef) = inputs(4, 8, 9);
+            run_layer_serial(&plan, &x, &coef, ScheduleMode::ExpertWise, 4, &cache)
+        };
+        let par_out = {
+            let (_store, cache, xfer) = fixture(QuantKind::Int4, "rtx4090", 1.0);
+            for e in [2usize, 1, 0] {
+                xfer.request((0, e), Priority::Prefetch);
+            }
+            let plan = build_plan(0, &[0, 1, 2], &[], &cache, &xfer);
+            assert_eq!(plan.n_pending(), 3);
+            let (x, coef) = inputs(4, 8, 9);
+            let pool = ThreadPool::new(3);
+            run_layer_parallel(
+                &plan,
+                &x,
+                &coef,
+                ScheduleMode::ExpertWise,
+                4,
+                &cache,
+                &xfer,
+                &pool,
+            )
+        };
+
+        assert_eq!(serial_out.consumed, vec![0, 1, 2], "serial drains in plan order");
+        assert_eq!(par_out.consumed, vec![2, 1, 0], "executor must follow arrival order");
+        // Same bits despite opposite consumption order.
+        assert_eq!(serial_out.acc.data, par_out.acc.data);
+        // Serial leaves experts 1 and 2 parked behind expert 0 (several ms
+        // of simulated wire time each); arrival-order consumption adds no
+        // such queueing.
+        assert!(
+            par_out.queue_delay_ns < serial_out.queue_delay_ns / 2,
+            "arrival-order queue delay {} should be far below serial {}",
+            par_out.queue_delay_ns,
+            serial_out.queue_delay_ns
+        );
+    }
+
+    #[test]
+    fn tile_wise_parallel_matches_serial_bits() {
+        let serial_out = {
+            let (_store, cache, xfer) = fixture(QuantKind::F32, "instant", 0.0);
+            let plan = build_plan(1, &[3, 4], &[], &cache, &xfer);
+            let (x, coef) = inputs(2, 8, 13);
+            run_layer_serial(&plan, &x, &coef, ScheduleMode::TileWise, 4, &cache)
+        };
+        let par_out = {
+            let (_store, cache, xfer) = fixture(QuantKind::F32, "instant", 0.0);
+            let plan = build_plan(1, &[3, 4], &[], &cache, &xfer);
+            let (x, coef) = inputs(2, 8, 13);
+            let pool = ThreadPool::new(2);
+            run_layer_parallel(
+                &plan,
+                &x,
+                &coef,
+                ScheduleMode::TileWise,
+                4,
+                &cache,
+                &xfer,
+                &pool,
+            )
+        };
+        assert_eq!(serial_out.acc.data, par_out.acc.data);
+        // both drains promote consumed experts into the cache
+        assert_eq!(serial_out.consumed.len(), 2);
+        assert_eq!(par_out.consumed.len(), 2);
+    }
+
+    #[test]
+    fn shared_drain_reports_kernel_style_consume() {
+        // drain_arrival_order with an inline (engine-style) consume
+        // callback: accumulate per-expert partials, reduce in plan order.
+        let (_store, cache, xfer) = fixture(QuantKind::F32, "instant", 0.0);
+        let plan = build_plan(0, &[1, 2], &[], &cache, &xfer);
+        let (x, coef) = inputs(2, 8, 17);
+        let pending: Vec<(usize, Arc<TransferHandle>)> = plan
+            .pending_items()
+            .map(|(e, h)| (e, Arc::clone(h)))
+            .collect();
+        let mut parts: HashMap<usize, Tensor> = pending
+            .iter()
+            .map(|(e, _)| (*e, Tensor::zeros(x.dims.clone())))
+            .collect();
+        let stats = drain_arrival_order(
+            0,
+            &pending,
+            ScheduleMode::ExpertWise,
+            4,
+            &cache,
+            &xfer.completions,
+            |arrived| {
+                if let Arrived::Full { expert, weights } = arrived {
+                    let y = expert_ffn_host(&x, weights, &coef[expert]);
+                    parts.get_mut(&expert).unwrap().add_assign(&y);
+                }
+                Ok(())
+            },
+            || true,
+        )
+        .unwrap();
+        assert_eq!(stats.consumed.len(), 2);
+        assert!(cache.contains((0, 1)) && cache.contains((0, 2)));
+        let mut acc = Tensor::zeros(x.dims.clone());
+        for (e, _) in &pending {
+            acc.add_assign(&parts[e]);
+        }
+        // must equal the serial plan-order result bit-for-bit
+        let (_store2, cache2, xfer2) = fixture(QuantKind::F32, "instant", 0.0);
+        let plan2 = build_plan(0, &[1, 2], &[], &cache2, &xfer2);
+        let serial = run_layer_serial(&plan2, &x, &coef, ScheduleMode::ExpertWise, 4, &cache2);
+        assert_eq!(acc.data, serial.acc.data);
+    }
+}

@@ -4,7 +4,9 @@
 //!   gating (§4.2, eq. 8)
 //! * [`prefetch`] — gate-reuse multi-layer prefetch + predictive gate (§4.3)
 //! * [`cache_plan`] — knapsack-DP cache allocation (§4.4, eq. 10–19)
-//! * [`scheduler`] — compute/comm overlap, expert- and tile-wise (§5)
+//! * [`scheduler`] — compute/comm overlap planning, expert- and tile-wise (§5)
+//! * [`executor`] — completion-driven MoE layer execution (arrival-order
+//!   consumption + threadpool fan-out over the unified work queue)
 //! * [`engine`] — the decode engine tying it all together
 //! * [`policy`] — paper-method presets (baselines + AdapMoE + ablations)
 //! * [`batcher`] — continuous batching for the serving front
@@ -14,6 +16,7 @@
 pub mod batcher;
 pub mod cache_plan;
 pub mod engine;
+pub mod executor;
 pub mod gating;
 pub mod policy;
 pub mod prefetch;

@@ -29,6 +29,9 @@ pub struct RunSettings {
     pub n_tiles: usize,
     pub time_scale: f64,
     pub top_k: usize,
+    /// Host-FFN worker threads (0 = engine-thread kernel path; see
+    /// [`crate::coordinator::executor`]).
+    pub compute_workers: usize,
 }
 
 impl RunSettings {
@@ -41,6 +44,7 @@ impl RunSettings {
             n_tiles: 4,
             time_scale: 1.0,
             top_k: 2,
+            compute_workers: 0,
         }
     }
 }
@@ -73,6 +77,7 @@ pub fn method(name: &str, s: &RunSettings, profile: &Profile) -> Option<EngineCo
         n_tiles: s.n_tiles,
         time_scale: s.time_scale,
         whole_layer: false,
+        compute_workers: s.compute_workers,
     };
     Some(match name {
         // DeepSpeed/FlexGen-style dense offloading: loads every expert of

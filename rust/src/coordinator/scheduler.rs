@@ -1,10 +1,14 @@
 //! Compute/comm overlap scheduling (paper §5, Algorithm 1 + Fig. 6).
 //!
-//! For one MoE block, partitions the experts to execute into
-//! `ready` (resident — compute immediately, overlapping the transfers of
-//! the rest) and `pending` (enqueued as on-demand loads). The engine then
-//! consumes `pending` either **expert-wise** (wait for the whole expert)
-//! or **tile-wise** (consume each f-tile as it arrives — Fig. 6(b)).
+//! For one MoE block, [`build_plan`] emits a unified work queue covering
+//! everything the layer must touch: `Ready` experts (resident — compute
+//! immediately, overlapping the transfers of the rest), `Pending` experts
+//! (enqueued as on-demand loads, consumed **in arrival order** by the
+//! completion-driven executor) and `ExtraLoad` entries (whole-layer
+//! baseline loads that are transferred but never computed). The executor
+//! ([`crate::coordinator::executor`] and the engine's kernel path) drains
+//! the queue either **expert-wise** (whole expert per kernel call) or
+//! **tile-wise** (kernel call per arrived f-tile — Fig. 6(b)).
 
 use std::sync::Arc;
 
@@ -23,14 +27,60 @@ pub enum ScheduleMode {
     TileWise,
 }
 
-/// Execution plan for one layer's MoE block.
+/// One unit of MoE-layer work.
+pub enum WorkItem {
+    /// Resident (or staged-prefetch) expert: compute whenever a worker is
+    /// free — no transfer to wait for.
+    Ready { expert: usize, weights: Arc<ExpertF32> },
+    /// Expert in flight on the comm stream: compute on arrival. Per-item
+    /// arrival instants live on the [`TransferHandle`] (queue-delay
+    /// attribution).
+    Pending { expert: usize, handle: Arc<TransferHandle> },
+    /// Whole-layer-baseline load: transferred (lands in the cache via the
+    /// comm thread) but not computed, and never waited on.
+    ExtraLoad { expert: usize, handle: Arc<TransferHandle> },
+}
+
+/// Execution plan for one layer's MoE block: a queue the executor drains.
+/// Order is ready-first (Algorithm 1 line 11), then pending in expert
+/// order, then extra loads — but the completion-driven executor is free to
+/// consume pending items in arrival order instead.
 pub struct ExecPlan {
-    /// Experts resident right now (compute first — Algorithm 1 line 11).
-    pub ready: Vec<(usize, Arc<ExpertF32>)>,
-    /// Experts being loaded on-demand (compute as they arrive — line 12).
-    pub pending: Vec<(usize, Arc<TransferHandle>)>,
+    pub layer: usize,
+    pub queue: Vec<WorkItem>,
     /// On-demand loads issued by this plan (for trace accounting).
     pub on_demand_issued: u64,
+}
+
+impl ExecPlan {
+    /// Ready experts, in queue order.
+    pub fn ready_items(&self) -> impl Iterator<Item = (usize, &Arc<ExpertF32>)> + '_ {
+        self.queue.iter().filter_map(|w| match w {
+            WorkItem::Ready { expert, weights } => Some((*expert, weights)),
+            _ => None,
+        })
+    }
+
+    /// Pending (compute-on-arrival) experts, in queue order.
+    pub fn pending_items(&self) -> impl Iterator<Item = (usize, &Arc<TransferHandle>)> + '_ {
+        self.queue.iter().filter_map(|w| match w {
+            WorkItem::Pending { expert, handle } => Some((*expert, handle)),
+            _ => None,
+        })
+    }
+
+    pub fn n_ready(&self) -> usize {
+        self.ready_items().count()
+    }
+
+    pub fn n_pending(&self) -> usize {
+        self.pending_items().count()
+    }
+
+    /// Items that produce FFN output (ready + pending).
+    pub fn n_compute(&self) -> usize {
+        self.n_ready() + self.n_pending()
+    }
 }
 
 /// Build the plan: look up each compute target in the cache; request
@@ -46,34 +96,44 @@ pub fn build_plan(
 ) -> ExecPlan {
     let mut ready = Vec::new();
     let mut pending = Vec::new();
+    let mut extra = Vec::new();
     let mut issued = 0;
 
     for &e in computes {
         let id: ExpertId = (layer, e);
         if let Some(w) = cache.get(id) {
-            ready.push((e, w));
+            ready.push(WorkItem::Ready { expert: e, weights: w });
         } else if let Some(w) = xfer.staging.take(id) {
             // prefetched earlier, parked in the staging buffers (the cache
             // may have had no room for this layer) — consume it now and give
             // the cache another chance to keep it.
             cache.insert(id, Arc::clone(&w));
-            ready.push((e, w));
+            ready.push(WorkItem::Ready { expert: e, weights: w });
         } else if let Some(h) = xfer.in_flight(id) {
             // already being loaded (e.g. by a prefetch): join it
-            pending.push((e, h));
+            pending.push(WorkItem::Pending { expert: e, handle: h });
         } else {
-            pending.push((e, xfer.request(id, Priority::OnDemand)));
+            pending.push(WorkItem::Pending {
+                expert: e,
+                handle: xfer.request(id, Priority::OnDemand),
+            });
             issued += 1;
         }
     }
     for &e in extra_loads {
         let id: ExpertId = (layer, e);
         if !cache.contains(id) && xfer.in_flight(id).is_none() {
-            xfer.request(id, Priority::OnDemand);
+            extra.push(WorkItem::ExtraLoad {
+                expert: e,
+                handle: xfer.request(id, Priority::OnDemand),
+            });
             issued += 1;
         }
     }
-    ExecPlan { ready, pending, on_demand_issued: issued }
+    let mut queue = ready;
+    queue.append(&mut pending);
+    queue.append(&mut extra);
+    ExecPlan { layer, queue, on_demand_issued: issued }
 }
 
 #[cfg(test)]
@@ -104,12 +164,32 @@ mod tests {
         let (store, cache, xfer) = fixture(vec![8, 8], "instant");
         cache.insert((0, 2), Arc::new(store.dequantize((0, 2))));
         let plan = build_plan(0, &[2, 5], &[], &cache, &xfer);
-        assert_eq!(plan.ready.len(), 1);
-        assert_eq!(plan.ready[0].0, 2);
-        assert_eq!(plan.pending.len(), 1);
-        assert_eq!(plan.pending[0].0, 5);
+        assert_eq!(plan.n_ready(), 1);
+        assert_eq!(plan.ready_items().next().unwrap().0, 2);
+        assert_eq!(plan.n_pending(), 1);
+        let (e, h) = plan.pending_items().next().unwrap();
+        assert_eq!(e, 5);
         assert_eq!(plan.on_demand_issued, 1);
-        plan.pending[0].1.wait_full();
+        h.wait_full();
+    }
+
+    #[test]
+    fn queue_orders_ready_before_pending_before_extras() {
+        let (store, cache, xfer) = fixture(vec![8, 8], "instant");
+        cache.insert((0, 3), Arc::new(store.dequantize((0, 3))));
+        let plan = build_plan(0, &[1, 3], &[6], &cache, &xfer);
+        let kinds: Vec<&str> = plan
+            .queue
+            .iter()
+            .map(|w| match w {
+                WorkItem::Ready { .. } => "ready",
+                WorkItem::Pending { .. } => "pending",
+                WorkItem::ExtraLoad { .. } => "extra",
+            })
+            .collect();
+        assert_eq!(kinds, vec!["ready", "pending", "extra"]);
+        assert_eq!(plan.n_compute(), 2);
+        xfer.quiesce();
     }
 
     #[test]
@@ -122,7 +202,7 @@ mod tests {
         // a cache hit, or the plan joined the in-flight transfer; in neither
         // case may a *new* on-demand transfer be issued.
         assert_eq!(plan.on_demand_issued, 0);
-        for (_, h) in &plan.pending {
+        for (_, h) in plan.pending_items() {
             h.wait_full();
         }
     }
@@ -136,7 +216,7 @@ mod tests {
         assert!(xfer.staging_contains((0, 6)));
         assert!(!cache.contains((0, 6)));
         let plan = build_plan(0, &[6], &[], &cache, &xfer);
-        assert_eq!(plan.ready.len(), 1, "staged expert should be ready");
+        assert_eq!(plan.n_ready(), 1, "staged expert should be ready");
         assert_eq!(plan.on_demand_issued, 0);
         assert!(cache.contains((0, 6)), "use promotes staged expert to cache");
         assert!(!xfer.staging_contains((0, 6)));
@@ -146,7 +226,9 @@ mod tests {
     fn extra_loads_are_issued_not_computed() {
         let (_store, cache, xfer) = fixture(vec![8, 8], "instant");
         let plan = build_plan(1, &[0], &[1, 2, 3], &cache, &xfer);
-        assert_eq!(plan.pending.len(), 1);
+        assert_eq!(plan.n_pending(), 1);
+        assert_eq!(plan.n_compute(), 1);
+        assert_eq!(plan.queue.len(), 4, "extras ride in the unified queue");
         assert_eq!(plan.on_demand_issued, 4);
         xfer.quiesce();
         // extra loads landed in cache even though not computed

@@ -47,6 +47,16 @@ pub struct TraceCollector {
     pub on_demand: Vec<u64>,
     /// Wall-clock the compute stream spent blocked on transfers (ns).
     pub stall_ns: u64,
+    /// True idle time per layer: compute had nothing runnable and slept on
+    /// the completion board (ns).
+    pub layer_stall_ns: Vec<u64>,
+    /// Head-of-line cost per layer: time transferred expert/tile data sat
+    /// ready before compute consumed it (ns).
+    pub queue_delay_ns: Vec<u64>,
+    /// Whether to collect the Fig. 3 similarity series. Off by default:
+    /// it forces the engine to keep a copy of the previous layer's hidden
+    /// state every layer, which is pure overhead on the serving path.
+    collect_similarity: bool,
     /// Per-phase decode-step time (ns): see [`Phase`].
     pub phase_ns: [u64; Phase::COUNT],
     /// Per-token decode latency (seconds).
@@ -68,10 +78,28 @@ impl TraceCollector {
             prefetch_needed: vec![0; n_layers],
             on_demand: vec![0; n_layers],
             stall_ns: 0,
+            layer_stall_ns: vec![0; n_layers],
+            queue_delay_ns: vec![0; n_layers],
+            collect_similarity: false,
             phase_ns: [0; Phase::COUNT],
             token_latency: Summary::new(),
             tokens: 0,
         }
+    }
+
+    /// Builder: turn the Fig. 3 similarity trace on/off (see
+    /// [`TraceCollector::collect_similarity`]).
+    pub fn with_similarity(mut self, on: bool) -> TraceCollector {
+        self.collect_similarity = on;
+        self
+    }
+
+    pub fn enable_similarity(&mut self) {
+        self.collect_similarity = true;
+    }
+
+    pub fn similarity_enabled(&self) -> bool {
+        self.collect_similarity
     }
 
     pub fn record_decision(&mut self, layer: usize, alpha: f64, single: bool) {
@@ -114,6 +142,18 @@ impl TraceCollector {
 
     pub fn record_stall(&mut self, ns: u64) {
         self.stall_ns += ns;
+    }
+
+    /// True idle wait attributed to a layer (also counts toward the global
+    /// [`TraceCollector::stall_ns`]).
+    pub fn record_layer_stall(&mut self, layer: usize, ns: u64) {
+        self.stall_ns += ns;
+        self.layer_stall_ns[layer] += ns;
+    }
+
+    /// Arrived-but-unconsumed time for one expert/tile of a layer.
+    pub fn record_queue_delay(&mut self, layer: usize, ns: u64) {
+        self.queue_delay_ns[layer] += ns;
     }
 
     pub fn record_phase(&mut self, phase: Phase, ns: u64) {
@@ -189,6 +229,17 @@ impl TraceCollector {
         self.sim.iter().map(|s| s.mean()).collect()
     }
 
+    /// Per-layer (queue-delay seconds, stall seconds): where the MoE wait
+    /// went. Queue delay is head-of-line blocking the completion-driven
+    /// executor removes; stall is the irreducible wait for the link.
+    pub fn stall_attribution(&self) -> Vec<(f64, f64)> {
+        self.queue_delay_ns
+            .iter()
+            .zip(&self.layer_stall_ns)
+            .map(|(&q, &s)| (q as f64 / 1e9, s as f64 / 1e9))
+            .collect()
+    }
+
     /// DP planner inputs measured from this trace; `fallback_beta` fills
     /// layers with no prefetch data (e.g. prefetch disabled).
     pub fn plan_inputs(&self, n_experts: usize, budget: usize, fallback_beta: f64) -> PlanInputs {
@@ -256,5 +307,30 @@ mod tests {
     fn similarity_series_len() {
         let t = TraceCollector::new(4);
         assert_eq!(t.similarity().len(), 3);
+    }
+
+    #[test]
+    fn similarity_gate_defaults_off() {
+        let t = TraceCollector::new(2);
+        assert!(!t.similarity_enabled());
+        let t = TraceCollector::new(2).with_similarity(true);
+        assert!(t.similarity_enabled());
+        let mut t = TraceCollector::new(2);
+        t.enable_similarity();
+        assert!(t.similarity_enabled());
+    }
+
+    #[test]
+    fn stall_attribution_per_layer() {
+        let mut t = TraceCollector::new(2);
+        t.record_layer_stall(0, 1_000_000);
+        t.record_layer_stall(1, 2_000_000);
+        t.record_queue_delay(1, 500_000);
+        assert_eq!(t.stall_ns, 3_000_000);
+        let attr = t.stall_attribution();
+        assert_eq!(attr.len(), 2);
+        assert!((attr[0].1 - 1e-3).abs() < 1e-12);
+        assert!((attr[1].0 - 0.5e-3).abs() < 1e-12);
+        assert!((attr[1].1 - 2e-3).abs() < 1e-12);
     }
 }

@@ -171,6 +171,7 @@ fn cmd_plan_cache(args: &Args) -> Result<()> {
 
 fn cmd_profile(args: &Args) -> Result<()> {
     let mut engine = build_engine(args, 1)?;
+    engine.trace.enable_similarity(); // Fig. 3 series is part of the profile
     let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let eval = EvalStream::load(&dir.join("tokens_eval.bin"))?;
     let n = args.usize_or("tokens", 200);

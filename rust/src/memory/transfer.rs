@@ -11,6 +11,11 @@
 //! out the remainder of the simulated wire time given by the platform's
 //! calibrated bandwidth. Completed experts are published into the
 //! [`DeviceCache`] and handed to waiters through [`TransferHandle`].
+//!
+//! Every tile/expert arrival is additionally announced on the engine-wide
+//! [`CompletionBoard`], which lets the compute stream consume work in
+//! **arrival order** (completion-driven execution) rather than blocking on
+//! transfers in plan order — see [`crate::coordinator::executor`].
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -44,7 +49,10 @@ pub struct TransferHandle {
 
 struct HandleState {
     tiles: Vec<Option<Arc<ExpertF32>>>,
+    /// Arrival instant of each tile (queue-delay attribution).
+    tiles_at: Vec<Option<Instant>>,
     full: Option<Arc<ExpertF32>>,
+    full_at: Option<Instant>,
     tiles_done: usize,
 }
 
@@ -53,7 +61,9 @@ impl TransferHandle {
         TransferHandle {
             state: Mutex::new(HandleState {
                 tiles: vec![None; n_tiles],
+                tiles_at: vec![None; n_tiles],
                 full: None,
+                full_at: None,
                 tiles_done: 0,
             }),
             cond: Condvar::new(),
@@ -81,6 +91,26 @@ impl TransferHandle {
         g.full.clone().unwrap()
     }
 
+    /// Non-blocking: the whole expert plus its arrival instant, if landed.
+    /// The instant lets the consumer attribute queue delay (time the data
+    /// sat ready before compute picked it up) separately from true stalls.
+    pub fn try_full(&self) -> Option<(Arc<ExpertF32>, Instant)> {
+        let g = self.state.lock().unwrap();
+        match (&g.full, g.full_at) {
+            (Some(w), Some(at)) => Some((Arc::clone(w), at)),
+            _ => None,
+        }
+    }
+
+    /// Non-blocking: tile `t` plus its arrival instant, if landed.
+    pub fn try_tile(&self, t: usize) -> Option<(Arc<ExpertF32>, Instant)> {
+        let g = self.state.lock().unwrap();
+        match (&g.tiles[t], g.tiles_at[t]) {
+            (Some(w), Some(at)) => Some((Arc::clone(w), at)),
+            _ => None,
+        }
+    }
+
     pub fn is_complete(&self) -> bool {
         self.state.lock().unwrap().full.is_some()
     }
@@ -92,6 +122,7 @@ impl TransferHandle {
     fn publish_tile(&self, t: usize, data: Arc<ExpertF32>) {
         let mut g = self.state.lock().unwrap();
         g.tiles[t] = Some(data);
+        g.tiles_at[t] = Some(Instant::now());
         g.tiles_done += 1;
         self.cond.notify_all();
     }
@@ -99,7 +130,87 @@ impl TransferHandle {
     fn publish_full(&self, data: Arc<ExpertF32>) {
         let mut g = self.state.lock().unwrap();
         g.full = Some(data);
+        g.full_at = Some(Instant::now());
         self.cond.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Completion notification
+// ---------------------------------------------------------------------------
+
+/// What arrived: one tile of an expert, or the whole expert.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompletionKind {
+    Tile(usize),
+    Full,
+}
+
+/// One arrival notification published by the comm thread.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CompletionEvent {
+    pub id: ExpertId,
+    pub kind: CompletionKind,
+}
+
+/// Bounded arrival-order queue of completion events, the compute stream's
+/// wait target. Instead of blocking on expert *i* while expert *i+1* has
+/// already landed (head-of-line blocking), the executor parks here and is
+/// woken by whichever transfer finishes first. Events are hints: consumers
+/// must re-check [`TransferHandle`] state after waking, so the bounded drop
+/// of old events (and a timeout on waits) can never lose work.
+pub struct CompletionBoard {
+    q: Mutex<std::collections::VecDeque<CompletionEvent>>,
+    cv: Condvar,
+}
+
+/// Backstop bound; far above any realistic in-flight event count.
+const BOARD_CAP: usize = 4096;
+
+impl CompletionBoard {
+    fn new() -> CompletionBoard {
+        CompletionBoard {
+            q: Mutex::new(std::collections::VecDeque::new()),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn push(&self, ev: CompletionEvent) {
+        let mut g = self.q.lock().unwrap();
+        if g.len() >= BOARD_CAP {
+            g.pop_front();
+        }
+        g.push_back(ev);
+        self.cv.notify_all();
+    }
+
+    /// Pop the oldest event without blocking.
+    pub fn try_pop(&self) -> Option<CompletionEvent> {
+        self.q.lock().unwrap().pop_front()
+    }
+
+    /// Pop the oldest event, blocking up to `timeout` for one to arrive.
+    pub fn wait_pop(&self, timeout: Duration) -> Option<CompletionEvent> {
+        let mut g = self.q.lock().unwrap();
+        if let Some(ev) = g.pop_front() {
+            return Some(ev);
+        }
+        let (mut g, _) = self.cv.wait_timeout(g, timeout).unwrap();
+        g.pop_front()
+    }
+
+    /// Drop queued events (start-of-layer hygiene: anything already landed
+    /// is found by the executor's initial handle sweep).
+    pub fn clear(&self) {
+        self.q.lock().unwrap().clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -166,17 +277,58 @@ impl Staging {
     }
 }
 
+/// In-flight transfer registry shared by the compute and comm threads.
+/// The Condvar signals every removal so [`TransferEngine::quiesce`] can
+/// sleep instead of poll.
+struct InFlight {
+    map: Mutex<HashMap<ExpertId, Arc<TransferHandle>>>,
+    drained: Condvar,
+}
+
+impl InFlight {
+    fn new() -> InFlight {
+        InFlight { map: Mutex::new(HashMap::new()), drained: Condvar::new() }
+    }
+
+    fn get(&self, id: ExpertId) -> Option<Arc<TransferHandle>> {
+        self.map.lock().unwrap().get(&id).cloned()
+    }
+
+    fn remove(&self, id: ExpertId) {
+        self.map.lock().unwrap().remove(&id);
+        self.drained.notify_all();
+    }
+
+    fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    fn wait_empty(&self) {
+        let mut g = self.map.lock().unwrap();
+        while !g.is_empty() {
+            // Timeout only as a backstop against a dead comm thread.
+            let (ng, _) = self
+                .drained
+                .wait_timeout(g, Duration::from_millis(50))
+                .unwrap();
+            g = ng;
+        }
+    }
+}
+
 pub struct TransferEngine {
     urgent_tx: Sender<Job>,
     prefetch_tx: Sender<Job>,
     wake_tx: Sender<()>,
     worker: Option<JoinHandle<()>>,
-    in_flight: Arc<Mutex<HashMap<ExpertId, Arc<TransferHandle>>>>,
+    in_flight: Arc<InFlight>,
     /// Prefetch jobs the compute stream is now blocked on — the comm loop
     /// lifts these to the urgent queue (CUDA-stream-priority analogue).
     promotions: Arc<Mutex<std::collections::HashSet<ExpertId>>>,
     pub stats: Arc<TransferStats>,
     pub staging: Arc<Staging>,
+    /// Arrival notifications, consumed by the completion-driven executor.
+    pub completions: Arc<CompletionBoard>,
     pub n_tiles: usize,
     shutdown: Arc<AtomicBool>,
 }
@@ -195,11 +347,11 @@ impl TransferEngine {
         let (urgent_tx, urgent_rx) = channel::<Job>();
         let (prefetch_tx, prefetch_rx) = channel::<Job>();
         let (wake_tx, wake_rx) = channel::<()>();
-        let in_flight: Arc<Mutex<HashMap<ExpertId, Arc<TransferHandle>>>> =
-            Arc::new(Mutex::new(HashMap::new()));
+        let in_flight = Arc::new(InFlight::new());
         let stats = Arc::new(TransferStats::default());
         let staging = Arc::new(Staging::new(4 * store.n_experts));
         let promotions = Arc::new(Mutex::new(std::collections::HashSet::new()));
+        let completions = Arc::new(CompletionBoard::new());
         let shutdown = Arc::new(AtomicBool::new(false));
 
         let worker = {
@@ -207,6 +359,7 @@ impl TransferEngine {
             let stats = Arc::clone(&stats);
             let staging = Arc::clone(&staging);
             let promotions = Arc::clone(&promotions);
+            let completions = Arc::clone(&completions);
             let shutdown = Arc::clone(&shutdown);
             std::thread::Builder::new()
                 .name("adapmoe-comm".into())
@@ -224,6 +377,7 @@ impl TransferEngine {
                         stats,
                         staging,
                         promotions,
+                        completions,
                         shutdown,
                     })
                 })
@@ -239,6 +393,7 @@ impl TransferEngine {
             promotions,
             stats,
             staging,
+            completions,
             n_tiles,
             shutdown,
         }
@@ -248,7 +403,7 @@ impl TransferEngine {
     /// on-demand request for an in-flight *prefetch* promotes it to the
     /// urgent queue).
     pub fn request(&self, id: ExpertId, priority: Priority) -> Arc<TransferHandle> {
-        let mut g = self.in_flight.lock().unwrap();
+        let mut g = self.in_flight.map.lock().unwrap();
         if let Some(h) = g.get(&id) {
             let h = Arc::clone(h);
             drop(g);
@@ -272,7 +427,7 @@ impl TransferEngine {
 
     /// Handle for an in-flight transfer, if any.
     pub fn in_flight(&self, id: ExpertId) -> Option<Arc<TransferHandle>> {
-        self.in_flight.lock().unwrap().get(&id).cloned()
+        self.in_flight.get(id)
     }
 
     /// Whether a completed prefetch is parked in staging for `id`.
@@ -283,14 +438,13 @@ impl TransferEngine {
     }
 
     pub fn pending(&self) -> usize {
-        self.in_flight.lock().unwrap().len()
+        self.in_flight.len()
     }
 
-    /// Block until the queue drains (tests / end-of-run barrier).
+    /// Block until the queue drains (tests / end-of-run barrier). Sleeps on
+    /// the in-flight map's Condvar; woken by every completed transfer.
     pub fn quiesce(&self) {
-        while self.pending() > 0 {
-            std::thread::sleep(Duration::from_micros(200));
-        }
+        self.in_flight.wait_empty();
     }
 }
 
@@ -313,10 +467,11 @@ struct CommCtx {
     urgent_rx: std::sync::mpsc::Receiver<Job>,
     prefetch_rx: std::sync::mpsc::Receiver<Job>,
     wake_rx: std::sync::mpsc::Receiver<()>,
-    in_flight: Arc<Mutex<HashMap<ExpertId, Arc<TransferHandle>>>>,
+    in_flight: Arc<InFlight>,
     stats: Arc<TransferStats>,
     staging: Arc<Staging>,
     promotions: Arc<Mutex<std::collections::HashSet<ExpertId>>>,
+    completions: Arc<CompletionBoard>,
     shutdown: Arc<AtomicBool>,
 }
 
@@ -401,9 +556,15 @@ fn admit(ctx: &CommCtx, job: Job) -> Option<Active> {
             .unwrap_or_else(|| Arc::new(ctx.store.dequantize(job.id)));
         for t in 0..ctx.n_tiles {
             job.handle.publish_tile(t, Arc::clone(&full));
+            ctx.completions
+                .push(CompletionEvent { id: job.id, kind: CompletionKind::Tile(t) });
         }
         job.handle.publish_full(full);
-        ctx.in_flight.lock().unwrap().remove(&job.id);
+        // event before the in-flight removal: quiesce() returning must imply
+        // every completion event is already on the board
+        ctx.completions
+            .push(CompletionEvent { id: job.id, kind: CompletionKind::Full });
+        ctx.in_flight.remove(job.id);
         ctx.stats.skipped_cached.fetch_add(1, Ordering::Relaxed);
         return None;
     }
@@ -439,6 +600,8 @@ fn transfer_tile(ctx: &CommCtx, a: &mut Active) -> bool {
         .sim_busy_ns
         .fetch_add((a.tile_time.max(elapsed) * 1e9) as u64, Ordering::Relaxed);
     a.job.handle.publish_tile(t, Arc::clone(&tile));
+    ctx.completions
+        .push(CompletionEvent { id: a.job.id, kind: CompletionKind::Tile(t) });
     a.tiles.push(tile);
     a.next_tile += 1;
     a.next_tile == ctx.n_tiles
@@ -463,7 +626,11 @@ fn finish(ctx: &CommCtx, a: Active) {
         }
     }
     a.job.handle.publish_full(full);
-    ctx.in_flight.lock().unwrap().remove(&a.job.id);
+    // event before the in-flight removal (see admit): quiesce() implies all
+    // completion events are published
+    ctx.completions
+        .push(CompletionEvent { id: a.job.id, kind: CompletionKind::Full });
+    ctx.in_flight.remove(a.job.id);
 
     ctx.stats.transfers.fetch_add(1, Ordering::Relaxed);
     ctx.stats.bytes.fetch_add(a.bytes as u64, Ordering::Relaxed);
@@ -649,6 +816,80 @@ mod tests {
             "promoted on-demand should finish before the preempted prefetch"
         );
         a.wait_full();
+    }
+
+    #[test]
+    fn completion_events_follow_arrival_order() {
+        let (_store, _cache, engine) = setup(QuantKind::F32, vec![8, 8], "instant", 0.0);
+        engine.completions.clear();
+        let a = engine.request((0, 2), Priority::OnDemand);
+        a.wait_full();
+        let b = engine.request((0, 5), Priority::OnDemand);
+        b.wait_full();
+        engine.quiesce();
+        // 4 tiles + 1 full per expert, expert (0,2) strictly before (0,5)
+        let mut seen = Vec::new();
+        while let Some(ev) = engine.completions.try_pop() {
+            seen.push(ev);
+        }
+        assert_eq!(seen.len(), 10, "4 tiles + full per expert: {seen:?}");
+        assert!(seen[..5].iter().all(|e| e.id == (0, 2)));
+        assert!(seen[5..].iter().all(|e| e.id == (0, 5)));
+        assert_eq!(seen[4].kind, CompletionKind::Full);
+        assert_eq!(seen[9].kind, CompletionKind::Full);
+        assert!(engine.completions.is_empty());
+    }
+
+    #[test]
+    fn try_accessors_and_arrival_instants() {
+        let (_store, _cache, engine) = setup(QuantKind::F32, vec![8, 8], "instant", 0.0);
+        let h = engine.request((1, 1), Priority::OnDemand);
+        h.wait_full();
+        let (w, at) = h.try_full().expect("full landed");
+        assert!(!w.w1.is_empty());
+        assert!(at.elapsed().as_secs() < 60);
+        for t in 0..4 {
+            assert!(h.try_tile(t).is_some(), "tile {t} landed");
+        }
+        // a fresh handle has nothing available
+        let h2 = TransferHandle::new((9, 9), 4);
+        assert!(h2.try_full().is_none());
+        assert!(h2.try_tile(0).is_none());
+    }
+
+    #[test]
+    fn quiesce_blocks_until_drain_without_polling() {
+        // slow link: quiesce must actually sleep through multiple transfers
+        let (_store, cache, engine) = setup(QuantKind::Int4, vec![8, 8], "rtx4090", 1.0);
+        for e in 0..3 {
+            engine.request((0, e), Priority::OnDemand);
+        }
+        let t0 = Instant::now();
+        engine.quiesce();
+        assert_eq!(engine.pending(), 0);
+        assert!(t0.elapsed().as_secs_f64() > 0.0);
+        for e in 0..3 {
+            assert!(cache.contains((0, e)));
+        }
+    }
+
+    #[test]
+    fn board_is_bounded() {
+        let board = CompletionBoard::new();
+        for i in 0..(BOARD_CAP + 10) {
+            board.push(CompletionEvent { id: (0, i), kind: CompletionKind::Full });
+        }
+        assert_eq!(board.len(), BOARD_CAP);
+        // oldest events were dropped
+        assert_eq!(board.try_pop().unwrap().id, (0, 10));
+    }
+
+    #[test]
+    fn wait_pop_times_out_empty() {
+        let board = CompletionBoard::new();
+        let t0 = Instant::now();
+        assert!(board.wait_pop(Duration::from_millis(20)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(10));
     }
 
     #[test]

@@ -310,6 +310,7 @@ fn tile_wise_engine_matches_expert_wise() {
         n_tiles: 4,
         time_scale: 0.0,
         whole_layer: false,
+        compute_workers: 0,
     };
     let mut ew = Engine::from_artifacts(&dir, mk(ScheduleMode::ExpertWise)).unwrap();
     let mut tw = Engine::from_artifacts(&dir, mk(ScheduleMode::TileWise)).unwrap();

@@ -1,0 +1,141 @@
+//! Offline stand-in for the `anyhow` crate, at the size this project
+//! needs (`Result`, `Error`, `Context` on `Result`/`Option`, `bail!`,
+//! `anyhow!`).
+//!
+//! The build image vendors no crates.io registry, so the workspace points
+//! `anyhow = { path = "vendor/anyhow" }` here. The API subset is
+//! call-compatible with the real crate; swapping back is a one-line
+//! Cargo.toml change. Error context is flattened into a single message
+//! string (`"context: cause"`) instead of a source chain — enough for
+//! every `{err}` / `{err:?}` rendering in this repo.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Flattened error: the accumulated context string.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Mirrors anyhow: Error deliberately does NOT implement std::error::Error,
+// which is what makes this blanket From (used by `?` on io/parse/xla
+// errors) coherent alongside core's reflexive `From<T> for T`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(&e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(|| ..)` on `Result` and `Option`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+// The two Result impls are disjoint because `Error` (a local type) does
+// not implement std::error::Error — the same coherence argument the real
+// anyhow relies on.
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Error::msg(format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"))
+    }
+
+    #[test]
+    fn context_flattens() {
+        let e = io_err().context("reading file").unwrap_err();
+        assert_eq!(e.to_string(), "reading file: boom");
+        let e = io_err()
+            .with_context(|| format!("step {}", 3))
+            .unwrap_err();
+        assert_eq!(e.to_string(), "step 3: boom");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(7u32).context("missing").unwrap(), 7);
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            io_err()?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "boom");
+    }
+
+    #[test]
+    fn anyhow_result_context_chains() {
+        fn inner() -> Result<()> {
+            bail!("root {}", 42)
+        }
+        let e = inner().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: root 42");
+        let _ = anyhow!("standalone");
+    }
+}
