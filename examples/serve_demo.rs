@@ -1,10 +1,13 @@
 //! End-to-end serving demo (the E2E validation run recorded in
 //! EXPERIMENTS.md): starts the TCP server with the full AdapMoE stack and
-//! drives it with concurrent clients sampling prompts from the eval corpus,
-//! then reports latency/throughput.
+//! drives it with concurrent clients sampling prompts from the eval corpus
+//! — mixed greedy/sampled, streamed/non-streamed, plus a live cancellation
+//! — then reports client latency and the server's own `{"cmd":"stats"}`.
 //!
 //!     cargo run --release --example serve_demo [-- --clients 6 --requests 12]
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -17,8 +20,10 @@ use adapmoe::coordinator::profile::Profile;
 use adapmoe::memory::platform::Platform;
 use adapmoe::memory::quant::QuantKind;
 use adapmoe::model::tokenizer::{ByteTokenizer, EvalStream};
+use adapmoe::server::api::GenerationRequest;
 use adapmoe::server::tcp;
 use adapmoe::util::cli::Args;
+use adapmoe::util::json::Json;
 use adapmoe::util::rng::Rng;
 use adapmoe::util::stats::Summary;
 
@@ -55,7 +60,8 @@ fn main() -> Result<()> {
 
     println!(
         "serve_demo: {n_clients} clients × {n_requests} requests, {max_new} tokens each, \
-         platform={platform}, batch=4, int4, cache 32/64"
+         platform={platform}, batch=4, int4, cache 32/64 \
+         (odd clients stream with temperature 0.7 / top-k 8)"
     );
     let t0 = Instant::now();
     let handles: Vec<_> = (0..n_clients)
@@ -66,12 +72,27 @@ fn main() -> Result<()> {
                 let eval = EvalStream::from_tokens(tokens);
                 let mut rng = Rng::new(c as u64 + 1);
                 let mut lat = Vec::new();
-                for _ in 0..n_requests {
+                for r in 0..n_requests {
                     let prompt_toks = eval.sample_prompt(&mut rng, 12);
-                    let prompt = ByteTokenizer::decode(&prompt_toks);
-                    let (_text, queue_ms, total_ms) =
-                        tcp::client_request(&addr, &prompt, max_new)?;
-                    lat.push((queue_ms, total_ms));
+                    let mut req =
+                        GenerationRequest::new(&ByteTokenizer::decode(&prompt_toks));
+                    req.max_new = max_new;
+                    if c % 2 == 1 {
+                        // exercise the per-request sampling + streaming path
+                        req.stream = true;
+                        req.temperature = 0.7;
+                        req.top_k = 8;
+                        req.seed = Some((c * 1000 + r) as u64);
+                    }
+                    let done = tcp::client_generate(&addr, &req)?;
+                    if req.stream && done.token_lines != done.tokens.len() {
+                        anyhow::bail!(
+                            "streamed {} token lines but completion has {}",
+                            done.token_lines,
+                            done.tokens.len()
+                        );
+                    }
+                    lat.push((done.queue_ms, done.total_ms));
                 }
                 Ok(lat)
             })
@@ -89,6 +110,11 @@ fn main() -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     let completions = (n_clients * n_requests) as f64;
 
+    // live cancellation: stream a long generation on one connection, cancel
+    // it by id from another mid-flight
+    let cancelled = cancel_demo(&addr, &eval)?;
+    println!("cancellation:     request {cancelled} cancelled mid-stream ✓");
+
     println!("\n== serving results ==");
     println!("completions:      {completions}");
     println!("wall time:        {wall:.2}s");
@@ -105,8 +131,68 @@ fn main() -> Result<()> {
     );
     println!("queue wait:       p50 {:.0}ms  p99 {:.0}ms", queue.p50(), queue.p99());
 
+    let stats = tcp::client_stats(&addr)?;
+    println!("\n== server stats ({{\"cmd\":\"stats\"}}) ==");
+    for key in [
+        "served",
+        "cancelled",
+        "tokens_generated",
+        "tokens_per_sec",
+        "token_p50_ms",
+        "request_p50_ms",
+        "queue_p50_ms",
+    ] {
+        if let Some(v) = stats.get(key).and_then(Json::as_f64) {
+            println!("{key:18} {v:.2}");
+        }
+    }
+
     shutdown.store(true, Ordering::SeqCst);
     let served = server.join().unwrap()?;
     println!("server saw {served} completions");
     Ok(())
+}
+
+/// Stream a deliberately long generation, cancel it from a second
+/// connection once tokens start flowing, and confirm the stream terminates
+/// with a cancelled line. Returns the cancelled request id.
+fn cancel_demo(addr: &str, eval: &EvalStream) -> Result<u64> {
+    let mut rng = Rng::new(99);
+    let mut req = GenerationRequest::new(&ByteTokenizer::decode(
+        &eval.sample_prompt(&mut rng, 12),
+    ));
+    req.max_new = 10_000;
+    req.stream = true;
+
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(stream, "{}", req.to_json().to_string())?;
+    let mut reader = BufReader::new(stream);
+    let mut id = None;
+    let mut sent_cancel = false;
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("server closed the stream before cancellation");
+        }
+        let j = Json::parse(&line)?;
+        if let Some(err) = j.get("error").and_then(Json::as_str) {
+            anyhow::bail!("server error mid-demo: {err}");
+        }
+        if id.is_none() {
+            id = j.get("id").and_then(Json::as_f64).map(|v| v as u64);
+        }
+        match j.get("event").and_then(Json::as_str) {
+            Some("token") if !sent_cancel => {
+                // tokens are flowing: cancel from a different connection
+                let id = id.context("stream line without id")?;
+                if !tcp::client_cancel(addr, id)? {
+                    anyhow::bail!("server did not know id {id}");
+                }
+                sent_cancel = true;
+            }
+            Some("cancelled") => return Ok(id.unwrap_or(0)),
+            Some("done") => anyhow::bail!("generation finished before the cancel landed"),
+            _ => {}
+        }
+    }
 }

@@ -1,12 +1,52 @@
 //! Request batching for the serving front-end (vLLM-router-style continuous
 //! batching, scaled to this engine's fixed batch buckets).
 //!
-//! Requests enter a FIFO admission queue; the decode loop drains them into
-//! free engine slots between steps, decodes all active rows together, and
-//! retires rows on EOS/length. The batcher is engine-agnostic (pure state
+//! Requests enter a priority-aware admission queue (higher [`Request::priority`]
+//! first, FIFO within a priority); the decode loop drains them into free
+//! engine slots between steps, decodes all active rows together, samples each
+//! row with its own [`SamplingParams`], and retires rows on stop-token (EOS),
+//! length, or cancellation. The batcher is engine-agnostic (pure state
 //! machine) so its invariants are property-testable without PJRT.
 
 use std::collections::VecDeque;
+
+use crate::model::sampling;
+use crate::util::rng::Rng;
+
+/// Per-request sampling knobs, threaded from the API surface down to
+/// [`crate::model::sampling::sample_params`]. The all-zero default means
+/// greedy decoding over the full vocabulary.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SamplingParams {
+    /// Softmax temperature; `<= 0` is greedy argmax.
+    pub temperature: f64,
+    /// Restrict sampling to the k highest logits; 0 = unrestricted.
+    pub top_k: usize,
+    /// Seed for this request's private sampling stream; `None` derives an
+    /// uncorrelated one from the request id at admission.
+    pub seed: Option<u64>,
+}
+
+/// Why a request left the active set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated `max_new` tokens (or the KV cache filled up).
+    Length,
+    /// Sampled one of the request's stop tokens (not included in output).
+    Stop,
+    /// Cancelled by id mid-flight.
+    Cancelled,
+}
+
+impl FinishReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
+}
 
 /// One generation request.
 #[derive(Clone, Debug)]
@@ -14,6 +54,12 @@ pub struct Request {
     pub id: u64,
     pub prompt: Vec<u32>,
     pub max_new: usize,
+    pub params: SamplingParams,
+    /// Tokens that terminate generation when sampled (the byte LM has no
+    /// trained EOS; stop tokens play that role per request).
+    pub stop: Vec<u32>,
+    /// Higher admits first; ties break FIFO.
+    pub priority: i32,
 }
 
 /// Lifecycle of an admitted request.
@@ -24,9 +70,28 @@ pub struct ActiveRequest {
     /// Next prompt token index to feed (prompt is consumed step by step).
     pub fed: usize,
     pub generated: Vec<u32>,
+    /// Sampled a stop token (the token itself is not kept).
+    pub stopped: bool,
+    /// Cancelled mid-flight; retired on the next retire() sweep.
+    pub cancelled: bool,
+    /// Private sampling stream (seeded from `req.params.seed`).
+    rng: Rng,
 }
 
 impl ActiveRequest {
+    fn new(req: Request, row: usize) -> ActiveRequest {
+        let rng = Rng::new(req.params.seed.unwrap_or(0x5eed_0000 ^ req.id));
+        ActiveRequest {
+            req,
+            row,
+            fed: 0,
+            generated: Vec::new(),
+            stopped: false,
+            cancelled: false,
+            rng,
+        }
+    }
+
     /// The token to feed this step: next prompt token, or the last
     /// generated one.
     pub fn next_input(&self) -> u32 {
@@ -43,11 +108,33 @@ impl ActiveRequest {
     }
 
     pub fn done(&self) -> bool {
-        self.generated.len() >= self.req.max_new
+        self.cancelled || self.stopped || self.generated.len() >= self.req.max_new
+    }
+
+    /// Valid once `done()`; reflects why the request retired.
+    pub fn finish(&self) -> FinishReason {
+        if self.cancelled {
+            FinishReason::Cancelled
+        } else if self.stopped {
+            FinishReason::Stop
+        } else {
+            FinishReason::Length
+        }
     }
 }
 
-/// FIFO admission + active set management.
+/// Outcome of [`Batcher::cancel`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CancelOutcome {
+    /// Removed from the admission queue before it ever ran.
+    Queued,
+    /// Marked for retirement at the next retire() sweep.
+    Active,
+    /// No queued or active request with that id.
+    Unknown,
+}
+
+/// Priority admission + active set management.
 #[derive(Default)]
 pub struct Batcher {
     queue: VecDeque<Request>,
@@ -60,11 +147,30 @@ impl Batcher {
         Batcher::default()
     }
 
-    /// Enqueue a request; returns its id.
+    /// Enqueue a request with default sampling params; returns its id.
     pub fn submit(&mut self, prompt: Vec<u32>, max_new: usize) -> u64 {
+        self.submit_request(prompt, max_new, SamplingParams::default(), Vec::new(), 0)
+    }
+
+    /// Enqueue a fully-parameterized request; returns its id.
+    pub fn submit_request(
+        &mut self,
+        prompt: Vec<u32>,
+        max_new: usize,
+        params: SamplingParams,
+        stop: Vec<u32>,
+        priority: i32,
+    ) -> u64 {
+        let id = self.reserve_id();
+        self.queue.push_back(Request { id, prompt, max_new, params, stop, priority });
+        id
+    }
+
+    /// Consume and return the next request id without enqueuing anything —
+    /// for requests rejected before admission, so their ids stay unique.
+    pub fn reserve_id(&mut self) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        self.queue.push_back(Request { id, prompt, max_new });
         id
     }
 
@@ -72,12 +178,38 @@ impl Batcher {
         self.queue.len()
     }
 
-    /// Admit queued requests into the given free rows (in order).
+    /// Cancel by id, wherever the request currently lives.
+    pub fn cancel(&mut self, id: u64) -> CancelOutcome {
+        if let Some(i) = self.queue.iter().position(|r| r.id == id) {
+            let _ = self.queue.remove(i);
+            return CancelOutcome::Queued;
+        }
+        if let Some(a) = self.active.iter_mut().find(|a| a.req.id == id) {
+            a.cancelled = true;
+            return CancelOutcome::Active;
+        }
+        CancelOutcome::Unknown
+    }
+
+    /// Highest-priority queued request (FIFO within a priority), if any.
+    fn pop_next(&mut self) -> Option<Request> {
+        let mut best: Option<(usize, i32)> = None;
+        for (i, r) in self.queue.iter().enumerate() {
+            match best {
+                // strict > keeps the earliest submission among equals
+                Some((_, bp)) if r.priority <= bp => {}
+                _ => best = Some((i, r.priority)),
+            }
+        }
+        best.and_then(|(i, _)| self.queue.remove(i))
+    }
+
+    /// Admit queued requests into the given free rows (in priority order).
     pub fn admit(&mut self, free_rows: &[usize]) -> usize {
         let mut admitted = 0;
         for &row in free_rows {
-            let Some(req) = self.queue.pop_front() else { break };
-            self.active.push(ActiveRequest { req, row, fed: 0, generated: Vec::new() });
+            let Some(req) = self.pop_next() else { break };
+            self.active.push(ActiveRequest::new(req, row));
             admitted += 1;
         }
         admitted
@@ -88,23 +220,56 @@ impl Batcher {
         self.active.iter().map(|a| (a.row, a.next_input())).collect()
     }
 
+    /// Sample one token per logits row using that row's request params and
+    /// private rng stream. Rows without an active request are skipped.
+    pub fn sample_step(&mut self, logits: &[(usize, Vec<f32>)]) -> Vec<(usize, u32)> {
+        let idx = self.index_by_row();
+        let mut out = Vec::with_capacity(logits.len());
+        for (row, l) in logits {
+            let Some(&Some(i)) = idx.get(*row) else { continue };
+            let a = &mut self.active[i];
+            out.push((*row, sampling::sample_params(l, &a.req.params, &mut a.rng)));
+        }
+        out
+    }
+
     /// Apply one step's sampled tokens (row -> sampled token). During
-    /// prefill the sample is discarded (teacher forcing over the prompt).
-    pub fn apply_step(&mut self, sampled: &[(usize, u32)]) {
+    /// prefill the sample is discarded (teacher forcing over the prompt);
+    /// sampling a stop token sets `stopped` without keeping the token.
+    /// Returns the (id, token, index) tuples actually emitted this step.
+    pub fn apply_step(&mut self, sampled: &[(usize, u32)]) -> Vec<(u64, u32, usize)> {
+        let max_row = sampled.iter().map(|&(r, _)| r).max().unwrap_or(0);
+        let mut tok_of_row: Vec<Option<u32>> = vec![None; max_row + 1];
+        for &(r, t) in sampled {
+            tok_of_row[r] = Some(t);
+        }
+        let mut emitted = Vec::new();
         for a in self.active.iter_mut() {
-            let Some(&(_, tok)) = sampled.iter().find(|(r, _)| *r == a.row) else {
+            if a.cancelled || a.stopped {
+                continue;
+            }
+            let Some(tok) = tok_of_row.get(a.row).copied().flatten() else {
                 continue;
             };
-            if a.prefilling() {
+            let sample_live = if a.prefilling() {
                 a.fed += 1;
-                if !a.prefilling() {
-                    // prompt consumed: this step's sample is the first output
-                    a.generated.push(tok);
-                }
+                // prompt consumed: this step's sample is the first output
+                !a.prefilling()
             } else {
-                a.generated.push(tok);
+                true
+            };
+            // the bound can already be met at the prefill boundary
+            // (max_new = 0): such requests take nothing from the sample
+            if sample_live && a.generated.len() < a.req.max_new {
+                if a.req.stop.contains(&tok) {
+                    a.stopped = true;
+                } else {
+                    a.generated.push(tok);
+                    emitted.push((a.req.id, tok, a.generated.len() - 1));
+                }
             }
         }
+        emitted
     }
 
     /// Remove finished requests; returns them.
@@ -124,6 +289,16 @@ impl Batcher {
 
     pub fn idle(&self) -> bool {
         self.queue.is_empty() && self.active.is_empty()
+    }
+
+    /// active index per row (rows are small, dense engine slot numbers).
+    fn index_by_row(&self) -> Vec<Option<usize>> {
+        let max_row = self.active.iter().map(|a| a.row).max().unwrap_or(0);
+        let mut idx: Vec<Option<usize>> = vec![None; max_row + 1];
+        for (i, a) in self.active.iter().enumerate() {
+            idx[a.row] = Some(i);
+        }
+        idx
     }
 }
 
@@ -145,22 +320,89 @@ mod tests {
     }
 
     #[test]
+    fn priority_admission_order() {
+        let mut b = Batcher::new();
+        let low = b.submit_request(vec![1], 1, SamplingParams::default(), vec![], 0);
+        let high = b.submit_request(vec![1], 1, SamplingParams::default(), vec![], 5);
+        let mid1 = b.submit_request(vec![1], 1, SamplingParams::default(), vec![], 2);
+        let mid2 = b.submit_request(vec![1], 1, SamplingParams::default(), vec![], 2);
+        b.admit(&[0, 1, 2, 3]);
+        let order: Vec<u64> = b.active.iter().map(|a| a.req.id).collect();
+        assert_eq!(order, vec![high, mid1, mid2, low], "priority desc, FIFO within");
+    }
+
+    #[test]
     fn prefill_then_generate() {
         let mut b = Batcher::new();
         b.submit(vec![10, 11], 2);
         b.admit(&[0]);
         assert_eq!(b.step_inputs(), vec![(0, 10)]);
-        b.apply_step(&[(0, 99)]); // sample during prefill: discarded
+        assert!(b.apply_step(&[(0, 99)]).is_empty()); // prefill sample: discarded
         assert_eq!(b.step_inputs(), vec![(0, 11)]);
-        b.apply_step(&[(0, 42)]); // prompt consumed: first real token
+        // prompt consumed: first real token, emitted with index 0
+        assert_eq!(b.apply_step(&[(0, 42)]), vec![(0, 42, 0)]);
         assert_eq!(b.active[0].generated, vec![42]);
         assert_eq!(b.step_inputs(), vec![(0, 42)]);
-        b.apply_step(&[(0, 43)]);
+        assert_eq!(b.apply_step(&[(0, 43)]), vec![(0, 43, 1)]);
         assert!(b.active[0].done());
         let done = b.retire();
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].generated, vec![42, 43]);
+        assert_eq!(done[0].finish(), FinishReason::Length);
         assert!(b.idle());
+    }
+
+    #[test]
+    fn stop_token_retires_without_keeping_it() {
+        let mut b = Batcher::new();
+        b.submit_request(vec![7], 100, SamplingParams::default(), vec![13], 0);
+        b.admit(&[0]);
+        assert_eq!(b.apply_step(&[(0, 40)]), vec![(0, 40, 0)]); // boundary emit
+        assert!(b.apply_step(&[(0, 13)]).is_empty()); // stop token: swallowed
+        let done = b.retire();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].finish(), FinishReason::Stop);
+        assert_eq!(done[0].generated, vec![40]);
+    }
+
+    #[test]
+    fn cancel_queued_and_active() {
+        let mut b = Batcher::new();
+        let q1 = b.submit(vec![1], 4);
+        let q2 = b.submit(vec![2], 4);
+        assert_eq!(b.cancel(q1), CancelOutcome::Queued);
+        assert_eq!(b.queued(), 1);
+        b.admit(&[0]);
+        assert_eq!(b.active[0].req.id, q2);
+        assert_eq!(b.cancel(q2), CancelOutcome::Active);
+        assert_eq!(b.cancel(999), CancelOutcome::Unknown);
+        let done = b.retire();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].finish(), FinishReason::Cancelled);
+        assert!(b.idle());
+    }
+
+    #[test]
+    fn per_request_sampling_is_deterministic_per_seed() {
+        let run = |seed| {
+            let mut b = Batcher::new();
+            let p = SamplingParams { temperature: 1.0, top_k: 3, seed: Some(seed) };
+            b.submit_request(vec![1], 4, p, vec![], 0);
+            b.admit(&[0]);
+            let logits: Vec<f32> = (0..16).map(|i| (i as f32) * 0.1).collect();
+            let mut toks = Vec::new();
+            for _ in 0..4 {
+                let s = b.sample_step(&[(0, logits.clone())]);
+                b.apply_step(&s);
+                toks.extend(s.into_iter().map(|(_, t)| t));
+            }
+            toks
+        };
+        assert_eq!(run(7), run(7));
+        // top_k = 3 restricts to the three largest logits (indices 13..16)
+        for t in run(3) {
+            assert!((13..16).contains(&t), "token {t} escaped top-k window");
+        }
     }
 
     #[test]
@@ -170,10 +412,29 @@ mod tests {
             let slots = 1 + rng.usize_below(8);
             let mut free: Vec<usize> = (0..slots).collect();
             let n_req = 1 + rng.usize_below(12);
+            let mut ids = Vec::new();
             for _ in 0..n_req {
                 let plen = 1 + rng.usize_below(4);
                 let prompt = (0..plen).map(|_| rng.below(64) as u32).collect();
-                b.submit(prompt, 1 + rng.usize_below(4));
+                // a third of requests carry a stop token from the sample
+                // alphabet, so stop-retirement actually fires
+                let stop = if rng.chance(0.33) { vec![rng.below(8) as u32] } else { vec![] };
+                let prio = rng.below(4) as i32 - 2;
+                // max_new 0 is legal: the request prefills and retires empty
+                ids.push(b.submit_request(
+                    prompt,
+                    rng.usize_below(5),
+                    SamplingParams { temperature: 0.0, top_k: 0, seed: Some(rng.next_u64()) },
+                    stop,
+                    prio,
+                ));
+            }
+            // cancel a random queued request up front
+            let mut cancelled = 0;
+            if rng.chance(0.3) {
+                if b.cancel(*rng.choose(&ids)) == CancelOutcome::Queued {
+                    cancelled += 1;
+                }
             }
             let mut produced = 0;
             let mut steps = 0;
@@ -189,17 +450,44 @@ mod tests {
                 rows.sort_unstable();
                 rows.dedup();
                 crate::prop_assert!(rows.len() == b.active.len(), "duplicate rows");
+                // occasionally cancel a random in-flight request
+                if rng.chance(0.05) && !b.active.is_empty() {
+                    let i = rng.usize_below(b.active.len());
+                    let id = b.active[i].req.id;
+                    crate::prop_assert!(b.cancel(id) == CancelOutcome::Active);
+                }
                 let inputs = b.step_inputs();
                 let sampled: Vec<(usize, u32)> =
                     inputs.iter().map(|&(r, _)| (r, rng.below(64) as u32)).collect();
                 b.apply_step(&sampled);
                 for a in b.retire() {
-                    crate::prop_assert!(a.generated.len() == a.req.max_new);
-                    produced += 1;
+                    match a.finish() {
+                        FinishReason::Length => {
+                            crate::prop_assert!(a.generated.len() == a.req.max_new);
+                        }
+                        FinishReason::Stop => {
+                            crate::prop_assert!(a.generated.len() < a.req.max_new);
+                            for t in &a.generated {
+                                crate::prop_assert!(
+                                    !a.req.stop.contains(t),
+                                    "stop token kept in output"
+                                );
+                            }
+                        }
+                        FinishReason::Cancelled => {
+                            cancelled += 1;
+                        }
+                    }
+                    if a.finish() != FinishReason::Cancelled {
+                        produced += 1;
+                    }
                     free.push(a.row);
                 }
             }
-            crate::prop_assert!(produced == n_req, "finished {produced}/{n_req}");
+            crate::prop_assert!(
+                produced + cancelled == n_req,
+                "finished {produced}+{cancelled}/{n_req}"
+            );
             Ok(())
         });
     }

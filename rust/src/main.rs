@@ -22,6 +22,8 @@ use adapmoe::coordinator::profile::Profile;
 use adapmoe::memory::platform::Platform;
 use adapmoe::memory::quant::QuantKind;
 use adapmoe::model::tokenizer::{ByteTokenizer, EvalStream};
+use adapmoe::server::api::{GenerationEvent, GenerationRequest};
+use adapmoe::server::service::InferenceService;
 use adapmoe::server::tcp;
 use adapmoe::util::cli::Args;
 use adapmoe::util::rng::Rng;
@@ -70,7 +72,12 @@ fn usage() {
            --time-scale X    simulated-link time multiplier (default: 1.0)\n\
            --prompt TEXT     (generate) prompt text\n\
            --max-new N       (generate) tokens to generate (default: 64)\n\
+           --temperature X   (generate) sampling temperature, 0 = greedy (default: 0)\n\
+           --top-k K         (generate) sample among the K best logits, 0 = all (default: 0)\n\
+           --stop TEXT       (generate) stop at any byte-token of TEXT (default: none)\n\
+           --seed S          (generate) sampling seed (default: derived from id)\n\
            --addr HOST:PORT  (serve) bind address (default: 127.0.0.1:7411)\n\
+                             wire format: docs/protocol.md (streaming, cancel, stats)\n\
            --tokens N        (profile) eval tokens to decode (default: 200)\n\
            --budget N        (plan-cache) cache budget in experts",
         policy::METHODS.join("|"),
@@ -110,22 +117,65 @@ fn build_engine(args: &Args, default_batch: usize) -> Result<Engine> {
 fn cmd_generate(args: &Args) -> Result<()> {
     let mut engine = build_engine(args, 1)?;
     let prompt_text = args.str_or("prompt", "the model expert gate ");
-    let max_new = args.usize_or("max-new", 64);
-    let prompt = ByteTokenizer::encode(&prompt_text);
-    if prompt.is_empty() {
+    if prompt_text.is_empty() {
         bail!("--prompt must be non-empty");
     }
+    let req = GenerationRequest {
+        prompt: prompt_text.clone(),
+        max_new: args.usize_or("max-new", 64),
+        temperature: args.f64_or("temperature", 0.0),
+        top_k: args.usize_or("top-k", 0),
+        stop: ByteTokenizer::encode(&args.str_or("stop", "")),
+        seed: args.get("seed").and_then(|s| s.parse().ok()),
+        stream: true,
+        ..Default::default()
+    };
+
+    // Same path as serving: the engine loop runs here, a printer thread
+    // relays the event stream to stdout as tokens land.
+    let (service, handle) = InferenceService::new();
+    let (_id, rx) = handle.submit(req);
+    {
+        use std::io::Write as _;
+        print!("{prompt_text}");
+        let _ = std::io::stdout().flush();
+    }
+    let printer = std::thread::spawn(move || {
+        use std::io::Write as _;
+        let mut summary = None;
+        for ev in rx {
+            match ev {
+                GenerationEvent::Token { token, .. } => {
+                    print!("{}", ByteTokenizer::decode(&[token]));
+                    let _ = std::io::stdout().flush();
+                }
+                GenerationEvent::Done { tokens, finish, queue_ms, total_ms, .. } => {
+                    summary = Some((tokens.len(), finish, queue_ms, total_ms));
+                }
+                GenerationEvent::Error { message, .. } => {
+                    eprintln!("\n[adapmoe] generation error: {message}");
+                }
+                _ => {}
+            }
+        }
+        summary
+    });
     let t0 = std::time::Instant::now();
-    let out = engine.generate(&prompt, max_new)?;
+    service.run_until_idle(&mut engine)?;
     let dt = t0.elapsed().as_secs_f64();
-    println!("{}{}", prompt_text, ByteTokenizer::decode(&out));
+    let (n_tokens, finish, _queue_ms, _total_ms) = printer
+        .join()
+        .expect("printer thread")
+        .context("generation produced no completion")?;
+    println!();
     let (h, m, _) = engine.cache.stats();
     eprintln!(
-        "\n[adapmoe] {} tokens in {:.2}s ({:.1} tok/s) | per-token p50 {:.1}ms | \
+        "\n[adapmoe] {} tokens in {:.2}s ({:.1} tok/s, finish={}) | per-token p50 {:.1}ms | \
          cache hit {:.0}% | single-expert {:.0}%",
-        out.len(),
+        n_tokens,
         dt,
-        out.len() as f64 / dt,
+        n_tokens as f64 / dt,
+        finish.as_str(),
         engine.trace.token_latency.p50() * 1e3,
         100.0 * h as f64 / (h + m).max(1) as f64,
         100.0 * engine.trace.mean_single_ratio(),

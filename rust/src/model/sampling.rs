@@ -33,6 +33,26 @@ pub fn sample(logits: &[f32], temperature: f64, rng: &mut Rng) -> u32 {
     (probs.len() - 1) as u32
 }
 
+/// Sample under a request's [`SamplingParams`]: restrict to the `top_k`
+/// highest logits (0 = unrestricted), then temperature-sample within them.
+/// Temperature `<= 0` is greedy and ignores `top_k` (argmax is always in
+/// the window).
+pub fn sample_params(
+    logits: &[f32],
+    params: &crate::coordinator::batcher::SamplingParams,
+    rng: &mut Rng,
+) -> u32 {
+    if params.temperature <= 0.0 {
+        return greedy(logits);
+    }
+    if params.top_k == 0 || params.top_k >= logits.len() {
+        return sample(logits, params.temperature, rng);
+    }
+    let keep = top_k_indices(logits, params.top_k);
+    let sub: Vec<f32> = keep.iter().map(|&i| logits[i]).collect();
+    keep[sample(&sub, params.temperature, rng) as usize] as u32
+}
+
 /// Top-k indices (descending by value). Small k, small n — selection sort.
 pub fn top_k_indices(values: &[f32], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..values.len()).collect();
@@ -67,6 +87,21 @@ mod tests {
             }
         }
         assert!(hits > 450, "hits={hits}");
+    }
+
+    #[test]
+    fn params_top_k_restricts_support() {
+        use crate::coordinator::batcher::SamplingParams;
+        let mut rng = Rng::new(2);
+        let logits = [0.0f32, 1.0, 2.0, 3.0];
+        let p = SamplingParams { temperature: 2.0, top_k: 2, seed: None };
+        for _ in 0..200 {
+            let t = sample_params(&logits, &p, &mut rng);
+            assert!(t == 2 || t == 3, "token {t} outside top-2");
+        }
+        // greedy shortcut ignores rng entirely
+        let g = SamplingParams { temperature: 0.0, top_k: 1, seed: None };
+        assert_eq!(sample_params(&logits, &g, &mut rng), 3);
     }
 
     #[test]

@@ -1,0 +1,312 @@
+//! Typed request/response surface of the serving stack.
+//!
+//! Everything a front-end protocol (TCP today, HTTP/sharded lanes later)
+//! needs to talk to the [`super::service::InferenceService`] lives here:
+//! [`GenerationRequest`] in, a stream of [`GenerationEvent`]s out, plus the
+//! [`ServerStats`] snapshot. The JSON encode/decode for the line protocol is
+//! also defined here so the wire format has a single source of truth and
+//! protocol adapters stay thin.
+
+use anyhow::{bail, Result};
+
+pub use crate::coordinator::batcher::{FinishReason, SamplingParams};
+use crate::model::tokenizer::ByteTokenizer;
+use crate::util::json::Json;
+
+/// A fully-parameterized generation request.
+#[derive(Clone, Debug)]
+pub struct GenerationRequest {
+    pub prompt: String,
+    /// Upper bound on generated tokens (stop tokens can end it earlier).
+    pub max_new: usize,
+    /// Softmax temperature; 0 (the default) is greedy decoding.
+    pub temperature: f64,
+    /// Restrict sampling to the k highest logits; 0 = unrestricted.
+    pub top_k: usize,
+    /// Tokens that terminate generation when sampled (excluded from output).
+    pub stop: Vec<u32>,
+    /// Higher runs first when slots are contended; ties are FIFO.
+    pub priority: i32,
+    /// Stream per-token events instead of one final completion.
+    pub stream: bool,
+    /// Sampling seed; `None` derives one from the request id.
+    pub seed: Option<u64>,
+}
+
+impl Default for GenerationRequest {
+    fn default() -> GenerationRequest {
+        GenerationRequest {
+            prompt: String::new(),
+            max_new: 32,
+            temperature: 0.0,
+            top_k: 0,
+            stop: Vec::new(),
+            priority: 0,
+            stream: false,
+            seed: None,
+        }
+    }
+}
+
+impl GenerationRequest {
+    pub fn new(prompt: &str) -> GenerationRequest {
+        GenerationRequest { prompt: prompt.to_string(), ..Default::default() }
+    }
+
+    /// Parse the wire form. `stop` accepts a string (each byte-token of it
+    /// stops generation) or an array of token numbers.
+    pub fn from_json(j: &Json) -> Result<GenerationRequest> {
+        let Some(prompt) = j.get("prompt").and_then(|p| p.as_str()) else {
+            bail!("request missing 'prompt'");
+        };
+        if prompt.is_empty() {
+            bail!("'prompt' must be non-empty");
+        }
+        let mut req = GenerationRequest::new(prompt);
+        if let Some(v) = j.get("max_new").and_then(|v| v.as_usize()) {
+            req.max_new = v;
+        }
+        if let Some(v) = j.get("temperature").and_then(|v| v.as_f64()) {
+            req.temperature = v;
+        }
+        if let Some(v) = j.get("top_k").and_then(|v| v.as_usize()) {
+            req.top_k = v;
+        }
+        match j.get("stop") {
+            None | Some(Json::Null) => {}
+            Some(Json::Str(s)) => req.stop = ByteTokenizer::encode(s),
+            Some(Json::Arr(a)) => {
+                for v in a {
+                    let Some(t) = v.as_f64() else { bail!("'stop' array must be numeric") };
+                    req.stop.push(t as u32);
+                }
+            }
+            Some(_) => bail!("'stop' must be a string or token array"),
+        }
+        if let Some(v) = j.get("priority").and_then(|v| v.as_f64()) {
+            req.priority = v as i32;
+        }
+        if let Some(v) = j.get("stream").and_then(|v| v.as_bool()) {
+            req.stream = v;
+        }
+        if let Some(v) = j.get("seed").and_then(|v| v.as_f64()) {
+            req.seed = Some(v as u64);
+        }
+        Ok(req)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("prompt", Json::Str(self.prompt.clone())),
+            ("max_new", Json::Num(self.max_new as f64)),
+            ("temperature", Json::Num(self.temperature)),
+            ("top_k", Json::Num(self.top_k as f64)),
+            ("priority", Json::Num(self.priority as f64)),
+            ("stream", Json::Bool(self.stream)),
+        ];
+        if !self.stop.is_empty() {
+            pairs.push((
+                "stop",
+                Json::Arr(self.stop.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ));
+        }
+        if let Some(s) = self.seed {
+            pairs.push(("seed", Json::Num(s as f64)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Lifecycle events of one request, emitted in order:
+/// Queued → Started → Token* → (Done | Cancelled | Error).
+#[derive(Clone, Debug)]
+pub enum GenerationEvent {
+    Queued { id: u64 },
+    Started { id: u64 },
+    Token { id: u64, token: u32, index: usize },
+    Done { id: u64, tokens: Vec<u32>, finish: FinishReason, queue_ms: f64, total_ms: f64 },
+    Cancelled { id: u64 },
+    Error { id: u64, message: String },
+}
+
+impl GenerationEvent {
+    pub fn id(&self) -> u64 {
+        match self {
+            GenerationEvent::Queued { id }
+            | GenerationEvent::Started { id }
+            | GenerationEvent::Token { id, .. }
+            | GenerationEvent::Done { id, .. }
+            | GenerationEvent::Cancelled { id }
+            | GenerationEvent::Error { id, .. } => *id,
+        }
+    }
+
+    /// Terminal events end a request's stream.
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            GenerationEvent::Done { .. }
+                | GenerationEvent::Cancelled { .. }
+                | GenerationEvent::Error { .. }
+        )
+    }
+
+    /// One wire line: `{"event": "...", "id": N, ...}`.
+    pub fn to_json(&self) -> Json {
+        match self {
+            GenerationEvent::Queued { id } => Json::obj(vec![
+                ("event", Json::Str("queued".into())),
+                ("id", Json::Num(*id as f64)),
+            ]),
+            GenerationEvent::Started { id } => Json::obj(vec![
+                ("event", Json::Str("started".into())),
+                ("id", Json::Num(*id as f64)),
+            ]),
+            GenerationEvent::Token { id, token, index } => Json::obj(vec![
+                ("event", Json::Str("token".into())),
+                ("id", Json::Num(*id as f64)),
+                ("token", Json::Num(*token as f64)),
+                ("index", Json::Num(*index as f64)),
+                ("text", Json::Str(ByteTokenizer::decode(&[*token]))),
+            ]),
+            GenerationEvent::Done { id, tokens, finish, queue_ms, total_ms } => Json::obj(vec![
+                ("event", Json::Str("done".into())),
+                ("id", Json::Num(*id as f64)),
+                ("text", Json::Str(ByteTokenizer::decode(tokens))),
+                (
+                    "tokens",
+                    Json::Arr(tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+                ),
+                ("finish", Json::Str(finish.as_str().into())),
+                ("queue_ms", Json::Num(*queue_ms)),
+                ("total_ms", Json::Num(*total_ms)),
+            ]),
+            GenerationEvent::Cancelled { id } => Json::obj(vec![
+                ("event", Json::Str("cancelled".into())),
+                ("id", Json::Num(*id as f64)),
+            ]),
+            GenerationEvent::Error { id, message } => Json::obj(vec![
+                ("event", Json::Str("error".into())),
+                ("id", Json::Num(*id as f64)),
+                ("error", Json::Str(message.clone())),
+            ]),
+        }
+    }
+}
+
+/// Point-in-time service statistics (`{"cmd":"stats"}` on the wire).
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    /// Requests waiting for a free engine slot.
+    pub queued: usize,
+    /// Requests currently decoding.
+    pub active: usize,
+    /// Completions delivered (Done events).
+    pub served: u64,
+    /// Requests cancelled (queued or in-flight).
+    pub cancelled: u64,
+    /// Tokens emitted across all requests.
+    pub tokens_generated: u64,
+    /// Engine decode throughput (rows × steps / second).
+    pub tokens_per_sec: f64,
+    /// Engine per-step latency percentiles (ms).
+    pub token_p50_ms: f64,
+    pub token_p99_ms: f64,
+    /// Completed-request latency percentiles (ms, submit→finish).
+    pub request_p50_ms: f64,
+    pub request_p99_ms: f64,
+    /// Completed-request queue wait p50 (ms, submit→start).
+    pub queue_p50_ms: f64,
+    pub uptime_s: f64,
+}
+
+impl ServerStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("queued", Json::Num(self.queued as f64)),
+            ("active", Json::Num(self.active as f64)),
+            ("served", Json::Num(self.served as f64)),
+            ("cancelled", Json::Num(self.cancelled as f64)),
+            ("tokens_generated", Json::Num(self.tokens_generated as f64)),
+            ("tokens_per_sec", Json::Num(self.tokens_per_sec)),
+            ("token_p50_ms", Json::Num(self.token_p50_ms)),
+            ("token_p99_ms", Json::Num(self.token_p99_ms)),
+            ("request_p50_ms", Json::Num(self.request_p50_ms)),
+            ("request_p99_ms", Json::Num(self.request_p99_ms)),
+            ("queue_p50_ms", Json::Num(self.queue_p50_ms)),
+            ("uptime_s", Json::Num(self.uptime_s)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_wire_roundtrip() {
+        let j = Json::parse(
+            r#"{"prompt":"hi","max_new":8,"temperature":0.7,"top_k":4,
+                "stop":".","priority":2,"stream":true,"seed":9}"#,
+        )
+        .unwrap();
+        let r = GenerationRequest::from_json(&j).unwrap();
+        assert_eq!(r.prompt, "hi");
+        assert_eq!(r.max_new, 8);
+        assert!((r.temperature - 0.7).abs() < 1e-12);
+        assert_eq!(r.top_k, 4);
+        assert_eq!(r.stop, vec![b'.' as u32]);
+        assert_eq!(r.priority, 2);
+        assert!(r.stream);
+        assert_eq!(r.seed, Some(9));
+        // serialize → parse → same fields
+        let r2 = GenerationRequest::from_json(&r.to_json()).unwrap();
+        assert_eq!(r2.stop, r.stop);
+        assert_eq!(r2.max_new, r.max_new);
+    }
+
+    #[test]
+    fn request_defaults_and_stop_array() {
+        let j = Json::parse(r#"{"prompt":"x","stop":[10,13]}"#).unwrap();
+        let r = GenerationRequest::from_json(&j).unwrap();
+        assert_eq!(r.max_new, 32);
+        assert_eq!(r.temperature, 0.0);
+        assert_eq!(r.stop, vec![10, 13]);
+        assert!(!r.stream);
+        assert!(GenerationRequest::from_json(&Json::parse(r#"{"x":1}"#).unwrap()).is_err());
+        assert!(
+            GenerationRequest::from_json(&Json::parse(r#"{"prompt":"x","stop":5}"#).unwrap())
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn event_lines_carry_ids_and_terminality() {
+        let ev = GenerationEvent::Token { id: 3, token: b'a' as u32, index: 0 };
+        let j = ev.to_json();
+        assert_eq!(j.get("event").and_then(|e| e.as_str()), Some("token"));
+        assert_eq!(j.get("text").and_then(|t| t.as_str()), Some("a"));
+        assert!(!ev.is_terminal());
+        let done = GenerationEvent::Done {
+            id: 3,
+            tokens: vec![b'a' as u32, b'b' as u32],
+            finish: FinishReason::Stop,
+            queue_ms: 1.0,
+            total_ms: 2.0,
+        };
+        assert!(done.is_terminal());
+        let j = done.to_json();
+        assert_eq!(j.get("text").and_then(|t| t.as_str()), Some("ab"));
+        assert_eq!(j.get("finish").and_then(|f| f.as_str()), Some("stop"));
+        assert_eq!(done.id(), 3);
+    }
+
+    #[test]
+    fn stats_serialize_nonempty() {
+        let s = ServerStats { served: 2, queued: 1, ..Default::default() };
+        let j = s.to_json();
+        assert_eq!(j.get("served").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(j.get("queued").and_then(|v| v.as_usize()), Some(1));
+        assert!(j.get("tokens_per_sec").is_some());
+    }
+}

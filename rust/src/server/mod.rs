@@ -1,3 +1,6 @@
-//! TCP serving front-end (wired up after the engine: see server::tcp).
+//! Serving front-end: typed API ([`api`]), the engine-owning service loop
+//! ([`service`]), and the line-protocol TCP adapter ([`tcp`]).
 
+pub mod api;
+pub mod service;
 pub mod tcp;

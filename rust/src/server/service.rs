@@ -1,0 +1,543 @@
+//! The inference service: owns the engine loop behind a typed, protocol-
+//! agnostic API.
+//!
+//! [`InferenceService::run`] drives continuous batching (admit → decode →
+//! sample → retire) against any [`Backend`] on the caller's thread (PJRT
+//! handles are not `Send`, so the engine must stay where it was built).
+//! Clonable [`ServiceHandle`]s — safe to share across connection threads —
+//! submit typed [`GenerationRequest`]s, receive per-token
+//! [`GenerationEvent`]s over a private channel, cancel requests by id, and
+//! snapshot [`ServerStats`]. The TCP front-end ([`super::tcp`]) is a thin
+//! line-protocol adapter over this; the CLI's `generate` runs the same
+//! service in-process via [`InferenceService::run_until_idle`].
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::{Batcher, CancelOutcome, FinishReason, SamplingParams};
+use crate::coordinator::engine::Engine;
+use crate::model::tokenizer::ByteTokenizer;
+use crate::server::api::{GenerationEvent, GenerationRequest, ServerStats};
+use crate::util::stats::LatencyWindow;
+
+/// Completed-request latency samples retained for stats percentiles.
+const LATENCY_WINDOW: usize = 4096;
+
+/// Engine-side performance counters surfaced through `stats`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PerfSnapshot {
+    pub tokens_per_sec: f64,
+    pub token_p50_ms: f64,
+    pub token_p99_ms: f64,
+}
+
+/// What the service needs from a decode engine. [`Engine`] is the real
+/// implementation; tests drive the full service + TCP stack through
+/// [`crate::testutil::MockBackend`] without PJRT artifacts.
+pub trait Backend {
+    fn acquire_slot(&mut self) -> Option<usize>;
+    fn release_slot(&mut self, row: usize);
+    /// Row's KV cache is exhausted — the request must retire now.
+    fn slot_full(&self, row: usize) -> bool;
+    /// One decode step over the given (row, token) pairs; returns per-row
+    /// next-token logits.
+    fn decode_step(&mut self, inputs: &[(usize, u32)]) -> Result<Vec<(usize, Vec<f32>)>>;
+    fn perf(&self) -> PerfSnapshot {
+        PerfSnapshot::default()
+    }
+}
+
+impl Backend for Engine {
+    fn acquire_slot(&mut self) -> Option<usize> {
+        Engine::acquire_slot(self)
+    }
+
+    fn release_slot(&mut self, row: usize) {
+        Engine::release_slot(self, row)
+    }
+
+    fn slot_full(&self, row: usize) -> bool {
+        Engine::slot_full(self, row)
+    }
+
+    fn decode_step(&mut self, inputs: &[(usize, u32)]) -> Result<Vec<(usize, Vec<f32>)>> {
+        Engine::decode_step(self, inputs)
+    }
+
+    fn perf(&self) -> PerfSnapshot {
+        PerfSnapshot {
+            tokens_per_sec: self.trace.tokens_per_sec(),
+            token_p50_ms: self.trace.token_latency.p50() * 1e3,
+            token_p99_ms: self.trace.token_latency.p99() * 1e3,
+        }
+    }
+}
+
+struct State {
+    batcher: Batcher,
+    /// Per-request event channels; removed when the terminal event is sent.
+    subs: HashMap<u64, Sender<GenerationEvent>>,
+    submit_times: HashMap<u64, Instant>,
+    start_times: HashMap<u64, Instant>,
+    served: u64,
+    cancelled: u64,
+    tokens_out: u64,
+    /// Completed-request latency distributions (ms) over a bounded recent
+    /// window — stats percentiles must stay O(window) under the lock no
+    /// matter how long the server has been up.
+    queue_wait_ms: LatencyWindow,
+    total_ms: LatencyWindow,
+    /// Published by the engine loop on completions and periodically (the
+    /// backend itself is not reachable from handles).
+    perf: PerfSnapshot,
+    /// Decode steps driven so far (throttles perf refreshes).
+    steps: u64,
+    started_at: Instant,
+}
+
+/// Owner side: runs the engine loop. Created with a paired [`ServiceHandle`].
+pub struct InferenceService {
+    shared: Arc<Mutex<State>>,
+}
+
+/// Submit/cancel/stats side — `Clone + Send`, one per connection thread.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    shared: Arc<Mutex<State>>,
+}
+
+impl InferenceService {
+    pub fn new() -> (InferenceService, ServiceHandle) {
+        let shared = Arc::new(Mutex::new(State {
+            batcher: Batcher::new(),
+            subs: HashMap::new(),
+            submit_times: HashMap::new(),
+            start_times: HashMap::new(),
+            served: 0,
+            cancelled: 0,
+            tokens_out: 0,
+            queue_wait_ms: LatencyWindow::new(LATENCY_WINDOW),
+            total_ms: LatencyWindow::new(LATENCY_WINDOW),
+            perf: PerfSnapshot::default(),
+            steps: 0,
+            started_at: Instant::now(),
+        }));
+        (InferenceService { shared: Arc::clone(&shared) }, ServiceHandle { shared })
+    }
+
+    /// Drive the loop until `shutdown` flips; returns completions served.
+    pub fn run<B: Backend>(&self, backend: &mut B, shutdown: &AtomicBool) -> Result<u64> {
+        while !shutdown.load(Ordering::SeqCst) {
+            if !self.step(backend)? {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        Ok(self.shared.lock().unwrap().served)
+    }
+
+    /// Drive the loop until every submitted request has retired (in-process
+    /// use: CLI generate, tests). Returns completions served so far.
+    pub fn run_until_idle<B: Backend>(&self, backend: &mut B) -> Result<u64> {
+        loop {
+            if self.shared.lock().unwrap().batcher.idle() {
+                return Ok(self.shared.lock().unwrap().served);
+            }
+            self.step(backend)?;
+        }
+    }
+
+    /// One admit → decode → sample → retire cycle. Returns false when there
+    /// was nothing to do. The decode itself runs without the state lock so
+    /// submits/cancels/stats never wait on the model.
+    fn step<B: Backend>(&self, backend: &mut B) -> Result<bool> {
+        let inputs = {
+            let mut g = self.shared.lock().unwrap();
+            // admit new work into free slots, highest priority first
+            while g.batcher.queued() > 0 {
+                let Some(row) = backend.acquire_slot() else { break };
+                if g.batcher.admit(&[row]) == 0 {
+                    backend.release_slot(row);
+                    break;
+                }
+                let a = g.batcher.active.last().expect("admit pushed");
+                let id = a.req.id;
+                g.start_times.insert(id, Instant::now());
+                if let Some(tx) = g.subs.get(&id) {
+                    let _ = tx.send(GenerationEvent::Started { id });
+                }
+            }
+            if g.batcher.active.is_empty() {
+                return Ok(false);
+            }
+            g.batcher.step_inputs()
+        };
+
+        let outs = match backend.decode_step(&inputs) {
+            Ok(o) => o,
+            Err(e) => {
+                // the engine is wedged: fail every request loudly
+                let mut g = self.shared.lock().unwrap();
+                for (id, tx) in g.subs.drain() {
+                    let _ = tx.send(GenerationEvent::Error {
+                        id,
+                        message: format!("{e:#}"),
+                    });
+                }
+                return Err(e);
+            }
+        };
+
+        let mut g = self.shared.lock().unwrap();
+        let sampled = g.batcher.sample_step(&outs);
+        for (id, token, index) in g.batcher.apply_step(&sampled) {
+            g.tokens_out += 1;
+            if let Some(tx) = g.subs.get(&id) {
+                let _ = tx.send(GenerationEvent::Token { id, token, index });
+            }
+        }
+        // rows whose KV is exhausted must retire regardless of max_new
+        for a in g.batcher.active.iter_mut() {
+            if backend.slot_full(a.row) {
+                a.req.max_new = a.generated.len();
+            }
+        }
+        let now = Instant::now();
+        let retired = g.batcher.retire();
+        let retired_any = !retired.is_empty();
+        for done in retired {
+            backend.release_slot(done.row);
+            let id = done.req.id;
+            let queued_at = g.submit_times.remove(&id).unwrap_or(now);
+            let started_at = g.start_times.remove(&id).unwrap_or(queued_at);
+            let queue_ms = started_at.duration_since(queued_at).as_secs_f64() * 1e3;
+            let total_ms = now.duration_since(queued_at).as_secs_f64() * 1e3;
+            let tx = g.subs.remove(&id);
+            match done.finish() {
+                FinishReason::Cancelled => {
+                    g.cancelled += 1;
+                    if let Some(tx) = tx {
+                        let _ = tx.send(GenerationEvent::Cancelled { id });
+                    }
+                }
+                finish => {
+                    g.served += 1;
+                    g.queue_wait_ms.add(queue_ms);
+                    g.total_ms.add(total_ms);
+                    if let Some(tx) = tx {
+                        let _ = tx.send(GenerationEvent::Done {
+                            id,
+                            tokens: done.generated,
+                            finish,
+                            queue_ms,
+                            total_ms,
+                        });
+                    }
+                }
+            }
+        }
+        // Refresh the published perf snapshot on completions and every 32nd
+        // step (not every step: Engine::perf sorts the full latency history,
+        // so an unthrottled refresh would cost O(n log n) per token under
+        // the service lock).
+        g.steps += 1;
+        if retired_any || g.steps % 32 == 0 {
+            g.perf = backend.perf();
+        }
+        Ok(true)
+    }
+}
+
+impl ServiceHandle {
+    fn lock(&self) -> MutexGuard<'_, State> {
+        self.shared.lock().unwrap()
+    }
+
+    /// Submit a request. Returns its id and the private event stream
+    /// (Queued is already in the channel when this returns). An empty
+    /// prompt fails immediately with a terminal Error event — it can never
+    /// decode (there is no first input token), and rejecting it here keeps
+    /// the engine loop panic-free. The wire layer rejects it even earlier.
+    pub fn submit(&self, req: GenerationRequest) -> (u64, Receiver<GenerationEvent>) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut g = self.lock();
+        let prompt = ByteTokenizer::encode(&req.prompt);
+        if prompt.is_empty() {
+            // consume the id so the failed request never aliases a live one
+            let id = g.batcher.reserve_id();
+            let _ = tx.send(GenerationEvent::Queued { id });
+            let _ = tx.send(GenerationEvent::Error {
+                id,
+                message: "empty prompt".into(),
+            });
+            return (id, rx);
+        }
+        let params = SamplingParams {
+            temperature: req.temperature,
+            top_k: req.top_k,
+            seed: req.seed,
+        };
+        let id = g.batcher.submit_request(prompt, req.max_new, params, req.stop, req.priority);
+        g.submit_times.insert(id, Instant::now());
+        let _ = tx.send(GenerationEvent::Queued { id });
+        g.subs.insert(id, tx);
+        (id, rx)
+    }
+
+    /// Cancel by id. Queued requests retire immediately (Cancelled event
+    /// sent here); in-flight ones retire at the next engine step. Returns
+    /// whether the id was known.
+    pub fn cancel(&self, id: u64) -> bool {
+        let mut g = self.lock();
+        match g.batcher.cancel(id) {
+            CancelOutcome::Queued => {
+                g.cancelled += 1;
+                g.submit_times.remove(&id);
+                if let Some(tx) = g.subs.remove(&id) {
+                    let _ = tx.send(GenerationEvent::Cancelled { id });
+                }
+                true
+            }
+            CancelOutcome::Active => true,
+            CancelOutcome::Unknown => false,
+        }
+    }
+
+    /// Point-in-time stats: queue/active depth, lifetime counters, engine
+    /// throughput and latency percentiles.
+    pub fn stats(&self) -> ServerStats {
+        let g = self.lock();
+        ServerStats {
+            queued: g.batcher.queued(),
+            active: g.batcher.active.len(),
+            served: g.served,
+            cancelled: g.cancelled,
+            tokens_generated: g.tokens_out,
+            tokens_per_sec: g.perf.tokens_per_sec,
+            token_p50_ms: g.perf.token_p50_ms,
+            token_p99_ms: g.perf.token_p99_ms,
+            request_p50_ms: g.total_ms.p50(),
+            request_p99_ms: g.total_ms.p99(),
+            queue_p50_ms: g.queue_wait_ms.p50(),
+            uptime_s: g.started_at.elapsed().as_secs_f64(),
+        }
+    }
+
+    pub fn served(&self) -> u64 {
+        self.lock().served
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::MockBackend;
+
+    fn drain(rx: &Receiver<GenerationEvent>) -> Vec<GenerationEvent> {
+        let mut evs = Vec::new();
+        while let Ok(ev) = rx.recv_timeout(Duration::from_secs(5)) {
+            let terminal = ev.is_terminal();
+            evs.push(ev);
+            if terminal {
+                break;
+            }
+        }
+        evs
+    }
+
+    #[test]
+    fn event_ordering_queued_started_tokens_done() {
+        let mut be = MockBackend::new(2, 64);
+        let (svc, h) = InferenceService::new();
+        let (id, rx) = h.submit(GenerationRequest { max_new: 3, ..GenerationRequest::new("ab") });
+        svc.run_until_idle(&mut be).unwrap();
+        let evs = drain(&rx);
+        let kinds: Vec<&str> = evs
+            .iter()
+            .map(|e| match e {
+                GenerationEvent::Queued { .. } => "queued",
+                GenerationEvent::Started { .. } => "started",
+                GenerationEvent::Token { .. } => "token",
+                GenerationEvent::Done { .. } => "done",
+                _ => "other",
+            })
+            .collect();
+        assert_eq!(kinds, vec!["queued", "started", "token", "token", "token", "done"]);
+        assert!(evs.iter().all(|e| e.id() == id));
+        let GenerationEvent::Done { tokens, finish, .. } = evs.last().unwrap() else {
+            panic!("missing done");
+        };
+        // mock emits input+1: prompt "ab" (97,98) -> 99,100,101
+        assert_eq!(tokens, &vec![99, 100, 101]);
+        assert_eq!(*finish, FinishReason::Length);
+        // token indices count up from 0
+        let idxs: Vec<usize> = evs
+            .iter()
+            .filter_map(|e| match e {
+                GenerationEvent::Token { index, .. } => Some(*index),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(idxs, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn stop_token_finishes_early() {
+        let mut be = MockBackend::new(1, 64);
+        let (svc, h) = InferenceService::new();
+        // generation runs 99,100,101,... — stop at 101
+        let req = GenerationRequest {
+            max_new: 50,
+            stop: vec![101],
+            ..GenerationRequest::new("ab")
+        };
+        let (_id, rx) = h.submit(req);
+        svc.run_until_idle(&mut be).unwrap();
+        let evs = drain(&rx);
+        let GenerationEvent::Done { tokens, finish, .. } = evs.last().unwrap() else {
+            panic!("missing done");
+        };
+        assert_eq!(tokens, &vec![99, 100], "stop token must not be kept");
+        assert_eq!(*finish, FinishReason::Stop);
+    }
+
+    #[test]
+    fn cancel_queued_request_never_starts() {
+        let mut be = MockBackend::new(1, 64);
+        let (svc, h) = InferenceService::new();
+        // one slot: second request waits in the queue
+        let (_id1, rx1) =
+            h.submit(GenerationRequest { max_new: 2, ..GenerationRequest::new("a") });
+        let (id2, rx2) =
+            h.submit(GenerationRequest { max_new: 2, ..GenerationRequest::new("b") });
+        assert!(h.cancel(id2));
+        assert!(!h.cancel(999));
+        svc.run_until_idle(&mut be).unwrap();
+        let evs2 = drain(&rx2);
+        assert_eq!(evs2.len(), 2, "queued then cancelled: {evs2:?}");
+        assert!(matches!(evs2[1], GenerationEvent::Cancelled { .. }));
+        assert!(matches!(drain(&rx1).last(), Some(GenerationEvent::Done { .. })));
+        let s = h.stats();
+        assert_eq!(s.served, 1);
+        assert_eq!(s.cancelled, 1);
+    }
+
+    #[test]
+    fn cancel_in_flight_request_mid_decode() {
+        let mut be = MockBackend::new(1, 4096);
+        let (svc, h) = InferenceService::new();
+        let (id, rx) =
+            h.submit(GenerationRequest { max_new: 100_000, ..GenerationRequest::new("a") });
+        // drive a few steps by hand, then cancel mid-flight
+        for _ in 0..5 {
+            svc.step(&mut be).unwrap();
+        }
+        assert!(h.cancel(id));
+        svc.run_until_idle(&mut be).unwrap();
+        let evs = drain(&rx);
+        assert!(matches!(evs.last(), Some(GenerationEvent::Cancelled { .. })), "{evs:?}");
+        let n_tokens = evs
+            .iter()
+            .filter(|e| matches!(e, GenerationEvent::Token { .. }))
+            .count();
+        assert!(n_tokens >= 1 && n_tokens < 100, "cancel landed mid-stream: {n_tokens}");
+        assert_eq!(h.stats().cancelled, 1);
+        // the slot was released: a new request can run
+        let (_id2, rx2) =
+            h.submit(GenerationRequest { max_new: 1, ..GenerationRequest::new("z") });
+        svc.run_until_idle(&mut be).unwrap();
+        assert!(matches!(drain(&rx2).last(), Some(GenerationEvent::Done { .. })));
+    }
+
+    #[test]
+    fn priority_orders_admission_under_contention() {
+        let mut be = MockBackend::new(1, 64);
+        // make each decode step dominate the submit-time skew so the
+        // queue-wait comparison below is unambiguous
+        be.step_delay = Duration::from_millis(5);
+        let (svc, h) = InferenceService::new();
+        let mk = |prio| GenerationRequest {
+            max_new: 1,
+            priority: prio,
+            ..GenerationRequest::new("a")
+        };
+        let (_a, rx_a) = h.submit(mk(0));
+        let (_b, rx_b) = h.submit(mk(5));
+        let (_c, rx_c) = h.submit(mk(1));
+        svc.run_until_idle(&mut be).unwrap();
+        // queue-wait ordering proves admission order: b (prio 5) waited
+        // least, then c (prio 1), then a (prio 0, submitted first but lowest)
+        let w = |rx: &Receiver<GenerationEvent>| {
+            drain(rx)
+                .iter()
+                .find_map(|e| match e {
+                    GenerationEvent::Done { queue_ms, .. } => Some(*queue_ms),
+                    _ => None,
+                })
+                .unwrap()
+        };
+        let (wa, wb, wc) = (w(&rx_a), w(&rx_b), w(&rx_c));
+        assert!(wb <= wc && wc <= wa, "queue waits a={wa} b={wb} c={wc}");
+    }
+
+    #[test]
+    fn stats_track_counts_and_depth() {
+        let mut be = MockBackend::new(2, 64);
+        let (svc, h) = InferenceService::new();
+        let s0 = h.stats();
+        assert_eq!((s0.queued, s0.active, s0.served), (0, 0, 0));
+        let (_i1, _rx1) =
+            h.submit(GenerationRequest { max_new: 2, ..GenerationRequest::new("a") });
+        let (_i2, _rx2) =
+            h.submit(GenerationRequest { max_new: 2, ..GenerationRequest::new("b") });
+        let (_i3, _rx3) =
+            h.submit(GenerationRequest { max_new: 2, ..GenerationRequest::new("c") });
+        assert_eq!(h.stats().queued, 3);
+        svc.run_until_idle(&mut be).unwrap();
+        let s = h.stats();
+        assert_eq!(s.served, 3);
+        assert_eq!(s.queued, 0);
+        assert_eq!(s.active, 0);
+        assert_eq!(s.tokens_generated, 6);
+        assert!(s.uptime_s >= 0.0);
+    }
+
+    #[test]
+    fn empty_prompt_and_zero_max_new_are_safe() {
+        let mut be = MockBackend::new(1, 64);
+        let (svc, h) = InferenceService::new();
+        // empty prompt: rejected with a terminal Error, engine never runs
+        let (_id, rx) = h.submit(GenerationRequest::new(""));
+        let evs = drain(&rx);
+        assert!(matches!(evs.last(), Some(GenerationEvent::Error { .. })), "{evs:?}");
+        // max_new 0: retires cleanly with zero tokens
+        let (_id2, rx2) =
+            h.submit(GenerationRequest { max_new: 0, ..GenerationRequest::new("ab") });
+        svc.run_until_idle(&mut be).unwrap();
+        let evs = drain(&rx2);
+        let Some(GenerationEvent::Done { tokens, .. }) = evs.last() else {
+            panic!("expected done: {evs:?}");
+        };
+        assert!(tokens.is_empty());
+        assert!(!evs.iter().any(|e| matches!(e, GenerationEvent::Token { .. })));
+    }
+
+    #[test]
+    fn decode_error_fails_requests_with_error_event() {
+        let mut be = MockBackend::new(1, 64);
+        be.fail_after = Some(2);
+        let (svc, h) = InferenceService::new();
+        let (_id, rx) =
+            h.submit(GenerationRequest { max_new: 50, ..GenerationRequest::new("abc") });
+        assert!(svc.run_until_idle(&mut be).is_err());
+        let evs = drain(&rx);
+        assert!(
+            matches!(evs.last(), Some(GenerationEvent::Error { .. })),
+            "expected error event, got {evs:?}"
+        );
+    }
+}

@@ -1,63 +1,65 @@
-//! Line-delimited-JSON TCP serving front-end.
+//! Line-delimited-JSON TCP adapter over the [`super::service::InferenceService`].
 //!
-//! Protocol (one JSON object per line):
-//!   -> {"prompt": "...", "max_new": 32}
-//!   <- {"id": 0, "text": "...", "tokens": [..], "queue_ms": .., "total_ms": ..}
+//! Protocol v2 (one JSON object per line; see docs/protocol.md):
+//!
+//!   -> {"prompt": "...", "max_new": 32, "temperature": 0.7, "top_k": 4,
+//!       "stop": ".", "priority": 1, "seed": 42}
+//!   <- {"id": 0, "text": "...", "tokens": [..], "finish": "length|stop",
+//!       "queue_ms": .., "total_ms": ..}
+//!
+//!   -> {"prompt": "...", "stream": true, ...}
+//!   <- {"event": "queued",  "id": 0}
+//!   <- {"event": "started", "id": 0}
+//!   <- {"event": "token",   "id": 0, "token": 104, "index": 0, "text": "h"}
+//!      ... one line per token ...
+//!   <- {"event": "done", "id": 0, "text": "...", "tokens": [..],
+//!       "finish": "...", "queue_ms": .., "total_ms": ..}
+//!      (or a terminal {"event": "cancelled"} / {"event": "error"} line)
+//!
+//!   -> {"cmd": "cancel", "id": 0}
+//!   <- {"id": 0, "cancelled": true}          // false: id unknown/finished
+//!
 //!   -> {"cmd": "stats"}
-//!   <- {"tokens_per_sec": .., "p50_ms": .., "p99_ms": .., ...}
+//!   <- {"queued": .., "active": .., "served": .., "cancelled": ..,
+//!       "tokens_generated": .., "tokens_per_sec": .., "token_p50_ms": ..,
+//!       "token_p99_ms": .., "request_p50_ms": .., "request_p99_ms": ..,
+//!       "queue_p50_ms": .., "uptime_s": ..}
 //!
-//! One engine thread drives continuous batching (admit → decode → retire);
-//! connection threads only parse/enqueue/respond. This is the E2E serving
-//! path used by `examples/serve_demo.rs`.
+//!   -> {"cmd": "ping"}
+//!   <- {"pong": true}
+//!
+//! One engine thread drives the service loop (admit → decode → retire);
+//! connection threads only parse lines, talk to a [`ServiceHandle`], and
+//! write responses — cancellation is id-addressed, so any connection can
+//! cancel any request. This is the E2E serving path used by
+//! `examples/serve_demo.rs`.
 
-use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::Sender;
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::coordinator::batcher::Batcher;
-use crate::coordinator::engine::Engine;
-use crate::model::sampling;
-use crate::model::tokenizer::ByteTokenizer;
+use crate::server::api::{GenerationEvent, GenerationRequest};
+use crate::server::service::{Backend, InferenceService, ServiceHandle};
 use crate::util::json::Json;
 
-/// Completed generation sent back to the connection thread.
-#[derive(Clone, Debug)]
-pub struct Completion {
-    pub id: u64,
-    pub tokens: Vec<u32>,
-    pub queued_at: Instant,
-    pub started_at: Instant,
-    pub finished_at: Instant,
-}
+/// How long a connection waits on a generation before giving up on it.
+const EVENT_TIMEOUT: Duration = Duration::from_secs(600);
 
-struct Shared {
-    batcher: Batcher,
-    responders: HashMap<u64, Sender<Completion>>,
-    submit_times: HashMap<u64, Instant>,
-    start_times: HashMap<u64, Instant>,
-}
-
-/// Serve `engine` on `addr` until `shutdown` flips. Blocks the caller
-/// (spawn a thread if needed). Returns total completions served.
-pub fn serve(mut engine: Engine, addr: &str, shutdown: Arc<AtomicBool>) -> Result<u64> {
+/// Serve `backend` on `addr` until `shutdown` flips. Blocks the caller
+/// (spawn a thread if needed; PJRT-backed engines must stay on the thread
+/// that built them). Returns total completions served.
+pub fn serve<B: Backend>(mut backend: B, addr: &str, shutdown: Arc<AtomicBool>) -> Result<u64> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     listener.set_nonblocking(true).context("nonblocking listener")?;
-    let shared = Arc::new(Mutex::new(Shared {
-        batcher: Batcher::new(),
-        responders: HashMap::new(),
-        submit_times: HashMap::new(),
-        start_times: HashMap::new(),
-    }));
+    let (service, handle) = InferenceService::new();
 
-    // acceptor thread
+    // acceptor thread: hand each connection its own service handle
     let acceptor = {
-        let shared = Arc::clone(&shared);
         let shutdown = Arc::clone(&shutdown);
         std::thread::Builder::new()
             .name("adapmoe-accept".into())
@@ -65,10 +67,10 @@ pub fn serve(mut engine: Engine, addr: &str, shutdown: Arc<AtomicBool>) -> Resul
                 while !shutdown.load(Ordering::SeqCst) {
                     match listener.accept() {
                         Ok((stream, _)) => {
-                            let shared = Arc::clone(&shared);
+                            let handle = handle.clone();
                             let _ = std::thread::Builder::new()
                                 .name("adapmoe-conn".into())
-                                .spawn(move || handle_conn(stream, shared));
+                                .spawn(move || handle_conn(stream, handle));
                         }
                         Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(Duration::from_millis(5));
@@ -80,67 +82,16 @@ pub fn serve(mut engine: Engine, addr: &str, shutdown: Arc<AtomicBool>) -> Resul
             .expect("spawn acceptor")
     };
 
-    // engine loop (this thread)
-    let mut served = 0u64;
-    while !shutdown.load(Ordering::SeqCst) {
-        // admit new work into free slots
-        {
-            let mut g = shared.lock().unwrap();
-            while g.batcher.queued() > 0 {
-                let Some(row) = engine.acquire_slot() else { break };
-                g.batcher.admit(&[row]);
-                let started = g.batcher.active.last().map(|a| a.req.id);
-                if let Some(id) = started {
-                    g.start_times.insert(id, Instant::now());
-                }
-            }
-            if g.batcher.active.is_empty() {
-                drop(g);
-                std::thread::sleep(Duration::from_millis(2));
-                continue;
-            }
-        }
-
-        // decode one step for all active rows
-        let inputs = { shared.lock().unwrap().batcher.step_inputs() };
-        let outs = engine.decode_step(&inputs)?;
-        let sampled: Vec<(usize, u32)> = outs
-            .iter()
-            .map(|(row, logits)| (*row, sampling::greedy(logits)))
-            .collect();
-
-        let mut g = shared.lock().unwrap();
-        g.batcher.apply_step(&sampled);
-        // rows whose KV is exhausted must retire regardless of max_new
-        for a in g.batcher.active.iter_mut() {
-            if engine.slot_full(a.row) {
-                a.req.max_new = a.generated.len();
-            }
-        }
-        for done in g.batcher.retire() {
-            engine.release_slot(done.row);
-            served += 1;
-            let id = done.req.id;
-            let queued_at = g.submit_times.remove(&id).unwrap_or_else(Instant::now);
-            let started_at = g.start_times.remove(&id).unwrap_or(queued_at);
-            if let Some(tx) = g.responders.remove(&id) {
-                let _ = tx.send(Completion {
-                    id,
-                    tokens: done.generated,
-                    queued_at,
-                    started_at,
-                    finished_at: Instant::now(),
-                });
-            }
-        }
-    }
-    drop(shared);
+    // engine loop (this thread). On an engine error, still flip shutdown
+    // and join — otherwise the acceptor keeps taking connections that a
+    // dead service will never answer.
+    let served = service.run(&mut backend, &shutdown);
+    shutdown.store(true, Ordering::SeqCst);
     let _ = acceptor.join();
-    Ok(served)
+    served
 }
 
-fn handle_conn(stream: TcpStream, shared: Arc<Mutex<Shared>>) {
-    let peer = stream.peer_addr().ok();
+fn handle_conn(stream: TcpStream, handle: ServiceHandle) {
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
@@ -151,81 +102,185 @@ fn handle_conn(stream: TcpStream, shared: Arc<Mutex<Shared>>) {
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match handle_line(&line, &shared) {
-            Ok(j) => j,
-            Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]),
+        let ok = match handle_line(&line, &handle, &mut writer) {
+            Ok(()) => true,
+            Err(e) => {
+                let err = Json::obj(vec![("error", Json::Str(format!("{e:#}")))]);
+                writeln!(writer, "{}", err.to_string()).is_ok()
+            }
         };
-        if writeln!(writer, "{}", reply.to_string()).is_err() {
+        if !ok {
             break;
         }
     }
-    let _ = peer;
 }
 
-fn handle_line(line: &str, shared: &Arc<Mutex<Shared>>) -> Result<Json> {
+/// Dispatch one request line, writing one line (commands, non-streamed
+/// generations) or a line per event (streamed generations).
+fn handle_line(line: &str, handle: &ServiceHandle, writer: &mut impl Write) -> Result<()> {
     let req = Json::parse(line).context("bad request json")?;
-    if let Some(prompt) = req.get("prompt").and_then(|p| p.as_str()) {
-        let max_new = req.get("max_new").and_then(|v| v.as_usize()).unwrap_or(32);
-        let tokens = ByteTokenizer::encode(prompt);
-        let (tx, rx) = std::sync::mpsc::channel();
-        let id = {
-            let mut g = shared.lock().unwrap();
-            let id = g.batcher.submit(tokens, max_new);
-            g.responders.insert(id, tx);
-            g.submit_times.insert(id, Instant::now());
-            id
+    if req.get("prompt").is_some() {
+        let greq = GenerationRequest::from_json(&req)?;
+        let stream_mode = greq.stream;
+        let (id, rx) = handle.submit(greq);
+        let result = if stream_mode {
+            stream_events(&rx, writer)
+        } else {
+            collect_completion(&rx, writer)
         };
-        let done = rx
-            .recv_timeout(Duration::from_secs(600))
-            .context("generation timed out")?;
-        let text = ByteTokenizer::decode(&done.tokens);
-        Ok(Json::obj(vec![
-            ("id", Json::Num(id as f64)),
-            ("text", Json::Str(text)),
-            (
-                "tokens",
-                Json::Arr(done.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
-            ),
-            (
-                "queue_ms",
-                Json::Num(
-                    done.started_at.duration_since(done.queued_at).as_secs_f64() * 1e3,
-                ),
-            ),
-            (
-                "total_ms",
-                Json::Num(
-                    done.finished_at.duration_since(done.queued_at).as_secs_f64() * 1e3,
-                ),
-            ),
-        ]))
-    } else if req.get("cmd").and_then(|c| c.as_str()) == Some("ping") {
-        Ok(Json::obj(vec![("pong", Json::Bool(true))]))
-    } else {
-        anyhow::bail!("unknown request: expected 'prompt' or 'cmd'")
+        if result.is_err() {
+            // client gone or timed out: release the request's slot instead
+            // of decoding tokens nobody will read (no-op if already done)
+            let _ = handle.cancel(id);
+        }
+        return result;
+    }
+    let reply = match req.get("cmd").and_then(|c| c.as_str()) {
+        Some("stats") => handle.stats().to_json(),
+        Some("cancel") => {
+            let id = req
+                .get("id")
+                .and_then(|v| v.as_f64())
+                .context("cancel needs a numeric 'id'")? as u64;
+            Json::obj(vec![
+                ("id", Json::Num(id as f64)),
+                ("cancelled", Json::Bool(handle.cancel(id))),
+            ])
+        }
+        Some("ping") => Json::obj(vec![("pong", Json::Bool(true))]),
+        Some(other) => bail!("unknown cmd '{other}'"),
+        None => bail!("unknown request: expected 'prompt' or 'cmd'"),
+    };
+    writeln!(writer, "{}", reply.to_string())?;
+    Ok(())
+}
+
+/// Streamed generation: forward every event as its own line.
+fn stream_events(rx: &Receiver<GenerationEvent>, writer: &mut impl Write) -> Result<()> {
+    loop {
+        let ev = rx.recv_timeout(EVENT_TIMEOUT).context("generation timed out")?;
+        writeln!(writer, "{}", ev.to_json().to_string())?;
+        if ev.is_terminal() {
+            return Ok(());
+        }
     }
 }
 
-/// Blocking client for examples/benches: one request, one completion.
-pub fn client_request(addr: &str, prompt: &str, max_new: usize) -> Result<(String, f64, f64)> {
+/// Non-streamed generation: wait for the terminal event, answer one line.
+/// Done lines keep the v1 shape (id/text/tokens/queue_ms/total_ms) plus
+/// the "finish" reason.
+fn collect_completion(rx: &Receiver<GenerationEvent>, writer: &mut impl Write) -> Result<()> {
+    loop {
+        let ev = rx.recv_timeout(EVENT_TIMEOUT).context("generation timed out")?;
+        if !ev.is_terminal() {
+            continue;
+        }
+        let mut j = ev.to_json();
+        if let (Json::Obj(m), GenerationEvent::Done { .. }) = (&mut j, &ev) {
+            m.remove("event"); // v1 completion shape
+        }
+        writeln!(writer, "{}", j.to_string())?;
+        return Ok(());
+    }
+}
+
+// -- clients (examples / benches / tests) ------------------------------------
+
+/// One finished generation as seen by a client.
+#[derive(Clone, Debug, Default)]
+pub struct ClientCompletion {
+    pub id: u64,
+    pub text: String,
+    pub tokens: Vec<u32>,
+    pub finish: String,
+    pub queue_ms: f64,
+    pub total_ms: f64,
+    /// Token-event lines observed before the terminal line (streaming only).
+    pub token_lines: usize,
+}
+
+/// Blocking client: one request, one completion. With `req.stream` it
+/// consumes the event stream (counting token lines) until the terminal
+/// line; otherwise it reads the single completion line.
+pub fn client_generate(addr: &str, req: &GenerationRequest) -> Result<ClientCompletion> {
     let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
-    let req = Json::obj(vec![
-        ("prompt", Json::Str(prompt.to_string())),
-        ("max_new", Json::Num(max_new as f64)),
-    ]);
-    writeln!(stream, "{}", req.to_string())?;
+    writeln!(stream, "{}", req.to_json().to_string())?;
+    let mut reader = BufReader::new(stream);
+    let mut out = ClientCompletion::default();
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("server closed connection mid-generation");
+        }
+        let j = Json::parse(&line).context("bad response json")?;
+        if let Some(err) = j.get("error").and_then(|e| e.as_str()) {
+            bail!("server error: {err}");
+        }
+        match j.get("event").and_then(|e| e.as_str()) {
+            Some("token") => out.token_lines += 1,
+            Some("queued") | Some("started") => {}
+            Some("cancelled") => {
+                out.id = j.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                out.finish = "cancelled".into();
+                return Ok(out);
+            }
+            // "done" event line (streaming) or the bare completion object
+            _ => {
+                out.id = j.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                out.text = j
+                    .get("text")
+                    .and_then(|t| t.as_str())
+                    .unwrap_or_default()
+                    .to_string();
+                if let Some(toks) = j.get("tokens").and_then(|t| t.as_arr()) {
+                    out.tokens = toks.iter().filter_map(|t| t.as_f64()).map(|t| t as u32).collect();
+                }
+                out.finish = j
+                    .get("finish")
+                    .and_then(|f| f.as_str())
+                    .unwrap_or("length")
+                    .to_string();
+                out.queue_ms = j.get("queue_ms").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                out.total_ms = j.get("total_ms").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                return Ok(out);
+            }
+        }
+    }
+}
+
+/// v1-compatible convenience: greedy, non-streamed; returns
+/// (text, queue_ms, total_ms).
+pub fn client_request(addr: &str, prompt: &str, max_new: usize) -> Result<(String, f64, f64)> {
+    let req = GenerationRequest { max_new, ..GenerationRequest::new(prompt) };
+    let c = client_generate(addr, &req)?;
+    Ok((c.text, c.queue_ms, c.total_ms))
+}
+
+/// Cancel request `id`; returns whether the server knew the id.
+pub fn client_cancel(addr: &str, id: u64) -> Result<bool> {
+    let j = client_cmd(addr, Json::obj(vec![
+        ("cmd", Json::Str("cancel".into())),
+        ("id", Json::Num(id as f64)),
+    ]))?;
+    Ok(j.get("cancelled").and_then(|b| b.as_bool()).unwrap_or(false))
+}
+
+/// Fetch the server's stats object.
+pub fn client_stats(addr: &str) -> Result<Json> {
+    client_cmd(addr, Json::obj(vec![("cmd", Json::Str("stats".into()))]))
+}
+
+fn client_cmd(addr: &str, cmd: Json) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    writeln!(stream, "{}", cmd.to_string())?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
     reader.read_line(&mut line)?;
     let j = Json::parse(&line).context("bad response json")?;
     if let Some(err) = j.get("error").and_then(|e| e.as_str()) {
-        anyhow::bail!("server error: {err}");
+        bail!("server error: {err}");
     }
-    Ok((
-        j.get("text").and_then(|t| t.as_str()).unwrap_or_default().to_string(),
-        j.get("queue_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
-        j.get("total_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
-    ))
+    Ok(j)
 }
 
 #[cfg(test)]
@@ -233,18 +288,33 @@ mod tests {
     use super::*;
 
     #[test]
-    fn line_protocol_rejects_garbage() {
-        let shared = Arc::new(Mutex::new(Shared {
-            batcher: Batcher::new(),
-            responders: HashMap::new(),
-            submit_times: HashMap::new(),
-            start_times: HashMap::new(),
-        }));
-        assert!(handle_line("not json", &shared).is_err());
-        assert!(handle_line("{\"x\":1}", &shared).is_err());
-        let pong = handle_line("{\"cmd\":\"ping\"}", &shared).unwrap();
+    fn line_protocol_rejects_garbage_and_answers_commands() {
+        let (_service, handle) = InferenceService::new();
+        let mut out = Vec::new();
+        assert!(handle_line("not json", &handle, &mut out).is_err());
+        assert!(handle_line("{\"x\":1}", &handle, &mut out).is_err());
+        assert!(handle_line("{\"cmd\":\"nope\"}", &handle, &mut out).is_err());
+        assert!(handle_line("{\"cmd\":\"cancel\"}", &handle, &mut out).is_err());
+
+        handle_line("{\"cmd\":\"ping\"}", &handle, &mut out).unwrap();
+        let pong = Json::parse(std::str::from_utf8(&out).unwrap().trim()).unwrap();
         assert_eq!(pong.get("pong").and_then(|b| b.as_bool()), Some(true));
+
+        // stats works with an idle service and is non-empty
+        let mut out = Vec::new();
+        handle_line("{\"cmd\":\"stats\"}", &handle, &mut out).unwrap();
+        let stats = Json::parse(std::str::from_utf8(&out).unwrap().trim()).unwrap();
+        assert_eq!(stats.get("served").and_then(|v| v.as_usize()), Some(0));
+        assert!(stats.get("uptime_s").is_some());
+
+        // cancel with an unknown id answers false rather than erroring
+        let mut out = Vec::new();
+        handle_line("{\"cmd\":\"cancel\",\"id\":42}", &handle, &mut out).unwrap();
+        let j = Json::parse(std::str::from_utf8(&out).unwrap().trim()).unwrap();
+        assert_eq!(j.get("cancelled").and_then(|b| b.as_bool()), Some(false));
     }
 
-    // Full server round-trips run in rust/tests/integration.rs (need artifacts).
+    // Full socket round-trips (streaming, cancellation, stats) run against
+    // MockBackend in rust/tests/protocol.rs, and against the real engine +
+    // artifacts in rust/tests/integration.rs.
 }

@@ -4,8 +4,88 @@
 
 use crate::model::config::ModelConfig;
 use crate::model::weights::Weights;
+use crate::server::service::{Backend, PerfSnapshot};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+
+/// Deterministic artifact-free [`Backend`]: every decode step maps each
+/// row's input token `t` to logits whose argmax is `(t + 1) % 256`, so a
+/// greedy generation from prompt "ab" reads "cde…". Lets the full service
+/// + TCP protocol stack be tested without PJRT artifacts.
+pub struct MockBackend {
+    active: Vec<bool>,
+    pos: Vec<usize>,
+    max_seq: usize,
+    /// Sleep per decode step — widens the cancellation window so tests can
+    /// reliably intercept in-flight requests.
+    pub step_delay: std::time::Duration,
+    /// Return an error from decode_step after this many successful steps.
+    pub fail_after: Option<u64>,
+    steps: u64,
+}
+
+impl MockBackend {
+    pub fn new(slots: usize, max_seq: usize) -> MockBackend {
+        MockBackend {
+            active: vec![false; slots],
+            pos: vec![0; slots],
+            max_seq,
+            step_delay: std::time::Duration::ZERO,
+            fail_after: None,
+            steps: 0,
+        }
+    }
+}
+
+impl Backend for MockBackend {
+    fn acquire_slot(&mut self) -> Option<usize> {
+        let row = self.active.iter().position(|a| !a)?;
+        self.active[row] = true;
+        self.pos[row] = 0;
+        Some(row)
+    }
+
+    fn release_slot(&mut self, row: usize) {
+        self.active[row] = false;
+        self.pos[row] = 0;
+    }
+
+    fn slot_full(&self, row: usize) -> bool {
+        self.pos[row] >= self.max_seq
+    }
+
+    fn decode_step(
+        &mut self,
+        inputs: &[(usize, u32)],
+    ) -> anyhow::Result<Vec<(usize, Vec<f32>)>> {
+        if let Some(n) = self.fail_after {
+            if self.steps >= n {
+                anyhow::bail!("mock backend failure injected after {n} steps");
+            }
+        }
+        self.steps += 1;
+        if !self.step_delay.is_zero() {
+            std::thread::sleep(self.step_delay);
+        }
+        let mut outs = Vec::with_capacity(inputs.len());
+        for &(row, t) in inputs {
+            assert!(self.active[row], "row {row} not active");
+            self.pos[row] += 1;
+            let mut logits = vec![0.0f32; 256];
+            logits[((t + 1) % 256) as usize] = 1.0;
+            outs.push((row, logits));
+        }
+        Ok(outs)
+    }
+
+    fn perf(&self) -> PerfSnapshot {
+        PerfSnapshot {
+            tokens_per_sec: self.steps as f64,
+            token_p50_ms: 0.01,
+            token_p99_ms: 0.02,
+        }
+    }
+}
 
 /// Micro config mirroring `python/compile/config.py::micro_config`.
 pub fn micro_config() -> ModelConfig {

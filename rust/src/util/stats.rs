@@ -83,6 +83,57 @@ impl Summary {
     }
 }
 
+/// Bounded sliding window of samples for lifetime-of-a-server percentiles:
+/// keeps the most recent `cap` values in a ring, so memory stays fixed and
+/// a percentile query sorts at most `cap` elements. Use instead of
+/// [`Summary`] wherever samples accrue without bound (e.g. per-request
+/// latencies in the serving stats).
+#[derive(Clone, Debug)]
+pub struct LatencyWindow {
+    buf: Vec<f64>,
+    next: usize,
+    cap: usize,
+    total: u64,
+}
+
+impl LatencyWindow {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "window capacity must be positive");
+        LatencyWindow { buf: Vec::new(), next: 0, cap, total: 0 }
+    }
+
+    pub fn add(&mut self, v: f64) {
+        self.total += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    /// Samples ever added (not just the retained window).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Percentile over the retained window, same convention as
+    /// [`Summary::percentile`] (linear interpolation, p in [0,100]).
+    pub fn percentile(&self, p: f64) -> f64 {
+        let mut s = Summary::new();
+        s.extend(&self.buf);
+        s.percentile(p)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
 /// Fixed-range histogram (used for Fig. 2 score distributions).
 #[derive(Clone, Debug)]
 pub struct Histogram {
@@ -160,6 +211,22 @@ mod tests {
         let s = Summary::new();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(99.0), 0.0);
+    }
+
+    #[test]
+    fn latency_window_bounds_memory_and_slides() {
+        let mut w = LatencyWindow::new(4);
+        assert_eq!(w.percentile(50.0), 0.0); // empty is safe
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            w.add(v);
+        }
+        assert_eq!(w.p50(), 2.5);
+        // overflow evicts the oldest samples (1.0, 2.0)
+        w.add(10.0);
+        w.add(20.0);
+        assert_eq!(w.total(), 6);
+        assert_eq!(w.percentile(100.0), 20.0);
+        assert_eq!(w.percentile(0.0), 3.0);
     }
 
     #[test]

@@ -266,13 +266,34 @@ fn server_round_trip() {
     });
     std::thread::sleep(std::time::Duration::from_millis(1500));
 
+    // v1 shape: bare prompt, single completion line
     let (text, _queue_ms, total_ms) = tcp::client_request(addr, "the fast ", 8).unwrap();
     assert_eq!(text.len(), 8, "expected 8 generated bytes, got {:?}", text);
     assert!(total_ms > 0.0);
 
+    // v2: streamed generation over the same server — one line per token,
+    // terminated by a done line whose tokens match the streamed count
+    let req = adapmoe::server::api::GenerationRequest {
+        max_new: 6,
+        stream: true,
+        ..adapmoe::server::api::GenerationRequest::new("the fast ")
+    };
+    let done = tcp::client_generate(addr, &req).unwrap();
+    assert_eq!(done.tokens.len(), 6);
+    assert_eq!(done.token_lines, 6, "token event per generated token");
+    assert_eq!(done.finish, "length");
+
+    // stats round-trip reflects both completions
+    let stats = tcp::client_stats(addr).unwrap();
+    assert_eq!(stats.get("served").and_then(|v| v.as_usize()), Some(2));
+    assert!(
+        stats.get("tokens_generated").and_then(|v| v.as_usize()).unwrap() >= 14,
+        "stats: {stats:?}"
+    );
+
     shutdown.store(true, Ordering::SeqCst);
     let served = server.join().unwrap();
-    assert_eq!(served, 1);
+    assert_eq!(served, 2);
 }
 
 #[test]

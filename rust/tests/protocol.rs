@@ -1,0 +1,320 @@
+//! Wire-protocol tests for the v2 line protocol — full TCP round trips
+//! (streaming, cancellation, stats, v1 back-compat) against the
+//! artifact-free MockBackend, so they run everywhere `cargo test` does.
+//! The same protocol against the real engine + artifacts is covered in
+//! rust/tests/integration.rs.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use adapmoe::server::api::GenerationRequest;
+use adapmoe::server::tcp;
+use adapmoe::testutil::MockBackend;
+use adapmoe::util::json::Json;
+
+struct TestServer {
+    addr: String,
+    shutdown: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<u64>>,
+}
+
+impl TestServer {
+    /// Start `tcp::serve` over a MockBackend and wait until it accepts.
+    fn start(port: u16, slots: usize, step_delay_ms: u64) -> TestServer {
+        let addr = format!("127.0.0.1:{port}");
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let sd = Arc::clone(&shutdown);
+        let saddr = addr.clone();
+        let thread = std::thread::spawn(move || {
+            let mut be = MockBackend::new(slots, 1 << 20);
+            be.step_delay = Duration::from_millis(step_delay_ms);
+            tcp::serve(be, &saddr, sd).expect("serve")
+        });
+        for _ in 0..200 {
+            if TcpStream::connect(&addr).is_ok() {
+                return TestServer { addr, shutdown, thread: Some(thread) };
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        panic!("server on {addr} never came up");
+    }
+
+    fn connect(&self) -> (TcpStream, BufReader<TcpStream>) {
+        let stream = TcpStream::connect(&self.addr).expect("connect");
+        stream
+            .set_read_timeout(Some(Duration::from_secs(20)))
+            .expect("read timeout");
+        let reader = BufReader::new(stream.try_clone().expect("clone"));
+        (stream, reader)
+    }
+
+    fn stop(mut self) -> u64 {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.thread.take().expect("running").join().expect("join")
+    }
+}
+
+fn send(stream: &mut TcpStream, j: &Json) {
+    writeln!(stream, "{}", j.to_string()).expect("write");
+}
+
+fn recv(reader: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("read");
+    assert!(!line.is_empty(), "server closed connection");
+    Json::parse(line.trim()).expect("response json")
+}
+
+fn event_of(j: &Json) -> String {
+    j.get("event").and_then(|e| e.as_str()).unwrap_or("?").to_string()
+}
+
+#[test]
+fn streamed_generation_event_order_and_back_compat() {
+    let srv = TestServer::start(17421, 2, 0);
+
+    // v1 back-compat on the same server: bare prompt → single line, no
+    // "event" key, mock generates consecutive bytes ("ab" → "cde")
+    let (mut s, mut r) = srv.connect();
+    send(&mut s, &Json::parse(r#"{"prompt":"ab","max_new":3}"#).unwrap());
+    let done = recv(&mut r);
+    assert!(done.get("event").is_none(), "v1 shape must not carry 'event'");
+    assert_eq!(done.get("text").and_then(|t| t.as_str()), Some("cde"));
+    assert_eq!(done.get("finish").and_then(|f| f.as_str()), Some("length"));
+    assert!(done.get("total_ms").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+
+    // streamed: Queued → Started → Token* → Done, ids consistent,
+    // indices sequential
+    let req = GenerationRequest {
+        max_new: 3,
+        stream: true,
+        ..GenerationRequest::new("ab")
+    };
+    let (mut s, mut r) = srv.connect();
+    send(&mut s, &req.to_json());
+    let mut events = Vec::new();
+    loop {
+        let j = recv(&mut r);
+        let e = event_of(&j);
+        events.push((e.clone(), j));
+        if e == "done" || e == "error" || e == "cancelled" {
+            break;
+        }
+    }
+    let kinds: Vec<&str> = events.iter().map(|(e, _)| e.as_str()).collect();
+    assert_eq!(kinds, vec!["queued", "started", "token", "token", "token", "done"]);
+    let id0 = events[0].1.get("id").and_then(|v| v.as_f64()).unwrap();
+    assert!(events.iter().all(|(_, j)| j.get("id").and_then(|v| v.as_f64()) == Some(id0)));
+    let idxs: Vec<usize> = events
+        .iter()
+        .filter(|(e, _)| e == "token")
+        .map(|(_, j)| j.get("index").and_then(|v| v.as_usize()).unwrap())
+        .collect();
+    assert_eq!(idxs, vec![0, 1, 2]);
+    let (_, done) = events.last().unwrap();
+    assert_eq!(done.get("text").and_then(|t| t.as_str()), Some("cde"));
+
+    // stop tokens end generation early with finish = "stop"
+    let (mut s, mut r) = srv.connect();
+    send(
+        &mut s,
+        &Json::parse(r#"{"prompt":"ab","max_new":50,"stop":[101]}"#).unwrap(),
+    );
+    let done = recv(&mut r);
+    assert_eq!(done.get("finish").and_then(|f| f.as_str()), Some("stop"));
+    assert_eq!(done.get("text").and_then(|t| t.as_str()), Some("cd"));
+
+    let served = srv.stop();
+    assert_eq!(served, 3);
+}
+
+#[test]
+fn cancel_in_flight_from_second_connection() {
+    let srv = TestServer::start(17422, 1, 5);
+
+    let req = GenerationRequest {
+        max_new: 100_000,
+        stream: true,
+        ..GenerationRequest::new("a")
+    };
+    let (mut s, mut r) = srv.connect();
+    send(&mut s, &req.to_json());
+
+    // wait for tokens to flow, note the id
+    let mut id = None;
+    loop {
+        let j = recv(&mut r);
+        if id.is_none() {
+            id = j.get("id").and_then(|v| v.as_f64()).map(|v| v as u64);
+        }
+        if event_of(&j) == "token" {
+            break;
+        }
+    }
+    let id = id.expect("id on stream lines");
+
+    // cancel by id from a *different* connection
+    assert!(tcp::client_cancel(&srv.addr, id).unwrap());
+
+    // the stream terminates with a cancelled line (a few in-flight tokens
+    // may still arrive first)
+    let mut tokens_after = 0;
+    loop {
+        let j = recv(&mut r);
+        match event_of(&j).as_str() {
+            "cancelled" => break,
+            "token" => {
+                tokens_after += 1;
+                assert!(tokens_after < 50, "cancel never landed");
+            }
+            other => panic!("unexpected event {other}"),
+        }
+    }
+
+    // slot was freed: a fresh request completes, and stats count the cancel
+    let (text, _q, _t) = tcp::client_request(&srv.addr, "ab", 2).unwrap();
+    assert_eq!(text, "cd");
+    let stats = tcp::client_stats(&srv.addr).unwrap();
+    assert_eq!(stats.get("cancelled").and_then(|v| v.as_usize()), Some(1));
+    assert_eq!(stats.get("served").and_then(|v| v.as_usize()), Some(1));
+    srv.stop();
+}
+
+#[test]
+fn cancel_queued_request_before_start() {
+    let srv = TestServer::start(17423, 1, 5);
+
+    // fill the only slot with a long-running request
+    let long = GenerationRequest {
+        max_new: 500,
+        stream: true,
+        ..GenerationRequest::new("a")
+    };
+    let (mut s1, mut r1) = srv.connect();
+    send(&mut s1, &long.to_json());
+    loop {
+        if event_of(&recv(&mut r1)) == "started" {
+            break;
+        }
+    }
+
+    // second request must sit in the queue; cancel it before it starts
+    let queued = GenerationRequest {
+        max_new: 5,
+        stream: true,
+        ..GenerationRequest::new("b")
+    };
+    let (mut s2, mut r2) = srv.connect();
+    send(&mut s2, &queued.to_json());
+    let q = recv(&mut r2);
+    assert_eq!(event_of(&q), "queued");
+    let qid = q.get("id").and_then(|v| v.as_f64()).unwrap() as u64;
+
+    let stats = tcp::client_stats(&srv.addr).unwrap();
+    assert_eq!(stats.get("queued").and_then(|v| v.as_usize()), Some(1));
+    assert_eq!(stats.get("active").and_then(|v| v.as_usize()), Some(1));
+
+    assert!(tcp::client_cancel(&srv.addr, qid).unwrap());
+    // cancelled immediately — no started/token lines in between
+    assert_eq!(event_of(&recv(&mut r2)), "cancelled");
+    // cancelling an unknown/finished id reports false
+    assert!(!tcp::client_cancel(&srv.addr, 9999).unwrap());
+
+    // unblock the long request too
+    let lid = 0; // first submission on this server
+    assert!(tcp::client_cancel(&srv.addr, lid).unwrap());
+    srv.stop();
+}
+
+#[test]
+fn stats_round_trip_is_nonempty_and_counts() {
+    let srv = TestServer::start(17424, 2, 0);
+
+    for _ in 0..2 {
+        let (text, _q, _t) = tcp::client_request(&srv.addr, "ab", 4).unwrap();
+        assert_eq!(text, "cdef");
+    }
+    let stats = tcp::client_stats(&srv.addr).unwrap();
+    assert_eq!(stats.get("served").and_then(|v| v.as_usize()), Some(2));
+    assert_eq!(stats.get("tokens_generated").and_then(|v| v.as_usize()), Some(8));
+    assert_eq!(stats.get("queued").and_then(|v| v.as_usize()), Some(0));
+    assert!(stats.get("tokens_per_sec").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    assert!(stats.get("request_p50_ms").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+    assert!(stats.get("uptime_s").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+
+    // ping + malformed lines on the same connection
+    let (mut s, mut r) = srv.connect();
+    send(&mut s, &Json::parse(r#"{"cmd":"ping"}"#).unwrap());
+    assert_eq!(recv(&mut r).get("pong").and_then(|b| b.as_bool()), Some(true));
+    writeln!(s, "not json").unwrap();
+    assert!(recv(&mut r).get("error").is_some());
+    send(&mut s, &Json::parse(r#"{"cmd":"nope"}"#).unwrap());
+    assert!(recv(&mut r).get("error").is_some());
+    // empty prompts are rejected at the wire, not fed to the engine
+    send(&mut s, &Json::parse(r#"{"prompt":""}"#).unwrap());
+    assert!(recv(&mut r).get("error").is_some());
+    // connection still usable after protocol errors
+    send(&mut s, &Json::parse(r#"{"cmd":"ping"}"#).unwrap());
+    assert_eq!(recv(&mut r).get("pong").and_then(|b| b.as_bool()), Some(true));
+
+    let served = srv.stop();
+    assert_eq!(served, 2);
+}
+
+#[test]
+fn priority_and_sampling_params_ride_the_wire() {
+    let srv = TestServer::start(17425, 1, 2);
+
+    // same seed + temperature → identical sampled outputs end to end
+    let mk = |seed| GenerationRequest {
+        max_new: 6,
+        temperature: 0.9,
+        top_k: 4,
+        seed: Some(seed),
+        ..GenerationRequest::new("ab")
+    };
+    let a = tcp::client_generate(&srv.addr, &mk(7)).unwrap();
+    let b = tcp::client_generate(&srv.addr, &mk(7)).unwrap();
+    assert_eq!(a.tokens, b.tokens, "same seed must reproduce");
+    assert_eq!(a.tokens.len(), 6);
+
+    // a high-priority request overtakes a low-priority one in the queue:
+    // occupy the slot, enqueue low then high, check completion order
+    let long = GenerationRequest {
+        max_new: 100,
+        stream: true,
+        ..GenerationRequest::new("a")
+    };
+    let (mut s0, mut r0) = srv.connect();
+    send(&mut s0, &long.to_json());
+    loop {
+        if event_of(&recv(&mut r0)) == "started" {
+            break;
+        }
+    }
+    let spawn_req = |prio: i32| {
+        let addr = srv.addr.clone();
+        std::thread::spawn(move || {
+            let req = GenerationRequest {
+                max_new: 2,
+                priority: prio,
+                ..GenerationRequest::new("ab")
+            };
+            let done = tcp::client_generate(&addr, &req).unwrap();
+            (prio, done.queue_ms)
+        })
+    };
+    let low = spawn_req(-1);
+    std::thread::sleep(Duration::from_millis(50)); // low is definitely queued first
+    let high = spawn_req(3);
+    let (_, low_wait) = low.join().unwrap();
+    let (_, high_wait) = high.join().unwrap();
+    assert!(
+        high_wait < low_wait,
+        "high priority waited {high_wait}ms, low {low_wait}ms"
+    );
+    srv.stop();
+}
