@@ -18,6 +18,7 @@ use adapmoe::coordinator::gating::{calibrate_score_threshold, GatingPolicy};
 use adapmoe::coordinator::policy;
 use adapmoe::coordinator::profile::Profile;
 use adapmoe::memory::quant::QuantKind;
+use adapmoe::memory::transfer::LanePolicy;
 use adapmoe::util::timer::Table;
 
 fn main() {
@@ -106,8 +107,10 @@ fn main() {
     // Timed run on the calibrated link: shows how much of the MoE wait is
     // head-of-line queueing (removed by arrival-order consumption) vs the
     // irreducible wait for the simulated PCIe link.
-    println!("\n== completion-driven pipeline: where the MoE wait goes (rtx4090, int4) ==");
-    let timed = timed_settings(16, QuantKind::Int4, "rtx4090");
+    println!("\n== completion-driven pipeline: where the MoE wait goes (rtx4090, int4, 2 pinned lanes) ==");
+    let mut timed = timed_settings(16, QuantKind::Int4, "rtx4090");
+    timed.n_lanes = 2;
+    timed.lane_policy = LanePolicy::Pinned;
     let mut pipe_engine = {
         let cfg = policy::method("adapmoe", &timed, &profile).expect("cfg");
         Engine::from_artifacts(&dir, cfg).expect("engine")
@@ -124,6 +127,26 @@ fn main() {
     }
     t.print();
     println!("(queue delay = arrived data waiting on compute; stall = compute idle on the link)");
+
+    // Per-lane attribution: lane 0 is pinned to on-demand loads, the rest
+    // carry prefetches — where did the head-of-line cost ride?
+    println!("\n== per-lane attribution (lane 0 reserved for on-demand) ==");
+    let lane_delay = pipe_engine.trace.lane_queue_delay();
+    let mut t = Table::new(&[
+        "lane", "transfers", "on-demand", "prefetch", "busy (ms)", "queue-delay (ms)",
+    ]);
+    for snap in pipe_engine.xfer.lane_snapshots() {
+        t.row(&[
+            format!("{}", snap.lane),
+            format!("{}", snap.transfers),
+            format!("{}", snap.on_demand),
+            format!("{}", snap.prefetch),
+            format!("{:.1}", snap.busy_ms),
+            format!("{:.2}", lane_delay.get(snap.lane).unwrap_or(&0.0) * 1e3),
+        ]);
+    }
+    t.print();
+    println!("(prefetch queue delay is overlap working as intended; on-demand queue delay is waste)");
 }
 
 /// Reconstruct (layer, top2-prob-pair) samples from the probe's α histogram

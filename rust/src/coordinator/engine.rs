@@ -49,7 +49,7 @@ use crate::memory::device_cache::DeviceCache;
 use crate::memory::host_store::{ExpertF32, HostStore};
 use crate::memory::platform::Platform;
 use crate::memory::quant::QuantKind;
-use crate::memory::transfer::{Priority, TransferEngine, TransferHandle};
+use crate::memory::transfer::{LaneConfig, Priority, TransferEngine, TransferHandle};
 use crate::model::config::ModelConfig;
 use crate::model::weights::Weights;
 use crate::runtime::{f32_literal, i32_literal, literal_to_tensor, tensor_to_literal, Runtime};
@@ -83,6 +83,10 @@ pub struct EngineConfig {
     pub n_tiles: usize,
     /// Simulated-time multiplier (1.0 calibrated; 0.0 logic-only tests).
     pub time_scale: f64,
+    /// Comm-lane set: how many parallel transfer streams feed the
+    /// CompletionBoard and how jobs are assigned to them (`--lanes` /
+    /// `--lane-policy`; see docs/transfer-lanes.md).
+    pub lanes: LaneConfig,
     /// DeepSpeed/FlexGen-style baseline: load ALL experts of each layer.
     pub whole_layer: bool,
     /// Worker threads for host-side parallel expert FFNs (see
@@ -217,12 +221,13 @@ impl Engine {
             }
         };
         let cache = Arc::new(DeviceCache::new(allocation));
-        let xfer = TransferEngine::new(
+        let xfer = TransferEngine::with_lanes(
             Arc::clone(&store),
             Arc::clone(&cache),
             ecfg.platform.clone(),
             ecfg.n_tiles,
             ecfg.time_scale,
+            ecfg.lanes.clone(),
         );
 
         let b = ecfg.batch;
@@ -469,6 +474,9 @@ impl Engine {
                 );
                 self.trace.record_layer_stall(layer, outcome.stall_ns);
                 self.trace.record_queue_delay(layer, outcome.queue_delay_ns);
+                for (&lane, &ns) in &outcome.queue_delay_by_lane {
+                    self.trace.record_lane_queue_delay(lane, ns);
+                }
                 self.trace
                     .record_phase(Phase::MoeWait, t_phase.elapsed().as_nanos() as u64);
                 outcome.acc
@@ -528,6 +536,9 @@ impl Engine {
                     acc.add_assign(&parts[e]);
                 }
                 self.trace.record_queue_delay(layer, stats.queue_delay_ns);
+                for (&lane, &ns) in &stats.queue_delay_by_lane {
+                    self.trace.record_lane_queue_delay(lane, ns);
+                }
                 self.trace.record_layer_stall(layer, stats.stall_ns);
                 self.trace
                     .record_phase(Phase::MoeWait, t_phase.elapsed().as_nanos() as u64);

@@ -6,8 +6,11 @@
 //! [`ScheduleMode::TileWise`] — in **arrival order** as announced on the
 //! [`CompletionBoard`], promoting completed experts into the cache and
 //! attributing arrived-but-unconsumed time (queue delay) separately from
-//! true idle waits (stall). Both MoE execution paths share it, so the
-//! fig9 attribution means the same thing everywhere:
+//! true idle waits (stall). Queue delay is additionally split by the comm
+//! **lane** that carried each expert/tile (`TransferHandle::lane`), so a
+//! multi-lane engine's fig9 breakdown shows which lane the head-of-line
+//! cost came from. Both MoE execution paths share it, so the fig9
+//! attribution means the same thing everywhere:
 //!
 //! * the engine's kernel path (engine.rs) passes a consume callback that
 //!   runs the XLA expert kernel on the engine thread (PJRT handles are
@@ -56,6 +59,9 @@ pub struct LayerOutcome {
     /// Time transferred data sat ready before compute consumed it (ns),
     /// summed per expert/tile — the head-of-line-blocking cost.
     pub queue_delay_ns: u64,
+    /// Queue delay split by the comm lane that carried the data, so the
+    /// fig9 breakdown can attribute head-of-line cost per lane.
+    pub queue_delay_by_lane: HashMap<usize, u64>,
     /// Pending experts in the order they were consumed (completion order
     /// for the arrival-order drain, plan order for the serial one).
     pub consumed: Vec<usize>,
@@ -65,6 +71,8 @@ pub struct LayerOutcome {
 pub struct DrainStats {
     pub stall_ns: u64,
     pub queue_delay_ns: u64,
+    /// Queue delay attributed to the lane each expert/tile arrived on.
+    pub queue_delay_by_lane: HashMap<usize, u64>,
     /// Pending experts in consumption (arrival) order.
     pub consumed: Vec<usize>,
 }
@@ -159,7 +167,12 @@ pub fn drain_arrival_order(
         .map(|(e, h)| Pend { expert: *e, handle: Arc::clone(h), tiles: 0, done: false })
         .collect();
 
-    let mut stats = DrainStats { stall_ns: 0, queue_delay_ns: 0, consumed: Vec::new() };
+    let mut stats = DrainStats {
+        stall_ns: 0,
+        queue_delay_ns: 0,
+        queue_delay_by_lane: HashMap::new(),
+        consumed: Vec::new(),
+    };
     let mut remaining = pend.len();
     while remaining > 0 {
         let mut progress = false;
@@ -167,7 +180,9 @@ pub fn drain_arrival_order(
             match mode {
                 ScheduleMode::ExpertWise => {
                     if let Some((wts, at)) = p.handle.try_full() {
-                        stats.queue_delay_ns += since(at);
+                        let d = since(at);
+                        stats.queue_delay_ns += d;
+                        *stats.queue_delay_by_lane.entry(p.handle.lane).or_insert(0) += d;
                         consume(Arrived::Full { expert: p.expert, weights: &wts })?;
                         cache.insert((layer, p.expert), wts);
                         stats.consumed.push(p.expert);
@@ -181,7 +196,9 @@ pub fn drain_arrival_order(
                         let Some((tile, at)) = p.handle.try_tile(p.tiles) else {
                             break;
                         };
-                        stats.queue_delay_ns += since(at);
+                        let d = since(at);
+                        stats.queue_delay_ns += d;
+                        *stats.queue_delay_by_lane.entry(p.handle.lane).or_insert(0) += d;
                         consume(Arrived::Tile {
                             expert: p.expert,
                             index: p.tiles,
@@ -227,6 +244,7 @@ pub fn run_layer_serial(
     let mut acc = Tensor::zeros(x.dims.clone());
     let mut stall_ns = 0u64;
     let mut queue_delay_ns = 0u64;
+    let mut queue_delay_by_lane: HashMap<usize, u64> = HashMap::new();
     let mut consumed = Vec::new();
 
     for (e, wts) in plan.ready_items() {
@@ -239,7 +257,9 @@ pub fn run_layer_serial(
                 let wts = handle.wait_full();
                 stall_ns += t_wait.elapsed().as_nanos() as u64;
                 let (_, at) = handle.try_full().expect("full just landed");
-                queue_delay_ns += since(at);
+                let d = since(at);
+                queue_delay_ns += d;
+                *queue_delay_by_lane.entry(handle.lane).or_insert(0) += d;
                 acc.add_assign(&expert_ffn_host(x, &wts, &coef[e]));
                 cache.insert((plan.layer, e), wts);
             }
@@ -249,7 +269,9 @@ pub fn run_layer_serial(
                     let tile = handle.wait_tile(t);
                     stall_ns += t_wait.elapsed().as_nanos() as u64;
                     let (_, at) = handle.try_tile(t).expect("tile just landed");
-                    queue_delay_ns += since(at);
+                    let d = since(at);
+                    queue_delay_ns += d;
+                    *queue_delay_by_lane.entry(handle.lane).or_insert(0) += d;
                     acc.add_assign(&expert_ffn_host(x, &tile, &coef[e]));
                 }
                 let wts = handle.wait_full(); // already complete
@@ -258,7 +280,7 @@ pub fn run_layer_serial(
         }
         consumed.push(e);
     }
-    LayerOutcome { acc, stall_ns, queue_delay_ns, consumed }
+    LayerOutcome { acc, stall_ns, queue_delay_ns, queue_delay_by_lane, consumed }
 }
 
 /// Completion-driven drain: ready experts fan out across the pool at once;
@@ -366,6 +388,7 @@ pub fn run_layer_parallel(
         acc,
         stall_ns: stats.stall_ns,
         queue_delay_ns: stats.queue_delay_ns,
+        queue_delay_by_lane: stats.queue_delay_by_lane,
         consumed: stats.consumed,
     }
 }

@@ -18,6 +18,7 @@ use crate::coordinator::profile::Profile;
 use crate::coordinator::scheduler::ScheduleMode;
 use crate::memory::platform::Platform;
 use crate::memory::quant::QuantKind;
+use crate::memory::transfer::{LaneConfig, LanePolicy};
 
 /// Shared knobs independent of the serving method.
 #[derive(Clone, Debug)]
@@ -32,6 +33,10 @@ pub struct RunSettings {
     /// Host-FFN worker threads (0 = engine-thread kernel path; see
     /// [`crate::coordinator::executor`]).
     pub compute_workers: usize,
+    /// Parallel comm lanes feeding the CompletionBoard (`--lanes`).
+    pub n_lanes: usize,
+    /// How transfers are assigned to lanes (`--lane-policy`).
+    pub lane_policy: LanePolicy,
 }
 
 impl RunSettings {
@@ -45,6 +50,8 @@ impl RunSettings {
             time_scale: 1.0,
             top_k: 2,
             compute_workers: 0,
+            n_lanes: 1,
+            lane_policy: LanePolicy::RoundRobin,
         }
     }
 }
@@ -78,6 +85,7 @@ pub fn method(name: &str, s: &RunSettings, profile: &Profile) -> Option<EngineCo
         time_scale: s.time_scale,
         whole_layer: false,
         compute_workers: s.compute_workers,
+        lanes: LaneConfig::new(s.n_lanes, s.lane_policy),
     };
     Some(match name {
         // DeepSpeed/FlexGen-style dense offloading: loads every expert of
@@ -181,6 +189,21 @@ mod tests {
         assert_eq!(cfg.schedule, ScheduleMode::TileWise);
         let ng = method("adapmoe-nogate", &settings(), &p).unwrap();
         assert_eq!(ng.gating.name(), "topk");
+    }
+
+    #[test]
+    fn lane_settings_propagate_to_config() {
+        let p = Profile::synthetic(4);
+        let mut s = settings();
+        s.n_lanes = 4;
+        s.lane_policy = LanePolicy::Pinned;
+        let cfg = method("adapmoe", &s, &p).unwrap();
+        assert_eq!(cfg.lanes.count, 4);
+        assert_eq!(cfg.lanes.policy, LanePolicy::Pinned);
+        // defaults stay single-lane round-robin
+        let d = method("adapmoe", &settings(), &p).unwrap();
+        assert_eq!(d.lanes.count, 1);
+        assert_eq!(d.lanes.policy, LanePolicy::RoundRobin);
     }
 
     #[test]

@@ -9,6 +9,14 @@
 //! ([`crate::coordinator::executor`] and the engine's kernel path) drains
 //! the queue either **expert-wise** (whole expert per kernel call) or
 //! **tile-wise** (kernel call per arrived f-tile — Fig. 6(b)).
+//!
+//! Each on-demand load issued here is assigned to one of the transfer
+//! engine's parallel comm lanes by the configured
+//! [`crate::memory::transfer::LanePolicy`] (round-robin /
+//! least-queued-bytes / pinned); the chosen lane rides on the returned
+//! [`TransferHandle`] and queue order is unaffected — the plan's
+//! canonical reduction order is what keeps output bits independent of
+//! which lane lands first (see docs/transfer-lanes.md).
 
 use std::sync::Arc;
 

@@ -53,6 +53,10 @@ pub struct TraceCollector {
     /// Head-of-line cost per layer: time transferred expert/tile data sat
     /// ready before compute consumed it (ns).
     pub queue_delay_ns: Vec<u64>,
+    /// Queue delay split by comm lane (indexed by lane id, grown on
+    /// demand): which lane's arrivals sat waiting on compute. Fig. 9
+    /// pipeline-attribution input for multi-lane engines.
+    pub queue_delay_lane_ns: Vec<u64>,
     /// Whether to collect the Fig. 3 similarity series. Off by default:
     /// it forces the engine to keep a copy of the previous layer's hidden
     /// state every layer, which is pure overhead on the serving path.
@@ -80,6 +84,7 @@ impl TraceCollector {
             stall_ns: 0,
             layer_stall_ns: vec![0; n_layers],
             queue_delay_ns: vec![0; n_layers],
+            queue_delay_lane_ns: Vec::new(),
             collect_similarity: false,
             phase_ns: [0; Phase::COUNT],
             token_latency: Summary::new(),
@@ -154,6 +159,23 @@ impl TraceCollector {
     /// Arrived-but-unconsumed time for one expert/tile of a layer.
     pub fn record_queue_delay(&mut self, layer: usize, ns: u64) {
         self.queue_delay_ns[layer] += ns;
+    }
+
+    /// Queue delay attributed to the comm lane that carried the data.
+    pub fn record_lane_queue_delay(&mut self, lane: usize, ns: u64) {
+        if lane >= self.queue_delay_lane_ns.len() {
+            self.queue_delay_lane_ns.resize(lane + 1, 0);
+        }
+        self.queue_delay_lane_ns[lane] += ns;
+    }
+
+    /// Per-lane queue-delay seconds (index = lane id; empty when the run
+    /// recorded no lane-attributed delay).
+    pub fn lane_queue_delay(&self) -> Vec<f64> {
+        self.queue_delay_lane_ns
+            .iter()
+            .map(|&ns| ns as f64 / 1e9)
+            .collect()
     }
 
     pub fn record_phase(&mut self, phase: Phase, ns: u64) {
@@ -332,5 +354,19 @@ mod tests {
         assert!((attr[0].1 - 1e-3).abs() < 1e-12);
         assert!((attr[1].0 - 0.5e-3).abs() < 1e-12);
         assert!((attr[1].1 - 2e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lane_queue_delay_grows_and_accumulates() {
+        let mut t = TraceCollector::new(2);
+        assert!(t.lane_queue_delay().is_empty());
+        t.record_lane_queue_delay(2, 1_000_000);
+        t.record_lane_queue_delay(0, 500_000);
+        t.record_lane_queue_delay(2, 1_000_000);
+        let lanes = t.lane_queue_delay();
+        assert_eq!(lanes.len(), 3, "vector grows to the highest lane seen");
+        assert!((lanes[0] - 0.5e-3).abs() < 1e-12);
+        assert_eq!(lanes[1], 0.0);
+        assert!((lanes[2] - 2e-3).abs() < 1e-12);
     }
 }

@@ -21,6 +21,7 @@ use adapmoe::coordinator::policy::{self, RunSettings};
 use adapmoe::coordinator::profile::Profile;
 use adapmoe::memory::platform::Platform;
 use adapmoe::memory::quant::QuantKind;
+use adapmoe::memory::transfer::LanePolicy;
 use adapmoe::model::tokenizer::{ByteTokenizer, EvalStream};
 use adapmoe::server::api::{GenerationEvent, GenerationRequest};
 use adapmoe::server::service::InferenceService;
@@ -70,6 +71,9 @@ fn usage() {
            --cache N         total cached experts (default: half of all)\n\
            --batch B         batch bucket (default: 1 generate, 4 serve)\n\
            --time-scale X    simulated-link time multiplier (default: 1.0)\n\
+           --lanes N         parallel comm lanes feeding the completion board (default: 1)\n\
+           --lane-policy P   {} (default: round-robin)\n\
+                             lane semantics: docs/transfer-lanes.md\n\
            --prompt TEXT     (generate) prompt text\n\
            --max-new N       (generate) tokens to generate (default: 64)\n\
            --temperature X   (generate) sampling temperature, 0 = greedy (default: 0)\n\
@@ -82,6 +86,7 @@ fn usage() {
            --budget N        (plan-cache) cache budget in experts",
         policy::METHODS.join("|"),
         Platform::names(),
+        LanePolicy::names().join("|"),
     );
 }
 
@@ -101,15 +106,23 @@ fn build_engine(args: &Args, default_batch: usize) -> Result<Engine> {
         platform,
     );
     settings.time_scale = args.f64_or("time-scale", 1.0);
+    settings.n_lanes = args.usize_or("lanes", 1);
+    if settings.n_lanes == 0 {
+        bail!("--lanes must be >= 1");
+    }
+    settings.lane_policy = LanePolicy::from_name(&args.str_or("lane-policy", "round-robin"))
+        .context("unknown lane policy (see --help)")?;
     let method = args.str_or("method", "adapmoe");
     let ecfg = policy::method(&method, &settings, &profile)
         .with_context(|| format!("unknown method '{method}'"))?;
     eprintln!(
-        "[adapmoe] method={method} platform={} quant={} cache={} batch={}",
+        "[adapmoe] method={method} platform={} quant={} cache={} batch={} lanes={}/{}",
         settings.platform.name,
         settings.quant.name(),
         settings.cache_budget,
-        settings.batch
+        settings.batch,
+        settings.n_lanes,
+        settings.lane_policy.name(),
     );
     Engine::from_artifacts(&dir, ecfg)
 }

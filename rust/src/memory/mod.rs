@@ -1,8 +1,10 @@
 //! The simulated device memory hierarchy (DESIGN.md 'Substitutions'):
 //! [`host_store`] is "CPU memory" holding every expert quantized,
 //! [`device_cache`] is the bounded "GPU memory" expert cache, and
-//! [`transfer`] is the PCIe link + comm stream, paced by a [`platform`]
-//! preset calibrated so per-expert load times match the paper's testbeds.
+//! [`transfer`] is the PCIe link + comm stream**s** — N parallel lanes,
+//! each paced by its own wire clock derived from a [`platform`] preset
+//! calibrated so per-expert load times match the paper's testbeds (lane
+//! semantics: docs/transfer-lanes.md).
 
 pub mod device_cache;
 pub mod host_store;

@@ -1,21 +1,30 @@
-//! Transfer engine: the paper's comm CUDA stream, as a dedicated OS thread.
+//! Transfer engine: the paper's comm CUDA stream(s), as dedicated OS
+//! threads — one per **lane**.
 //!
-//! Implements the COMMSTREAM half of Algorithm 1: a queue of expert-load
-//! jobs, each transferred **tile by tile** (Fig. 6) with per-tile arrival
-//! notification so the compute stream can start consuming an expert before
-//! it has fully arrived. On-demand loads travel in a higher-priority queue
-//! than prefetches.
+//! Implements the COMMSTREAM half of Algorithm 1, generalized from a single
+//! simulated PCIe stream to a [`LaneConfig::count`]-wide set of independent
+//! lanes. Each lane owns its own urgent/prefetch queues and its own
+//! simulated wire clock; a lane-assignment policy ([`LanePolicy`]) decides
+//! which lane a new transfer rides. Jobs are transferred **tile by tile**
+//! (Fig. 6) with per-tile arrival notification so the compute stream can
+//! start consuming an expert before it has fully arrived. On-demand loads
+//! travel in a higher-priority queue than prefetches *within* a lane; the
+//! `Pinned` policy additionally reserves lane 0 for on-demand loads so a
+//! prefetch burst can never delay them (the paper's Fig. 9 stall case).
 //!
 //! The PCIe link is simulated (DESIGN.md 'Substitutions'): each tile does
 //! its *real* work (dequantizing the quantized bytes to f32) and then sleeps
 //! out the remainder of the simulated wire time given by the platform's
-//! calibrated bandwidth. Completed experts are published into the
-//! [`DeviceCache`] and handed to waiters through [`TransferHandle`].
+//! calibrated bandwidth, scaled per lane. Completed experts are published
+//! into the [`DeviceCache`] and handed to waiters through
+//! [`TransferHandle`], which records the lane that carried it.
 //!
 //! Every tile/expert arrival is additionally announced on the engine-wide
-//! [`CompletionBoard`], which lets the compute stream consume work in
-//! **arrival order** (completion-driven execution) rather than blocking on
-//! transfers in plan order — see [`crate::coordinator::executor`].
+//! [`CompletionBoard`] (tagged with its lane), which lets the compute
+//! stream consume work in **arrival order** (completion-driven execution)
+//! rather than blocking on transfers in plan order — see
+//! [`crate::coordinator::executor`]. Lane semantics, policies and the
+//! determinism guarantees are documented in `docs/transfer-lanes.md`.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -24,11 +33,16 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use anyhow::{bail, Result};
+
 use crate::memory::device_cache::DeviceCache;
 use crate::memory::host_store::{ExpertF32, HostStore};
 use crate::memory::platform::Platform;
 use crate::model::ExpertId;
 use crate::tensor::Tensor;
+
+/// Index of a comm lane (0-based).
+pub type LaneId = usize;
 
 /// Priority class of a transfer job.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -39,12 +53,142 @@ pub enum Priority {
     Prefetch,
 }
 
+// ---------------------------------------------------------------------------
+// Lane configuration & policies
+// ---------------------------------------------------------------------------
+
+/// How [`TransferEngine::request`] spreads fresh jobs across lanes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LanePolicy {
+    /// Cycle lanes in order regardless of load.
+    RoundRobin,
+    /// Pick the lane with the fewest assigned-but-unfinished bytes
+    /// (ties break toward the lowest index).
+    LeastQueuedBytes,
+    /// Lane 0 is reserved for on-demand loads; prefetches spread over the
+    /// remaining lanes by least-queued-bytes, so a prefetch burst can never
+    /// sit in front of a load compute is stalling on. Degenerates to a
+    /// single shared lane when `count == 1`.
+    Pinned,
+}
+
+impl LanePolicy {
+    /// Parse a CLI/config name.
+    pub fn from_name(name: &str) -> Option<LanePolicy> {
+        match name {
+            "round-robin" => Some(LanePolicy::RoundRobin),
+            "least-queued" => Some(LanePolicy::LeastQueuedBytes),
+            "pinned" => Some(LanePolicy::Pinned),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LanePolicy::RoundRobin => "round-robin",
+            LanePolicy::LeastQueuedBytes => "least-queued",
+            LanePolicy::Pinned => "pinned",
+        }
+    }
+
+    pub fn names() -> &'static [&'static str] {
+        &["round-robin", "least-queued", "pinned"]
+    }
+}
+
+/// Lane-set shape of a [`TransferEngine`].
+#[derive(Clone, Debug)]
+pub struct LaneConfig {
+    /// Number of parallel comm lanes (threads). Must be >= 1.
+    pub count: usize,
+    pub policy: LanePolicy,
+    /// Per-lane multipliers on the engine's `time_scale` (empty = all 1.0).
+    /// Tests use asymmetric values to force out-of-order arrivals across
+    /// lanes; ops can model an unevenly shared physical link.
+    pub time_scales: Vec<f64>,
+}
+
+impl Default for LaneConfig {
+    fn default() -> LaneConfig {
+        LaneConfig { count: 1, policy: LanePolicy::RoundRobin, time_scales: Vec::new() }
+    }
+}
+
+impl LaneConfig {
+    pub fn new(count: usize, policy: LanePolicy) -> LaneConfig {
+        LaneConfig { count, policy, time_scales: Vec::new() }
+    }
+
+    /// Builder: per-lane wire-clock multipliers (len must equal `count`).
+    pub fn with_time_scales(mut self, scales: Vec<f64>) -> LaneConfig {
+        self.time_scales = scales;
+        self
+    }
+}
+
+/// Per-lane counters (atomics: written by the lane thread, read anywhere).
+#[derive(Default)]
+pub struct LaneStats {
+    pub transfers: AtomicU64,
+    pub bytes: AtomicU64,
+    pub on_demand: AtomicU64,
+    pub prefetch: AtomicU64,
+    pub sim_busy_ns: AtomicU64,
+    pub skipped_cached: AtomicU64,
+    /// Bytes assigned to this lane and not yet finished/skipped — the
+    /// load signal the `LeastQueuedBytes` / `Pinned` policies balance on.
+    pub queued_bytes: AtomicU64,
+    /// Jobs assigned and not yet finished/skipped.
+    pub queued_jobs: AtomicU64,
+}
+
+/// Point-in-time copy of one lane's counters, for `ServerStats` / benches.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LaneSnapshot {
+    pub lane: LaneId,
+    pub transfers: u64,
+    pub bytes: u64,
+    pub on_demand: u64,
+    pub prefetch: u64,
+    /// Simulated wire time this lane has been busy (ms).
+    pub busy_ms: f64,
+    pub queued_bytes: u64,
+    pub queued_jobs: u64,
+}
+
+impl LaneStats {
+    fn snapshot(&self, lane: LaneId) -> LaneSnapshot {
+        LaneSnapshot {
+            lane,
+            transfers: self.transfers.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            on_demand: self.on_demand.load(Ordering::Relaxed),
+            prefetch: self.prefetch.load(Ordering::Relaxed),
+            busy_ms: self.sim_busy_ns.load(Ordering::Relaxed) as f64 / 1e6,
+            queued_bytes: self.queued_bytes.load(Ordering::Relaxed),
+            queued_jobs: self.queued_jobs.load(Ordering::Relaxed),
+        }
+    }
+
+    fn enqueue(&self, bytes: u64) {
+        self.queued_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.queued_jobs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn dequeue(&self, bytes: u64) {
+        self.queued_bytes.fetch_sub(bytes, Ordering::Relaxed);
+        self.queued_jobs.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
 /// Shared state of one in-flight expert transfer.
 pub struct TransferHandle {
     state: Mutex<HandleState>,
     cond: Condvar,
     pub id: ExpertId,
     pub n_tiles: usize,
+    /// The comm lane this transfer was assigned to.
+    pub lane: LaneId,
 }
 
 struct HandleState {
@@ -57,7 +201,7 @@ struct HandleState {
 }
 
 impl TransferHandle {
-    fn new(id: ExpertId, n_tiles: usize) -> TransferHandle {
+    fn new(id: ExpertId, n_tiles: usize, lane: LaneId) -> TransferHandle {
         TransferHandle {
             state: Mutex::new(HandleState {
                 tiles: vec![None; n_tiles],
@@ -69,6 +213,7 @@ impl TransferHandle {
             cond: Condvar::new(),
             id,
             n_tiles,
+            lane,
         }
     }
 
@@ -146,19 +291,22 @@ pub enum CompletionKind {
     Full,
 }
 
-/// One arrival notification published by the comm thread.
+/// One arrival notification published by a comm lane.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CompletionEvent {
     pub id: ExpertId,
     pub kind: CompletionKind,
+    /// Which lane carried the data (per-lane queue-delay attribution).
+    pub lane: LaneId,
 }
 
 /// Bounded arrival-order queue of completion events, the compute stream's
 /// wait target. Instead of blocking on expert *i* while expert *i+1* has
 /// already landed (head-of-line blocking), the executor parks here and is
-/// woken by whichever transfer finishes first. Events are hints: consumers
-/// must re-check [`TransferHandle`] state after waking, so the bounded drop
-/// of old events (and a timeout on waits) can never lose work.
+/// woken by whichever transfer — on whichever lane — finishes first. Events
+/// are hints: consumers must re-check [`TransferHandle`] state after waking,
+/// so the bounded drop of old events (and a timeout on waits) can never
+/// lose work.
 pub struct CompletionBoard {
     q: Mutex<std::collections::VecDeque<CompletionEvent>>,
     cv: Condvar,
@@ -220,7 +368,7 @@ struct Job {
     priority: Priority,
 }
 
-/// Counters exported to benches/metrics.
+/// Engine-wide counters (aggregate across lanes) exported to benches/metrics.
 #[derive(Default)]
 pub struct TransferStats {
     pub transfers: AtomicU64,
@@ -277,11 +425,11 @@ impl Staging {
     }
 }
 
-/// In-flight transfer registry shared by the compute and comm threads.
-/// The Condvar signals every removal so [`TransferEngine::quiesce`] can
-/// sleep instead of poll.
+/// In-flight transfer registry shared by the compute thread and every comm
+/// lane: id → (owning lane, handle). The Condvar signals every removal so
+/// [`TransferEngine::quiesce`] can sleep instead of poll.
 struct InFlight {
-    map: Mutex<HashMap<ExpertId, Arc<TransferHandle>>>,
+    map: Mutex<HashMap<ExpertId, (LaneId, Arc<TransferHandle>)>>,
     drained: Condvar,
 }
 
@@ -291,7 +439,7 @@ impl InFlight {
     }
 
     fn get(&self, id: ExpertId) -> Option<Arc<TransferHandle>> {
-        self.map.lock().unwrap().get(&id).cloned()
+        self.map.lock().unwrap().get(&id).map(|(_, h)| Arc::clone(h))
     }
 
     fn remove(&self, id: ExpertId) {
@@ -302,40 +450,49 @@ impl InFlight {
     fn len(&self) -> usize {
         self.map.lock().unwrap().len()
     }
-
-    fn wait_empty(&self) {
-        let mut g = self.map.lock().unwrap();
-        while !g.is_empty() {
-            // Timeout only as a backstop against a dead comm thread.
-            let (ng, _) = self
-                .drained
-                .wait_timeout(g, Duration::from_millis(50))
-                .unwrap();
-            g = ng;
-        }
-    }
 }
 
-pub struct TransferEngine {
+/// Engine-side endpoints of one comm lane.
+struct Lane {
     urgent_tx: Sender<Job>,
     prefetch_tx: Sender<Job>,
     wake_tx: Sender<()>,
     worker: Option<JoinHandle<()>>,
-    in_flight: Arc<InFlight>,
-    /// Prefetch jobs the compute stream is now blocked on — the comm loop
-    /// lifts these to the urgent queue (CUDA-stream-priority analogue).
+    /// Prefetch jobs the compute stream is now blocked on — this lane's
+    /// comm loop lifts them to its urgent queue (CUDA-stream-priority
+    /// analogue). Promotion cannot move a job across lanes.
     promotions: Arc<Mutex<std::collections::HashSet<ExpertId>>>,
+    /// Fault injection: stop this lane's worker without draining (tests /
+    /// ops drills for [`TransferEngine::quiesce_for`]'s dead-lane report).
+    halt: Arc<AtomicBool>,
+    stats: Arc<LaneStats>,
+}
+
+/// Default backstop for [`TransferEngine::quiesce`]: far above any sane
+/// in-flight drain, so hitting it means a lane is wedged, not slow.
+const QUIESCE_BACKSTOP: Duration = Duration::from_secs(30);
+
+pub struct TransferEngine {
+    lanes: Vec<Lane>,
+    policy: LanePolicy,
+    /// Round-robin cursor.
+    rr: AtomicU64,
+    store: Arc<HostStore>,
+    in_flight: Arc<InFlight>,
+    /// Aggregate counters across lanes.
     pub stats: Arc<TransferStats>,
     pub staging: Arc<Staging>,
-    /// Arrival notifications, consumed by the completion-driven executor.
+    /// Arrival notifications from every lane, consumed by the
+    /// completion-driven executor.
     pub completions: Arc<CompletionBoard>,
     pub n_tiles: usize,
     shutdown: Arc<AtomicBool>,
 }
 
 impl TransferEngine {
-    /// Spawn the comm thread. `time_scale` multiplies simulated wire time
-    /// (1.0 = calibrated; tests use 0.0 for logic-only runs).
+    /// Spawn a single-lane engine (the historical shape; most tests and
+    /// baselines). `time_scale` multiplies simulated wire time (1.0 =
+    /// calibrated; tests use 0.0 for logic-only runs).
     pub fn new(
         store: Arc<HostStore>,
         cache: Arc<DeviceCache>,
@@ -343,54 +500,84 @@ impl TransferEngine {
         n_tiles: usize,
         time_scale: f64,
     ) -> TransferEngine {
+        Self::with_lanes(store, cache, platform, n_tiles, time_scale, LaneConfig::default())
+    }
+
+    /// Spawn `lanes.count` comm threads, each with its own queues and wire
+    /// clock, all publishing to one shared board/staging/cache.
+    pub fn with_lanes(
+        store: Arc<HostStore>,
+        cache: Arc<DeviceCache>,
+        platform: Platform,
+        n_tiles: usize,
+        time_scale: f64,
+        lanes: LaneConfig,
+    ) -> TransferEngine {
         assert!(n_tiles >= 1);
-        let (urgent_tx, urgent_rx) = channel::<Job>();
-        let (prefetch_tx, prefetch_rx) = channel::<Job>();
-        let (wake_tx, wake_rx) = channel::<()>();
+        assert!(lanes.count >= 1, "need at least one comm lane");
+        assert!(
+            lanes.time_scales.is_empty() || lanes.time_scales.len() == lanes.count,
+            "lane time_scales must be empty or match lane count"
+        );
         let in_flight = Arc::new(InFlight::new());
         let stats = Arc::new(TransferStats::default());
         let staging = Arc::new(Staging::new(4 * store.n_experts));
-        let promotions = Arc::new(Mutex::new(std::collections::HashSet::new()));
         let completions = Arc::new(CompletionBoard::new());
         let shutdown = Arc::new(AtomicBool::new(false));
 
-        let worker = {
-            let in_flight = Arc::clone(&in_flight);
-            let stats = Arc::clone(&stats);
-            let staging = Arc::clone(&staging);
-            let promotions = Arc::clone(&promotions);
-            let completions = Arc::clone(&completions);
-            let shutdown = Arc::clone(&shutdown);
-            std::thread::Builder::new()
-                .name("adapmoe-comm".into())
-                .spawn(move || {
-                    comm_loop(CommCtx {
-                        store,
-                        cache,
-                        platform,
+        let lane_set: Vec<Lane> = (0..lanes.count)
+            .map(|lane_id| {
+                let (urgent_tx, urgent_rx) = channel::<Job>();
+                let (prefetch_tx, prefetch_rx) = channel::<Job>();
+                let (wake_tx, wake_rx) = channel::<()>();
+                let promotions = Arc::new(Mutex::new(std::collections::HashSet::new()));
+                let halt = Arc::new(AtomicBool::new(false));
+                let lane_stats = Arc::new(LaneStats::default());
+                let scale =
+                    time_scale * lanes.time_scales.get(lane_id).copied().unwrap_or(1.0);
+                let worker = {
+                    let ctx = CommCtx {
+                        lane: lane_id,
+                        store: Arc::clone(&store),
+                        cache: Arc::clone(&cache),
+                        platform: platform.clone(),
                         n_tiles,
-                        time_scale,
+                        time_scale: scale,
                         urgent_rx,
                         prefetch_rx,
                         wake_rx,
-                        in_flight,
-                        stats,
-                        staging,
-                        promotions,
-                        completions,
-                        shutdown,
-                    })
-                })
-                .expect("spawn comm thread")
-        };
+                        in_flight: Arc::clone(&in_flight),
+                        stats: Arc::clone(&stats),
+                        lane_stats: Arc::clone(&lane_stats),
+                        staging: Arc::clone(&staging),
+                        promotions: Arc::clone(&promotions),
+                        completions: Arc::clone(&completions),
+                        shutdown: Arc::clone(&shutdown),
+                        halt: Arc::clone(&halt),
+                    };
+                    std::thread::Builder::new()
+                        .name(format!("adapmoe-comm-{lane_id}"))
+                        .spawn(move || comm_loop(ctx))
+                        .expect("spawn comm lane thread")
+                };
+                Lane {
+                    urgent_tx,
+                    prefetch_tx,
+                    wake_tx,
+                    worker: Some(worker),
+                    promotions,
+                    halt,
+                    stats: lane_stats,
+                }
+            })
+            .collect();
 
         TransferEngine {
-            urgent_tx,
-            prefetch_tx,
-            wake_tx,
-            worker: Some(worker),
+            lanes: lane_set,
+            policy: lanes.policy,
+            rr: AtomicU64::new(0),
+            store,
             in_flight,
-            promotions,
             stats,
             staging,
             completions,
@@ -399,29 +586,88 @@ impl TransferEngine {
         }
     }
 
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn lane_policy(&self) -> LanePolicy {
+        self.policy
+    }
+
+    /// Point-in-time per-lane counters (stable lane order).
+    pub fn lane_snapshots(&self) -> Vec<LaneSnapshot> {
+        self.lanes
+            .iter()
+            .enumerate()
+            .map(|(i, l)| l.stats.snapshot(i))
+            .collect()
+    }
+
+    /// Which lane an in-flight transfer rides, if any.
+    pub fn lane_of(&self, id: ExpertId) -> Option<LaneId> {
+        self.in_flight.map.lock().unwrap().get(&id).map(|(l, _)| *l)
+    }
+
+    /// Assign a fresh job to a lane under the configured policy.
+    fn assign_lane(&self, priority: Priority) -> LaneId {
+        let n = self.lanes.len();
+        if n == 1 {
+            return 0;
+        }
+        let least_queued = |range: std::ops::Range<usize>| -> LaneId {
+            range
+                .min_by_key(|&i| {
+                    (self.lanes[i].stats.queued_bytes.load(Ordering::Relaxed), i)
+                })
+                .expect("non-empty lane range")
+        };
+        match self.policy {
+            LanePolicy::RoundRobin => {
+                (self.rr.fetch_add(1, Ordering::Relaxed) as usize) % n
+            }
+            LanePolicy::LeastQueuedBytes => least_queued(0..n),
+            LanePolicy::Pinned => match priority {
+                Priority::OnDemand => 0,
+                Priority::Prefetch => least_queued(1..n),
+            },
+        }
+    }
+
     /// Enqueue a load (idempotent: joins an in-flight transfer if any; an
     /// on-demand request for an in-flight *prefetch* promotes it to the
-    /// urgent queue).
+    /// urgent queue of the lane that owns it).
     pub fn request(&self, id: ExpertId, priority: Priority) -> Arc<TransferHandle> {
         let mut g = self.in_flight.map.lock().unwrap();
-        if let Some(h) = g.get(&id) {
-            let h = Arc::clone(h);
+        if let Some((lane, h)) = g.get(&id) {
+            let (lane, h) = (*lane, Arc::clone(h));
             drop(g);
             if priority == Priority::OnDemand {
-                self.promotions.lock().unwrap().insert(id);
-                let _ = self.wake_tx.send(());
+                self.lanes[lane].promotions.lock().unwrap().insert(id);
+                let _ = self.lanes[lane].wake_tx.send(());
             }
             return h;
         }
-        let handle = Arc::new(TransferHandle::new(id, self.n_tiles));
-        g.insert(id, Arc::clone(&handle));
+        let lane = self.assign_lane(priority);
+        let handle = Arc::new(TransferHandle::new(id, self.n_tiles, lane));
+        g.insert(id, (lane, Arc::clone(&handle)));
         drop(g);
+        // Queued-load accounting uses the same byte figure the lane thread
+        // will subtract on completion, so it drains back to exactly zero.
+        self.lanes[lane]
+            .stats
+            .enqueue(self.store.expert_transfer_bytes(id) as u64);
         let job = Job { id, handle: Arc::clone(&handle), priority };
-        match priority {
-            Priority::OnDemand => self.urgent_tx.send(job).expect("comm thread alive"),
-            Priority::Prefetch => self.prefetch_tx.send(job).expect("comm thread alive"),
-        }
-        let _ = self.wake_tx.send(());
+        let l = &self.lanes[lane];
+        // A dead lane (halt_lane fault injection, or a crashed worker) has
+        // dropped its receivers, so the send fails. Don't panic the
+        // requester: leave the job in the in-flight registry as a stranded
+        // transfer — waiters block on the handle and quiesce_for() reports
+        // the lane per its dead-lane diagnostics.
+        let _ = match priority {
+            Priority::OnDemand => l.urgent_tx.send(job),
+            Priority::Prefetch => l.prefetch_tx.send(job),
+        };
+        let _ = l.wake_tx.send(());
         handle
     }
 
@@ -441,38 +687,113 @@ impl TransferEngine {
         self.in_flight.len()
     }
 
-    /// Block until the queue drains (tests / end-of-run barrier). Sleeps on
-    /// the in-flight map's Condvar; woken by every completed transfer.
+    /// Fault injection: stop one lane's worker thread without draining its
+    /// queue. In-flight jobs on that lane are stranded — exactly the
+    /// condition [`TransferEngine::quiesce_for`] must report per lane.
+    pub fn halt_lane(&self, lane: LaneId) {
+        assert!(lane < self.lanes.len(), "lane {lane} out of range");
+        self.lanes[lane].halt.store(true, Ordering::SeqCst);
+        let _ = self.lanes[lane].wake_tx.send(());
+    }
+
+    /// Block until every lane drains (tests / end-of-run barrier). Sleeps
+    /// on the in-flight map's Condvar; woken by every completed transfer.
+    /// Panics with the per-lane diagnostic if a lane is dead or the
+    /// backstop elapses — a silent hang would hide which lane wedged.
     pub fn quiesce(&self) {
-        self.in_flight.wait_empty();
+        if let Err(e) = self.quiesce_for(QUIESCE_BACKSTOP) {
+            panic!("{e:#}");
+        }
+    }
+
+    /// [`TransferEngine::quiesce`] with an explicit backstop. Fails fast —
+    /// without waiting out the backstop — when a lane's worker has exited
+    /// while transfers assigned to it are still in flight, and names every
+    /// lane with pending work (count + liveness) in the error, so a single
+    /// dead lane surfaces as a per-lane report instead of a global timeout.
+    pub fn quiesce_for(&self, backstop: Duration) -> Result<()> {
+        let deadline = Instant::now() + backstop;
+        let mut g = self.in_flight.map.lock().unwrap();
+        loop {
+            if g.is_empty() {
+                return Ok(());
+            }
+            let mut pending = vec![0usize; self.lanes.len()];
+            for (lane, _) in g.values() {
+                pending[*lane] += 1;
+            }
+            let report: Vec<(LaneId, usize, bool)> = self
+                .lanes
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| pending[*i] > 0)
+                .map(|(i, l)| {
+                    let alive =
+                        l.worker.as_ref().map(|w| !w.is_finished()).unwrap_or(false);
+                    (i, pending[i], alive)
+                })
+                .collect();
+            let dead = report.iter().any(|(_, _, alive)| !alive);
+            if dead || Instant::now() >= deadline {
+                let detail: Vec<String> = report
+                    .iter()
+                    .map(|(i, n, alive)| {
+                        format!(
+                            "lane {i}: {n} in-flight, worker {}",
+                            if *alive { "alive" } else { "DEAD" }
+                        )
+                    })
+                    .collect();
+                bail!(
+                    "transfer quiesce failed ({}): {}",
+                    if dead { "dead lane" } else { "backstop elapsed" },
+                    detail.join("; ")
+                );
+            }
+            // Timeout only as a backstop so dead lanes are re-checked.
+            let (ng, _) = self
+                .in_flight
+                .drained
+                .wait_timeout(g, Duration::from_millis(50))
+                .unwrap();
+            g = ng;
+        }
     }
 }
 
 impl Drop for TransferEngine {
     fn drop(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        let _ = self.wake_tx.send(());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        for lane in &mut self.lanes {
+            let _ = lane.wake_tx.send(());
+        }
+        for lane in &mut self.lanes {
+            if let Some(w) = lane.worker.take() {
+                let _ = w.join();
+            }
         }
     }
 }
 
 struct CommCtx {
+    lane: LaneId,
     store: Arc<HostStore>,
     cache: Arc<DeviceCache>,
     platform: Platform,
     n_tiles: usize,
+    /// Engine time_scale × this lane's multiplier.
     time_scale: f64,
     urgent_rx: std::sync::mpsc::Receiver<Job>,
     prefetch_rx: std::sync::mpsc::Receiver<Job>,
     wake_rx: std::sync::mpsc::Receiver<()>,
     in_flight: Arc<InFlight>,
     stats: Arc<TransferStats>,
+    lane_stats: Arc<LaneStats>,
     staging: Arc<Staging>,
     promotions: Arc<Mutex<std::collections::HashSet<ExpertId>>>,
     completions: Arc<CompletionBoard>,
     shutdown: Arc<AtomicBool>,
+    halt: Arc<AtomicBool>,
 }
 
 /// An in-progress transfer (tiles published so far).
@@ -484,17 +805,18 @@ struct Active {
     bytes: usize,
 }
 
-/// The comm stream. The unit of work is one *tile*: after every tile the
+/// One comm lane. The unit of work is one *tile*: after every tile the
 /// loop re-checks the urgent queue, so an on-demand load preempts an
 /// in-progress prefetch within one tile's wire time (the tile-wise
 /// scheduling of §5 applied to the link itself, like CUDA stream priority
 /// at copy-chunk granularity). Preempted prefetches resume afterwards.
+/// Preemption is per lane: lanes never steal each other's jobs.
 fn comm_loop(ctx: CommCtx) {
     let mut urgent: Vec<Active> = Vec::new();
     let mut background: Vec<Active> = Vec::new();
 
     loop {
-        if ctx.shutdown.load(Ordering::SeqCst) {
+        if ctx.shutdown.load(Ordering::SeqCst) || ctx.halt.load(Ordering::SeqCst) {
             break;
         }
         // Drain newly arrived jobs.
@@ -556,16 +878,25 @@ fn admit(ctx: &CommCtx, job: Job) -> Option<Active> {
             .unwrap_or_else(|| Arc::new(ctx.store.dequantize(job.id)));
         for t in 0..ctx.n_tiles {
             job.handle.publish_tile(t, Arc::clone(&full));
-            ctx.completions
-                .push(CompletionEvent { id: job.id, kind: CompletionKind::Tile(t) });
+            ctx.completions.push(CompletionEvent {
+                id: job.id,
+                kind: CompletionKind::Tile(t),
+                lane: ctx.lane,
+            });
         }
         job.handle.publish_full(full);
         // event before the in-flight removal: quiesce() returning must imply
         // every completion event is already on the board
-        ctx.completions
-            .push(CompletionEvent { id: job.id, kind: CompletionKind::Full });
+        ctx.completions.push(CompletionEvent {
+            id: job.id,
+            kind: CompletionKind::Full,
+            lane: ctx.lane,
+        });
+        ctx.lane_stats
+            .dequeue(ctx.store.expert_transfer_bytes(job.id) as u64);
         ctx.in_flight.remove(job.id);
         ctx.stats.skipped_cached.fetch_add(1, Ordering::Relaxed);
+        ctx.lane_stats.skipped_cached.fetch_add(1, Ordering::Relaxed);
         return None;
     }
     let q = ctx.store.get(job.id);
@@ -596,12 +927,15 @@ fn transfer_tile(ctx: &CommCtx, a: &mut Active) -> bool {
     if a.tile_time > elapsed {
         std::thread::sleep(Duration::from_secs_f64(a.tile_time - elapsed));
     }
-    ctx.stats
-        .sim_busy_ns
-        .fetch_add((a.tile_time.max(elapsed) * 1e9) as u64, Ordering::Relaxed);
+    let busy = (a.tile_time.max(elapsed) * 1e9) as u64;
+    ctx.stats.sim_busy_ns.fetch_add(busy, Ordering::Relaxed);
+    ctx.lane_stats.sim_busy_ns.fetch_add(busy, Ordering::Relaxed);
     a.job.handle.publish_tile(t, Arc::clone(&tile));
-    ctx.completions
-        .push(CompletionEvent { id: a.job.id, kind: CompletionKind::Tile(t) });
+    ctx.completions.push(CompletionEvent {
+        id: a.job.id,
+        kind: CompletionKind::Tile(t),
+        lane: ctx.lane,
+    });
     a.tiles.push(tile);
     a.next_tile += 1;
     a.next_tile == ctx.n_tiles
@@ -628,15 +962,28 @@ fn finish(ctx: &CommCtx, a: Active) {
     a.job.handle.publish_full(full);
     // event before the in-flight removal (see admit): quiesce() implies all
     // completion events are published
-    ctx.completions
-        .push(CompletionEvent { id: a.job.id, kind: CompletionKind::Full });
+    ctx.completions.push(CompletionEvent {
+        id: a.job.id,
+        kind: CompletionKind::Full,
+        lane: ctx.lane,
+    });
+    ctx.lane_stats
+        .dequeue(ctx.store.expert_transfer_bytes(a.job.id) as u64);
     ctx.in_flight.remove(a.job.id);
 
     ctx.stats.transfers.fetch_add(1, Ordering::Relaxed);
     ctx.stats.bytes.fetch_add(a.bytes as u64, Ordering::Relaxed);
+    ctx.lane_stats.transfers.fetch_add(1, Ordering::Relaxed);
+    ctx.lane_stats.bytes.fetch_add(a.bytes as u64, Ordering::Relaxed);
     match a.job.priority {
-        Priority::OnDemand => ctx.stats.on_demand.fetch_add(1, Ordering::Relaxed),
-        Priority::Prefetch => ctx.stats.prefetch.fetch_add(1, Ordering::Relaxed),
+        Priority::OnDemand => {
+            ctx.stats.on_demand.fetch_add(1, Ordering::Relaxed);
+            ctx.lane_stats.on_demand.fetch_add(1, Ordering::Relaxed);
+        }
+        Priority::Prefetch => {
+            ctx.stats.prefetch.fetch_add(1, Ordering::Relaxed);
+            ctx.lane_stats.prefetch.fetch_add(1, Ordering::Relaxed);
+        }
     };
 }
 
@@ -671,16 +1018,27 @@ mod tests {
 
     fn setup(kind: QuantKind, alloc: Vec<usize>, platform: &str, scale: f64)
         -> (Arc<HostStore>, Arc<DeviceCache>, TransferEngine) {
+        setup_lanes(kind, alloc, platform, scale, LaneConfig::default())
+    }
+
+    fn setup_lanes(
+        kind: QuantKind,
+        alloc: Vec<usize>,
+        platform: &str,
+        scale: f64,
+        lanes: LaneConfig,
+    ) -> (Arc<HostStore>, Arc<DeviceCache>, TransferEngine) {
         let cfg = test_config();
         let w = fake_weights(&cfg, 7);
         let store = Arc::new(HostStore::build(&cfg, &w, kind).unwrap());
         let cache = Arc::new(DeviceCache::new(alloc));
-        let engine = TransferEngine::new(
+        let engine = TransferEngine::with_lanes(
             Arc::clone(&store),
             Arc::clone(&cache),
             Platform::preset(platform).unwrap(),
             4,
             scale,
+            lanes,
         );
         (store, cache, engine)
     }
@@ -837,6 +1195,8 @@ mod tests {
         assert!(seen[5..].iter().all(|e| e.id == (0, 5)));
         assert_eq!(seen[4].kind, CompletionKind::Full);
         assert_eq!(seen[9].kind, CompletionKind::Full);
+        // single-lane engine: every event carries lane 0
+        assert!(seen.iter().all(|e| e.lane == 0));
         assert!(engine.completions.is_empty());
     }
 
@@ -852,7 +1212,7 @@ mod tests {
             assert!(h.try_tile(t).is_some(), "tile {t} landed");
         }
         // a fresh handle has nothing available
-        let h2 = TransferHandle::new((9, 9), 4);
+        let h2 = TransferHandle::new((9, 9), 4, 0);
         assert!(h2.try_full().is_none());
         assert!(h2.try_tile(0).is_none());
     }
@@ -877,7 +1237,7 @@ mod tests {
     fn board_is_bounded() {
         let board = CompletionBoard::new();
         for i in 0..(BOARD_CAP + 10) {
-            board.push(CompletionEvent { id: (0, i), kind: CompletionKind::Full });
+            board.push(CompletionEvent { id: (0, i), kind: CompletionKind::Full, lane: 0 });
         }
         assert_eq!(board.len(), BOARD_CAP);
         // oldest events were dropped
@@ -897,5 +1257,188 @@ mod tests {
         let (_store, _cache, engine) = setup(QuantKind::F32, vec![4, 4], "instant", 0.0);
         engine.request((0, 0), Priority::OnDemand).wait_full();
         drop(engine); // must join without hanging
+    }
+
+    // -- multi-lane -----------------------------------------------------------
+
+    #[test]
+    fn round_robin_cycles_lanes() {
+        let (_store, _cache, engine) = setup_lanes(
+            QuantKind::F32,
+            vec![8, 8],
+            "instant",
+            0.0,
+            LaneConfig::new(2, LanePolicy::RoundRobin),
+        );
+        assert_eq!(engine.n_lanes(), 2);
+        let lanes: Vec<LaneId> = (0..4)
+            .map(|e| engine.request((0, e), Priority::OnDemand).lane)
+            .collect();
+        assert_eq!(lanes, vec![0, 1, 0, 1]);
+        engine.quiesce();
+        let snaps = engine.lane_snapshots();
+        assert_eq!(snaps[0].transfers, 2);
+        assert_eq!(snaps[1].transfers, 2);
+        assert!(snaps.iter().all(|s| s.queued_bytes == 0 && s.queued_jobs == 0));
+    }
+
+    #[test]
+    fn least_queued_bytes_prefers_idle_lane() {
+        // Slow link: the first job keeps lane 0 loaded, so the second must
+        // be assigned to the (empty) lane 1.
+        let (_store, _cache, engine) = setup_lanes(
+            QuantKind::Int4,
+            vec![8, 8],
+            "rtx4090",
+            1.0,
+            LaneConfig::new(2, LanePolicy::LeastQueuedBytes),
+        );
+        let a = engine.request((0, 0), Priority::OnDemand);
+        let b = engine.request((0, 1), Priority::OnDemand);
+        assert_eq!(a.lane, 0, "tie breaks toward the lowest lane");
+        assert_eq!(b.lane, 1, "loaded lane 0 must be avoided");
+        engine.quiesce();
+    }
+
+    #[test]
+    fn pinned_reserves_lane_zero_for_on_demand() {
+        let (_store, _cache, engine) = setup_lanes(
+            QuantKind::F32,
+            vec![8, 8],
+            "instant",
+            0.0,
+            LaneConfig::new(3, LanePolicy::Pinned),
+        );
+        let od = engine.request((0, 0), Priority::OnDemand);
+        assert_eq!(od.lane, 0);
+        for e in 1..6 {
+            let h = engine.request((0, e), Priority::Prefetch);
+            assert_ne!(h.lane, 0, "prefetch must never ride the reserved lane");
+        }
+        engine.quiesce();
+        let snaps = engine.lane_snapshots();
+        assert_eq!(snaps[0].prefetch, 0, "reserved lane carried no prefetch");
+        assert_eq!(snaps[0].on_demand, 1);
+        assert_eq!(snaps[1].on_demand + snaps[2].on_demand, 0);
+    }
+
+    #[test]
+    fn per_lane_wire_clocks_are_independent() {
+        // Lane 1 runs at 0× wire time: a job there must finish while the
+        // earlier job on slow lane 0 is still in flight.
+        let (_store, _cache, engine) = setup_lanes(
+            QuantKind::Int4,
+            vec![8, 8],
+            "rtx4090",
+            1.0,
+            LaneConfig::new(2, LanePolicy::RoundRobin).with_time_scales(vec![1.0, 0.0]),
+        );
+        let slow = engine.request((0, 0), Priority::OnDemand); // lane 0
+        let fast = engine.request((0, 1), Priority::OnDemand); // lane 1
+        assert_eq!((slow.lane, fast.lane), (0, 1));
+        fast.wait_full();
+        assert!(
+            !slow.is_complete(),
+            "fast lane must complete while the slow lane still transfers"
+        );
+        slow.wait_full();
+        engine.quiesce();
+    }
+
+    #[test]
+    fn quiesce_reports_dead_lane_not_global_timeout() {
+        // Lane 1 is slowed 10× then halted mid-transfer: quiesce_for must
+        // fail fast with a per-lane report instead of waiting out the
+        // backstop or hanging.
+        let (_store, _cache, engine) = setup_lanes(
+            QuantKind::Int4,
+            vec![8, 8],
+            "rtx4090",
+            1.0,
+            LaneConfig::new(2, LanePolicy::RoundRobin).with_time_scales(vec![1.0, 10.0]),
+        );
+        let a = engine.request((0, 0), Priority::OnDemand); // lane 0, drains
+        let _b = engine.request((0, 1), Priority::OnDemand); // lane 1, doomed
+        a.wait_full(); // lane 0 empty before the fault so only lane 1 is blamed
+        while engine.lane_of((0, 0)).is_some() {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        engine.halt_lane(1);
+        let t0 = Instant::now();
+        let err = engine
+            .quiesce_for(Duration::from_secs(10))
+            .expect_err("dead lane must surface");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("lane 1"), "error must name the lane: {msg}");
+        assert!(msg.contains("DEAD"), "error must flag the dead worker: {msg}");
+        assert!(!msg.contains("lane 0"), "drained lane must not be blamed: {msg}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(8),
+            "dead lane must fail fast, not wait out the backstop"
+        );
+    }
+
+    #[test]
+    fn quiesce_backstop_reports_per_lane_pending() {
+        // A lane that is alive but far too slow hits the backstop path and
+        // still gets a per-lane report.
+        let (_store, _cache, engine) = setup_lanes(
+            QuantKind::Int4,
+            vec![8, 8],
+            "rtx4090",
+            1.0,
+            LaneConfig::new(2, LanePolicy::RoundRobin).with_time_scales(vec![0.0, 400.0]),
+        );
+        let _fast = engine.request((0, 0), Priority::OnDemand);
+        let _slow = engine.request((0, 1), Priority::OnDemand);
+        let err = engine
+            .quiesce_for(Duration::from_millis(120))
+            .expect_err("backstop must elapse");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("backstop elapsed"), "{msg}");
+        assert!(msg.contains("lane 1: 1 in-flight"), "{msg}");
+        // full drain afterwards keeps the engine usable
+        engine.quiesce_for(Duration::from_secs(30)).unwrap();
+    }
+
+    #[test]
+    fn request_to_halted_lane_strands_instead_of_panicking() {
+        // Pinned policy routes every on-demand job to lane 0; killing that
+        // lane first means the send must fail. The request must not panic —
+        // the job strands in the in-flight registry and quiesce_for names
+        // the dead lane.
+        let (_store, _cache, engine) = setup_lanes(
+            QuantKind::F32,
+            vec![8, 8],
+            "instant",
+            0.0,
+            LaneConfig::new(2, LanePolicy::Pinned),
+        );
+        engine.halt_lane(0);
+        while engine.lanes[0]
+            .worker
+            .as_ref()
+            .map(|w| !w.is_finished())
+            .unwrap_or(false)
+        {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let h = engine.request((0, 0), Priority::OnDemand);
+        assert_eq!(h.lane, 0);
+        assert!(!h.is_complete(), "stranded transfer can never complete");
+        let err = engine
+            .quiesce_for(Duration::from_millis(200))
+            .expect_err("stranded job on a dead lane must be reported");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("lane 0") && msg.contains("DEAD"), "{msg}");
+    }
+
+    #[test]
+    fn lane_policy_names_roundtrip() {
+        for name in LanePolicy::names() {
+            let p = LanePolicy::from_name(name).expect("known name");
+            assert_eq!(p.name(), *name);
+        }
+        assert!(LanePolicy::from_name("warp-drive").is_none());
     }
 }

@@ -10,6 +10,7 @@
 use anyhow::{bail, Result};
 
 pub use crate::coordinator::batcher::{FinishReason, SamplingParams};
+pub use crate::memory::transfer::LaneSnapshot;
 use crate::model::tokenizer::ByteTokenizer;
 use crate::util::json::Json;
 
@@ -218,10 +219,30 @@ pub struct ServerStats {
     /// Completed-request queue wait p50 (ms, submit→start).
     pub queue_p50_ms: f64,
     pub uptime_s: f64,
+    /// Per-comm-lane transfer counters (one entry per lane, in lane
+    /// order); empty when the backend has no transfer engine (mock).
+    pub lanes: Vec<LaneSnapshot>,
 }
 
 impl ServerStats {
     pub fn to_json(&self) -> Json {
+        let lanes = Json::Arr(
+            self.lanes
+                .iter()
+                .map(|l| {
+                    Json::obj(vec![
+                        ("lane", Json::Num(l.lane as f64)),
+                        ("transfers", Json::Num(l.transfers as f64)),
+                        ("bytes", Json::Num(l.bytes as f64)),
+                        ("on_demand", Json::Num(l.on_demand as f64)),
+                        ("prefetch", Json::Num(l.prefetch as f64)),
+                        ("busy_ms", Json::Num(l.busy_ms)),
+                        ("queued_bytes", Json::Num(l.queued_bytes as f64)),
+                        ("queued_jobs", Json::Num(l.queued_jobs as f64)),
+                    ])
+                })
+                .collect(),
+        );
         Json::obj(vec![
             ("queued", Json::Num(self.queued as f64)),
             ("active", Json::Num(self.active as f64)),
@@ -235,6 +256,7 @@ impl ServerStats {
             ("request_p99_ms", Json::Num(self.request_p99_ms)),
             ("queue_p50_ms", Json::Num(self.queue_p50_ms)),
             ("uptime_s", Json::Num(self.uptime_s)),
+            ("lanes", lanes),
         ])
     }
 }
@@ -308,5 +330,26 @@ mod tests {
         assert_eq!(j.get("served").and_then(|v| v.as_usize()), Some(2));
         assert_eq!(j.get("queued").and_then(|v| v.as_usize()), Some(1));
         assert!(j.get("tokens_per_sec").is_some());
+        // lanes always present, empty without a transfer engine
+        assert_eq!(j.get("lanes").and_then(|l| l.as_arr()).map(|a| a.len()), Some(0));
+    }
+
+    #[test]
+    fn stats_serialize_per_lane_entries() {
+        let s = ServerStats {
+            lanes: vec![
+                LaneSnapshot { lane: 0, transfers: 3, bytes: 1024, ..Default::default() },
+                LaneSnapshot { lane: 1, on_demand: 2, queued_jobs: 1, ..Default::default() },
+            ],
+            ..Default::default()
+        };
+        let j = s.to_json();
+        let lanes = j.get("lanes").and_then(|l| l.as_arr()).expect("lanes array");
+        assert_eq!(lanes.len(), 2);
+        assert_eq!(lanes[0].get("transfers").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(lanes[0].get("bytes").and_then(|v| v.as_usize()), Some(1024));
+        assert_eq!(lanes[1].get("lane").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(lanes[1].get("on_demand").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(lanes[1].get("queued_jobs").and_then(|v| v.as_usize()), Some(1));
     }
 }

@@ -29,11 +29,14 @@ use crate::util::stats::LatencyWindow;
 const LATENCY_WINDOW: usize = 4096;
 
 /// Engine-side performance counters surfaced through `stats`.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct PerfSnapshot {
     pub tokens_per_sec: f64,
     pub token_p50_ms: f64,
     pub token_p99_ms: f64,
+    /// Per-comm-lane transfer counters (empty for backends without a
+    /// transfer engine, e.g. the mock).
+    pub lanes: Vec<crate::memory::transfer::LaneSnapshot>,
 }
 
 /// What the service needs from a decode engine. [`Engine`] is the real
@@ -74,6 +77,7 @@ impl Backend for Engine {
             tokens_per_sec: self.trace.tokens_per_sec(),
             token_p50_ms: self.trace.token_latency.p50() * 1e3,
             token_p99_ms: self.trace.token_latency.p99() * 1e3,
+            lanes: self.xfer.lane_snapshots(),
         }
     }
 }
@@ -324,6 +328,7 @@ impl ServiceHandle {
             request_p99_ms: g.total_ms.p99(),
             queue_p50_ms: g.queue_wait_ms.p50(),
             uptime_s: g.started_at.elapsed().as_secs_f64(),
+            lanes: g.perf.lanes.clone(),
         }
     }
 

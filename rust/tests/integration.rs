@@ -14,6 +14,7 @@ use adapmoe::coordinator::profile::Profile;
 use adapmoe::coordinator::scheduler::ScheduleMode;
 use adapmoe::memory::platform::Platform;
 use adapmoe::memory::quant::QuantKind;
+use adapmoe::memory::transfer::LaneConfig;
 use adapmoe::model::config::ModelConfig;
 use adapmoe::model::tokenizer::EvalStream;
 use adapmoe::model::weights::Weights;
@@ -332,6 +333,7 @@ fn tile_wise_engine_matches_expert_wise() {
         time_scale: 0.0,
         whole_layer: false,
         compute_workers: 0,
+        lanes: LaneConfig::default(),
     };
     let mut ew = Engine::from_artifacts(&dir, mk(ScheduleMode::ExpertWise)).unwrap();
     let mut tw = Engine::from_artifacts(&dir, mk(ScheduleMode::TileWise)).unwrap();

@@ -1,0 +1,250 @@
+//! Multi-lane transfer-engine tests (artifact-free: synthetic weights,
+//! host-math executor). Locks down the two properties `docs/transfer-lanes.md`
+//! promises:
+//!
+//! 1. **Determinism** — consumption follows per-lane completion order, but
+//!    output bits are independent of arrival timing (canonical reduction),
+//!    so an N-lane engine with wildly skewed wire clocks reproduces the
+//!    single-lane serial baseline exactly.
+//! 2. **Reservation** — under the `pinned` policy the on-demand lane is
+//!    never assigned (and therefore never delayed by) prefetch traffic.
+
+use std::sync::Arc;
+
+use adapmoe::coordinator::executor::{run_layer_parallel, run_layer_serial};
+use adapmoe::coordinator::scheduler::{build_plan, ScheduleMode};
+use adapmoe::memory::device_cache::DeviceCache;
+use adapmoe::memory::host_store::HostStore;
+use adapmoe::memory::platform::Platform;
+use adapmoe::memory::quant::QuantKind;
+use adapmoe::memory::transfer::{LaneConfig, LanePolicy, Priority, TransferEngine};
+use adapmoe::prop_assert;
+use adapmoe::tensor::Tensor;
+use adapmoe::testutil::{micro_config, synthetic_weights};
+use adapmoe::util::prop;
+use adapmoe::util::rng::Rng;
+use adapmoe::util::threadpool::ThreadPool;
+
+fn fixture(
+    quant: QuantKind,
+    platform: &str,
+    scale: f64,
+    lanes: LaneConfig,
+) -> (Arc<HostStore>, Arc<DeviceCache>, TransferEngine) {
+    let cfg = micro_config();
+    let w = synthetic_weights(&cfg, 11);
+    let store = Arc::new(HostStore::build(&cfg, &w, quant).unwrap());
+    let cache = Arc::new(DeviceCache::new(vec![8, 8]));
+    let xfer = TransferEngine::with_lanes(
+        Arc::clone(&store),
+        Arc::clone(&cache),
+        Platform::preset(platform).unwrap(),
+        4,
+        scale,
+        lanes,
+    );
+    (store, cache, xfer)
+}
+
+fn inputs(b: usize, n_experts: usize, seed: u64) -> (Tensor, Vec<Vec<f32>>) {
+    let cfg = micro_config();
+    let mut rng = Rng::new(seed);
+    let x = Tensor::new(
+        vec![b, cfg.d_model],
+        (0..b * cfg.d_model).map(|_| rng.f32() - 0.5).collect(),
+    )
+    .unwrap();
+    let coef: Vec<Vec<f32>> = (0..n_experts)
+        .map(|_| (0..b).map(|_| rng.f32()).collect())
+        .collect();
+    (x, coef)
+}
+
+/// Two lanes with inverted wire speeds (lane 0 calibrated-slow, lane 1
+/// instant): round-robin spreads experts 0..6 across them, so the fast
+/// lane's experts (odd) land while the slow lane is still on its first.
+/// Consumption must follow completions — every odd expert consumed before
+/// any even one — and the accumulated output must be bit-identical to the
+/// single-lane serial baseline.
+#[test]
+fn multi_lane_out_of_order_arrival_is_deterministic() {
+    let experts: Vec<usize> = (0..6).collect();
+
+    let serial_out = {
+        // Slow single lane: all six prefetches are still in flight when the
+        // plan joins them, so the queue composition (all pending, expert
+        // order) matches the multi-lane run and the canonical reduction
+        // compares like with like.
+        let (_s, cache, xfer) =
+            fixture(QuantKind::Int4, "rtx4090", 1.0, LaneConfig::default());
+        for &e in &experts {
+            xfer.request((0, e), Priority::Prefetch);
+        }
+        let plan = build_plan(0, &experts, &[], &cache, &xfer);
+        assert_eq!(plan.n_pending(), 6);
+        let (x, coef) = inputs(4, 8, 9);
+        run_layer_serial(&plan, &x, &coef, ScheduleMode::ExpertWise, 4, &cache)
+    };
+
+    let par_out = {
+        // Lane 0 runs 4× slower than calibrated, lane 1 at 2.5× calibrated
+        // speed — inverted wire speeds. The fast lane still needs ~2 ms per
+        // expert (vs ~19 ms for the slow lane's first), so the plan join a
+        // few µs after the requests cannot race a completion even on a
+        // heavily loaded CI runner, and every fast-lane expert lands long
+        // before the first slow-lane one.
+        let lanes = LaneConfig::new(2, LanePolicy::RoundRobin)
+            .with_time_scales(vec![4.0, 0.4]);
+        let (_s, cache, xfer) = fixture(QuantKind::Int4, "rtx4090", 1.0, lanes);
+        for &e in &experts {
+            let h = xfer.request((0, e), Priority::Prefetch);
+            assert_eq!(h.lane, e % 2, "round-robin must alternate lanes");
+        }
+        let plan = build_plan(0, &experts, &[], &cache, &xfer);
+        assert_eq!(plan.n_pending(), 6, "in-flight prefetches must be joined");
+        let (x, coef) = inputs(4, 8, 9);
+        let pool = ThreadPool::new(3);
+        run_layer_parallel(
+            &plan,
+            &x,
+            &coef,
+            ScheduleMode::ExpertWise,
+            4,
+            &cache,
+            &xfer,
+            &pool,
+        )
+    };
+
+    assert_eq!(serial_out.consumed, experts, "serial drains in plan order");
+    // Fast-lane (odd) experts all land before the slow lane finishes its
+    // first transfer, so they must all be consumed before any even expert.
+    let pos = |e: usize| par_out.consumed.iter().position(|&c| c == e).unwrap();
+    for odd in [1usize, 3, 5] {
+        for even in [0usize, 2, 4] {
+            assert!(
+                pos(odd) < pos(even),
+                "fast-lane expert {odd} must be consumed before slow-lane {even}: {:?}",
+                par_out.consumed
+            );
+        }
+    }
+    // Bit-identical output despite opposite consumption order and a
+    // completely different lane/timing layout.
+    assert_eq!(
+        serial_out.acc.data, par_out.acc.data,
+        "multi-lane arrival order must not change output bits"
+    );
+    // Queue delay is attributed to the lane that carried the data; the
+    // instant lane's experts sat waiting on compute, so lane 1 appears.
+    assert!(
+        par_out.queue_delay_by_lane.contains_key(&1),
+        "fast-lane queue delay must be attributed: {:?}",
+        par_out.queue_delay_by_lane
+    );
+    let total: u64 = par_out.queue_delay_by_lane.values().sum();
+    assert_eq!(total, par_out.queue_delay_ns, "lane split must sum to the total");
+}
+
+/// Property: under the `pinned` policy, random request mixes never put a
+/// prefetch on the reserved lane 0, and every on-demand load rides it —
+/// so prefetch traffic can never starve (queue in front of) an on-demand
+/// load, regardless of arrival pattern.
+#[test]
+fn pinned_assignment_never_starves_reserved_lane() {
+    prop::check("pinned-lane-reservation", 12, |rng| {
+        let (_s, _cache, xfer) = fixture(
+            QuantKind::F32,
+            "instant",
+            0.0,
+            LaneConfig::new(3, LanePolicy::Pinned),
+        );
+        let cfg = micro_config();
+        let mut ids: Vec<(usize, usize)> = (0..cfg.n_layers)
+            .flat_map(|l| (0..cfg.n_experts).map(move |e| (l, e)))
+            .collect();
+        rng.shuffle(&mut ids);
+        let n = 8 + rng.usize_below(ids.len() - 8);
+        for &id in &ids[..n] {
+            let on_demand = rng.chance(0.4);
+            let pri = if on_demand { Priority::OnDemand } else { Priority::Prefetch };
+            let h = xfer.request(id, pri);
+            if on_demand {
+                prop_assert!(
+                    h.lane == 0,
+                    "on-demand {id:?} assigned lane {} not the reserved lane",
+                    h.lane
+                );
+            } else {
+                prop_assert!(
+                    h.lane != 0,
+                    "prefetch {id:?} rode the reserved lane"
+                );
+            }
+        }
+        xfer.quiesce();
+        let snaps = xfer.lane_snapshots();
+        prop_assert!(
+            snaps[0].prefetch == 0,
+            "reserved lane carried {} prefetches",
+            snaps[0].prefetch
+        );
+        prop_assert!(
+            snaps[1].on_demand == 0 && snaps[2].on_demand == 0,
+            "on-demand leaked onto prefetch lanes"
+        );
+        prop_assert!(
+            snaps.iter().all(|s| s.queued_bytes == 0 && s.queued_jobs == 0),
+            "queued-load accounting must drain to zero: {snaps:?}"
+        );
+        Ok(())
+    });
+}
+
+/// `--lanes 4` with arrivals scrambled across four skewed wire clocks still
+/// reproduces the serial single-lane bits (the acceptance-criteria shape).
+#[test]
+fn four_lane_skewed_clocks_match_single_lane_serial_bits() {
+    let experts: Vec<usize> = (0..8).collect();
+    let (x, coef) = inputs(4, 8, 21);
+
+    let serial_out = {
+        let (_s, cache, xfer) =
+            fixture(QuantKind::Int4, "rtx4090", 1.0, LaneConfig::default());
+        for &e in &experts {
+            xfer.request((0, e), Priority::Prefetch);
+        }
+        let plan = build_plan(0, &experts, &[], &cache, &xfer);
+        assert_eq!(plan.n_pending(), 8);
+        run_layer_serial(&plan, &x, &coef, ScheduleMode::ExpertWise, 4, &cache)
+    };
+
+    let par_out = {
+        // Four lanes, each slower than the last: arrival order is roughly
+        // the reverse of assignment within each round-robin round. The
+        // fastest lane still needs >1 ms per expert so the plan join
+        // cannot race a completion.
+        let lanes = LaneConfig::new(4, LanePolicy::RoundRobin)
+            .with_time_scales(vec![1.2, 0.9, 0.6, 0.3]);
+        let (_s, cache, xfer) = fixture(QuantKind::Int4, "rtx4090", 1.0, lanes);
+        for &e in &experts {
+            xfer.request((0, e), Priority::Prefetch);
+        }
+        let plan = build_plan(0, &experts, &[], &cache, &xfer);
+        assert_eq!(plan.n_pending(), 8);
+        let pool = ThreadPool::new(4);
+        run_layer_parallel(
+            &plan,
+            &x,
+            &coef,
+            ScheduleMode::ExpertWise,
+            4,
+            &cache,
+            &xfer,
+            &pool,
+        )
+    };
+
+    assert_eq!(serial_out.acc.data, par_out.acc.data);
+    assert_eq!(par_out.consumed.len(), 8);
+}

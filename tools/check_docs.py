@@ -1,0 +1,100 @@
+#!/usr/bin/env python3
+"""Docs link check: fail CI when docs mention paths that no longer exist.
+
+Scans the markdown files under docs/ (plus README.md and ROADMAP.md) for
+
+  * repo-relative path references (rust/..., python/..., docs/...,
+    examples/..., tools/...), optionally suffixed ``:line`` or
+    ``:line-line`` — the suffix is stripped before checking;
+  * rust module paths (``crate::a::b`` / ``adapmoe::a::b``), resolved
+    against rust/src/<a>/<b>.rs, rust/src/<a>/<b>/mod.rs or
+    rust/src/<a>.rs (longest-prefix match, so paths that go below module
+    granularity, e.g. ``crate::mod::Item``, still resolve).
+
+Exits non-zero listing every reference that does not resolve, so a
+refactor that moves or deletes a module forces the matching docs update
+(docs/architecture.md is the main consumer).
+
+Usage: python3 tools/check_docs.py  (from anywhere inside the repo)
+"""
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_FILES = ["README.md", "ROADMAP.md"] + sorted(
+    os.path.join("docs", f)
+    for f in os.listdir(os.path.join(REPO, "docs"))
+    if f.endswith(".md")
+)
+
+# path-ish tokens rooted at a known top-level dir
+PATH_RE = re.compile(
+    r"\b((?:rust|python|docs|examples|tools)/[A-Za-z0-9_./-]+)"
+)
+# rust module paths
+MOD_RE = re.compile(r"\b(?:crate|adapmoe)((?:::[A-Za-z0-9_]+)+)")
+
+# line-number suffix on a path ref: file.rs:123 or file.rs:123-130
+LINE_SUFFIX_RE = re.compile(r":\d+(?:-\d+)?$")
+
+
+def path_exists(rel: str) -> bool:
+    return os.path.exists(os.path.join(REPO, rel))
+
+
+def check_path(tok: str):
+    """Return the normalized path if it resolves, else None."""
+    tok = tok.rstrip(".,;:)`'\"")
+    tok = LINE_SUFFIX_RE.sub("", tok)
+    if not tok or "/" not in tok:
+        return tok or None
+    # globs and placeholders aren't checkable references
+    if "*" in tok or "{" in tok or "<" in tok:
+        return tok
+    return tok if path_exists(tok) else None
+
+
+def check_module(segs):
+    """Resolve crate::a::b::... against rust/src, longest prefix first."""
+    for cut in range(len(segs), 0, -1):
+        head = segs[:cut]
+        candidates = [
+            os.path.join("rust", "src", *head) + ".rs",
+            os.path.join("rust", "src", *head, "mod.rs"),
+        ]
+        if any(path_exists(c) for c in candidates):
+            return True
+        # items/types below module granularity: try shorter prefixes
+    return False
+
+
+def main() -> int:
+    missing = []
+    for doc in DOC_FILES:
+        full = os.path.join(REPO, doc)
+        if not os.path.exists(full):
+            continue
+        with open(full, encoding="utf-8") as fh:
+            for lineno, line in enumerate(fh, 1):
+                for m in PATH_RE.finditer(line):
+                    if check_path(m.group(1)) is None:
+                        missing.append((doc, lineno, m.group(1)))
+                for m in MOD_RE.finditer(line):
+                    segs = [s for s in m.group(1).split("::") if s]
+                    # skip obvious non-module idioms like crate::prop_assert
+                    if len(segs) >= 1 and not check_module(segs):
+                        missing.append((doc, lineno, "crate" + m.group(1)))
+    if missing:
+        print("docs link check FAILED — stale references:")
+        for doc, lineno, tok in missing:
+            print(f"  {doc}:{lineno}: {tok}")
+        return 1
+    print(f"docs link check OK ({len(DOC_FILES)} files scanned)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
