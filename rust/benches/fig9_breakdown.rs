@@ -18,6 +18,7 @@ use adapmoe::coordinator::gating::{calibrate_score_threshold, GatingPolicy};
 use adapmoe::coordinator::policy;
 use adapmoe::coordinator::profile::Profile;
 use adapmoe::memory::quant::QuantKind;
+use adapmoe::memory::sharded_cache::Placement;
 use adapmoe::memory::transfer::LanePolicy;
 use adapmoe::util::timer::Table;
 
@@ -147,6 +148,40 @@ fn main() {
     }
     t.print();
     println!("(prefetch queue delay is overlap working as intended; on-demand queue delay is waste)");
+
+    // Per-device shard attribution: the same adaptive config over two
+    // device backends (hash placement, one lane per device) — where did
+    // the cache traffic land, and did either shard back up?
+    println!("\n== per-device cache shards (2 devices, hash placement, lane per device) ==");
+    let mut sharded = timed_settings(16, QuantKind::Int4, "rtx4090");
+    sharded.n_lanes = 2;
+    sharded.n_devices = 2;
+    sharded.placement = Placement::ExpertHash;
+    let mut shard_engine = {
+        let cfg = policy::method("adapmoe", &sharded, &profile).expect("cfg");
+        Engine::from_artifacts(&dir, cfg).expect("engine")
+    };
+    decode_eval(&mut shard_engine, &eval, scaled(48), 0).expect("decode");
+    let mut t = Table::new(&[
+        "device", "hits", "misses", "evictions", "resident", "capacity", "queued bytes",
+    ]);
+    for snap in shard_engine.xfer.device_snapshots() {
+        t.row(&[
+            format!("{}", snap.device),
+            format!("{}", snap.hits),
+            format!("{}", snap.misses),
+            format!("{}", snap.evictions),
+            format!("{}", snap.resident),
+            format!("{}", snap.capacity),
+            format!("{}", snap.queued_bytes),
+        ]);
+    }
+    t.print();
+    let (gh, gm, ge) = shard_engine.cache.stats();
+    println!(
+        "global: hits {gh} misses {gm} evictions {ge} (per-device rows sum to these — \
+         the shard split conserves the single-cache counters)"
+    );
 }
 
 /// Reconstruct (layer, top2-prob-pair) samples from the probe's α histogram

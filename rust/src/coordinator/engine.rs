@@ -16,9 +16,10 @@
 //!    Arrived-but-unconsumed time is traced as per-layer *queue delay*,
 //!    true idle time as *stall*, so `fig9_breakdown` can show where the
 //!    overlap win comes from.
-//! 3. Consumed experts are promoted into the [`DeviceCache`] on
-//!    completion; whole-layer "extra" loads ride the same queue but are
-//!    never waited on.
+//! 3. Consumed experts are promoted into the **owning device shard** of
+//!    the [`ShardedCache`] on completion (one shard total in the
+//!    historical single-device shape); whole-layer "extra" loads ride
+//!    the same queue but are never waited on.
 //!
 //! Expert kernels run on this thread (PJRT handles are not `Send`). With
 //! [`EngineConfig::compute_workers`] > 0 the engine instead fans host-side
@@ -49,6 +50,7 @@ use crate::memory::device_cache::DeviceCache;
 use crate::memory::host_store::{ExpertF32, HostStore};
 use crate::memory::platform::Platform;
 use crate::memory::quant::QuantKind;
+use crate::memory::sharded_cache::{Placement, ShardedCache};
 use crate::memory::transfer::{LaneConfig, Priority, TransferEngine, TransferHandle};
 use crate::model::config::ModelConfig;
 use crate::model::weights::Weights;
@@ -87,6 +89,13 @@ pub struct EngineConfig {
     /// CompletionBoard and how jobs are assigned to them (`--lanes` /
     /// `--lane-policy`; see docs/transfer-lanes.md).
     pub lanes: LaneConfig,
+    /// Device backends sharding the expert cache (`--devices`). 1 keeps
+    /// the historical single-pool engine bit-for-bit; more devices
+    /// partition the budget T across per-device caches and give comm
+    /// lanes device affinity (docs/sharded-backends.md).
+    pub devices: usize,
+    /// ExpertId → device mapping when `devices > 1` (`--placement`).
+    pub placement: Placement,
     /// DeepSpeed/FlexGen-style baseline: load ALL experts of each layer.
     pub whole_layer: bool,
     /// Worker threads for host-side parallel expert FFNs (see
@@ -146,7 +155,9 @@ pub struct Engine {
     rt: Runtime,
     resident: Resident,
     pub store: Arc<HostStore>,
-    pub cache: Arc<DeviceCache>,
+    /// Device-sharded expert cache set (a single shard when
+    /// `EngineConfig::devices == 1`).
+    pub cache: Arc<ShardedCache>,
     pub xfer: TransferEngine,
     pub profile: Profile,
     kv_k: Vec<Literal>,
@@ -193,35 +204,8 @@ impl Engine {
         let resident = Resident::build(&cfg, weights)?;
         let store = Arc::new(HostStore::build(&cfg, weights, ecfg.quant)?);
 
-        let allocation = match ecfg.alloc {
-            AllocPolicy::Uniform => DeviceCache::uniform_allocation(
-                ecfg.cache_budget,
-                cfg.n_layers,
-                cfg.n_experts,
-            ),
-            AllocPolicy::Planned => {
-                let inputs = cache_plan::PlanInputs {
-                    n_experts: cfg.n_experts,
-                    budget: ecfg.cache_budget,
-                    // no adaptive gating -> no single-expert tokens
-                    alpha: if matches!(ecfg.gating, GatingPolicy::TopK { .. }) {
-                        vec![0.0; cfg.n_layers]
-                    } else {
-                        profile.alpha.clone()
-                    },
-                    // β comes from the *offline* profiling phase even when
-                    // online prefetching is disabled: with β = 0, eq. 11–15
-                    // degenerate to a linear knapsack that dumps the whole
-                    // budget into a few layers and leaves others at t = 0 —
-                    // catastrophic under real LRU locality. The profiled β
-                    // keeps the curvature the paper's allocator relies on.
-                    beta: profile.beta.clone(),
-                };
-                cache_plan::plan(&inputs).allocation
-            }
-        };
-        let cache = Arc::new(DeviceCache::new(allocation));
-        let xfer = TransferEngine::with_lanes(
+        let cache = Arc::new(build_sharded_cache(&cfg, &ecfg, &profile));
+        let xfer = TransferEngine::with_devices(
             Arc::clone(&store),
             Arc::clone(&cache),
             ecfg.platform.clone(),
@@ -726,21 +710,166 @@ impl Engine {
     }
 
     /// Re-run the DP planner on the *online* trace and apply the resulting
-    /// allocation (the adaptive-caching feedback loop).
+    /// allocation (the adaptive-caching feedback loop). With several
+    /// devices, each shard re-plans within its own budget share — a
+    /// global DP pushed through `set_allocation` could concentrate most
+    /// of T on one shard under `layer` placement, silently exceeding
+    /// that device's memory pool.
     pub fn replan_cache(&mut self) {
         let inputs = self.trace.plan_inputs(
             self.cfg.n_experts,
             self.ecfg.cache_budget,
             if self.ecfg.prefetch.enabled { 0.5 } else { 0.0 },
         );
-        let plan = cache_plan::plan(&inputs);
-        self.cache.set_allocation(&plan.allocation);
+        let devices = self.cache.n_devices();
+        if devices == 1 {
+            let plan = cache_plan::plan(&inputs);
+            self.cache.set_allocation(&plan.allocation);
+            return;
+        }
+        let allocations = plan_shard_allocations(
+            self.cfg.n_layers,
+            self.ecfg.cache_budget,
+            devices,
+            self.ecfg.placement,
+            self.cfg.n_experts,
+            |budget: usize, layers: &[usize], n_exp: usize| {
+                let sub = cache_plan::PlanInputs {
+                    n_experts: n_exp,
+                    budget,
+                    alpha: layers.iter().map(|&l| inputs.alpha[l]).collect(),
+                    beta: layers.iter().map(|&l| inputs.beta[l]).collect(),
+                };
+                cache_plan::plan(&sub).allocation
+            },
+        );
+        for (d, alloc) in allocations.iter().enumerate() {
+            self.cache.shard(d).set_allocation(alloc);
+        }
     }
 
     pub fn reset_trace(&mut self) {
         let sim = self.trace.similarity_enabled();
         self.trace = TraceCollector::new(self.cfg.n_layers).with_similarity(sim);
     }
+}
+
+/// Build the device-sharded expert cache for a config.
+///
+/// `devices == 1` reproduces the historical single-pool allocation
+/// exactly: a uniform split or the §4.4 DP over the full budget T. With
+/// more devices, T is partitioned across the devices that can actually
+/// hold experts ([`ShardedCache::partition_budget`], remainder to the
+/// earliest) — a device that owns no layers under `layer` placement
+/// with more devices than layers gets 0, never a silently-dropped
+/// share — and each device's portion is then split per layer: over the
+/// device's own layer slice under `layer` placement, or over every
+/// layer under `hash`/`load` (each layer's experts spread across all
+/// shards, so a shard's per-layer cap is its ~1/D sub-population, not
+/// the full expert count).
+fn build_sharded_cache(
+    cfg: &ModelConfig,
+    ecfg: &EngineConfig,
+    profile: &Profile,
+) -> ShardedCache {
+    // no adaptive gating -> no single-expert tokens
+    let alpha: Vec<f64> = if matches!(ecfg.gating, GatingPolicy::TopK { .. }) {
+        vec![0.0; cfg.n_layers]
+    } else {
+        profile.alpha.clone()
+    };
+    // β comes from the *offline* profiling phase even when online
+    // prefetching is disabled: with β = 0, eq. 11–15 degenerate to a
+    // linear knapsack that dumps the whole budget into a few layers and
+    // leaves others at t = 0 — catastrophic under real LRU locality. The
+    // profiled β keeps the curvature the paper's allocator relies on.
+    let allocate = |budget: usize, layers: &[usize], n_experts: usize| -> Vec<usize> {
+        match ecfg.alloc {
+            AllocPolicy::Uniform => {
+                DeviceCache::uniform_allocation(budget, layers.len(), n_experts)
+            }
+            AllocPolicy::Planned => {
+                let inputs = cache_plan::PlanInputs {
+                    n_experts,
+                    budget,
+                    alpha: layers.iter().map(|&l| alpha[l]).collect(),
+                    beta: layers.iter().map(|&l| profile.beta[l]).collect(),
+                };
+                cache_plan::plan(&inputs).allocation
+            }
+        }
+    };
+    let devices = ecfg.devices.max(1);
+    if devices == 1 {
+        let all_layers: Vec<usize> = (0..cfg.n_layers).collect();
+        let allocation = allocate(ecfg.cache_budget, &all_layers, cfg.n_experts);
+        return ShardedCache::single(Arc::new(DeviceCache::new(allocation)));
+    }
+    let allocations = plan_shard_allocations(
+        cfg.n_layers,
+        ecfg.cache_budget,
+        devices,
+        ecfg.placement,
+        cfg.n_experts,
+        allocate,
+    );
+    ShardedCache::new(allocations, ecfg.placement)
+}
+
+/// Shared multi-device budget-split skeleton: partition T over the
+/// devices that own at least one layer (a layerless device under
+/// `layer` placement with D > L gets 0, never a silently-dropped
+/// share), then run `allocate(budget, owned_layers, per_shard_experts)`
+/// per device and scatter into full-length layer vectors. Used at
+/// construction ([`build_sharded_cache`]) and by the online re-plan
+/// ([`Engine::replan_cache`]), so both enforce the same per-device
+/// budget shares.
+fn plan_shard_allocations(
+    n_layers: usize,
+    budget: usize,
+    devices: usize,
+    placement: Placement,
+    n_experts: usize,
+    mut allocate: impl FnMut(usize, &[usize], usize) -> Vec<usize>,
+) -> Vec<Vec<usize>> {
+    let all_layers: Vec<usize> = (0..n_layers).collect();
+    let owned_per_dev: Vec<Vec<usize>> = (0..devices)
+        .map(|dev| match placement {
+            Placement::LayerSliced => all_layers
+                .iter()
+                .copied()
+                .filter(|&l| Placement::owner_of_layer(l, n_layers, devices) == dev)
+                .collect(),
+            _ => all_layers.clone(),
+        })
+        .collect();
+    let active: Vec<usize> =
+        (0..devices).filter(|&d| !owned_per_dev[d].is_empty()).collect();
+    let shares = ShardedCache::partition_budget(budget, active.len().max(1));
+    let mut budgets = vec![0usize; devices];
+    for (k, &d) in active.iter().enumerate() {
+        budgets[d] = shares[k];
+    }
+    // Experts of one layer that can actually land on one shard: all of
+    // them when the shard owns the whole layer, ~1/D of them when the
+    // layer spreads across every shard.
+    let per_shard_experts = match placement {
+        Placement::LayerSliced => n_experts,
+        _ => n_experts.div_ceil(devices),
+    };
+    (0..devices)
+        .map(|dev| {
+            let owned = &owned_per_dev[dev];
+            let mut full = vec![0usize; n_layers];
+            if !owned.is_empty() {
+                let local = allocate(budgets[dev], owned, per_shard_experts);
+                for (k, &l) in owned.iter().enumerate() {
+                    full[l] = local[k];
+                }
+            }
+            full
+        })
+        .collect()
 }
 
 /// Artifact names needed for a config's batch bucket.
@@ -756,3 +885,104 @@ fn manifest_names(ecfg: &EngineConfig) -> Vec<String> {
     names
 }
 
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::micro_config;
+
+    fn ecfg(
+        devices: usize,
+        placement: Placement,
+        alloc: AllocPolicy,
+        budget: usize,
+    ) -> EngineConfig {
+        EngineConfig {
+            batch: 1,
+            gating: GatingPolicy::TopK { k: 2 },
+            prefetch: PrefetchConfig::disabled(),
+            alloc,
+            cache_budget: budget,
+            schedule: ScheduleMode::ExpertWise,
+            quant: QuantKind::F32,
+            platform: Platform::preset("instant").unwrap(),
+            n_tiles: 4,
+            time_scale: 0.0,
+            lanes: LaneConfig::default(),
+            devices,
+            placement,
+            whole_layer: false,
+            compute_workers: 0,
+        }
+    }
+
+    #[test]
+    fn single_device_allocation_matches_historical() {
+        let cfg = micro_config();
+        let profile = Profile::synthetic(cfg.n_layers);
+        let c = build_sharded_cache(
+            &cfg,
+            &ecfg(1, Placement::LayerSliced, AllocPolicy::Uniform, 10),
+            &profile,
+        );
+        assert_eq!(c.n_devices(), 1);
+        assert_eq!(
+            c.allocation(),
+            DeviceCache::uniform_allocation(10, cfg.n_layers, cfg.n_experts)
+        );
+    }
+
+    #[test]
+    fn layerless_devices_do_not_swallow_budget() {
+        // 2-layer model over 4 devices under layer placement: devices 1
+        // and 3 own no layers; the whole budget must land on devices 0/2
+        // instead of being silently dropped with their shares.
+        let cfg = micro_config();
+        let profile = Profile::synthetic(cfg.n_layers);
+        let c = build_sharded_cache(
+            &cfg,
+            &ecfg(4, Placement::LayerSliced, AllocPolicy::Uniform, 16),
+            &profile,
+        );
+        assert_eq!(c.n_devices(), 4);
+        assert_eq!(c.allocation().iter().sum::<usize>(), 16, "{:?}", c.allocation());
+        assert_eq!(c.shard(1).allocation().iter().sum::<usize>(), 0);
+        assert_eq!(c.shard(3).allocation().iter().sum::<usize>(), 0);
+    }
+
+    #[test]
+    fn hash_placement_caps_layers_at_shard_subpopulation() {
+        // 8 experts over 4 shards: at most ~2 experts of a layer can ever
+        // land on one shard, so per-layer budgets must not exceed that.
+        let cfg = micro_config();
+        let profile = Profile::synthetic(cfg.n_layers);
+        let c = build_sharded_cache(
+            &cfg,
+            &ecfg(4, Placement::ExpertHash, AllocPolicy::Uniform, 64),
+            &profile,
+        );
+        for d in 0..4 {
+            let a = c.shard(d).allocation();
+            assert!(a.iter().all(|&t| t <= 2), "device {d}: {a:?}");
+        }
+        // clamped aggregate: 4 devices x 2 layers x 2 experts
+        assert_eq!(c.allocation().iter().sum::<usize>(), 16);
+    }
+
+    #[test]
+    fn planned_allocation_partitions_budget_per_device() {
+        let cfg = micro_config();
+        let profile = Profile::synthetic(cfg.n_layers);
+        let c = build_sharded_cache(
+            &cfg,
+            &ecfg(2, Placement::LayerSliced, AllocPolicy::Planned, 8),
+            &profile,
+        );
+        // each device DP-plans its own layer slice within its share
+        assert!(c.shard(0).allocation().iter().sum::<usize>() <= 4);
+        assert!(c.shard(1).allocation().iter().sum::<usize>() <= 4);
+        // layer placement: a shard only budgets its owned layers
+        assert_eq!(c.shard(0).allocation()[1], 0);
+        assert_eq!(c.shard(1).allocation()[0], 0);
+    }
+}

@@ -29,6 +29,12 @@
 //! order** (per expert, per tile index) at the end of the layer, so the
 //! accumulated residual is bit-for-bit identical to the serial drain no
 //! matter which worker computed what or in which order transfers arrived.
+//! The same property merges arrivals **across device backends**: with a
+//! sharded cache ([`crate::memory::sharded_cache::ShardedCache`]) the
+//! drain consumes whichever device's lane lands first and promotes each
+//! expert into its owning shard, while the canonical reduction keeps the
+//! output bits independent of which device won the race
+//! (rust/tests/devices.rs locks this down).
 
 use std::cell::Cell;
 use std::collections::HashMap;
@@ -40,7 +46,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::scheduler::{ExecPlan, ScheduleMode, WorkItem};
-use crate::memory::device_cache::DeviceCache;
+use crate::memory::device_cache::ExpertCache;
 use crate::memory::host_store::ExpertF32;
 use crate::memory::transfer::{CompletionBoard, TransferEngine, TransferHandle};
 use crate::tensor::Tensor;
@@ -147,7 +153,7 @@ pub fn drain_arrival_order(
     pending: &[(usize, Arc<TransferHandle>)],
     mode: ScheduleMode,
     n_tiles: usize,
-    cache: &DeviceCache,
+    cache: &dyn ExpertCache,
     board: &CompletionBoard,
     mut consume: impl FnMut(Arrived<'_>) -> Result<()>,
     mut count_wait: impl FnMut() -> bool,
@@ -239,7 +245,7 @@ pub fn run_layer_serial(
     coef: &[Vec<f32>],
     mode: ScheduleMode,
     n_tiles: usize,
-    cache: &DeviceCache,
+    cache: &dyn ExpertCache,
 ) -> LayerOutcome {
     let mut acc = Tensor::zeros(x.dims.clone());
     let mut stall_ns = 0u64;
@@ -294,7 +300,7 @@ pub fn run_layer_parallel(
     coef: &[Vec<f32>],
     mode: ScheduleMode,
     n_tiles: usize,
-    cache: &DeviceCache,
+    cache: &dyn ExpertCache,
     xfer: &TransferEngine,
     pool: &ThreadPool,
 ) -> LayerOutcome {
@@ -397,6 +403,7 @@ pub fn run_layer_parallel(
 mod tests {
     use super::*;
     use crate::coordinator::scheduler::build_plan;
+    use crate::memory::device_cache::DeviceCache;
     use crate::memory::host_store::HostStore;
     use crate::memory::platform::Platform;
     use crate::memory::quant::QuantKind;

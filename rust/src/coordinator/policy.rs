@@ -18,6 +18,7 @@ use crate::coordinator::profile::Profile;
 use crate::coordinator::scheduler::ScheduleMode;
 use crate::memory::platform::Platform;
 use crate::memory::quant::QuantKind;
+use crate::memory::sharded_cache::Placement;
 use crate::memory::transfer::{LaneConfig, LanePolicy};
 
 /// Shared knobs independent of the serving method.
@@ -37,6 +38,10 @@ pub struct RunSettings {
     pub n_lanes: usize,
     /// How transfers are assigned to lanes (`--lane-policy`).
     pub lane_policy: LanePolicy,
+    /// Device backends sharding the expert cache (`--devices`).
+    pub n_devices: usize,
+    /// ExpertId → device mapping when sharded (`--placement`).
+    pub placement: Placement,
 }
 
 impl RunSettings {
@@ -52,6 +57,8 @@ impl RunSettings {
             compute_workers: 0,
             n_lanes: 1,
             lane_policy: LanePolicy::RoundRobin,
+            n_devices: 1,
+            placement: Placement::LayerSliced,
         }
     }
 }
@@ -86,6 +93,8 @@ pub fn method(name: &str, s: &RunSettings, profile: &Profile) -> Option<EngineCo
         whole_layer: false,
         compute_workers: s.compute_workers,
         lanes: LaneConfig::new(s.n_lanes, s.lane_policy),
+        devices: s.n_devices,
+        placement: s.placement,
     };
     Some(match name {
         // DeepSpeed/FlexGen-style dense offloading: loads every expert of
@@ -204,6 +213,21 @@ mod tests {
         let d = method("adapmoe", &settings(), &p).unwrap();
         assert_eq!(d.lanes.count, 1);
         assert_eq!(d.lanes.policy, LanePolicy::RoundRobin);
+    }
+
+    #[test]
+    fn device_settings_propagate_to_config() {
+        let p = Profile::synthetic(4);
+        let mut s = settings();
+        s.n_devices = 4;
+        s.placement = Placement::ExpertHash;
+        let cfg = method("adapmoe", &s, &p).unwrap();
+        assert_eq!(cfg.devices, 4);
+        assert_eq!(cfg.placement, Placement::ExpertHash);
+        // defaults stay single-device layer-sliced
+        let d = method("adapmoe", &settings(), &p).unwrap();
+        assert_eq!(d.devices, 1);
+        assert_eq!(d.placement, Placement::LayerSliced);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 use std::collections::HashSet;
 
 use crate::coordinator::gating::{GateDecision, GatingPolicy};
-use crate::memory::device_cache::DeviceCache;
+use crate::memory::device_cache::ExpertCache;
 use crate::memory::transfer::TransferEngine;
 use crate::model::ExpertId;
 
@@ -74,7 +74,7 @@ pub fn plan_requests(
     layer: usize,
     predicted: &[HashSet<usize>],
     probs_rows: &[Vec<f32>],
-    cache: &DeviceCache,
+    cache: &dyn ExpertCache,
     xfer: &TransferEngine,
 ) -> Vec<ExpertId> {
     let mut mass: Vec<(usize, f64)> = Vec::new();
@@ -105,7 +105,7 @@ pub fn plan_requests(
 pub fn layer_satisfied(
     layer: usize,
     predicted: &[HashSet<usize>],
-    cache: &DeviceCache,
+    cache: &dyn ExpertCache,
     xfer: &TransferEngine,
 ) -> bool {
     predicted.iter().flat_map(|s| s.iter()).all(|&e| {
@@ -119,6 +119,7 @@ mod tests {
     use super::*;
     use std::sync::Arc;
 
+    use crate::memory::device_cache::DeviceCache;
     use crate::memory::host_store::HostStore;
     use crate::memory::platform::Platform;
     use crate::memory::quant::QuantKind;

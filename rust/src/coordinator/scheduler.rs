@@ -17,10 +17,17 @@
 //! [`TransferHandle`] and queue order is unaffected — the plan's
 //! canonical reduction order is what keeps output bits independent of
 //! which lane lands first (see docs/transfer-lanes.md).
+//!
+//! The cache argument is the [`ExpertCache`] surface: against a
+//! [`crate::memory::sharded_cache::ShardedCache`], every lookup, staging
+//! promotion and on-demand request routes to the *owning device shard*
+//! (and, through the transfer engine's lane affinity, rides a lane of
+//! that device's group) without any change to the plan's structure —
+//! see docs/sharded-backends.md.
 
 use std::sync::Arc;
 
-use crate::memory::device_cache::DeviceCache;
+use crate::memory::device_cache::ExpertCache;
 use crate::memory::host_store::ExpertF32;
 use crate::memory::transfer::{Priority, TransferEngine, TransferHandle};
 use crate::model::ExpertId;
@@ -99,7 +106,7 @@ pub fn build_plan(
     layer: usize,
     computes: &[usize],
     extra_loads: &[usize],
-    cache: &DeviceCache,
+    cache: &dyn ExpertCache,
     xfer: &TransferEngine,
 ) -> ExecPlan {
     let mut ready = Vec::new();
@@ -147,10 +154,12 @@ pub fn build_plan(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::memory::device_cache::DeviceCache;
     use crate::memory::host_store::HostStore;
     use crate::memory::platform::Platform;
     use crate::memory::quant::QuantKind;
     use crate::testutil::{micro_config, synthetic_weights};
+    use crate::util::prop;
 
     fn fixture(alloc: Vec<usize>, platform: &str) -> (Arc<HostStore>, Arc<DeviceCache>, TransferEngine) {
         let cfg = micro_config();
@@ -228,6 +237,75 @@ mod tests {
         assert_eq!(plan.on_demand_issued, 0);
         assert!(cache.contains((0, 6)), "use promotes staged expert to cache");
         assert!(!xfer.staging_contains((0, 6)));
+    }
+
+    #[test]
+    fn staged_promotion_at_capacity_evicts_lru() {
+        // Layer 0 holds a single expert. A staged prefetch consumed by
+        // build_plan must still promote into the cache — evicting the
+        // resident LRU entry — so "use promotes staged" holds under
+        // contention, not just with free slots.
+        let (store, cache, xfer) = fixture(vec![1, 8], "instant");
+        cache.insert((0, 0), Arc::new(store.dequantize((0, 0))));
+        xfer.request((0, 5), Priority::Prefetch).wait_full();
+        xfer.quiesce();
+        assert!(xfer.staging_contains((0, 5)));
+        let (_, _, ev_before) = cache.stats();
+        let plan = build_plan(0, &[5], &[], &cache, &xfer);
+        assert_eq!(plan.n_ready(), 1, "staged expert must come back ready");
+        assert_eq!(plan.on_demand_issued, 0);
+        assert!(cache.contains((0, 5)), "promotion must land despite full layer");
+        assert!(!cache.contains((0, 0)), "LRU resident must be evicted");
+        let (_, _, ev_after) = cache.stats();
+        assert_eq!(ev_after, ev_before + 1, "promotion at capacity is an eviction");
+        assert!(!xfer.staging_contains((0, 5)), "staging entry is single-use");
+    }
+
+    #[test]
+    fn prop_staged_promotion_respects_capacity() {
+        // Random layer budgets and staged-prefetch mixes: consuming staged
+        // experts never overflows a layer, never issues on-demand loads for
+        // staged experts, and always leaves the computed experts resident
+        // (capacity permitting the newest insert).
+        prop::check("staged-promotion-capacity", 16, |rng| {
+            let cap = rng.usize_below(3); // 0..=2 slots in layer 0
+            let cfg = micro_config();
+            let w = synthetic_weights(&cfg, 21);
+            let store = Arc::new(HostStore::build(&cfg, &w, QuantKind::F32).unwrap());
+            let cache = Arc::new(DeviceCache::new(vec![cap, 8]));
+            let xfer = TransferEngine::new(
+                Arc::clone(&store),
+                Arc::clone(&cache),
+                Platform::preset("instant").unwrap(),
+                4,
+                0.0,
+            );
+            let n_staged = 1 + rng.usize_below(4);
+            let staged: Vec<usize> = (0..n_staged).collect();
+            for &e in &staged {
+                xfer.request((0, e), Priority::Prefetch).wait_full();
+            }
+            xfer.quiesce();
+            let plan = build_plan(0, &staged, &[], &cache, &xfer);
+            crate::prop_assert!(
+                plan.on_demand_issued == 0,
+                "staged experts must not re-issue loads (cap={cap}, staged={n_staged})"
+            );
+            crate::prop_assert!(plan.n_ready() == n_staged, "all staged come back ready");
+            let resident = cache.resident(0);
+            crate::prop_assert!(
+                resident.len() <= cap,
+                "layer overflow: {resident:?} > cap {cap}"
+            );
+            if cap > 0 {
+                let last = *staged.last().unwrap();
+                crate::prop_assert!(
+                    cache.contains((0, last)),
+                    "most recent promotion must be resident (cap={cap})"
+                );
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -21,6 +21,7 @@ use adapmoe::coordinator::policy::{self, RunSettings};
 use adapmoe::coordinator::profile::Profile;
 use adapmoe::memory::platform::Platform;
 use adapmoe::memory::quant::QuantKind;
+use adapmoe::memory::sharded_cache::Placement;
 use adapmoe::memory::transfer::LanePolicy;
 use adapmoe::model::tokenizer::{ByteTokenizer, EvalStream};
 use adapmoe::server::api::{GenerationEvent, GenerationRequest};
@@ -74,6 +75,9 @@ fn usage() {
            --lanes N         parallel comm lanes feeding the completion board (default: 1)\n\
            --lane-policy P   {} (default: round-robin)\n\
                              lane semantics: docs/transfer-lanes.md\n\
+           --devices N       device backends sharding the expert cache (default: 1)\n\
+           --placement P     {} (default: layer)\n\
+                             device sharding: docs/sharded-backends.md\n\
            --prompt TEXT     (generate) prompt text\n\
            --max-new N       (generate) tokens to generate (default: 64)\n\
            --temperature X   (generate) sampling temperature, 0 = greedy (default: 0)\n\
@@ -87,6 +91,7 @@ fn usage() {
         policy::METHODS.join("|"),
         Platform::names(),
         LanePolicy::names().join("|"),
+        Placement::names().join("|"),
     );
 }
 
@@ -112,17 +117,25 @@ fn build_engine(args: &Args, default_batch: usize) -> Result<Engine> {
     }
     settings.lane_policy = LanePolicy::from_name(&args.str_or("lane-policy", "round-robin"))
         .context("unknown lane policy (see --help)")?;
+    settings.n_devices = args.usize_or("devices", 1);
+    if settings.n_devices == 0 {
+        bail!("--devices must be >= 1");
+    }
+    settings.placement = Placement::from_name(&args.str_or("placement", "layer"))
+        .context("unknown placement (see --help)")?;
     let method = args.str_or("method", "adapmoe");
     let ecfg = policy::method(&method, &settings, &profile)
         .with_context(|| format!("unknown method '{method}'"))?;
     eprintln!(
-        "[adapmoe] method={method} platform={} quant={} cache={} batch={} lanes={}/{}",
+        "[adapmoe] method={method} platform={} quant={} cache={} batch={} lanes={}/{} devices={}/{}",
         settings.platform.name,
         settings.quant.name(),
         settings.cache_budget,
         settings.batch,
         settings.n_lanes,
         settings.lane_policy.name(),
+        settings.n_devices,
+        settings.placement.name(),
     );
     Engine::from_artifacts(&dir, ecfg)
 }

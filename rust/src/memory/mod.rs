@@ -1,13 +1,18 @@
 //! The simulated device memory hierarchy (DESIGN.md 'Substitutions'):
 //! [`host_store`] is "CPU memory" holding every expert quantized,
-//! [`device_cache`] is the bounded "GPU memory" expert cache, and
+//! [`device_cache`] is one bounded "GPU memory" expert cache,
+//! [`sharded_cache`] shards experts across several of those per-device
+//! pools behind a placement policy (docs/sharded-backends.md), and
 //! [`transfer`] is the PCIe link + comm stream**s** — N parallel lanes,
 //! each paced by its own wire clock derived from a [`platform`] preset
 //! calibrated so per-expert load times match the paper's testbeds (lane
-//! semantics: docs/transfer-lanes.md).
+//! semantics: docs/transfer-lanes.md). With more than one device, lanes
+//! gain a device affinity: a transfer for device d rides a lane pinned
+//! to d's lane group.
 
 pub mod device_cache;
 pub mod host_store;
 pub mod platform;
 pub mod quant;
+pub mod sharded_cache;
 pub mod transfer;

@@ -1,0 +1,524 @@
+//! Sharded device backends: a set of per-device [`DeviceCache`] shards
+//! behind a [`Placement`] policy (docs/sharded-backends.md).
+//!
+//! One [`DeviceCache`] models one device's memory pool. Production MoE
+//! serving spreads experts over several devices — the edge-distributed
+//! deployment OD-MoE argues for, and the placement problem "Towards MoE
+//! Deployment" shows dominates serving cost — so the memory layer's
+//! canonical object is a `ShardedCache`: each shard keeps its own
+//! per-layer budgets, LRU state and hit/miss/eviction counters, and a
+//! placement maps every [`ExpertId`] to the device that owns it —
+//! `layer`/`hash` as pure functions of the id, `load` by memoized
+//! first touch (stable within a run, traffic-order dependent across
+//! runs). Routing (`get`/`contains`/`insert`) always lands on the
+//! owning shard, so per-device counters sum to exactly what a single
+//! global cache would have counted.
+//!
+//! A single-shard `ShardedCache` ([`ShardedCache::single`]) wraps an
+//! existing `Arc<DeviceCache>` without copying, which keeps the
+//! historical one-device engine bit-for-bit identical: placement is the
+//! constant function 0 and every call forwards to the wrapped cache.
+//!
+//! The transfer engine gives its comm lanes a device affinity derived
+//! from [`ShardedCache::device_of`] (see
+//! [`crate::memory::transfer::TransferEngine`]), and the executor merges
+//! arrivals across devices in canonical reduction order, so output bits
+//! are independent of which device lands first.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::memory::device_cache::{DeviceCache, ExpertCache};
+use crate::memory::host_store::ExpertF32;
+use crate::model::ExpertId;
+
+/// Index of a device backend (0-based).
+pub type DeviceId = usize;
+
+/// How experts map to devices (`--placement layer|hash|load`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Contiguous layer slices: device d owns layers
+    /// `[d*L/D, (d+1)*L/D)`. Keeps a layer's experts co-located (one
+    /// device hop per layer) — the pipeline-ish split.
+    LayerSliced,
+    /// Deterministic hash of (layer, expert) across devices: every layer
+    /// spreads over all devices — the capacity-balancing split.
+    ExpertHash,
+    /// First-touch least-loaded: an expert is bound to the device with
+    /// the fewest assigned experts when first seen, then memoized so the
+    /// mapping stays stable for lookups and lane affinity.
+    LoadAware,
+}
+
+impl Placement {
+    /// Parse a CLI/config name.
+    pub fn from_name(name: &str) -> Option<Placement> {
+        match name {
+            "layer" => Some(Placement::LayerSliced),
+            "hash" => Some(Placement::ExpertHash),
+            "load" => Some(Placement::LoadAware),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Placement::LayerSliced => "layer",
+            Placement::ExpertHash => "hash",
+            Placement::LoadAware => "load",
+        }
+    }
+
+    pub fn names() -> &'static [&'static str] {
+        &["layer", "hash", "load"]
+    }
+
+    /// Owning device of a whole layer under [`Placement::LayerSliced`]
+    /// (also used by the budget partitioner to find a device's layers).
+    pub fn owner_of_layer(layer: usize, n_layers: usize, n_devices: usize) -> DeviceId {
+        if n_layers == 0 || n_devices == 0 {
+            return 0;
+        }
+        (layer * n_devices / n_layers).min(n_devices - 1)
+    }
+
+    /// Stateless part of the mapping ([`Placement::LoadAware`] is resolved
+    /// by [`ShardedCache::device_of`], which memoizes assignments).
+    fn device_of(&self, id: ExpertId, n_layers: usize, n_devices: usize) -> DeviceId {
+        match self {
+            Placement::LayerSliced => Self::owner_of_layer(id.0, n_layers, n_devices),
+            Placement::ExpertHash => {
+                // Fibonacci-style mixing: deterministic, spreads both the
+                // layer and expert indices.
+                id.0.wrapping_mul(0x9E37_79B1)
+                    .wrapping_add(id.1.wrapping_mul(0x85EB_CA77))
+                    % n_devices
+            }
+            Placement::LoadAware => 0, // overridden by the memoized map
+        }
+    }
+}
+
+/// Point-in-time counters of one device shard, for `ServerStats` /
+/// benches. `queued_bytes` is filled in by the transfer engine (bytes
+/// assigned to this device's transfers and not yet landed).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DeviceSnapshot {
+    pub device: DeviceId,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Experts currently resident on this device.
+    pub resident: usize,
+    /// Sum of the shard's per-layer budgets (in experts).
+    pub capacity: usize,
+    pub queued_bytes: u64,
+}
+
+/// First-touch assignment state for [`Placement::LoadAware`].
+struct LoadMap {
+    assigned: HashMap<ExpertId, DeviceId>,
+    /// Experts bound to each device so far.
+    counts: Vec<usize>,
+}
+
+/// A set of per-device expert caches behind one placement policy.
+pub struct ShardedCache {
+    shards: Vec<Arc<DeviceCache>>,
+    placement: Placement,
+    n_layers: usize,
+    load: Mutex<LoadMap>,
+}
+
+impl ShardedCache {
+    /// Wrap one existing cache as a single-device set (placement is the
+    /// constant 0; the wrapped `Arc` stays shared with the caller).
+    pub fn single(cache: Arc<DeviceCache>) -> ShardedCache {
+        let n_layers = cache.allocation().len();
+        ShardedCache {
+            shards: vec![cache],
+            placement: Placement::LayerSliced,
+            n_layers,
+            load: Mutex::new(LoadMap { assigned: HashMap::new(), counts: vec![0] }),
+        }
+    }
+
+    /// Build one shard per allocation vector. Every vector must cover the
+    /// same layer count; `allocations[d][l]` is device d's budget for
+    /// layer l (0 for layers the placement never routes to d).
+    pub fn new(allocations: Vec<Vec<usize>>, placement: Placement) -> ShardedCache {
+        assert!(!allocations.is_empty(), "need at least one device");
+        let n_layers = allocations[0].len();
+        assert!(
+            allocations.iter().all(|a| a.len() == n_layers),
+            "per-device allocations must cover the same layers"
+        );
+        let n = allocations.len();
+        ShardedCache {
+            shards: allocations
+                .into_iter()
+                .map(|a| Arc::new(DeviceCache::new(a)))
+                .collect(),
+            placement,
+            n_layers,
+            load: Mutex::new(LoadMap { assigned: HashMap::new(), counts: vec![0; n] }),
+        }
+    }
+
+    /// Split the global expert budget T across devices (remainder to the
+    /// earliest devices) — the step before each device's per-layer split.
+    pub fn partition_budget(total: usize, devices: usize) -> Vec<usize> {
+        assert!(devices >= 1, "need at least one device");
+        let base = total / devices;
+        let extra = total % devices;
+        (0..devices).map(|d| base + usize::from(d < extra)).collect()
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn placement(&self) -> Placement {
+        self.placement
+    }
+
+    /// One device's cache.
+    pub fn shard(&self, device: DeviceId) -> &Arc<DeviceCache> {
+        &self.shards[device]
+    }
+
+    pub fn shards(&self) -> &[Arc<DeviceCache>] {
+        &self.shards
+    }
+
+    /// The device owning `id`. Stable for the lifetime of the set:
+    /// `layer`/`hash` are pure functions of the id (reproducible across
+    /// runs); `LoadAware` binds an expert to the least-loaded device on
+    /// first touch and memoizes the choice — the mapping never moves
+    /// mid-run, but which device wins depends on traffic order, so it is
+    /// not reproducible across runs.
+    pub fn device_of(&self, id: ExpertId) -> DeviceId {
+        let n = self.shards.len();
+        if n == 1 {
+            return 0;
+        }
+        match self.placement {
+            Placement::LoadAware => {
+                let mut g = self.load.lock().unwrap();
+                if let Some(&d) = g.assigned.get(&id) {
+                    return d;
+                }
+                let d = (0..n).min_by_key(|&i| (g.counts[i], i)).expect("shards non-empty");
+                g.assigned.insert(id, d);
+                g.counts[d] += 1;
+                d
+            }
+            p => p.device_of(id, self.n_layers, n),
+        }
+    }
+
+    /// Look up on the owning shard (its hit/miss counters move; real
+    /// demand, so `LoadAware` may bind here).
+    pub fn get(&self, id: ExpertId) -> Option<Arc<ExpertF32>> {
+        self.shards[self.device_of(id)].get(id)
+    }
+
+    /// Peek on the owning shard — no counter/recency effects, and no
+    /// placement effects either: a speculative probe (prefetch planning
+    /// peeks at *predicted* experts) must not consume a `LoadAware`
+    /// first-touch binding. An unbound expert is resident nowhere, so
+    /// the answer is `false` without binding it.
+    pub fn contains(&self, id: ExpertId) -> bool {
+        if self.shards.len() > 1 && self.placement == Placement::LoadAware {
+            let bound = self.load.lock().unwrap().assigned.get(&id).copied();
+            return match bound {
+                Some(d) => self.shards[d].contains(id),
+                None => false,
+            };
+        }
+        self.shards[self.device_of(id)].contains(id)
+    }
+
+    /// Insert into the owning shard (evicting that shard's LRU entry if
+    /// its layer is at capacity).
+    pub fn insert(&self, id: ExpertId, value: Arc<ExpertF32>) -> Option<ExpertId> {
+        self.shards[self.device_of(id)].insert(id, value)
+    }
+
+    /// Resident experts of one layer, merged across shards in device
+    /// order (each shard's slice is LRU→MRU).
+    pub fn resident(&self, layer: usize) -> Vec<usize> {
+        self.shards.iter().flat_map(|s| s.resident(layer)).collect()
+    }
+
+    /// Total resident experts across shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Aggregate (hits, misses, evictions) — per-device counters sum to
+    /// exactly the single-cache figures.
+    pub fn stats(&self) -> (u64, u64, u64) {
+        self.shards.iter().fold((0, 0, 0), |(h, m, e), s| {
+            let (sh, sm, se) = s.stats();
+            (h + sh, m + sm, e + se)
+        })
+    }
+
+    pub fn reset_stats(&self) {
+        for s in &self.shards {
+            s.reset_stats();
+        }
+    }
+
+    /// Element-wise sum of the shards' per-layer budgets (the global
+    /// allocation a single cache would hold).
+    pub fn allocation(&self) -> Vec<usize> {
+        let mut total = vec![0usize; self.n_layers];
+        for s in &self.shards {
+            for (t, a) in total.iter_mut().zip(s.allocation()) {
+                *t += a;
+            }
+        }
+        total
+    }
+
+    /// Apply a *global* per-layer allocation, splitting each layer's
+    /// budget across the shards that can own its experts: the whole
+    /// budget to the layer's owner under `layer` placement, an even split
+    /// (remainder to the earliest devices) under `hash`/`load`. Shrinking
+    /// evicts shard-local LRU tails immediately.
+    pub fn set_allocation(&self, allocation: &[usize]) {
+        assert_eq!(allocation.len(), self.n_layers);
+        let n = self.shards.len();
+        if n == 1 {
+            self.shards[0].set_allocation(allocation);
+            return;
+        }
+        for (d, shard) in self.shards.iter().enumerate() {
+            let local: Vec<usize> = allocation
+                .iter()
+                .enumerate()
+                .map(|(l, &cap)| match self.placement {
+                    Placement::LayerSliced => {
+                        if Placement::owner_of_layer(l, self.n_layers, n) == d {
+                            cap
+                        } else {
+                            0
+                        }
+                    }
+                    _ => cap / n + usize::from(d < cap % n),
+                })
+                .collect();
+            shard.set_allocation(&local);
+        }
+    }
+
+    /// Per-device counter snapshots (`queued_bytes` left at 0 — the
+    /// transfer engine overlays it, see
+    /// [`crate::memory::transfer::TransferEngine::device_snapshots`]).
+    pub fn device_snapshots(&self) -> Vec<DeviceSnapshot> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(d, s)| {
+                let (hits, misses, evictions) = s.stats();
+                DeviceSnapshot {
+                    device: d,
+                    hits,
+                    misses,
+                    evictions,
+                    resident: s.len(),
+                    capacity: s.allocation().iter().sum(),
+                    queued_bytes: 0,
+                }
+            })
+            .collect()
+    }
+}
+
+impl ExpertCache for ShardedCache {
+    fn get(&self, id: ExpertId) -> Option<Arc<ExpertF32>> {
+        ShardedCache::get(self, id)
+    }
+
+    fn contains(&self, id: ExpertId) -> bool {
+        ShardedCache::contains(self, id)
+    }
+
+    fn insert(&self, id: ExpertId, value: Arc<ExpertF32>) -> Option<ExpertId> {
+        ShardedCache::insert(self, id, value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn dummy() -> Arc<ExpertF32> {
+        Arc::new(ExpertF32 {
+            w1: Tensor::zeros(vec![2, 2]),
+            w3: Tensor::zeros(vec![2, 2]),
+            w2: Tensor::zeros(vec![2, 2]),
+        })
+    }
+
+    #[test]
+    fn placement_names_roundtrip() {
+        for name in Placement::names() {
+            let p = Placement::from_name(name).expect("known name");
+            assert_eq!(p.name(), *name);
+        }
+        assert!(Placement::from_name("tarot").is_none());
+    }
+
+    #[test]
+    fn layer_sliced_owns_contiguous_blocks() {
+        // 4 layers over 2 devices: layers 0-1 on device 0, 2-3 on device 1.
+        let c = ShardedCache::new(vec![vec![2; 4], vec![2; 4]], Placement::LayerSliced);
+        assert_eq!(c.device_of((0, 5)), 0);
+        assert_eq!(c.device_of((1, 0)), 0);
+        assert_eq!(c.device_of((2, 7)), 1);
+        assert_eq!(c.device_of((3, 1)), 1);
+        // expert index never matters under layer placement
+        for e in 0..8 {
+            assert_eq!(c.device_of((2, e)), 1);
+        }
+    }
+
+    #[test]
+    fn expert_hash_spreads_and_is_stable() {
+        let c = ShardedCache::new(vec![vec![8, 8]; 4], Placement::ExpertHash);
+        let mut seen = vec![0usize; 4];
+        for l in 0..2 {
+            for e in 0..8 {
+                let d = c.device_of((l, e));
+                assert_eq!(d, c.device_of((l, e)), "mapping must be stable");
+                seen[d] += 1;
+            }
+        }
+        assert!(
+            seen.iter().filter(|&&n| n > 0).count() >= 2,
+            "hash placement must use more than one device: {seen:?}"
+        );
+    }
+
+    #[test]
+    fn load_aware_balances_first_touch_and_memoizes() {
+        let c = ShardedCache::new(vec![vec![8, 8]; 3], Placement::LoadAware);
+        let ids: Vec<ExpertId> = (0..6).map(|e| (0, e)).collect();
+        let devs: Vec<DeviceId> = ids.iter().map(|&id| c.device_of(id)).collect();
+        // 6 experts over 3 devices: exactly 2 each, round-robin by load
+        let mut per = vec![0usize; 3];
+        for &d in &devs {
+            per[d] += 1;
+        }
+        assert_eq!(per, vec![2, 2, 2], "{devs:?}");
+        // memoized: re-query returns the same device
+        for (id, d) in ids.iter().zip(&devs) {
+            assert_eq!(c.device_of(*id), *d);
+        }
+    }
+
+    #[test]
+    fn load_aware_contains_does_not_bind() {
+        let c = ShardedCache::new(vec![vec![8, 8]; 2], Placement::LoadAware);
+        // speculative peeks at predicted experts (the prefetch-planning
+        // shape) must not consume first-touch bindings
+        for e in 0..3 {
+            assert!(!c.contains((0, e)), "unbound expert is resident nowhere");
+        }
+        // first *real* touches still see untouched load counts: the tie
+        // binds to device 0 then 1 (phantom peek bindings — 0,1,0 for the
+        // three peeks above — would have skewed this to 1 first)
+        assert_eq!(c.device_of((1, 5)), 0);
+        assert_eq!(c.device_of((1, 6)), 1);
+    }
+
+    #[test]
+    fn routing_hits_owning_shard_and_counters_sum() {
+        let c = ShardedCache::new(vec![vec![4, 4], vec![4, 4]], Placement::ExpertHash);
+        for e in 0..8 {
+            c.insert((0, e), dummy());
+        }
+        for e in 0..8 {
+            assert!(c.get((0, e)).is_some());
+            let d = c.device_of((0, e));
+            assert!(c.shard(d).contains((0, e)), "expert must live on its owner");
+            assert!(
+                !c.shard(1 - d).contains((0, e)),
+                "expert must not leak to the other shard"
+            );
+        }
+        c.get((1, 0)); // miss
+        let (h, m, e) = c.stats();
+        assert_eq!((h, m), (8, 1));
+        let snaps = c.device_snapshots();
+        assert_eq!(snaps.iter().map(|s| s.hits).sum::<u64>(), h);
+        assert_eq!(snaps.iter().map(|s| s.misses).sum::<u64>(), m);
+        assert_eq!(snaps.iter().map(|s| s.evictions).sum::<u64>(), e);
+        assert_eq!(snaps.iter().map(|s| s.resident).sum::<usize>(), c.len());
+    }
+
+    #[test]
+    fn single_wraps_shared_arc() {
+        let inner = Arc::new(DeviceCache::new(vec![2, 2]));
+        let c = ShardedCache::single(Arc::clone(&inner));
+        assert_eq!(c.n_devices(), 1);
+        c.insert((0, 1), dummy());
+        // the caller's Arc sees the same data — no copy was made
+        assert!(inner.contains((0, 1)));
+        assert_eq!(c.device_of((1, 7)), 0);
+        assert_eq!(c.stats(), inner.stats());
+    }
+
+    #[test]
+    fn partition_budget_sums_with_remainder_first() {
+        assert_eq!(ShardedCache::partition_budget(10, 4), vec![3, 3, 2, 2]);
+        assert_eq!(ShardedCache::partition_budget(8, 2), vec![4, 4]);
+        assert_eq!(ShardedCache::partition_budget(0, 3), vec![0, 0, 0]);
+        assert_eq!(ShardedCache::partition_budget(2, 5), vec![1, 1, 0, 0, 0]);
+    }
+
+    #[test]
+    fn global_allocation_sums_and_set_allocation_routes() {
+        let c = ShardedCache::new(vec![vec![2, 2], vec![2, 2]], Placement::ExpertHash);
+        assert_eq!(c.allocation(), vec![4, 4]);
+        c.set_allocation(&[3, 1]);
+        assert_eq!(c.allocation(), vec![3, 1]);
+        // hash/load split: even with remainder to the earliest device
+        assert_eq!(c.shard(0).allocation(), vec![2, 1]);
+        assert_eq!(c.shard(1).allocation(), vec![1, 0]);
+
+        let lc = ShardedCache::new(vec![vec![2, 2], vec![2, 2]], Placement::LayerSliced);
+        lc.set_allocation(&[3, 1]);
+        // layer placement: the owning device takes the whole layer budget
+        assert_eq!(lc.shard(0).allocation(), vec![3, 0]);
+        assert_eq!(lc.shard(1).allocation(), vec![0, 1]);
+        assert_eq!(lc.allocation(), vec![3, 1]);
+    }
+
+    #[test]
+    fn shrinking_evicts_only_on_the_owning_shard() {
+        let c = ShardedCache::new(vec![vec![4], vec![4]], Placement::ExpertHash);
+        for e in 0..8 {
+            c.insert((0, e), dummy());
+        }
+        let before = c.len();
+        c.set_allocation(&[2]);
+        assert!(c.len() <= 2);
+        assert!(before > c.len());
+        let (_, _, ev) = c.stats();
+        assert_eq!(ev as usize, before - c.len());
+    }
+}

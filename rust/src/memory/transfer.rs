@@ -25,6 +25,15 @@
 //! rather than blocking on transfers in plan order — see
 //! [`crate::coordinator::executor`]. Lane semantics, policies and the
 //! determinism guarantees are documented in `docs/transfer-lanes.md`.
+//!
+//! The engine drains into a [`ShardedCache`]: with more than one device
+//! backend, lanes gain a **device affinity** — a transfer for device d
+//! rides a lane of d's lane group (lane l serves device `l % devices`),
+//! and the configured [`LanePolicy`] picks *within* the group. With one
+//! device (the historical shape) assignment falls back to PR 3's
+//! policies bit-for-bit. Per-device queued bytes are tracked alongside
+//! the per-lane gauges and surfaced through
+//! [`TransferEngine::device_snapshots`] (docs/sharded-backends.md).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -38,6 +47,7 @@ use anyhow::{bail, Result};
 use crate::memory::device_cache::DeviceCache;
 use crate::memory::host_store::{ExpertF32, HostStore};
 use crate::memory::platform::Platform;
+use crate::memory::sharded_cache::{DeviceId, DeviceSnapshot, ShardedCache};
 use crate::model::ExpertId;
 use crate::tensor::Tensor;
 
@@ -364,6 +374,8 @@ impl CompletionBoard {
 
 struct Job {
     id: ExpertId,
+    /// Owning device shard (resolved once at request time).
+    device: DeviceId,
     handle: Arc<TransferHandle>,
     priority: Priority,
 }
@@ -475,9 +487,24 @@ const QUIESCE_BACKSTOP: Duration = Duration::from_secs(30);
 pub struct TransferEngine {
     lanes: Vec<Lane>,
     policy: LanePolicy,
-    /// Round-robin cursor.
+    /// Round-robin cursor (single-device assignment).
     rr: AtomicU64,
     store: Arc<HostStore>,
+    /// The device-sharded cache set every lane drains into (a single
+    /// shard for the historical one-device engine). Placement drives the
+    /// lane affinity of [`TransferEngine::request`].
+    cache: Arc<ShardedCache>,
+    /// Lane group of each device (lane l serves device `l % devices`;
+    /// a device whose group would be empty falls back to the single
+    /// lane `device % lanes`). Fixed at construction.
+    lane_groups: Vec<Vec<LaneId>>,
+    /// Per-device round-robin cursors: each device cycles its *own*
+    /// group, so periodic cross-device request patterns cannot alias
+    /// onto a fixed lane per device and starve the rest of the group.
+    rr_dev: Vec<AtomicU64>,
+    /// Bytes assigned to each device's transfers and not yet
+    /// landed/skipped (mirrors the per-lane `queued_bytes` gauge).
+    device_queued: Arc<Vec<AtomicU64>>,
     in_flight: Arc<InFlight>,
     /// Aggregate counters across lanes.
     pub stats: Arc<TransferStats>,
@@ -503,11 +530,34 @@ impl TransferEngine {
         Self::with_lanes(store, cache, platform, n_tiles, time_scale, LaneConfig::default())
     }
 
-    /// Spawn `lanes.count` comm threads, each with its own queues and wire
-    /// clock, all publishing to one shared board/staging/cache.
+    /// Spawn `lanes.count` comm threads over a single device cache, each
+    /// with its own queues and wire clock, all publishing to one shared
+    /// board/staging/cache.
     pub fn with_lanes(
         store: Arc<HostStore>,
         cache: Arc<DeviceCache>,
+        platform: Platform,
+        n_tiles: usize,
+        time_scale: f64,
+        lanes: LaneConfig,
+    ) -> TransferEngine {
+        Self::with_devices(
+            store,
+            Arc::new(ShardedCache::single(cache)),
+            platform,
+            n_tiles,
+            time_scale,
+            lanes,
+        )
+    }
+
+    /// Spawn the engine over a sharded device-cache set: every lane still
+    /// publishes to the shared board/staging, but completed transfers land
+    /// on the *owning* shard, and lane assignment gains device affinity
+    /// when `cache.n_devices() > 1` (see [`TransferEngine::request`]).
+    pub fn with_devices(
+        store: Arc<HostStore>,
+        cache: Arc<ShardedCache>,
         platform: Platform,
         n_tiles: usize,
         time_scale: f64,
@@ -524,6 +574,21 @@ impl TransferEngine {
         let staging = Arc::new(Staging::new(4 * store.n_experts));
         let completions = Arc::new(CompletionBoard::new());
         let shutdown = Arc::new(AtomicBool::new(false));
+        let n_devices = cache.n_devices();
+        let device_queued: Arc<Vec<AtomicU64>> =
+            Arc::new((0..n_devices).map(|_| AtomicU64::new(0)).collect());
+        let lane_groups: Vec<Vec<LaneId>> = (0..n_devices)
+            .map(|dev| {
+                let group: Vec<LaneId> =
+                    (0..lanes.count).filter(|l| l % n_devices == dev).collect();
+                if group.is_empty() {
+                    vec![dev % lanes.count]
+                } else {
+                    group
+                }
+            })
+            .collect();
+        let rr_dev: Vec<AtomicU64> = (0..n_devices).map(|_| AtomicU64::new(0)).collect();
 
         let lane_set: Vec<Lane> = (0..lanes.count)
             .map(|lane_id| {
@@ -549,6 +614,7 @@ impl TransferEngine {
                         in_flight: Arc::clone(&in_flight),
                         stats: Arc::clone(&stats),
                         lane_stats: Arc::clone(&lane_stats),
+                        device_queued: Arc::clone(&device_queued),
                         staging: Arc::clone(&staging),
                         promotions: Arc::clone(&promotions),
                         completions: Arc::clone(&completions),
@@ -577,6 +643,10 @@ impl TransferEngine {
             policy: lanes.policy,
             rr: AtomicU64::new(0),
             store,
+            cache,
+            lane_groups,
+            rr_dev,
+            device_queued,
             in_flight,
             stats,
             staging,
@@ -594,6 +664,35 @@ impl TransferEngine {
         self.policy
     }
 
+    /// Device backends this engine drains into (1 = historical shape).
+    pub fn n_devices(&self) -> usize {
+        self.cache.n_devices()
+    }
+
+    /// The sharded cache set the lanes publish into.
+    pub fn sharded_cache(&self) -> &Arc<ShardedCache> {
+        &self.cache
+    }
+
+    /// Lanes with affinity to `device`: lane l serves device
+    /// `l % n_devices`. When there are fewer lanes than devices the
+    /// group would be empty, so the device falls back to the single lane
+    /// `device % n_lanes` (several devices then share a lane). Groups
+    /// are precomputed at construction.
+    pub fn lanes_for_device(&self, device: DeviceId) -> &[LaneId] {
+        &self.lane_groups[device]
+    }
+
+    /// Per-device cache counters overlaid with the in-flight queued-bytes
+    /// gauge (`ServerStats.devices`, fig9 tables).
+    pub fn device_snapshots(&self) -> Vec<DeviceSnapshot> {
+        let mut snaps = self.cache.device_snapshots();
+        for snap in snaps.iter_mut() {
+            snap.queued_bytes = self.device_queued[snap.device].load(Ordering::Relaxed);
+        }
+        snaps
+    }
+
     /// Point-in-time per-lane counters (stable lane order).
     pub fn lane_snapshots(&self) -> Vec<LaneSnapshot> {
         self.lanes
@@ -608,27 +707,52 @@ impl TransferEngine {
         self.in_flight.map.lock().unwrap().get(&id).map(|(l, _)| *l)
     }
 
-    /// Assign a fresh job to a lane under the configured policy.
-    fn assign_lane(&self, priority: Priority) -> LaneId {
+    /// Lane with the fewest assigned-but-unfinished bytes among
+    /// `candidates` (ties toward the lowest index).
+    fn least_queued(&self, candidates: impl Iterator<Item = LaneId>) -> LaneId {
+        candidates
+            .min_by_key(|&i| {
+                (self.lanes[i].stats.queued_bytes.load(Ordering::Relaxed), i)
+            })
+            .expect("non-empty lane group")
+    }
+
+    /// Assign a fresh job for `device` to a lane. With one device this
+    /// is PR 3's policy logic unchanged; with several, the job is
+    /// confined to the owning device's lane group and the policy picks
+    /// *within* it (`Pinned` reserves the group's first lane for
+    /// on-demand when the group has more than one lane).
+    fn assign_lane(&self, device: DeviceId, priority: Priority) -> LaneId {
         let n = self.lanes.len();
         if n == 1 {
             return 0;
         }
-        let least_queued = |range: std::ops::Range<usize>| -> LaneId {
-            range
-                .min_by_key(|&i| {
-                    (self.lanes[i].stats.queued_bytes.load(Ordering::Relaxed), i)
-                })
-                .expect("non-empty lane range")
-        };
+        if self.cache.n_devices() > 1 {
+            let group = &self.lane_groups[device];
+            if group.len() == 1 {
+                return group[0];
+            }
+            return match self.policy {
+                LanePolicy::RoundRobin => {
+                    // per-device cursor: each device cycles its own group
+                    let k = self.rr_dev[device].fetch_add(1, Ordering::Relaxed) as usize;
+                    group[k % group.len()]
+                }
+                LanePolicy::LeastQueuedBytes => self.least_queued(group.iter().copied()),
+                LanePolicy::Pinned => match priority {
+                    Priority::OnDemand => group[0],
+                    Priority::Prefetch => self.least_queued(group[1..].iter().copied()),
+                },
+            };
+        }
         match self.policy {
             LanePolicy::RoundRobin => {
                 (self.rr.fetch_add(1, Ordering::Relaxed) as usize) % n
             }
-            LanePolicy::LeastQueuedBytes => least_queued(0..n),
+            LanePolicy::LeastQueuedBytes => self.least_queued(0..n),
             LanePolicy::Pinned => match priority {
                 Priority::OnDemand => 0,
-                Priority::Prefetch => least_queued(1..n),
+                Priority::Prefetch => self.least_queued(1..n),
             },
         }
     }
@@ -647,16 +771,18 @@ impl TransferEngine {
             }
             return h;
         }
-        let lane = self.assign_lane(priority);
+        let device = self.cache.device_of(id);
+        let lane = self.assign_lane(device, priority);
         let handle = Arc::new(TransferHandle::new(id, self.n_tiles, lane));
         g.insert(id, (lane, Arc::clone(&handle)));
         drop(g);
         // Queued-load accounting uses the same byte figure the lane thread
-        // will subtract on completion, so it drains back to exactly zero.
-        self.lanes[lane]
-            .stats
-            .enqueue(self.store.expert_transfer_bytes(id) as u64);
-        let job = Job { id, handle: Arc::clone(&handle), priority };
+        // will subtract on completion, so both the lane and device gauges
+        // drain back to exactly zero.
+        let bytes = self.store.expert_transfer_bytes(id) as u64;
+        self.lanes[lane].stats.enqueue(bytes);
+        self.device_queued[device].fetch_add(bytes, Ordering::Relaxed);
+        let job = Job { id, device, handle: Arc::clone(&handle), priority };
         let l = &self.lanes[lane];
         // A dead lane (halt_lane fault injection, or a crashed worker) has
         // dropped its receivers, so the send fails. Don't panic the
@@ -778,7 +904,8 @@ impl Drop for TransferEngine {
 struct CommCtx {
     lane: LaneId,
     store: Arc<HostStore>,
-    cache: Arc<DeviceCache>,
+    /// Device-routed cache set: inserts land on the owning shard.
+    cache: Arc<ShardedCache>,
     platform: Platform,
     n_tiles: usize,
     /// Engine time_scale × this lane's multiplier.
@@ -789,6 +916,7 @@ struct CommCtx {
     in_flight: Arc<InFlight>,
     stats: Arc<TransferStats>,
     lane_stats: Arc<LaneStats>,
+    device_queued: Arc<Vec<AtomicU64>>,
     staging: Arc<Staging>,
     promotions: Arc<Mutex<std::collections::HashSet<ExpertId>>>,
     completions: Arc<CompletionBoard>,
@@ -892,8 +1020,9 @@ fn admit(ctx: &CommCtx, job: Job) -> Option<Active> {
             kind: CompletionKind::Full,
             lane: ctx.lane,
         });
-        ctx.lane_stats
-            .dequeue(ctx.store.expert_transfer_bytes(job.id) as u64);
+        let bytes = ctx.store.expert_transfer_bytes(job.id) as u64;
+        ctx.lane_stats.dequeue(bytes);
+        ctx.device_queued[job.device].fetch_sub(bytes, Ordering::Relaxed);
         ctx.in_flight.remove(job.id);
         ctx.stats.skipped_cached.fetch_add(1, Ordering::Relaxed);
         ctx.lane_stats.skipped_cached.fetch_add(1, Ordering::Relaxed);
@@ -967,8 +1096,9 @@ fn finish(ctx: &CommCtx, a: Active) {
         kind: CompletionKind::Full,
         lane: ctx.lane,
     });
-    ctx.lane_stats
-        .dequeue(ctx.store.expert_transfer_bytes(a.job.id) as u64);
+    let q_bytes = ctx.store.expert_transfer_bytes(a.job.id) as u64;
+    ctx.lane_stats.dequeue(q_bytes);
+    ctx.device_queued[a.job.device].fetch_sub(q_bytes, Ordering::Relaxed);
     ctx.in_flight.remove(a.job.id);
 
     ctx.stats.transfers.fetch_add(1, Ordering::Relaxed);
@@ -1440,5 +1570,156 @@ mod tests {
             assert_eq!(p.name(), *name);
         }
         assert!(LanePolicy::from_name("warp-drive").is_none());
+    }
+
+    // -- sharded device backends ----------------------------------------------
+
+    use crate::memory::sharded_cache::Placement;
+
+    fn setup_devices(
+        kind: QuantKind,
+        allocations: Vec<Vec<usize>>,
+        placement: Placement,
+        platform: &str,
+        scale: f64,
+        lanes: LaneConfig,
+    ) -> (Arc<HostStore>, Arc<ShardedCache>, TransferEngine) {
+        let cfg = test_config();
+        let w = fake_weights(&cfg, 7);
+        let store = Arc::new(HostStore::build(&cfg, &w, kind).unwrap());
+        let cache = Arc::new(ShardedCache::new(allocations, placement));
+        let engine = TransferEngine::with_devices(
+            Arc::clone(&store),
+            Arc::clone(&cache),
+            Platform::preset(platform).unwrap(),
+            4,
+            scale,
+            lanes,
+        );
+        (store, cache, engine)
+    }
+
+    #[test]
+    fn device_affinity_partitions_lanes() {
+        // 2 devices (layer-sliced over the 2-layer micro config), 4 lanes:
+        // layer-0 transfers must ride lanes {0,2}, layer-1 lanes {1,3}.
+        let (_store, cache, engine) = setup_devices(
+            QuantKind::F32,
+            vec![vec![8, 8]; 2],
+            Placement::LayerSliced,
+            "instant",
+            0.0,
+            LaneConfig::new(4, LanePolicy::RoundRobin),
+        );
+        assert_eq!(engine.n_devices(), 2);
+        assert_eq!(engine.lanes_for_device(0), vec![0, 2]);
+        assert_eq!(engine.lanes_for_device(1), vec![1, 3]);
+        for e in 0..4 {
+            let h0 = engine.request((0, e), Priority::OnDemand);
+            assert_eq!(h0.lane % 2, 0, "layer 0 rode lane {}", h0.lane);
+            let h1 = engine.request((1, e), Priority::OnDemand);
+            assert_eq!(h1.lane % 2, 1, "layer 1 rode lane {}", h1.lane);
+        }
+        engine.quiesce();
+        // completed loads landed on the owning shard only
+        for e in 0..4 {
+            assert!(cache.shard(0).contains((0, e)));
+            assert!(!cache.shard(1).contains((0, e)));
+            assert!(cache.shard(1).contains((1, e)));
+        }
+        // device queued-bytes gauge drains to zero like the lane gauges
+        let snaps = engine.device_snapshots();
+        assert_eq!(snaps.len(), 2);
+        assert!(snaps.iter().all(|s| s.queued_bytes == 0), "{snaps:?}");
+        assert!(snaps.iter().all(|s| s.resident == 4), "{snaps:?}");
+    }
+
+    #[test]
+    fn device_round_robin_cycles_within_each_group() {
+        // Alternating cross-device traffic must cycle each device's own
+        // group: a single global cursor would alias device 0 to lane 0
+        // and device 1 to lane 3 forever, starving lanes 2 and 1.
+        let (_store, _cache, engine) = setup_devices(
+            QuantKind::F32,
+            vec![vec![8, 8]; 2],
+            Placement::LayerSliced,
+            "instant",
+            0.0,
+            LaneConfig::new(4, LanePolicy::RoundRobin),
+        );
+        let mut lanes0 = Vec::new();
+        let mut lanes1 = Vec::new();
+        for e in 0..4 {
+            lanes0.push(engine.request((0, e), Priority::OnDemand).lane);
+            lanes1.push(engine.request((1, e), Priority::OnDemand).lane);
+        }
+        assert_eq!(lanes0, vec![0, 2, 0, 2], "device 0 cycles its own group");
+        assert_eq!(lanes1, vec![1, 3, 1, 3], "device 1 cycles its own group");
+        engine.quiesce();
+    }
+
+    #[test]
+    fn fewer_lanes_than_devices_share_a_fallback_lane() {
+        // 3 devices over 2 lanes: device 2's lane group is empty, so its
+        // transfers fall back to lane 2 % 2 = 0 instead of panicking.
+        let (_store, cache, engine) = setup_devices(
+            QuantKind::F32,
+            vec![vec![8, 8]; 3],
+            Placement::ExpertHash,
+            "instant",
+            0.0,
+            LaneConfig::new(2, LanePolicy::RoundRobin),
+        );
+        assert_eq!(engine.lanes_for_device(2), vec![0]);
+        for e in 0..8 {
+            let id = (0usize, e);
+            let dev = cache.device_of(id);
+            let expect = engine.lanes_for_device(dev)[0];
+            let h = engine.request(id, Priority::OnDemand);
+            assert_eq!(h.lane, expect, "expert {id:?} of device {dev}");
+        }
+        engine.quiesce();
+    }
+
+    #[test]
+    fn pinned_policy_applies_within_device_group() {
+        // 2 devices × 4 lanes under `pinned`: each device's group is
+        // [d, d+2]; on-demand rides the group head, prefetch the rest.
+        let (_store, _cache, engine) = setup_devices(
+            QuantKind::F32,
+            vec![vec![8, 8]; 2],
+            Placement::LayerSliced,
+            "instant",
+            0.0,
+            LaneConfig::new(4, LanePolicy::Pinned),
+        );
+        let od = engine.request((0, 0), Priority::OnDemand);
+        assert_eq!(od.lane, 0, "device 0 on-demand rides its group head");
+        let pf = engine.request((0, 1), Priority::Prefetch);
+        assert_eq!(pf.lane, 2, "device 0 prefetch avoids the reserved lane");
+        let od1 = engine.request((1, 0), Priority::OnDemand);
+        assert_eq!(od1.lane, 1, "device 1 on-demand rides its group head");
+        let pf1 = engine.request((1, 1), Priority::Prefetch);
+        assert_eq!(pf1.lane, 3);
+        engine.quiesce();
+    }
+
+    #[test]
+    fn single_device_set_matches_historical_assignment() {
+        // with_lanes wraps a single shard: assignment must be the PR 3
+        // logic (round-robin over all lanes, no affinity confinement).
+        let (_store, _cache, engine) = setup_lanes(
+            QuantKind::F32,
+            vec![8, 8],
+            "instant",
+            0.0,
+            LaneConfig::new(3, LanePolicy::RoundRobin),
+        );
+        assert_eq!(engine.n_devices(), 1);
+        let lanes: Vec<LaneId> = (0..6)
+            .map(|e| engine.request((0, e), Priority::OnDemand).lane)
+            .collect();
+        assert_eq!(lanes, vec![0, 1, 2, 0, 1, 2]);
+        engine.quiesce();
     }
 }

@@ -10,6 +10,7 @@
 use anyhow::{bail, Result};
 
 pub use crate::coordinator::batcher::{FinishReason, SamplingParams};
+pub use crate::memory::sharded_cache::DeviceSnapshot;
 pub use crate::memory::transfer::LaneSnapshot;
 use crate::model::tokenizer::ByteTokenizer;
 use crate::util::json::Json;
@@ -222,10 +223,30 @@ pub struct ServerStats {
     /// Per-comm-lane transfer counters (one entry per lane, in lane
     /// order); empty when the backend has no transfer engine (mock).
     pub lanes: Vec<LaneSnapshot>,
+    /// Per-device expert-cache shard counters (one entry per device, in
+    /// device order; a single entry for the historical one-device
+    /// engine); empty when the backend has no cache (mock).
+    pub devices: Vec<DeviceSnapshot>,
 }
 
 impl ServerStats {
     pub fn to_json(&self) -> Json {
+        let devices = Json::Arr(
+            self.devices
+                .iter()
+                .map(|d| {
+                    Json::obj(vec![
+                        ("device", Json::Num(d.device as f64)),
+                        ("hits", Json::Num(d.hits as f64)),
+                        ("misses", Json::Num(d.misses as f64)),
+                        ("evictions", Json::Num(d.evictions as f64)),
+                        ("resident", Json::Num(d.resident as f64)),
+                        ("capacity", Json::Num(d.capacity as f64)),
+                        ("queued_bytes", Json::Num(d.queued_bytes as f64)),
+                    ])
+                })
+                .collect(),
+        );
         let lanes = Json::Arr(
             self.lanes
                 .iter()
@@ -257,6 +278,7 @@ impl ServerStats {
             ("queue_p50_ms", Json::Num(self.queue_p50_ms)),
             ("uptime_s", Json::Num(self.uptime_s)),
             ("lanes", lanes),
+            ("devices", devices),
         ])
     }
 }
@@ -330,8 +352,40 @@ mod tests {
         assert_eq!(j.get("served").and_then(|v| v.as_usize()), Some(2));
         assert_eq!(j.get("queued").and_then(|v| v.as_usize()), Some(1));
         assert!(j.get("tokens_per_sec").is_some());
-        // lanes always present, empty without a transfer engine
+        // lanes/devices always present, empty without a transfer engine
         assert_eq!(j.get("lanes").and_then(|l| l.as_arr()).map(|a| a.len()), Some(0));
+        assert_eq!(j.get("devices").and_then(|d| d.as_arr()).map(|a| a.len()), Some(0));
+    }
+
+    #[test]
+    fn stats_serialize_per_device_entries() {
+        let s = ServerStats {
+            devices: vec![
+                DeviceSnapshot {
+                    device: 0,
+                    hits: 7,
+                    misses: 2,
+                    evictions: 1,
+                    resident: 5,
+                    capacity: 8,
+                    queued_bytes: 4096,
+                },
+                DeviceSnapshot { device: 1, misses: 3, ..Default::default() },
+            ],
+            ..Default::default()
+        };
+        let j = s.to_json();
+        let devices = j.get("devices").and_then(|d| d.as_arr()).expect("devices array");
+        assert_eq!(devices.len(), 2);
+        assert_eq!(devices[0].get("device").and_then(|v| v.as_usize()), Some(0));
+        assert_eq!(devices[0].get("hits").and_then(|v| v.as_usize()), Some(7));
+        assert_eq!(devices[0].get("misses").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(devices[0].get("evictions").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(devices[0].get("resident").and_then(|v| v.as_usize()), Some(5));
+        assert_eq!(devices[0].get("capacity").and_then(|v| v.as_usize()), Some(8));
+        assert_eq!(devices[0].get("queued_bytes").and_then(|v| v.as_usize()), Some(4096));
+        assert_eq!(devices[1].get("device").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(devices[1].get("misses").and_then(|v| v.as_usize()), Some(3));
     }
 
     #[test]

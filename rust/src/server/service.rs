@@ -37,6 +37,9 @@ pub struct PerfSnapshot {
     /// Per-comm-lane transfer counters (empty for backends without a
     /// transfer engine, e.g. the mock).
     pub lanes: Vec<crate::memory::transfer::LaneSnapshot>,
+    /// Per-device expert-cache shard counters (empty for backends
+    /// without a cache, e.g. the mock).
+    pub devices: Vec<crate::memory::sharded_cache::DeviceSnapshot>,
 }
 
 /// What the service needs from a decode engine. [`Engine`] is the real
@@ -78,6 +81,7 @@ impl Backend for Engine {
             token_p50_ms: self.trace.token_latency.p50() * 1e3,
             token_p99_ms: self.trace.token_latency.p99() * 1e3,
             lanes: self.xfer.lane_snapshots(),
+            devices: self.xfer.device_snapshots(),
         }
     }
 }
@@ -329,6 +333,7 @@ impl ServiceHandle {
             queue_p50_ms: g.queue_wait_ms.p50(),
             uptime_s: g.started_at.elapsed().as_secs_f64(),
             lanes: g.perf.lanes.clone(),
+            devices: g.perf.devices.clone(),
         }
     }
 

@@ -23,7 +23,8 @@
 //!   <- {"queued": .., "active": .., "served": .., "cancelled": ..,
 //!       "tokens_generated": .., "tokens_per_sec": .., "token_p50_ms": ..,
 //!       "token_p99_ms": .., "request_p50_ms": .., "request_p99_ms": ..,
-//!       "queue_p50_ms": .., "uptime_s": ..}
+//!       "queue_p50_ms": .., "uptime_s": ..,
+//!       "lanes": [..per comm lane..], "devices": [..per cache shard..]}
 //!
 //!   -> {"cmd": "ping"}
 //!   <- {"pong": true}

@@ -14,6 +14,7 @@ use adapmoe::coordinator::profile::Profile;
 use adapmoe::coordinator::scheduler::ScheduleMode;
 use adapmoe::memory::platform::Platform;
 use adapmoe::memory::quant::QuantKind;
+use adapmoe::memory::sharded_cache::Placement;
 use adapmoe::memory::transfer::LaneConfig;
 use adapmoe::model::config::ModelConfig;
 use adapmoe::model::tokenizer::EvalStream;
@@ -334,6 +335,8 @@ fn tile_wise_engine_matches_expert_wise() {
         whole_layer: false,
         compute_workers: 0,
         lanes: LaneConfig::default(),
+        devices: 1,
+        placement: Placement::LayerSliced,
     };
     let mut ew = Engine::from_artifacts(&dir, mk(ScheduleMode::ExpertWise)).unwrap();
     let mut tw = Engine::from_artifacts(&dir, mk(ScheduleMode::TileWise)).unwrap();

@@ -244,6 +244,19 @@ fn stats_round_trip_is_nonempty_and_counts() {
     assert!(stats.get("tokens_per_sec").and_then(|v| v.as_f64()).unwrap() > 0.0);
     assert!(stats.get("request_p50_ms").and_then(|v| v.as_f64()).unwrap() >= 0.0);
     assert!(stats.get("uptime_s").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+    // per-lane and per-device arrays always ride the wire; the mock
+    // backend has no transfer engine or cache shards, so both are empty
+    // (non-empty device entries are round-tripped in server::api tests)
+    assert_eq!(
+        stats.get("lanes").and_then(|l| l.as_arr()).map(|a| a.len()),
+        Some(0),
+        "lanes array must round-trip"
+    );
+    assert_eq!(
+        stats.get("devices").and_then(|d| d.as_arr()).map(|a| a.len()),
+        Some(0),
+        "devices array must round-trip"
+    );
 
     // ping + malformed lines on the same connection
     let (mut s, mut r) = srv.connect();
