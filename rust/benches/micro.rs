@@ -17,6 +17,7 @@ use adapmoe::memory::host_store::HostStore;
 use adapmoe::memory::platform::Platform;
 use adapmoe::memory::quant::{QuantKind, QuantTensor};
 use adapmoe::memory::sharded_cache::{Placement, ShardedCache};
+use adapmoe::memory::tiered_store::{PrecisionPolicy, TieredStore};
 use adapmoe::memory::transfer::{LaneConfig, LanePolicy, Priority, TransferEngine};
 use adapmoe::model::config::ModelConfig;
 use adapmoe::model::weights::Weights;
@@ -285,10 +286,107 @@ fn device_drain_case() {
     println!(" wire — while aggregate cache capacity grows with the device count)");
 }
 
+/// Tiered-precision drain: the completion-driven drain over a
+/// `--tiers int2,int4` store with the urgency policy — on-demand loads
+/// ride the int2 encoding (fewest bytes on the stall path), prefetches
+/// the int4 one. The table attributes bytes moved per tier alongside the
+/// drain's stall/queue-delay, so the low-tier share of the wire is
+/// visible directly. Needs no artifacts.
+fn tier_drain_case() {
+    let cfg = ModelConfig {
+        name: "bench-tiers".into(),
+        vocab_size: 64,
+        d_model: 128,
+        n_heads: 2,
+        head_dim: 64,
+        n_layers: 1,
+        n_experts: 8,
+        top_k: 2,
+        d_ff: 512,
+        max_seq: 8,
+        rms_eps: 1e-5,
+        batch_sizes: vec![1, 4, 16],
+    };
+    let weights = synthetic_weights(&cfg, 45);
+    let tiers = Arc::new(
+        TieredStore::build(&cfg, &weights, &[QuantKind::Int2, QuantKind::Int4]).unwrap(),
+    );
+    let n = cfg.n_experts;
+
+    println!(
+        "\n=== tiered-precision drain: --tiers int2,int4, urgency policy (rtx4090, \
+         4 on-demand + 4 prefetch) ==="
+    );
+    println!("(evens load on demand at int2, odds prefetch at int4, inverted enqueue order)");
+    let mut table = Table::new(&[
+        "batch", "tier", "transfers", "bytes moved", "stall (ms)", "queue-delay (ms)",
+    ]);
+    for &b in &[1usize, 4, 16] {
+        let mut rng = Rng::new(17 + b as u64);
+        let x = Tensor::new(
+            vec![b, cfg.d_model],
+            (0..b * cfg.d_model).map(|_| rng.f32() - 0.5).collect(),
+        )
+        .unwrap();
+        let coef: Vec<Vec<f32>> = (0..n)
+            .map(|e| vec![1.0 / (e as f32 + 2.0); b])
+            .collect();
+        let cache = Arc::new(DeviceCache::new(vec![2]));
+        let xfer = TransferEngine::with_tiers(
+            Arc::clone(&tiers),
+            PrecisionPolicy::Urgency,
+            Arc::new(ShardedCache::single(Arc::clone(&cache))),
+            Platform::preset("rtx4090").unwrap(),
+            4,
+            1.0,
+            LaneConfig::default(),
+        );
+        for e in (0..n).rev() {
+            if e % 2 == 0 {
+                xfer.request((0, e), Priority::OnDemand);
+            } else {
+                xfer.request((0, e), Priority::Prefetch);
+            }
+        }
+        let computes: Vec<usize> = (0..n).collect();
+        let plan = build_plan(0, &computes, &[], &cache, &xfer);
+        let pool = ThreadPool::new(4);
+        let out = run_layer_parallel(
+            &plan,
+            &x,
+            &coef,
+            ScheduleMode::ExpertWise,
+            4,
+            &cache,
+            &xfer,
+            &pool,
+        );
+        for snap in xfer.tier_snapshots() {
+            let qd = out
+                .queue_delay_by_tier
+                .get(&snap.kind.tier_index())
+                .copied()
+                .unwrap_or(0);
+            table.row(&[
+                format!("{b}"),
+                snap.kind.name().to_string(),
+                format!("{}", snap.transfers),
+                format!("{}", snap.bytes),
+                format!("{:.1}", out.stall_ns as f64 / 1e6),
+                format!("{:.1}", qd as f64 / 1e6),
+            ]);
+        }
+    }
+    table.print();
+    println!("(the int2 rows carry the compute-stalling loads at a fraction of the int4");
+    println!(" byte volume — the win the urgency-driven bitwidth selection buys)");
+}
+
 fn main() {
     moe_pipeline_case();
     lane_drain_case();
     device_drain_case();
+    tier_drain_case();
 
     let Some(dir) = artifacts_dir() else { return };
     let (cfg, manifest) = ModelConfig::load_manifest(&dir).expect("manifest");

@@ -108,6 +108,55 @@ pub fn allocation_cost(inp: &PlanInputs, allocation: &[usize]) -> f64 {
         .sum()
 }
 
+/// Byte-denominated planner inputs: device memory is budgeted in bytes
+/// and converted to expert slots at the resident tier's per-expert wire
+/// footprint. The tiered store's cache layer is byte-denominated
+/// (docs/tiered-precision.md): the DP still reasons in experts — the
+/// quantity the hit-rate model of §4.4 is written in — but the budget
+/// arrives and leaves in bytes.
+#[derive(Clone, Debug)]
+pub struct BytePlanInputs {
+    pub n_experts: usize,
+    /// Total cache budget in bytes.
+    pub budget_bytes: usize,
+    /// Wire bytes of one expert at the tier the cache holds resident
+    /// (the highest configured tier).
+    pub bytes_per_expert: usize,
+    pub alpha: Vec<f64>,
+    pub beta: Vec<f64>,
+}
+
+/// Result of the byte-denominated DP.
+#[derive(Clone, Debug)]
+pub struct BytePlan {
+    /// Per-layer cache sizes in experts (at the resident tier).
+    pub allocation: Vec<usize>,
+    /// Per-layer byte ceilings (`allocation[i] * bytes_per_expert`) —
+    /// what [`crate::memory::device_cache::DeviceCache::set_byte_budget`]
+    /// takes. Lower-tier residents under-fill these ceilings, which is
+    /// exactly the degrade-mode headroom.
+    pub byte_budgets: Vec<usize>,
+    pub expected_loads: f64,
+}
+
+/// Solve the knapsack over a byte budget: convert bytes → expert slots
+/// at the resident tier, run [`plan`], and emit the per-layer byte
+/// ceilings alongside the expert counts.
+pub fn plan_bytes(inp: &BytePlanInputs) -> BytePlan {
+    let per = inp.bytes_per_expert.max(1);
+    let p = plan(&PlanInputs {
+        n_experts: inp.n_experts,
+        budget: inp.budget_bytes / per,
+        alpha: inp.alpha.clone(),
+        beta: inp.beta.clone(),
+    });
+    BytePlan {
+        byte_budgets: p.allocation.iter().map(|&t| t * per).collect(),
+        allocation: p.allocation,
+        expected_loads: p.expected_loads,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -261,5 +310,35 @@ mod tests {
         let p = plan(&inp);
         assert_eq!(p.allocation, vec![0; 4]);
         assert!(p.expected_loads > 0.0);
+    }
+
+    #[test]
+    fn byte_plan_matches_expert_plan_at_equivalent_budget() {
+        let inp = inputs(4, 16);
+        let per = 12_345usize;
+        let bp = plan_bytes(&BytePlanInputs {
+            n_experts: inp.n_experts,
+            budget_bytes: 16 * per + per / 2, // partial expert truncates
+            bytes_per_expert: per,
+            alpha: inp.alpha.clone(),
+            beta: inp.beta.clone(),
+        });
+        let p = plan(&inp);
+        assert_eq!(bp.allocation, p.allocation);
+        assert!((bp.expected_loads - p.expected_loads).abs() < 1e-12);
+        // byte ceilings are exactly allocation × per-expert bytes
+        for (t, b) in bp.allocation.iter().zip(&bp.byte_budgets) {
+            assert_eq!(*b, t * per);
+        }
+        assert!(bp.byte_budgets.iter().sum::<usize>() <= 16 * per + per / 2);
+        // degenerate: zero-size experts must not divide by zero
+        let z = plan_bytes(&BytePlanInputs {
+            n_experts: 8,
+            budget_bytes: 4,
+            bytes_per_expert: 0,
+            alpha: vec![0.2; 2],
+            beta: vec![0.5; 2],
+        });
+        assert_eq!(z.allocation.len(), 2);
     }
 }

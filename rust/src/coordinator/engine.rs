@@ -44,13 +44,14 @@ use crate::coordinator::executor;
 use crate::coordinator::gating::GatingPolicy;
 use crate::coordinator::prefetch::{self, PrefetchConfig};
 use crate::coordinator::profile::Profile;
-use crate::coordinator::scheduler::{build_plan, ScheduleMode};
+use crate::coordinator::scheduler::{build_plan_tiered, ScheduleMode, TierMode};
 use crate::coordinator::trace::{Phase, TraceCollector};
 use crate::memory::device_cache::DeviceCache;
 use crate::memory::host_store::{ExpertF32, HostStore};
 use crate::memory::platform::Platform;
 use crate::memory::quant::QuantKind;
 use crate::memory::sharded_cache::{Placement, ShardedCache};
+use crate::memory::tiered_store::{PrecisionPolicy, TieredStore};
 use crate::memory::transfer::{LaneConfig, Priority, TransferEngine, TransferHandle};
 use crate::model::config::ModelConfig;
 use crate::model::weights::Weights;
@@ -80,6 +81,19 @@ pub struct EngineConfig {
     pub cache_budget: usize,
     pub schedule: ScheduleMode,
     pub quant: QuantKind,
+    /// Precision tiers of the expert store (`--tiers`). Empty = the
+    /// single `quant` tier, which reproduces the historical one-kind
+    /// store bit-for-bit; more tiers make the store mixed-precision and
+    /// the cache byte-denominated (docs/tiered-precision.md).
+    pub tiers: Vec<QuantKind>,
+    /// Which tier a fresh transfer rides (`--precision-policy`).
+    pub precision: PrecisionPolicy,
+    /// Max background upgrade transfers issued per idle moment
+    /// (`--upgrade-budget`; 0 disables the upgrade path).
+    pub upgrade_budget: usize,
+    /// Serve resident below-preferred-tier copies (degrade) or re-fetch
+    /// them at the preferred tier (strict).
+    pub tier_mode: TierMode,
     pub platform: Platform,
     /// Tiles per expert transfer (must match the exported tile artifact).
     pub n_tiles: usize,
@@ -154,7 +168,10 @@ pub struct Engine {
     pub ecfg: EngineConfig,
     rt: Runtime,
     resident: Resident,
+    /// Highest-tier host store (the sole store for single-tier runs).
     pub store: Arc<HostStore>,
+    /// Every precision tier's encodings (one entry for single-tier runs).
+    pub tiered: Arc<TieredStore>,
     /// Device-sharded expert cache set (a single shard when
     /// `EngineConfig::devices == 1`).
     pub cache: Arc<ShardedCache>,
@@ -202,11 +219,28 @@ impl Engine {
         let rt = Runtime::load(dir, manifest, &names)
             .context("loading runtime artifacts")?;
         let resident = Resident::build(&cfg, weights)?;
-        let store = Arc::new(HostStore::build(&cfg, weights, ecfg.quant)?);
+        // Empty tier list = the single --quant tier (historical shape,
+        // bit-for-bit); otherwise every listed tier gets its own store.
+        let tier_kinds: Vec<QuantKind> = if ecfg.tiers.is_empty() {
+            vec![ecfg.quant]
+        } else {
+            ecfg.tiers.clone()
+        };
+        let tiered = Arc::new(TieredStore::build(&cfg, weights, &tier_kinds)?);
+        let store = Arc::clone(tiered.base());
 
         let cache = Arc::new(build_sharded_cache(&cfg, &ecfg, &profile));
-        let xfer = TransferEngine::with_devices(
-            Arc::clone(&store),
+        if tiered.n_tiers() > 1 {
+            // Byte-denominate the cache: each layer's count budget becomes
+            // a byte ceiling at the resident (highest) tier, and the count
+            // cap is raised to what the bytes could hold at the lowest
+            // tier — degraded residents pack more experts into the same
+            // memory (docs/tiered-precision.md).
+            apply_byte_budgets(&cache, &tiered);
+        }
+        let xfer = TransferEngine::with_tiers(
+            Arc::clone(&tiered),
+            ecfg.precision,
             Arc::clone(&cache),
             ecfg.platform.clone(),
             ecfg.n_tiles,
@@ -236,6 +270,7 @@ impl Engine {
             rt,
             resident,
             store,
+            tiered,
             cache,
             xfer,
             profile,
@@ -420,8 +455,16 @@ impl Engine {
             } else {
                 Vec::new()
             };
-            let plan = build_plan(layer, &computes, &extra, &self.cache, &self.xfer);
+            let plan = build_plan_tiered(
+                layer,
+                &computes,
+                &extra,
+                &self.cache,
+                &self.xfer,
+                self.ecfg.tier_mode,
+            );
             self.trace.record_on_demand(layer, plan.on_demand_issued);
+            self.trace.record_degraded_hits(plan.degraded);
             self.trace
                 .record_phase(Phase::Decide, t_phase.elapsed().as_nanos() as u64);
 
@@ -460,6 +503,9 @@ impl Engine {
                 self.trace.record_queue_delay(layer, outcome.queue_delay_ns);
                 for (&lane, &ns) in &outcome.queue_delay_by_lane {
                     self.trace.record_lane_queue_delay(lane, ns);
+                }
+                for (&tier, &ns) in &outcome.queue_delay_by_tier {
+                    self.trace.record_tier_queue_delay(tier, ns);
                 }
                 self.trace
                     .record_phase(Phase::MoeWait, t_phase.elapsed().as_nanos() as u64);
@@ -523,6 +569,9 @@ impl Engine {
                 for (&lane, &ns) in &stats.queue_delay_by_lane {
                     self.trace.record_lane_queue_delay(lane, ns);
                 }
+                for (&tier, &ns) in &stats.queue_delay_by_tier {
+                    self.trace.record_tier_queue_delay(tier, ns);
+                }
                 self.trace.record_layer_stall(layer, stats.stall_ns);
                 self.trace
                     .record_phase(Phase::MoeWait, t_phase.elapsed().as_nanos() as u64);
@@ -547,6 +596,11 @@ impl Engine {
             )?;
             let probs = literal_to_tensor(&outs[0])?;
             self.predict_and_request(0, &probs, &stepping)?;
+        }
+
+        // ---- background precision upgrades (idle lanes only) ----
+        if self.ecfg.upgrade_budget > 0 {
+            self.issue_upgrades();
         }
 
         // ---- unembed ----
@@ -615,12 +669,51 @@ impl Engine {
         // the horizon only moves past layers whose predictions were already
         // covered (resident / staged / in flight from earlier steps).
         let satisfied = prefetch::layer_satisfied(layer, &sets, &self.cache, &self.xfer);
-        let reqs = prefetch::plan_requests(layer, &sets, &rows, &self.cache, &self.xfer);
-        for id in reqs {
-            self.xfer.request(id, Priority::Prefetch);
+        let reqs = prefetch::plan_requests_with_mass(
+            layer,
+            &sets,
+            &rows,
+            &self.cache,
+            &self.xfer,
+            self.ecfg.prefetch.max_outstanding_per_device,
+        );
+        for (id, p) in reqs {
+            // Slack = 1 - predicted probability: a near-certain expert is
+            // close to urgent (lower tier, lands sooner); a speculative
+            // one can afford the high-precision bytes.
+            self.xfer.request_with_slack(id, Priority::Prefetch, 1.0 - p);
         }
         self.predicted[layer] = Some(sets);
         Ok(satisfied)
+    }
+
+    /// Background upgrade pass: when the lanes are fully idle, re-request
+    /// up to `upgrade_budget` resident below-top-tier experts at the
+    /// highest tier. Upgrades ride the prefetch queues (and, under the
+    /// pinned lane policy, never the reserved on-demand lane), so they
+    /// can never delay an urgent load — and because this only fires with
+    /// zero transfers in flight, they never contend with prefetches
+    /// either.
+    fn issue_upgrades(&mut self) {
+        if self.tiered.n_tiers() < 2 || self.xfer.pending() > 0 {
+            return;
+        }
+        let top = self.tiered.highest();
+        let mut budget = self.ecfg.upgrade_budget;
+        for layer in 0..self.cfg.n_layers {
+            for e in self.cache.resident(layer) {
+                let id = (layer, e);
+                let Some(meta) = self.cache.resident_meta(id) else { continue };
+                if self.tiered.above(meta.kind).is_none() {
+                    continue; // already at (or above) the top tier
+                }
+                self.xfer.request_at(id, Priority::Upgrade, top);
+                budget -= 1;
+                if budget == 0 {
+                    return;
+                }
+            }
+        }
     }
 
     fn run_expert_full(&self, xn: &Literal, wts: &ExpertF32, coef: &[f32]) -> Result<Tensor> {
@@ -723,8 +816,25 @@ impl Engine {
         );
         let devices = self.cache.n_devices();
         if devices == 1 {
-            let plan = cache_plan::plan(&inputs);
-            self.cache.set_allocation(&plan.allocation);
+            if self.tiered.n_tiers() > 1 {
+                // Multi-tier: re-plan in byte currency. plan_bytes solves
+                // the same knapsack (budget_bytes / per-expert = T), but
+                // its byte ceilings are the planner's output rather than
+                // a post-hoc conversion, and apply_tiered_counts installs
+                // them without transiently shrinking the count caps.
+                let per = self.tiered.base().expert_transfer_bytes((0, 0));
+                let bp = cache_plan::plan_bytes(&cache_plan::BytePlanInputs {
+                    n_experts: inputs.n_experts,
+                    budget_bytes: inputs.budget * per,
+                    bytes_per_expert: per,
+                    alpha: inputs.alpha.clone(),
+                    beta: inputs.beta.clone(),
+                });
+                apply_tiered_counts(self.cache.shard(0), &self.tiered, &bp.allocation);
+            } else {
+                let plan = cache_plan::plan(&inputs);
+                self.cache.set_allocation(&plan.allocation);
+            }
             return;
         }
         let allocations = plan_shard_allocations(
@@ -744,7 +854,11 @@ impl Engine {
             },
         );
         for (d, alloc) in allocations.iter().enumerate() {
-            self.cache.shard(d).set_allocation(alloc);
+            if self.tiered.n_tiers() > 1 {
+                apply_tiered_counts(self.cache.shard(d), &self.tiered, alloc);
+            } else {
+                self.cache.shard(d).set_allocation(alloc);
+            }
         }
     }
 
@@ -872,6 +986,40 @@ fn plan_shard_allocations(
         .collect()
 }
 
+/// Install one shard's *planned* per-layer expert counts in byte
+/// currency: each count becomes a byte ceiling at the resident (highest)
+/// tier, and the count cap is raised to what those bytes could hold at
+/// the *lowest* tier — so degrade-mode residents pack more experts into
+/// the same device memory, while a cache full of top-tier copies
+/// occupies exactly the planned footprint. Ceilings are installed
+/// *before* the counts so a re-plan never transiently shrinks a layer
+/// below its final cap (which would mass-evict perfectly-budgeted
+/// degraded residents just to re-fetch them).
+fn apply_tiered_counts(shard: &DeviceCache, tiered: &TieredStore, counts: &[usize]) {
+    let hi = tiered.base().expert_transfer_bytes((0, 0));
+    let lo = tiered
+        .store(tiered.lowest())
+        .expert_transfer_bytes((0, 0))
+        .max(1);
+    let n_experts = tiered.n_experts();
+    let bytes: Vec<usize> = counts.iter().map(|&t| t * hi).collect();
+    let raised: Vec<usize> = bytes.iter().map(|&b| (b / lo).min(n_experts)).collect();
+    shard.set_byte_budget(Some(bytes));
+    shard.set_allocation(&raised);
+}
+
+/// Byte-denominate a freshly built cache: run [`apply_tiered_counts`]
+/// over every shard's just-planned allocation. Construction-time only —
+/// the counts must be the plan's output, not an already-raised
+/// allocation (re-plans go through [`apply_tiered_counts`] directly with
+/// the fresh plan).
+fn apply_byte_budgets(cache: &ShardedCache, tiered: &TieredStore) {
+    for shard in cache.shards() {
+        let counts = shard.allocation();
+        apply_tiered_counts(shard, tiered, &counts);
+    }
+}
+
 /// Artifact names needed for a config's batch bucket.
 fn manifest_names(ecfg: &EngineConfig) -> Vec<String> {
     let b = ecfg.batch;
@@ -905,6 +1053,10 @@ mod tests {
             cache_budget: budget,
             schedule: ScheduleMode::ExpertWise,
             quant: QuantKind::F32,
+            tiers: Vec::new(),
+            precision: PrecisionPolicy::Fixed,
+            upgrade_budget: 0,
+            tier_mode: TierMode::Degrade,
             platform: Platform::preset("instant").unwrap(),
             n_tiles: 4,
             time_scale: 0.0,
@@ -967,6 +1119,33 @@ mod tests {
         }
         // clamped aggregate: 4 devices x 2 layers x 2 experts
         assert_eq!(c.allocation().iter().sum::<usize>(), 16);
+    }
+
+    #[test]
+    fn byte_budgets_raise_counts_and_cap_bytes() {
+        let cfg = micro_config();
+        let w = crate::testutil::synthetic_weights(&cfg, 9);
+        let tiered =
+            TieredStore::build(&cfg, &w, &[QuantKind::Int2, QuantKind::Int8]).unwrap();
+        let profile = Profile::synthetic(cfg.n_layers);
+        let cache = build_sharded_cache(
+            &cfg,
+            &ecfg(1, Placement::LayerSliced, AllocPolicy::Uniform, 8),
+            &profile,
+        );
+        assert_eq!(cache.allocation(), vec![4, 4]);
+        apply_byte_budgets(&cache, &tiered);
+        let hi = tiered.base().expert_transfer_bytes((0, 0));
+        let lo = tiered.store(tiered.lowest()).expert_transfer_bytes((0, 0));
+        let counts = cache.shard(0).allocation();
+        let bytes = cache.shard(0).byte_budget().expect("byte ceilings set");
+        for l in 0..cfg.n_layers {
+            // the byte ceiling is the planned footprint at the top tier
+            assert_eq!(bytes[l], 4 * hi);
+            // counts are raised to the low-tier packing (clamped to N)
+            assert_eq!(counts[l], (4 * hi / lo).min(cfg.n_experts));
+            assert!(counts[l] >= 4, "raising must never shrink the plan");
+        }
     }
 
     #[test]

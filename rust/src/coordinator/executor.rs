@@ -46,7 +46,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::scheduler::{ExecPlan, ScheduleMode, WorkItem};
-use crate::memory::device_cache::ExpertCache;
+use crate::memory::device_cache::{ExpertCache, ResidentMeta};
 use crate::memory::host_store::ExpertF32;
 use crate::memory::transfer::{CompletionBoard, TransferEngine, TransferHandle};
 use crate::tensor::Tensor;
@@ -68,6 +68,10 @@ pub struct LayerOutcome {
     /// Queue delay split by the comm lane that carried the data, so the
     /// fig9 breakdown can attribute head-of-line cost per lane.
     pub queue_delay_by_lane: HashMap<usize, u64>,
+    /// Queue delay split by the precision tier whose bytes arrived
+    /// (keyed by [`crate::memory::quant::QuantKind::tier_index`]) — the
+    /// fig9 per-tier attribution of the tiered store.
+    pub queue_delay_by_tier: HashMap<usize, u64>,
     /// Pending experts in the order they were consumed (completion order
     /// for the arrival-order drain, plan order for the serial one).
     pub consumed: Vec<usize>,
@@ -79,6 +83,9 @@ pub struct DrainStats {
     pub queue_delay_ns: u64,
     /// Queue delay attributed to the lane each expert/tile arrived on.
     pub queue_delay_by_lane: HashMap<usize, u64>,
+    /// Queue delay attributed to the precision tier each expert/tile was
+    /// encoded at (key = `QuantKind::tier_index`).
+    pub queue_delay_by_tier: HashMap<usize, u64>,
     /// Pending experts in consumption (arrival) order.
     pub consumed: Vec<usize>,
 }
@@ -177,20 +184,24 @@ pub fn drain_arrival_order(
         stall_ns: 0,
         queue_delay_ns: 0,
         queue_delay_by_lane: HashMap::new(),
+        queue_delay_by_tier: HashMap::new(),
         consumed: Vec::new(),
     };
     let mut remaining = pend.len();
     while remaining > 0 {
         let mut progress = false;
         for p in pend.iter_mut().filter(|p| !p.done) {
+            let meta = ResidentMeta { kind: p.handle.kind, bytes: p.handle.bytes };
+            let tier = p.handle.kind.tier_index();
             match mode {
                 ScheduleMode::ExpertWise => {
                     if let Some((wts, at)) = p.handle.try_full() {
                         let d = since(at);
                         stats.queue_delay_ns += d;
                         *stats.queue_delay_by_lane.entry(p.handle.lane).or_insert(0) += d;
+                        *stats.queue_delay_by_tier.entry(tier).or_insert(0) += d;
                         consume(Arrived::Full { expert: p.expert, weights: &wts })?;
-                        cache.insert((layer, p.expert), wts);
+                        cache.insert_tiered((layer, p.expert), wts, meta);
                         stats.consumed.push(p.expert);
                         p.done = true;
                         remaining -= 1;
@@ -205,6 +216,7 @@ pub fn drain_arrival_order(
                         let d = since(at);
                         stats.queue_delay_ns += d;
                         *stats.queue_delay_by_lane.entry(p.handle.lane).or_insert(0) += d;
+                        *stats.queue_delay_by_tier.entry(tier).or_insert(0) += d;
                         consume(Arrived::Tile {
                             expert: p.expert,
                             index: p.tiles,
@@ -217,7 +229,7 @@ pub fn drain_arrival_order(
                         // assemble+publish of the full expert trails the
                         // last tile by microseconds
                         let wts = p.handle.wait_full();
-                        cache.insert((layer, p.expert), wts);
+                        cache.insert_tiered((layer, p.expert), wts, meta);
                         stats.consumed.push(p.expert);
                         p.done = true;
                         remaining -= 1;
@@ -251,12 +263,15 @@ pub fn run_layer_serial(
     let mut stall_ns = 0u64;
     let mut queue_delay_ns = 0u64;
     let mut queue_delay_by_lane: HashMap<usize, u64> = HashMap::new();
+    let mut queue_delay_by_tier: HashMap<usize, u64> = HashMap::new();
     let mut consumed = Vec::new();
 
     for (e, wts) in plan.ready_items() {
         acc.add_assign(&expert_ffn_host(x, wts, &coef[e]));
     }
     for (e, handle) in plan.pending_items() {
+        let meta = ResidentMeta { kind: handle.kind, bytes: handle.bytes };
+        let tier = handle.kind.tier_index();
         match mode {
             ScheduleMode::ExpertWise => {
                 let t_wait = Instant::now();
@@ -266,8 +281,9 @@ pub fn run_layer_serial(
                 let d = since(at);
                 queue_delay_ns += d;
                 *queue_delay_by_lane.entry(handle.lane).or_insert(0) += d;
+                *queue_delay_by_tier.entry(tier).or_insert(0) += d;
                 acc.add_assign(&expert_ffn_host(x, &wts, &coef[e]));
-                cache.insert((plan.layer, e), wts);
+                cache.insert_tiered((plan.layer, e), wts, meta);
             }
             ScheduleMode::TileWise => {
                 for t in 0..n_tiles {
@@ -278,15 +294,23 @@ pub fn run_layer_serial(
                     let d = since(at);
                     queue_delay_ns += d;
                     *queue_delay_by_lane.entry(handle.lane).or_insert(0) += d;
+                    *queue_delay_by_tier.entry(tier).or_insert(0) += d;
                     acc.add_assign(&expert_ffn_host(x, &tile, &coef[e]));
                 }
                 let wts = handle.wait_full(); // already complete
-                cache.insert((plan.layer, e), wts);
+                cache.insert_tiered((plan.layer, e), wts, meta);
             }
         }
         consumed.push(e);
     }
-    LayerOutcome { acc, stall_ns, queue_delay_ns, queue_delay_by_lane, consumed }
+    LayerOutcome {
+        acc,
+        stall_ns,
+        queue_delay_ns,
+        queue_delay_by_lane,
+        queue_delay_by_tier,
+        consumed,
+    }
 }
 
 /// Completion-driven drain: ready experts fan out across the pool at once;
@@ -395,6 +419,7 @@ pub fn run_layer_parallel(
         stall_ns: stats.stall_ns,
         queue_delay_ns: stats.queue_delay_ns,
         queue_delay_by_lane: stats.queue_delay_by_lane,
+        queue_delay_by_tier: stats.queue_delay_by_tier,
         consumed: stats.consumed,
     }
 }

@@ -15,10 +15,11 @@ use crate::coordinator::engine::{AllocPolicy, EngineConfig};
 use crate::coordinator::gating::GatingPolicy;
 use crate::coordinator::prefetch::PrefetchConfig;
 use crate::coordinator::profile::Profile;
-use crate::coordinator::scheduler::ScheduleMode;
+use crate::coordinator::scheduler::{ScheduleMode, TierMode};
 use crate::memory::platform::Platform;
 use crate::memory::quant::QuantKind;
 use crate::memory::sharded_cache::Placement;
+use crate::memory::tiered_store::PrecisionPolicy;
 use crate::memory::transfer::{LaneConfig, LanePolicy};
 
 /// Shared knobs independent of the serving method.
@@ -42,6 +43,16 @@ pub struct RunSettings {
     pub n_devices: usize,
     /// ExpertId → device mapping when sharded (`--placement`).
     pub placement: Placement,
+    /// Precision tiers of the expert store (`--tiers`; empty = the
+    /// single `quant` tier, the historical shape).
+    pub tiers: Vec<QuantKind>,
+    /// Per-transfer bit-width selection (`--precision-policy`).
+    pub precision: PrecisionPolicy,
+    /// Background upgrade transfers per idle moment (`--upgrade-budget`).
+    pub upgrade_budget: usize,
+    /// Per-device in-flight prefetch cap (`--prefetch-device-cap`;
+    /// `None` = global window only).
+    pub prefetch_per_device: Option<usize>,
 }
 
 impl RunSettings {
@@ -59,6 +70,10 @@ impl RunSettings {
             lane_policy: LanePolicy::RoundRobin,
             n_devices: 1,
             placement: Placement::LayerSliced,
+            tiers: Vec::new(),
+            precision: PrecisionPolicy::Fixed,
+            upgrade_budget: 0,
+            prefetch_per_device: None,
         }
     }
 }
@@ -87,6 +102,10 @@ pub fn method(name: &str, s: &RunSettings, profile: &Profile) -> Option<EngineCo
         cache_budget: s.cache_budget,
         schedule: ScheduleMode::ExpertWise,
         quant: s.quant,
+        tiers: s.tiers.clone(),
+        precision: s.precision,
+        upgrade_budget: s.upgrade_budget,
+        tier_mode: TierMode::Degrade,
         platform: s.platform.clone(),
         n_tiles: s.n_tiles,
         time_scale: s.time_scale,
@@ -96,7 +115,7 @@ pub fn method(name: &str, s: &RunSettings, profile: &Profile) -> Option<EngineCo
         devices: s.n_devices,
         placement: s.placement,
     };
-    Some(match name {
+    let mut cfg = match name {
         // DeepSpeed/FlexGen-style dense offloading: loads every expert of
         // every layer on demand.
         "baseline" => EngineConfig { whole_layer: true, ..base },
@@ -125,7 +144,11 @@ pub fn method(name: &str, s: &RunSettings, profile: &Profile) -> Option<EngineCo
             ..base
         },
         _ => return None,
-    })
+    };
+    // Shared knob, orthogonal to the method's prefetch shape: the
+    // per-device window rides whatever prefetch config the preset chose.
+    cfg.prefetch.max_outstanding_per_device = s.prefetch_per_device;
+    Some(cfg)
 }
 
 /// Table 2 ablation row: toggle gating / prefetch / DP-cache independently
@@ -228,6 +251,28 @@ mod tests {
         let d = method("adapmoe", &settings(), &p).unwrap();
         assert_eq!(d.devices, 1);
         assert_eq!(d.placement, Placement::LayerSliced);
+    }
+
+    #[test]
+    fn tier_settings_propagate_to_config() {
+        let p = Profile::synthetic(4);
+        let mut s = settings();
+        s.tiers = vec![QuantKind::Int2, QuantKind::Int4];
+        s.precision = PrecisionPolicy::Urgency;
+        s.upgrade_budget = 2;
+        s.prefetch_per_device = Some(3);
+        let cfg = method("adapmoe", &s, &p).unwrap();
+        assert_eq!(cfg.tiers, vec![QuantKind::Int2, QuantKind::Int4]);
+        assert_eq!(cfg.precision, PrecisionPolicy::Urgency);
+        assert_eq!(cfg.upgrade_budget, 2);
+        assert_eq!(cfg.prefetch.max_outstanding_per_device, Some(3));
+        assert_eq!(cfg.tier_mode, TierMode::Degrade);
+        // defaults stay single-tier fixed, no upgrades, uncapped devices
+        let d = method("adapmoe", &settings(), &p).unwrap();
+        assert!(d.tiers.is_empty());
+        assert_eq!(d.precision, PrecisionPolicy::Fixed);
+        assert_eq!(d.upgrade_budget, 0);
+        assert_eq!(d.prefetch.max_outstanding_per_device, None);
     }
 
     #[test]

@@ -28,21 +28,44 @@ pub struct PrefetchConfig {
     /// queue faster than the (calibrated, slow) link drains it and the
     /// backlog grows without bound.
     pub max_outstanding: usize,
+    /// Per-device in-flight cap on top of the global `max_outstanding`
+    /// (`None` = no per-device limit). With sharded backends a hot shard
+    /// can otherwise monopolise the global window and starve the other
+    /// devices' prefetch budgets (docs/sharded-backends.md follow-on).
+    pub max_outstanding_per_device: Option<usize>,
 }
 
 impl PrefetchConfig {
     pub fn disabled() -> PrefetchConfig {
-        PrefetchConfig { enabled: false, lookahead: 0, use_pre_gate: false, max_outstanding: 0 }
+        PrefetchConfig {
+            enabled: false,
+            lookahead: 0,
+            use_pre_gate: false,
+            max_outstanding: 0,
+            max_outstanding_per_device: None,
+        }
     }
 
     pub fn standard() -> PrefetchConfig {
-        PrefetchConfig { enabled: true, lookahead: 3, use_pre_gate: true, max_outstanding: 4 }
+        PrefetchConfig {
+            enabled: true,
+            lookahead: 3,
+            use_pre_gate: true,
+            max_outstanding: 4,
+            max_outstanding_per_device: None,
+        }
     }
 
     /// Pre-gated MoE baseline: strictly next-layer prediction, no layer-0
     /// predictive gate (it on-demand loads the first layer).
     pub fn next_layer_only() -> PrefetchConfig {
-        PrefetchConfig { enabled: true, lookahead: 1, use_pre_gate: false, max_outstanding: 4 }
+        PrefetchConfig {
+            enabled: true,
+            lookahead: 1,
+            use_pre_gate: false,
+            max_outstanding: 4,
+            max_outstanding_per_device: None,
+        }
     }
 }
 
@@ -77,6 +100,28 @@ pub fn plan_requests(
     cache: &dyn ExpertCache,
     xfer: &TransferEngine,
 ) -> Vec<ExpertId> {
+    plan_requests_with_mass(layer, predicted, probs_rows, cache, xfer, None)
+        .into_iter()
+        .map(|(id, _)| id)
+        .collect()
+}
+
+/// [`plan_requests`] extended for tiered/sharded engines: each request
+/// carries its normalized predicted probability (mass / rows, ∈ [0, 1])
+/// so the caller can derive a precision-slack signal, and an optional
+/// `per_device_cap` bounds how many transfers may be outstanding per
+/// device shard (counting those already in flight). Experts whose
+/// `LoadAware` device is not yet bound are never capped — capping them
+/// would require binding, which speculative planning must not do.
+pub fn plan_requests_with_mass(
+    layer: usize,
+    predicted: &[HashSet<usize>],
+    probs_rows: &[Vec<f32>],
+    cache: &dyn ExpertCache,
+    xfer: &TransferEngine,
+    per_device_cap: Option<usize>,
+) -> Vec<(ExpertId, f64)> {
+    let rows = probs_rows.len().max(1) as f64;
     let mut mass: Vec<(usize, f64)> = Vec::new();
     let mut union: HashSet<usize> = HashSet::new();
     for set in predicted {
@@ -87,12 +132,34 @@ pub fn plan_requests(
         mass.push((e, m));
     }
     mass.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let shards = xfer.sharded_cache();
+    let mut device_budget: Option<Vec<usize>> = per_device_cap.map(|cap| {
+        (0..shards.n_devices())
+            .map(|d| cap.saturating_sub(xfer.pending_for_device(d)))
+            .collect()
+    });
     mass.into_iter()
-        .map(|(e, _)| (layer, e))
-        .filter(|&id| {
-            !cache.contains(id)
-                && xfer.in_flight(id).is_none()
-                && !xfer.staging_contains(id)
+        .map(|(e, m)| ((layer, e), (m / rows).clamp(0.0, 1.0)))
+        .filter(|&(id, _)| {
+            if cache.contains(id)
+                || xfer.in_flight(id).is_some()
+                || xfer.staging_contains(id)
+            {
+                return false;
+            }
+            let Some(budget) = &mut device_budget else { return true };
+            match shards.device_of_peek(id) {
+                // unbound LoadAware expert: uncapped (see doc above)
+                None => true,
+                Some(d) => {
+                    if budget[d] == 0 {
+                        false
+                    } else {
+                        budget[d] -= 1;
+                        true
+                    }
+                }
+            }
         })
         .collect()
 }
@@ -178,6 +245,59 @@ mod tests {
         h.wait_full();
         let reqs = plan_requests(0, &predicted, &probs, &cache, &xfer);
         assert!(reqs.is_empty());
+    }
+
+    #[test]
+    fn per_device_cap_bounds_requests_and_counts_in_flight() {
+        use crate::memory::sharded_cache::{Placement, ShardedCache};
+        use crate::memory::transfer::LaneConfig;
+
+        let cfg = micro_config();
+        let w = synthetic_weights(&cfg, 12);
+        let store = Arc::new(HostStore::build(&cfg, &w, QuantKind::Int4).unwrap());
+        // 2 devices, layer-sliced over the 2-layer micro config: layer 0
+        // lives on device 0, layer 1 on device 1.
+        let cache = Arc::new(ShardedCache::new(
+            vec![vec![4, 4]; 2],
+            Placement::LayerSliced,
+        ));
+        // slow calibrated link so issued prefetches stay in flight
+        let xfer = crate::memory::transfer::TransferEngine::with_devices(
+            Arc::clone(&store),
+            Arc::clone(&cache),
+            Platform::preset("rtx4090").unwrap(),
+            4,
+            1.0,
+            LaneConfig::default(),
+        );
+        let probs: Vec<Vec<f32>> =
+            vec![(0..8).map(|e| 1.0 / (e as f32 + 1.5)).collect()];
+        let predicted = vec![HashSet::from([0usize, 1, 2, 3])];
+        // cap 2 per device: layer-0 predictions all land on device 0
+        let capped = plan_requests_with_mass(0, &predicted, &probs, &cache, &xfer, Some(2));
+        assert_eq!(capped.len(), 2, "cap must bound the plan: {capped:?}");
+        // most-likely-first survives the cap
+        assert_eq!(capped[0].0, (0, 0));
+        assert_eq!(capped[1].0, (0, 1));
+        // normalized mass rides along, within [0, 1]
+        assert!(capped.iter().all(|&(_, p)| (0.0..=1.0).contains(&p)));
+        assert!(capped[0].1 >= capped[1].1);
+        // in-flight transfers consume the window: issue 2 on device 1 ...
+        for e in 0..2 {
+            xfer.request((1, e), crate::memory::transfer::Priority::Prefetch);
+        }
+        assert_eq!(xfer.pending_for_device(1), 2);
+        // ... so a capped plan for layer 1 has no budget left
+        let predicted1 = vec![HashSet::from([4usize, 5])];
+        let none = plan_requests_with_mass(1, &predicted1, &probs, &cache, &xfer, Some(2));
+        assert!(none.is_empty(), "{none:?}");
+        // the other device's budget is untouched
+        let still = plan_requests_with_mass(0, &predicted, &probs, &cache, &xfer, Some(2));
+        assert_eq!(still.len(), 2);
+        xfer.quiesce();
+        // uncapped path unchanged
+        let all = plan_requests(0, &predicted, &probs, &cache, &xfer);
+        assert_eq!(all.len(), 4);
     }
 
     #[test]

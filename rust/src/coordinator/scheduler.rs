@@ -32,6 +32,19 @@ use crate::memory::host_store::ExpertF32;
 use crate::memory::transfer::{Priority, TransferEngine, TransferHandle};
 use crate::model::ExpertId;
 
+/// How a tiered plan treats a resident copy whose source tier is below
+/// the engine's preferred tier (docs/tiered-precision.md).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TierMode {
+    /// Serve the resident low-tier copy instead of stalling on a
+    /// higher-tier fetch (degrade-instead-of-miss). The background
+    /// upgrade path restores precision when the lanes go idle.
+    Degrade,
+    /// Treat a below-preferred resident as a miss: issue an on-demand
+    /// load at the preferred tier and wait for it.
+    Strict,
+}
+
 /// How the engine consumes on-demand experts.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ScheduleMode {
@@ -65,6 +78,10 @@ pub struct ExecPlan {
     pub queue: Vec<WorkItem>,
     /// On-demand loads issued by this plan (for trace accounting).
     pub on_demand_issued: u64,
+    /// Hits served from a resident copy below the preferred tier
+    /// (degrade-instead-of-miss accepted a lower-precision answer to
+    /// avoid a stall). Always 0 for single-tier engines.
+    pub degraded: u64,
 }
 
 impl ExecPlan {
@@ -101,7 +118,9 @@ impl ExecPlan {
 /// Build the plan: look up each compute target in the cache; request
 /// on-demand transfers for misses (joining in-flight transfers); request
 /// (but do not compute) `extra_loads` — the whole-layer baseline's
-/// load-everything behaviour.
+/// load-everything behaviour. Any resident copy counts as a hit
+/// ([`TierMode::Degrade`]); single-tier engines are unaffected because
+/// every resident copy is already at the preferred tier.
 pub fn build_plan(
     layer: usize,
     computes: &[usize],
@@ -109,29 +128,75 @@ pub fn build_plan(
     cache: &dyn ExpertCache,
     xfer: &TransferEngine,
 ) -> ExecPlan {
+    build_plan_tiered(layer, computes, extra_loads, cache, xfer, TierMode::Degrade)
+}
+
+/// [`build_plan`] with an explicit degrade-vs-stall mode for resident
+/// copies below the engine's preferred tier. Under [`TierMode::Degrade`]
+/// such a hit is served immediately (counted in [`ExecPlan::degraded`]);
+/// under [`TierMode::Strict`] it is treated as a miss and re-fetched
+/// on-demand at the preferred tier.
+pub fn build_plan_tiered(
+    layer: usize,
+    computes: &[usize],
+    extra_loads: &[usize],
+    cache: &dyn ExpertCache,
+    xfer: &TransferEngine,
+    mode: TierMode,
+) -> ExecPlan {
     let mut ready = Vec::new();
     let mut pending = Vec::new();
     let mut extra = Vec::new();
     let mut issued = 0;
+    let mut degraded = 0;
+    let preferred = xfer.preferred_tier();
+    // Single-tier engines can never hold a below-preferred resident, so
+    // the per-expert meta peek (an extra cache-mutex acquisition on the
+    // hot path) is skipped entirely.
+    let multi_tier = xfer.tiered_store().n_tiers() > 1;
 
     for &e in computes {
         let id: ExpertId = (layer, e);
-        if let Some(w) = cache.get(id) {
-            ready.push(WorkItem::Ready { expert: e, weights: w });
-        } else if let Some(w) = xfer.staging.take(id) {
+        // A resident copy below the preferred tier is a *degraded* hit:
+        // served under Degrade (never stalls the executor), re-fetched
+        // under Strict. Entries without tier metadata (or at/above the
+        // preferred tier) are plain hits. Strict refuses the degraded
+        // copy *without touching it* — a get() here would count a cache
+        // hit and promote to MRU the very entry the re-fetch is about to
+        // replace.
+        let below = multi_tier
+            && cache
+                .resident_meta(id)
+                .is_some_and(|m| m.kind.bits() < preferred.bits());
+        if !(below && mode == TierMode::Strict) {
+            if let Some(w) = cache.get(id) {
+                if below {
+                    degraded += 1;
+                }
+                ready.push(WorkItem::Ready { expert: e, weights: w });
+                continue;
+            }
+        }
+        if let Some((w, meta)) = (!cache.contains(id)).then(|| xfer.staging.take(id)).flatten()
+        {
             // prefetched earlier, parked in the staging buffers (the cache
             // may have had no room for this layer) — consume it now and give
             // the cache another chance to keep it.
-            cache.insert(id, Arc::clone(&w));
+            cache.insert_tiered(id, Arc::clone(&w), meta);
             ready.push(WorkItem::Ready { expert: e, weights: w });
         } else if let Some(h) = xfer.in_flight(id) {
             // already being loaded (e.g. by a prefetch): join it
             pending.push(WorkItem::Pending { expert: e, handle: h });
         } else {
-            pending.push(WorkItem::Pending {
-                expert: e,
-                handle: xfer.request(id, Priority::OnDemand),
-            });
+            // Strict misses insist on the preferred tier (that is the
+            // point of refusing the degraded copy); Degrade misses defer
+            // to the engine's precision policy (lowest tier under
+            // urgency).
+            let handle = match mode {
+                TierMode::Strict => xfer.request_at(id, Priority::OnDemand, preferred),
+                TierMode::Degrade => xfer.request(id, Priority::OnDemand),
+            };
+            pending.push(WorkItem::Pending { expert: e, handle });
             issued += 1;
         }
     }
@@ -148,7 +213,7 @@ pub fn build_plan(
     let mut queue = ready;
     queue.append(&mut pending);
     queue.append(&mut extra);
-    ExecPlan { layer, queue, on_demand_issued: issued }
+    ExecPlan { layer, queue, on_demand_issued: issued, degraded }
 }
 
 #[cfg(test)]
@@ -306,6 +371,57 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn degrade_vs_strict_on_below_preferred_residents() {
+        use crate::memory::sharded_cache::ShardedCache;
+        use crate::memory::tiered_store::{PrecisionPolicy, TieredStore};
+        use crate::memory::transfer::LaneConfig;
+
+        let cfg = micro_config();
+        let w = synthetic_weights(&cfg, 23);
+        let tiers = Arc::new(
+            TieredStore::build(&cfg, &w, &[QuantKind::Int2, QuantKind::Int8]).unwrap(),
+        );
+        let cache = Arc::new(DeviceCache::new(vec![8, 8]));
+        let xfer = TransferEngine::with_tiers(
+            Arc::clone(&tiers),
+            PrecisionPolicy::Urgency,
+            Arc::new(ShardedCache::single(Arc::clone(&cache))),
+            Platform::preset("instant").unwrap(),
+            4,
+            0.0,
+            LaneConfig::default(),
+        );
+        // land an int2 (below-preferred) copy of expert (0, 2)
+        xfer.request((0, 2), Priority::OnDemand).wait_full();
+        xfer.quiesce();
+        assert_eq!(cache.resident_meta((0, 2)).unwrap().kind, QuantKind::Int2);
+
+        // Degrade: the low-tier resident is served ready — no stall, no load
+        let plan = build_plan_tiered(0, &[2], &[], &cache, &xfer, TierMode::Degrade);
+        assert_eq!(plan.n_ready(), 1);
+        assert_eq!(plan.n_pending(), 0);
+        assert_eq!(plan.on_demand_issued, 0);
+        assert_eq!(plan.degraded, 1);
+
+        // Strict: the same resident is a miss; the re-fetch rides the
+        // preferred (int8) tier
+        let plan = build_plan_tiered(0, &[2], &[], &cache, &xfer, TierMode::Strict);
+        assert_eq!(plan.n_ready(), 0);
+        assert_eq!(plan.n_pending(), 1);
+        assert_eq!(plan.on_demand_issued, 1);
+        assert_eq!(plan.degraded, 0);
+        let (_, h) = plan.pending_items().next().unwrap();
+        assert_eq!(h.kind, QuantKind::Int8);
+        h.wait_full();
+        xfer.quiesce();
+        assert_eq!(cache.resident_meta((0, 2)).unwrap().kind, QuantKind::Int8);
+        // at-preferred residents are plain hits in both modes
+        let plan = build_plan_tiered(0, &[2], &[], &cache, &xfer, TierMode::Strict);
+        assert_eq!(plan.n_ready(), 1);
+        assert_eq!(plan.degraded, 0);
     }
 
     #[test]

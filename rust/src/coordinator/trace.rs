@@ -57,6 +57,13 @@ pub struct TraceCollector {
     /// demand): which lane's arrivals sat waiting on compute. Fig. 9
     /// pipeline-attribution input for multi-lane engines.
     pub queue_delay_lane_ns: Vec<u64>,
+    /// Queue delay split by precision tier (indexed by
+    /// `QuantKind::tier_index`, grown on demand): which tier's bytes sat
+    /// waiting on compute — the tiered store's fig9 attribution input.
+    pub queue_delay_tier_ns: Vec<u64>,
+    /// Lookups served from a resident copy below the preferred tier
+    /// (degrade-instead-of-miss accepted lower precision over a stall).
+    pub degraded_hits: u64,
     /// Whether to collect the Fig. 3 similarity series. Off by default:
     /// it forces the engine to keep a copy of the previous layer's hidden
     /// state every layer, which is pure overhead on the serving path.
@@ -85,6 +92,8 @@ impl TraceCollector {
             layer_stall_ns: vec![0; n_layers],
             queue_delay_ns: vec![0; n_layers],
             queue_delay_lane_ns: Vec::new(),
+            queue_delay_tier_ns: Vec::new(),
+            degraded_hits: 0,
             collect_similarity: false,
             phase_ns: [0; Phase::COUNT],
             token_latency: Summary::new(),
@@ -176,6 +185,30 @@ impl TraceCollector {
             .iter()
             .map(|&ns| ns as f64 / 1e9)
             .collect()
+    }
+
+    /// Queue delay attributed to the precision tier the data was encoded
+    /// at (index = `QuantKind::tier_index`).
+    pub fn record_tier_queue_delay(&mut self, tier: usize, ns: u64) {
+        if tier >= self.queue_delay_tier_ns.len() {
+            self.queue_delay_tier_ns.resize(tier + 1, 0);
+        }
+        self.queue_delay_tier_ns[tier] += ns;
+    }
+
+    /// Per-tier queue-delay seconds (index = `QuantKind::tier_index`;
+    /// empty when the run recorded no tier-attributed delay).
+    pub fn tier_queue_delay(&self) -> Vec<f64> {
+        self.queue_delay_tier_ns
+            .iter()
+            .map(|&ns| ns as f64 / 1e9)
+            .collect()
+    }
+
+    /// Count degrade-instead-of-miss hits (resident copy served below
+    /// the preferred tier).
+    pub fn record_degraded_hits(&mut self, count: u64) {
+        self.degraded_hits += count;
     }
 
     pub fn record_phase(&mut self, phase: Phase, ns: u64) {
@@ -354,6 +387,23 @@ mod tests {
         assert!((attr[0].1 - 1e-3).abs() < 1e-12);
         assert!((attr[1].0 - 0.5e-3).abs() < 1e-12);
         assert!((attr[1].1 - 2e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tier_queue_delay_and_degraded_hits_accumulate() {
+        let mut t = TraceCollector::new(2);
+        assert!(t.tier_queue_delay().is_empty());
+        t.record_tier_queue_delay(1, 1_000_000); // int4
+        t.record_tier_queue_delay(0, 500_000); // int2
+        t.record_tier_queue_delay(1, 1_000_000);
+        let tiers = t.tier_queue_delay();
+        assert_eq!(tiers.len(), 2);
+        assert!((tiers[0] - 0.5e-3).abs() < 1e-12);
+        assert!((tiers[1] - 2e-3).abs() < 1e-12);
+        assert_eq!(t.degraded_hits, 0);
+        t.record_degraded_hits(3);
+        t.record_degraded_hits(1);
+        assert_eq!(t.degraded_hits, 4);
     }
 
     #[test]

@@ -22,6 +22,7 @@ use adapmoe::coordinator::profile::Profile;
 use adapmoe::memory::platform::Platform;
 use adapmoe::memory::quant::QuantKind;
 use adapmoe::memory::sharded_cache::Placement;
+use adapmoe::memory::tiered_store::{PrecisionPolicy, TieredStore};
 use adapmoe::memory::transfer::LanePolicy;
 use adapmoe::model::tokenizer::{ByteTokenizer, EvalStream};
 use adapmoe::server::api::{GenerationEvent, GenerationRequest};
@@ -78,6 +79,14 @@ fn usage() {
            --devices N       device backends sharding the expert cache (default: 1)\n\
            --placement P     {} (default: layer)\n\
                              device sharding: docs/sharded-backends.md\n\
+           --tiers LIST      comma-separated precision tiers, e.g. int2,int4\n\
+                             (default: the single --quant tier)\n\
+           --precision-policy P  {} (default: fixed; urgency when --tiers\n\
+                             names several) — docs/tiered-precision.md\n\
+           --upgrade-budget N  background precision upgrades per idle moment\n\
+                             (default: 0 = off)\n\
+           --prefetch-device-cap N  per-device in-flight prefetch cap\n\
+                             (default: 0 = global window only)\n\
            --prompt TEXT     (generate) prompt text\n\
            --max-new N       (generate) tokens to generate (default: 64)\n\
            --temperature X   (generate) sampling temperature, 0 = greedy (default: 0)\n\
@@ -92,6 +101,7 @@ fn usage() {
         Platform::names(),
         LanePolicy::names().join("|"),
         Placement::names().join("|"),
+        PrecisionPolicy::names().join("|"),
     );
 }
 
@@ -123,11 +133,31 @@ fn build_engine(args: &Args, default_batch: usize) -> Result<Engine> {
     }
     settings.placement = Placement::from_name(&args.str_or("placement", "layer"))
         .context("unknown placement (see --help)")?;
+    if let Some(list) = args.get("tiers") {
+        let kinds = TieredStore::parse_tiers(list)
+            .context("unknown precision tier in --tiers (see --help)")?;
+        if kinds.is_empty() {
+            bail!("--tiers must name at least one tier");
+        }
+        settings.tiers = kinds;
+    }
+    let default_precision = if settings.tiers.len() > 1 { "urgency" } else { "fixed" };
+    settings.precision =
+        PrecisionPolicy::from_name(&args.str_or("precision-policy", default_precision))
+            .context("unknown precision policy (see --help)")?;
+    settings.upgrade_budget = args.usize_or("upgrade-budget", 0);
+    if settings.upgrade_budget > 0 && settings.tiers.len() < 2 {
+        bail!("--upgrade-budget needs --tiers with at least two tiers");
+    }
+    let cap = args.usize_or("prefetch-device-cap", 0);
+    settings.prefetch_per_device = (cap > 0).then_some(cap);
     let method = args.str_or("method", "adapmoe");
     let ecfg = policy::method(&method, &settings, &profile)
         .with_context(|| format!("unknown method '{method}'"))?;
+    let tier_names: Vec<&str> = settings.tiers.iter().map(|k| k.name()).collect();
     eprintln!(
-        "[adapmoe] method={method} platform={} quant={} cache={} batch={} lanes={}/{} devices={}/{}",
+        "[adapmoe] method={method} platform={} quant={} cache={} batch={} lanes={}/{} \
+         devices={}/{} tiers={}/{}",
         settings.platform.name,
         settings.quant.name(),
         settings.cache_budget,
@@ -136,6 +166,12 @@ fn build_engine(args: &Args, default_batch: usize) -> Result<Engine> {
         settings.lane_policy.name(),
         settings.n_devices,
         settings.placement.name(),
+        if tier_names.is_empty() {
+            settings.quant.name().to_string()
+        } else {
+            tier_names.join(",")
+        },
+        settings.precision.name(),
     );
     Engine::from_artifacts(&dir, ecfg)
 }

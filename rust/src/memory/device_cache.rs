@@ -21,7 +21,29 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 
 use crate::memory::host_store::ExpertF32;
+use crate::memory::quant::QuantKind;
 use crate::model::ExpertId;
+
+/// Source-precision metadata of a resident expert: which tier's bytes it
+/// was decoded from and how many wire bytes that encoding occupies. The
+/// byte figure is what the layer's byte budget charges; the kind is what
+/// degrade-vs-stall lookups and the upgrade path compare against
+/// (docs/tiered-precision.md).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResidentMeta {
+    pub kind: QuantKind,
+    pub bytes: usize,
+}
+
+impl ResidentMeta {
+    /// Metadata for an entry of unknown provenance (legacy `insert`):
+    /// resident copies are dequantized f32, so the honest charge is the
+    /// full f32 footprint at the top "tier".
+    pub fn unknown(value: &ExpertF32) -> ResidentMeta {
+        let n = value.w1.data.len() + value.w3.data.len() + value.w2.data.len();
+        ResidentMeta { kind: QuantKind::F32, bytes: 4 * n }
+    }
+}
 
 /// The lookup/insert surface shared by [`DeviceCache`] (one device) and
 /// [`crate::memory::sharded_cache::ShardedCache`] (a placement-routed set
@@ -36,6 +58,25 @@ pub trait ExpertCache: Send + Sync {
     /// Insert a ready expert, evicting the layer's LRU entry if at
     /// capacity. Returns the evicted id.
     fn insert(&self, id: ExpertId, value: Arc<ExpertF32>) -> Option<ExpertId>;
+    /// Insert with source-tier metadata (byte-denominated accounting and
+    /// degrade/upgrade decisions). Defaults to [`ExpertCache::insert`],
+    /// dropping the metadata — single-precision caches need no more.
+    fn insert_tiered(
+        &self,
+        id: ExpertId,
+        value: Arc<ExpertF32>,
+        meta: ResidentMeta,
+    ) -> Option<ExpertId> {
+        let _ = meta;
+        self.insert(id, value)
+    }
+    /// Source-tier metadata of a resident expert. Peek: no recency,
+    /// counter or placement effects. `None` when absent (or the cache
+    /// does not track tiers).
+    fn resident_meta(&self, id: ExpertId) -> Option<ResidentMeta> {
+        let _ = id;
+        None
+    }
 }
 
 struct LayerState {
@@ -94,11 +135,58 @@ impl LayerState {
 struct Inner {
     layers: Vec<LayerState>,
     entries: HashMap<ExpertId, Arc<ExpertF32>>,
+    /// Source-tier metadata per resident entry (every entry has one;
+    /// legacy inserts record [`ResidentMeta::unknown`]).
+    meta: HashMap<ExpertId, ResidentMeta>,
+    /// Resident wire bytes per layer (sum of the entries' meta bytes).
+    layer_bytes: Vec<usize>,
+    /// Optional per-layer byte ceilings on top of the expert-count
+    /// capacities — the byte-denominated budget of the tiered store.
+    byte_budget: Option<Vec<usize>>,
     /// Monotone recency clock shared by every layer's stamp queue.
     clock: u64,
     hits: u64,
     misses: u64,
     evictions: u64,
+}
+
+impl Inner {
+    /// Evict `layer`'s LRU entry, maintaining entry/meta/byte state.
+    fn evict_lru(&mut self, layer: usize) -> Option<usize> {
+        let victim = self.layers[layer].pop_lru()?;
+        self.entries.remove(&(layer, victim));
+        if let Some(m) = self.meta.remove(&(layer, victim)) {
+            self.layer_bytes[layer] = self.layer_bytes[layer].saturating_sub(m.bytes);
+        }
+        self.evictions += 1;
+        Some(victim)
+    }
+
+    /// Evict LRU entries until `layer` fits its byte ceiling. The last
+    /// resident entry is never evicted on byte pressure alone: a single
+    /// over-budget expert must stay servable.
+    fn enforce_byte_budget(&mut self, layer: usize) -> Option<usize> {
+        let budget = self.byte_budget.as_ref().map(|b| b[layer])?;
+        let mut first = None;
+        while self.layer_bytes[layer] > budget && self.layers[layer].len() > 1 {
+            let v = self.evict_lru(layer)?;
+            first.get_or_insert(v);
+        }
+        first
+    }
+
+    /// Refresh a resident entry in place: recency, value, and byte
+    /// charge (the old meta's bytes are released, the new one's added),
+    /// then re-enforce the layer's byte ceiling.
+    fn replace_resident(&mut self, id: ExpertId, value: Arc<ExpertF32>, meta: ResidentMeta) {
+        self.layers[id.0].touch(id.1, &mut self.clock);
+        self.entries.insert(id, value);
+        if let Some(old) = self.meta.insert(id, meta) {
+            self.layer_bytes[id.0] = self.layer_bytes[id.0].saturating_sub(old.bytes);
+        }
+        self.layer_bytes[id.0] += meta.bytes;
+        self.enforce_byte_budget(id.0);
+    }
 }
 
 /// Thread-safe expert cache.
@@ -109,10 +197,14 @@ pub struct DeviceCache {
 impl DeviceCache {
     /// `allocation[i]` = experts of layer i that may be resident.
     pub fn new(allocation: Vec<usize>) -> DeviceCache {
+        let n_layers = allocation.len();
         DeviceCache {
             inner: Mutex::new(Inner {
                 layers: allocation.into_iter().map(LayerState::new).collect(),
                 entries: HashMap::new(),
+                meta: HashMap::new(),
+                layer_bytes: vec![0; n_layers],
+                byte_budget: None,
                 clock: 0,
                 hits: 0,
                 misses: 0,
@@ -165,11 +257,39 @@ impl DeviceCache {
         for (i, &cap) in allocation.iter().enumerate() {
             g.layers[i].capacity = cap;
             while g.layers[i].len() > cap {
-                let Some(victim) = g.layers[i].pop_lru() else { break };
-                g.entries.remove(&(i, victim));
-                g.evictions += 1;
+                if g.evict_lru(i).is_none() {
+                    break;
+                }
             }
         }
+    }
+
+    /// Set (or clear) the per-layer byte ceilings. Layers over their new
+    /// ceiling evict LRU tails immediately — except the last resident
+    /// entry, which stays servable even when it alone exceeds the budget.
+    pub fn set_byte_budget(&self, budget: Option<Vec<usize>>) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(b) = &budget {
+            assert_eq!(b.len(), g.layers.len());
+        }
+        g.byte_budget = budget;
+        for i in 0..g.layers.len() {
+            g.enforce_byte_budget(i);
+        }
+    }
+
+    pub fn byte_budget(&self) -> Option<Vec<usize>> {
+        self.inner.lock().unwrap().byte_budget.clone()
+    }
+
+    /// Resident wire bytes of one layer (sum of entry meta bytes).
+    pub fn layer_resident_bytes(&self, layer: usize) -> usize {
+        self.inner.lock().unwrap().layer_bytes[layer]
+    }
+
+    /// Resident wire bytes across every layer.
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().layer_bytes.iter().sum()
     }
 
     /// Look up an expert; updates LRU recency and hit/miss counters.
@@ -192,8 +312,25 @@ impl DeviceCache {
     }
 
     /// Insert a ready expert, evicting the layer's LRU entry if at capacity.
-    /// A zero-capacity layer ignores inserts. Returns the evicted id.
+    /// A zero-capacity layer ignores inserts. Returns the evicted id. The
+    /// entry's tier metadata is recorded as [`ResidentMeta::unknown`]; the
+    /// tiered transfer path uses [`DeviceCache::insert_tiered`] instead.
     pub fn insert(&self, id: ExpertId, value: Arc<ExpertF32>) -> Option<ExpertId> {
+        let meta = ResidentMeta::unknown(&value);
+        self.insert_tiered(id, value, meta)
+    }
+
+    /// [`DeviceCache::insert`] with explicit source-tier metadata. On a
+    /// refresh (the id is already resident) the stored value *and* its
+    /// metadata are replaced — an upgrade transfer landing a higher-tier
+    /// copy re-charges the layer's byte gauge. Byte-ceiling pressure
+    /// evicts additional LRU entries (never the entry just written).
+    pub fn insert_tiered(
+        &self,
+        id: ExpertId,
+        value: Arc<ExpertF32>,
+        meta: ResidentMeta,
+    ) -> Option<ExpertId> {
         let mut g = self.inner.lock().unwrap();
         let g = &mut *g;
         let cap = g.layers[id.0].capacity;
@@ -201,22 +338,50 @@ impl DeviceCache {
             return None;
         }
         if g.entries.contains_key(&id) {
-            // refresh recency only
-            g.layers[id.0].touch(id.1, &mut g.clock);
-            g.entries.insert(id, value);
+            g.replace_resident(id, value, meta);
             return None;
         }
         let mut evicted = None;
         if g.layers[id.0].len() >= cap {
-            if let Some(victim) = g.layers[id.0].pop_lru() {
-                g.entries.remove(&(id.0, victim));
-                g.evictions += 1;
+            if let Some(victim) = g.evict_lru(id.0) {
                 evicted = Some((id.0, victim));
             }
         }
         g.layers[id.0].touch(id.1, &mut g.clock);
         g.entries.insert(id, value);
+        g.meta.insert(id, meta);
+        g.layer_bytes[id.0] += meta.bytes;
+        if let Some(victim) = g.enforce_byte_budget(id.0) {
+            evicted.get_or_insert((id.0, victim));
+        }
         evicted
+    }
+
+    /// Peek a resident entry's source-tier metadata (no recency/counter
+    /// effects).
+    pub fn resident_meta(&self, id: ExpertId) -> Option<ResidentMeta> {
+        self.inner.lock().unwrap().meta.get(&id).copied()
+    }
+
+    /// Atomically replace a *resident* entry's value + tier metadata (the
+    /// upgrade-landing path). Returns false — dropping the value — when
+    /// the id is not resident: an upgrade must only ever improve a copy
+    /// the cache still holds; inserting fresh would evict a live LRU
+    /// entry for data nothing asked for. The present-check and the
+    /// replacement happen under one lock, so a concurrent eviction
+    /// cannot slip between them.
+    pub fn replace_if_resident(
+        &self,
+        id: ExpertId,
+        value: Arc<ExpertF32>,
+        meta: ResidentMeta,
+    ) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if !g.entries.contains_key(&id) {
+            return false;
+        }
+        g.replace_resident(id, value, meta);
+        true
     }
 
     /// Resident experts of one layer, LRU first.
@@ -258,6 +423,19 @@ impl ExpertCache for DeviceCache {
     fn insert(&self, id: ExpertId, value: Arc<ExpertF32>) -> Option<ExpertId> {
         DeviceCache::insert(self, id, value)
     }
+
+    fn insert_tiered(
+        &self,
+        id: ExpertId,
+        value: Arc<ExpertF32>,
+        meta: ResidentMeta,
+    ) -> Option<ExpertId> {
+        DeviceCache::insert_tiered(self, id, value, meta)
+    }
+
+    fn resident_meta(&self, id: ExpertId) -> Option<ResidentMeta> {
+        DeviceCache::resident_meta(self, id)
+    }
 }
 
 /// `&Arc<DeviceCache>` / `&Arc<ShardedCache>` coerce straight to
@@ -275,6 +453,19 @@ impl<T: ExpertCache + ?Sized> ExpertCache for Arc<T> {
 
     fn insert(&self, id: ExpertId, value: Arc<ExpertF32>) -> Option<ExpertId> {
         (**self).insert(id, value)
+    }
+
+    fn insert_tiered(
+        &self,
+        id: ExpertId,
+        value: Arc<ExpertF32>,
+        meta: ResidentMeta,
+    ) -> Option<ExpertId> {
+        (**self).insert_tiered(id, value, meta)
+    }
+
+    fn resident_meta(&self, id: ExpertId) -> Option<ResidentMeta> {
+        (**self).resident_meta(id)
     }
 }
 
@@ -391,6 +582,93 @@ mod tests {
         assert_eq!((h, m), (1, 1));
         c.reset_stats();
         assert_eq!(c.stats(), (0, 0, 0));
+    }
+
+    #[test]
+    fn tier_meta_tracked_and_bytes_accounted() {
+        let c = DeviceCache::new(vec![4]);
+        c.insert_tiered((0, 0), dummy(), ResidentMeta { kind: QuantKind::Int2, bytes: 100 });
+        c.insert_tiered((0, 1), dummy(), ResidentMeta { kind: QuantKind::Int8, bytes: 400 });
+        assert_eq!(
+            c.resident_meta((0, 0)),
+            Some(ResidentMeta { kind: QuantKind::Int2, bytes: 100 })
+        );
+        assert_eq!(c.layer_resident_bytes(0), 500);
+        assert_eq!(c.resident_bytes(), 500);
+        // refresh at a higher tier re-charges the gauge
+        c.insert_tiered((0, 0), dummy(), ResidentMeta { kind: QuantKind::Int8, bytes: 400 });
+        assert_eq!(c.layer_resident_bytes(0), 800);
+        assert_eq!(c.resident_meta((0, 0)).unwrap().kind, QuantKind::Int8);
+        // legacy insert records an unknown (f32-sized) meta
+        c.insert((0, 2), dummy());
+        let m = c.resident_meta((0, 2)).unwrap();
+        assert_eq!(m.kind, QuantKind::F32);
+        assert_eq!(m.bytes, 4 * 12); // three 2x2 dummy tensors
+        // eviction releases the victim's bytes
+        c.set_allocation(&[1]);
+        assert_eq!(c.resident_bytes(), c.layer_resident_bytes(0));
+        assert!(c.resident(0).len() == 1);
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_but_keeps_last_entry() {
+        let c = DeviceCache::new(vec![8]);
+        for e in 0..3 {
+            c.insert_tiered(
+                (0, e),
+                dummy(),
+                ResidentMeta { kind: QuantKind::Int4, bytes: 200 },
+            );
+        }
+        assert_eq!(c.layer_resident_bytes(0), 600);
+        // ceiling of 450 bytes: evicting LRU (0,0) brings the layer to
+        // 400 <= 450, so exactly one eviction
+        c.set_byte_budget(Some(vec![450]));
+        assert_eq!(c.resident(0), vec![1, 2]);
+        assert_eq!(c.layer_resident_bytes(0), 400);
+        // an insert that breaches the ceiling evicts the LRU tail
+        let ev = c.insert_tiered(
+            (0, 3),
+            dummy(),
+            ResidentMeta { kind: QuantKind::Int4, bytes: 200 },
+        );
+        assert_eq!(ev, Some((0, 1)));
+        assert_eq!(c.resident(0), vec![2, 3]);
+        // a single over-budget entry survives (must stay servable)
+        c.insert_tiered((0, 9), dummy(), ResidentMeta { kind: QuantKind::F32, bytes: 9000 });
+        assert!(c.contains((0, 9)));
+        assert_eq!(c.resident(0), vec![9]);
+        // clearing the budget stops byte-pressure evictions
+        c.set_byte_budget(None);
+        assert!(c.byte_budget().is_none());
+        c.insert_tiered((0, 4), dummy(), ResidentMeta { kind: QuantKind::F32, bytes: 9000 });
+        assert_eq!(c.resident(0).len(), 2);
+    }
+
+    #[test]
+    fn byte_budget_allows_more_low_tier_entries_than_high() {
+        // Same 800-byte ceiling: four int2 copies fit where only one
+        // int8 copy does — the byte-denominated win of the tiered store.
+        let c = DeviceCache::new(vec![8]);
+        c.set_byte_budget(Some(vec![800]));
+        for e in 0..4 {
+            c.insert_tiered(
+                (0, e),
+                dummy(),
+                ResidentMeta { kind: QuantKind::Int2, bytes: 200 },
+            );
+        }
+        assert_eq!(c.resident(0).len(), 4);
+        let c2 = DeviceCache::new(vec![8]);
+        c2.set_byte_budget(Some(vec![800]));
+        for e in 0..4 {
+            c2.insert_tiered(
+                (0, e),
+                dummy(),
+                ResidentMeta { kind: QuantKind::Int8, bytes: 800 },
+            );
+        }
+        assert_eq!(c2.resident(0).len(), 1);
     }
 
     #[test]

@@ -8,11 +8,16 @@
 //! calibrated so per-expert load times match the paper's testbeds (lane
 //! semantics: docs/transfer-lanes.md). With more than one device, lanes
 //! gain a device affinity: a transfer for device d rides a lane pinned
-//! to d's lane group.
+//! to d's lane group. [`tiered_store`] keeps every expert in several
+//! precision variants and picks the bit width per transfer by urgency
+//! (docs/tiered-precision.md), which makes the caches byte-denominated:
+//! entries carry their source tier + wire bytes and layers can hold a
+//! byte budget on top of the expert-count budget.
 
 pub mod device_cache;
 pub mod host_store;
 pub mod platform;
 pub mod quant;
 pub mod sharded_cache;
+pub mod tiered_store;
 pub mod transfer;

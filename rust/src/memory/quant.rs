@@ -26,9 +26,30 @@ impl QuantKind {
         }
     }
 
-    pub fn values_per_byte(self) -> usize {
-        8 / self.bits().min(8)
+    /// Packed code bytes needed for `n` values in this precision —
+    /// honest for every kind: `F32` stores 4 bytes *per value* (it is
+    /// not "1 value per byte"), the integer kinds pack `8/bits` codes
+    /// per byte with a ceil on the ragged tail.
+    pub fn bytes_for(self, n: usize) -> usize {
+        match self {
+            QuantKind::F32 => 4 * n,
+            k => n.div_ceil(8 / k.bits()),
+        }
     }
+
+    /// Dense index for per-tier counter arrays, ascending precision:
+    /// int2 = 0, int4 = 1, int8 = 2, f32 = 3.
+    pub fn tier_index(self) -> usize {
+        match self {
+            QuantKind::Int2 => 0,
+            QuantKind::Int4 => 1,
+            QuantKind::Int8 => 2,
+            QuantKind::F32 => 3,
+        }
+    }
+
+    /// Number of distinct kinds (the range of [`QuantKind::tier_index`]).
+    pub const COUNT: usize = 4;
 
     pub fn from_name(s: &str) -> Option<QuantKind> {
         match s {
@@ -81,8 +102,8 @@ impl QuantTensor {
                 let n_blocks = values.len().div_ceil(BLOCK);
                 let mut scales = Vec::with_capacity(n_blocks);
                 let mut mins = Vec::with_capacity(n_blocks);
-                let vpb = kind.values_per_byte();
-                let mut data = vec![0u8; values.len().div_ceil(vpb)];
+                let vpb = 8 / bits;
+                let mut data = vec![0u8; kind.bytes_for(values.len())];
                 for b in 0..n_blocks {
                     let s = b * BLOCK;
                     let e = (s + BLOCK).min(values.len());
@@ -125,7 +146,7 @@ impl QuantTensor {
             }
             kind => {
                 let bits = kind.bits();
-                let vpb = kind.values_per_byte();
+                let vpb = 8 / bits;
                 let mask = ((1u16 << bits) - 1) as u8;
                 for i in start..end {
                     let q = (self.data[i / vpb] >> ((i % vpb) * bits)) & mask;
@@ -240,5 +261,72 @@ mod tests {
         assert_eq!(QuantKind::from_name("4bit"), Some(QuantKind::Int4));
         assert_eq!(QuantKind::from_name("4+2bit"), Some(QuantKind::Int2));
         assert_eq!(QuantKind::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn bytes_for_is_honest_for_every_kind() {
+        // F32 is 4 bytes per value — not "1 value per byte".
+        assert_eq!(QuantKind::F32.bytes_for(3), 12);
+        assert_eq!(QuantKind::Int8.bytes_for(3), 3);
+        assert_eq!(QuantKind::Int4.bytes_for(3), 2); // ceil(3/2)
+        assert_eq!(QuantKind::Int2.bytes_for(3), 1); // ceil(3/4)
+        assert_eq!(QuantKind::Int2.bytes_for(5), 2);
+        for k in [QuantKind::F32, QuantKind::Int8, QuantKind::Int4, QuantKind::Int2] {
+            assert_eq!(k.bytes_for(0), 0);
+        }
+    }
+
+    #[test]
+    fn packed_and_wire_sizes_match_bytes_for_all_kinds() {
+        for &n in &[1usize, 63, 64, 65, 300, 1024] {
+            let v = rand_vec(n, 7 + n as u64);
+            for k in [QuantKind::F32, QuantKind::Int8, QuantKind::Int4, QuantKind::Int2] {
+                let q = QuantTensor::quantize(&v, k);
+                assert_eq!(q.data.len(), k.bytes_for(n), "codes: {k:?} n={n}");
+                let n_blocks = if k == QuantKind::F32 { 0 } else { n.div_ceil(BLOCK) };
+                assert_eq!(
+                    q.size_bytes(),
+                    k.bytes_for(n) + 8 * n_blocks,
+                    "wire bytes: {k:?} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tier_index_is_dense_and_ascending() {
+        let kinds = [QuantKind::Int2, QuantKind::Int4, QuantKind::Int8, QuantKind::F32];
+        for (i, k) in kinds.iter().enumerate() {
+            assert_eq!(k.tier_index(), i);
+        }
+        assert_eq!(QuantKind::COUNT, kinds.len());
+        // ascending tier index means ascending bits
+        for w in kinds.windows(2) {
+            assert!(w[0].bits() < w[1].bits());
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_error_bounded_per_kind() {
+        // Every kind reconstructs within half a quantization step (exact
+        // for F32) on random tensors of random ragged lengths.
+        crate::util::prop::check("quant-roundtrip-bounds", 24, |rng| {
+            let n = 1 + rng.usize_below(700);
+            let scale = 0.1 + rng.f32() * 4.0;
+            let v: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 2.0 * scale).collect();
+            for k in [QuantKind::F32, QuantKind::Int8, QuantKind::Int4, QuantKind::Int2] {
+                let q = QuantTensor::quantize(&v, k);
+                let d = q.dequantize();
+                crate::prop_assert!(d.len() == v.len(), "{k:?}: length changed");
+                let bound = if k == QuantKind::F32 { 0.0 } else { q.max_step() * 0.5 };
+                for (i, (a, b)) in v.iter().zip(&d).enumerate() {
+                    crate::prop_assert!(
+                        (a - b).abs() <= bound + 1e-6,
+                        "{k:?} n={n} i={i}: {a} vs {b} (bound {bound})"
+                    );
+                }
+            }
+            Ok(())
+        });
     }
 }

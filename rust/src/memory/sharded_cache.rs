@@ -28,7 +28,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::memory::device_cache::{DeviceCache, ExpertCache};
+use crate::memory::device_cache::{DeviceCache, ExpertCache, ResidentMeta};
 use crate::memory::host_store::ExpertF32;
 use crate::model::ExpertId;
 
@@ -114,6 +114,11 @@ pub struct DeviceSnapshot {
     /// Sum of the shard's per-layer budgets (in experts).
     pub capacity: usize,
     pub queued_bytes: u64,
+    /// Resident wire bytes across the shard's layers (sum of each
+    /// entry's source-tier byte charge).
+    pub resident_bytes: u64,
+    /// Sum of the shard's per-layer byte ceilings (0 = no byte budget).
+    pub capacity_bytes: u64,
 }
 
 /// First-touch assignment state for [`Placement::LoadAware`].
@@ -234,20 +239,66 @@ impl ShardedCache {
     /// first-touch binding. An unbound expert is resident nowhere, so
     /// the answer is `false` without binding it.
     pub fn contains(&self, id: ExpertId) -> bool {
-        if self.shards.len() > 1 && self.placement == Placement::LoadAware {
-            let bound = self.load.lock().unwrap().assigned.get(&id).copied();
-            return match bound {
-                Some(d) => self.shards[d].contains(id),
-                None => false,
-            };
+        match self.device_of_peek(id) {
+            Some(d) => self.shards[d].contains(id),
+            None => false,
         }
-        self.shards[self.device_of(id)].contains(id)
     }
 
     /// Insert into the owning shard (evicting that shard's LRU entry if
     /// its layer is at capacity).
     pub fn insert(&self, id: ExpertId, value: Arc<ExpertF32>) -> Option<ExpertId> {
         self.shards[self.device_of(id)].insert(id, value)
+    }
+
+    /// Insert with source-tier metadata on the owning shard.
+    pub fn insert_tiered(
+        &self,
+        id: ExpertId,
+        value: Arc<ExpertF32>,
+        meta: ResidentMeta,
+    ) -> Option<ExpertId> {
+        self.shards[self.device_of(id)].insert_tiered(id, value, meta)
+    }
+
+    /// Peek a resident entry's tier metadata. Like
+    /// [`ShardedCache::contains`], a speculative probe must not consume a
+    /// `LoadAware` first-touch binding: an unbound expert is resident
+    /// nowhere, so the answer is `None` without binding it.
+    pub fn resident_meta(&self, id: ExpertId) -> Option<ResidentMeta> {
+        match self.device_of_peek(id) {
+            Some(d) => self.shards[d].resident_meta(id),
+            None => None,
+        }
+    }
+
+    /// Atomically replace a resident entry on its owning shard (the
+    /// upgrade-landing path; see
+    /// [`DeviceCache::replace_if_resident`]). An unbound `LoadAware`
+    /// expert is resident nowhere, so the answer is `false` without
+    /// binding it.
+    pub fn replace_if_resident(
+        &self,
+        id: ExpertId,
+        value: Arc<ExpertF32>,
+        meta: ResidentMeta,
+    ) -> bool {
+        match self.device_of_peek(id) {
+            Some(d) => self.shards[d].replace_if_resident(id, value, meta),
+            None => false,
+        }
+    }
+
+    /// The owning device, if determinable without creating a `LoadAware`
+    /// first-touch binding. Pure placements (`layer`/`hash`, or a single
+    /// shard) always resolve; an unbound `LoadAware` expert returns
+    /// `None`.
+    pub fn device_of_peek(&self, id: ExpertId) -> Option<DeviceId> {
+        let n = self.shards.len();
+        if n > 1 && self.placement == Placement::LoadAware {
+            return self.load.lock().unwrap().assigned.get(&id).copied();
+        }
+        Some(self.device_of(id))
     }
 
     /// Resident experts of one layer, merged across shards in device
@@ -323,6 +374,11 @@ impl ShardedCache {
         }
     }
 
+    /// Resident wire bytes across every shard.
+    pub fn resident_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.resident_bytes()).sum()
+    }
+
     /// Per-device counter snapshots (`queued_bytes` left at 0 — the
     /// transfer engine overlays it, see
     /// [`crate::memory::transfer::TransferEngine::device_snapshots`]).
@@ -340,6 +396,11 @@ impl ShardedCache {
                     resident: s.len(),
                     capacity: s.allocation().iter().sum(),
                     queued_bytes: 0,
+                    resident_bytes: s.resident_bytes() as u64,
+                    capacity_bytes: s
+                        .byte_budget()
+                        .map(|b| b.iter().sum::<usize>() as u64)
+                        .unwrap_or(0),
                 }
             })
             .collect()
@@ -357,6 +418,19 @@ impl ExpertCache for ShardedCache {
 
     fn insert(&self, id: ExpertId, value: Arc<ExpertF32>) -> Option<ExpertId> {
         ShardedCache::insert(self, id, value)
+    }
+
+    fn insert_tiered(
+        &self,
+        id: ExpertId,
+        value: Arc<ExpertF32>,
+        meta: ResidentMeta,
+    ) -> Option<ExpertId> {
+        ShardedCache::insert_tiered(self, id, value, meta)
+    }
+
+    fn resident_meta(&self, id: ExpertId) -> Option<ResidentMeta> {
+        ShardedCache::resident_meta(self, id)
     }
 }
 
@@ -506,6 +580,41 @@ mod tests {
         assert_eq!(lc.shard(0).allocation(), vec![3, 0]);
         assert_eq!(lc.shard(1).allocation(), vec![0, 1]);
         assert_eq!(lc.allocation(), vec![3, 1]);
+    }
+
+    #[test]
+    fn tier_meta_routes_to_owning_shard_without_binding() {
+        use crate::memory::quant::QuantKind;
+        let c = ShardedCache::new(vec![vec![4, 4]; 2], Placement::ExpertHash);
+        let meta = ResidentMeta { kind: QuantKind::Int2, bytes: 64 };
+        c.insert_tiered((0, 3), dummy(), meta);
+        assert_eq!(c.resident_meta((0, 3)), Some(meta));
+        let d = c.device_of((0, 3));
+        assert_eq!(c.shard(d).resident_meta((0, 3)), Some(meta));
+        assert_eq!(c.shard(1 - d).resident_meta((0, 3)), None);
+        // LoadAware: peeking meta of an unbound expert must not bind it
+        let la = ShardedCache::new(vec![vec![4, 4]; 2], Placement::LoadAware);
+        assert_eq!(la.resident_meta((0, 0)), None);
+        assert_eq!(la.device_of_peek((0, 0)), None);
+        assert_eq!(la.device_of((1, 5)), 0, "first real touch still sees clean counts");
+    }
+
+    #[test]
+    fn snapshots_surface_resident_and_capacity_bytes() {
+        use crate::memory::quant::QuantKind;
+        let c = ShardedCache::new(vec![vec![4, 4]; 2], Placement::ExpertHash);
+        // per-shard byte ceilings (the engine installs these per shard —
+        // see coordinator::engine::apply_tiered_counts)
+        c.shard(0).set_byte_budget(Some(vec![500, 251]));
+        c.shard(1).set_byte_budget(Some(vec![500, 250]));
+        let m = ResidentMeta { kind: QuantKind::Int4, bytes: 128 };
+        c.insert_tiered((0, 0), dummy(), m);
+        let d = c.device_of((0, 0));
+        let snaps = c.device_snapshots();
+        assert_eq!(snaps[d].resident_bytes, 128);
+        assert_eq!(snaps[d].capacity_bytes, if d == 0 { 751 } else { 750 });
+        assert_eq!(snaps[1 - d].resident_bytes, 0);
+        assert_eq!(c.resident_bytes(), 128);
     }
 
     #[test]

@@ -1,0 +1,316 @@
+//! Tiered mixed-precision expert store + urgency-driven bitwidth policy.
+//!
+//! AdapMoE quantizes experts once, globally; but the loading bottleneck it
+//! attacks is *bytes over the link*. Following HOBBIT's mixed-precision
+//! expert management (PAPERS.md) and EdgeMoE's per-expert bitwidths, the
+//! [`TieredStore`] keeps every expert in **several** precision variants —
+//! one [`HostStore`] per [`QuantKind`] tier, all built from the same f32
+//! weights — and a [`PrecisionPolicy`] picks which tier's bytes a given
+//! transfer moves:
+//!
+//! * **on-demand** (compute-stalling) loads ride the *lowest* tier — the
+//!   fewest bytes on the critical path;
+//! * **prefetches** ride a tier scaled by the caller's slack signal
+//!   (prefetch probability mass / gating score margin): speculative,
+//!   low-probability loads get the high-precision copy, near-certain ones
+//!   drop toward the urgent tier so they still land in time;
+//! * a background **upgrade** path re-transfers resident low-bit experts
+//!   at a higher tier when the lanes are idle
+//!   ([`crate::memory::transfer::Priority::Upgrade`]).
+//!
+//! A single-tier store ([`TieredStore::single`]) wraps an existing
+//! `Arc<HostStore>` without copying, which keeps the historical one-kind
+//! engine bit-for-bit identical: the policy degenerates to the constant
+//! function and every transfer charges exactly the same wire bytes as
+//! before (rust/tests/tiers.rs locks this down). Degrade-vs-stall lookup
+//! semantics live in [`crate::coordinator::scheduler::build_plan_tiered`];
+//! the full subsystem is documented in docs/tiered-precision.md.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::memory::host_store::HostStore;
+use crate::memory::quant::QuantKind;
+use crate::memory::transfer::Priority;
+use crate::model::config::ModelConfig;
+use crate::model::weights::Weights;
+use crate::model::ExpertId;
+
+/// Every expert in several precision variants (ascending bit width).
+pub struct TieredStore {
+    /// Tier list, strictly ascending in bits (e.g. `[Int2, Int4, Int8]`).
+    tiers: Vec<QuantKind>,
+    /// One full host store per tier, index-aligned with `tiers`.
+    stores: Vec<Arc<HostStore>>,
+}
+
+impl TieredStore {
+    /// Quantize every expert at every requested tier. Duplicates are
+    /// rejected; the list is sorted ascending by bits so tier 0 is always
+    /// the cheapest wire encoding.
+    pub fn build(cfg: &ModelConfig, weights: &Weights, tiers: &[QuantKind]) -> Result<TieredStore> {
+        if tiers.is_empty() {
+            bail!("tiered store needs at least one precision tier");
+        }
+        let mut kinds = tiers.to_vec();
+        kinds.sort_by_key(|k| k.bits());
+        for w in kinds.windows(2) {
+            if w[0] == w[1] {
+                bail!("duplicate precision tier {}", w[0].name());
+            }
+        }
+        let stores = kinds
+            .iter()
+            .map(|&k| Ok(Arc::new(HostStore::build(cfg, weights, k)?)))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TieredStore { tiers: kinds, stores })
+    }
+
+    /// Wrap one existing store as a single-tier set (no copy; the Arc
+    /// stays shared with the caller) — the historical engine shape.
+    pub fn single(store: Arc<HostStore>) -> TieredStore {
+        TieredStore { tiers: vec![store.kind], stores: vec![store] }
+    }
+
+    /// Parse a comma-separated tier list (`"int2,int4"`); names as in
+    /// [`QuantKind::from_name`]. Returns `None` on any unknown name.
+    pub fn parse_tiers(s: &str) -> Option<Vec<QuantKind>> {
+        s.split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(QuantKind::from_name)
+            .collect()
+    }
+
+    pub fn tiers(&self) -> &[QuantKind] {
+        &self.tiers
+    }
+
+    pub fn n_tiers(&self) -> usize {
+        self.tiers.len()
+    }
+
+    /// Cheapest tier (fewest wire bytes) — the urgent-load encoding.
+    pub fn lowest(&self) -> QuantKind {
+        self.tiers[0]
+    }
+
+    /// Highest-precision tier — the prefetch/upgrade target and the
+    /// "preferred" resident encoding.
+    pub fn highest(&self) -> QuantKind {
+        *self.tiers.last().expect("non-empty tier list")
+    }
+
+    pub fn has(&self, kind: QuantKind) -> bool {
+        self.tiers.contains(&kind)
+    }
+
+    /// The next tier above `kind`, if any (the upgrade path's target
+    /// chain). `None` when `kind` is already the top tier — or is not a
+    /// tier at all (e.g. a legacy f32 resident in an int-only store).
+    pub fn above(&self, kind: QuantKind) -> Option<QuantKind> {
+        self.tiers
+            .iter()
+            .copied()
+            .find(|t| t.bits() > kind.bits())
+    }
+
+    /// The host store holding `kind`'s encodings. Panics if `kind` is not
+    /// one of the configured tiers — transfer jobs carry a tier chosen by
+    /// the policy, so an unknown kind is a logic error, not bad input.
+    pub fn store(&self, kind: QuantKind) -> &Arc<HostStore> {
+        let i = self
+            .tiers
+            .iter()
+            .position(|&t| t == kind)
+            .unwrap_or_else(|| panic!("{} is not a configured tier", kind.name()));
+        &self.stores[i]
+    }
+
+    /// The highest tier's store — what the cache planner and resident
+    /// byte budgets are denominated against.
+    pub fn base(&self) -> &Arc<HostStore> {
+        self.stores.last().expect("non-empty tier list")
+    }
+
+    /// Wire bytes of one expert at one tier.
+    pub fn expert_transfer_bytes(&self, id: ExpertId, kind: QuantKind) -> usize {
+        self.store(kind).expert_transfer_bytes(id)
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.stores[0].n_experts
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.stores[0].n_layers
+    }
+
+    pub fn expert_bytes_f32(&self) -> usize {
+        self.stores[0].expert_bytes_f32
+    }
+}
+
+/// How [`crate::memory::transfer::TransferEngine::request`] picks the
+/// bit-width tier a fresh transfer rides (`--precision-policy`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrecisionPolicy {
+    /// Every transfer rides the highest (sole) configured tier — the
+    /// historical single-precision behaviour.
+    Fixed,
+    /// On-demand loads ride the lowest tier (fewest bytes while compute
+    /// stalls); prefetches/upgrades ride a tier scaled by the caller's
+    /// slack signal — slack 1.0 (pure speculation) picks the top tier,
+    /// slack 0.0 (about to be needed) drops to the urgent tier.
+    Urgency,
+}
+
+impl PrecisionPolicy {
+    pub fn from_name(name: &str) -> Option<PrecisionPolicy> {
+        match name {
+            "fixed" => Some(PrecisionPolicy::Fixed),
+            "urgency" => Some(PrecisionPolicy::Urgency),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PrecisionPolicy::Fixed => "fixed",
+            PrecisionPolicy::Urgency => "urgency",
+        }
+    }
+
+    pub fn names() -> &'static [&'static str] {
+        &["fixed", "urgency"]
+    }
+
+    /// Pick the tier for a fresh transfer. `slack` ∈ [0, 1] is the
+    /// caller's schedule-slack estimate (ignored by `Fixed` and by
+    /// on-demand loads, which always take the cheapest encoding under
+    /// `Urgency`).
+    pub fn select(&self, tiers: &[QuantKind], priority: Priority, slack: f64) -> QuantKind {
+        let hi = tiers.len() - 1;
+        match (self, priority) {
+            (PrecisionPolicy::Fixed, _) => tiers[hi],
+            (PrecisionPolicy::Urgency, Priority::OnDemand) => tiers[0],
+            (PrecisionPolicy::Urgency, _) => {
+                let s = slack.clamp(0.0, 1.0);
+                tiers[((s * hi as f64).round() as usize).min(hi)]
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{micro_config, synthetic_weights};
+
+    fn store3() -> TieredStore {
+        let cfg = micro_config();
+        let w = synthetic_weights(&cfg, 5);
+        TieredStore::build(&cfg, &w, &[QuantKind::Int8, QuantKind::Int2, QuantKind::Int4])
+            .unwrap()
+    }
+
+    #[test]
+    fn build_sorts_tiers_ascending_and_sizes_scale() {
+        let ts = store3();
+        assert_eq!(ts.tiers(), &[QuantKind::Int2, QuantKind::Int4, QuantKind::Int8]);
+        assert_eq!(ts.lowest(), QuantKind::Int2);
+        assert_eq!(ts.highest(), QuantKind::Int8);
+        let b2 = ts.expert_transfer_bytes((0, 0), QuantKind::Int2);
+        let b4 = ts.expert_transfer_bytes((0, 0), QuantKind::Int4);
+        let b8 = ts.expert_transfer_bytes((0, 0), QuantKind::Int8);
+        assert!(b2 < b4 && b4 < b8, "{b2} {b4} {b8}");
+        assert_eq!(ts.base().kind, QuantKind::Int8);
+    }
+
+    #[test]
+    fn duplicate_or_empty_tiers_rejected() {
+        let cfg = micro_config();
+        let w = synthetic_weights(&cfg, 6);
+        assert!(TieredStore::build(&cfg, &w, &[]).is_err());
+        assert!(
+            TieredStore::build(&cfg, &w, &[QuantKind::Int4, QuantKind::Int4]).is_err()
+        );
+    }
+
+    #[test]
+    fn single_wraps_shared_store() {
+        let cfg = micro_config();
+        let w = synthetic_weights(&cfg, 7);
+        let hs = Arc::new(HostStore::build(&cfg, &w, QuantKind::Int4).unwrap());
+        let ts = TieredStore::single(Arc::clone(&hs));
+        assert_eq!(ts.n_tiers(), 1);
+        assert_eq!(ts.lowest(), QuantKind::Int4);
+        assert_eq!(ts.highest(), QuantKind::Int4);
+        assert!(Arc::ptr_eq(ts.store(QuantKind::Int4), &hs));
+        assert_eq!(
+            ts.expert_transfer_bytes((1, 2), QuantKind::Int4),
+            hs.expert_transfer_bytes((1, 2))
+        );
+    }
+
+    #[test]
+    fn above_walks_the_upgrade_chain() {
+        let ts = store3();
+        assert_eq!(ts.above(QuantKind::Int2), Some(QuantKind::Int4));
+        assert_eq!(ts.above(QuantKind::Int4), Some(QuantKind::Int8));
+        assert_eq!(ts.above(QuantKind::Int8), None);
+        // a non-tier kind below the top still finds the next tier up
+        let cfg = micro_config();
+        let w = synthetic_weights(&cfg, 8);
+        let ts2 = TieredStore::build(&cfg, &w, &[QuantKind::Int2, QuantKind::Int8]).unwrap();
+        assert_eq!(ts2.above(QuantKind::Int4), Some(QuantKind::Int8));
+        // legacy f32 residents are never "upgradable"
+        assert_eq!(ts.above(QuantKind::F32), None);
+    }
+
+    #[test]
+    fn parse_tiers_roundtrips() {
+        assert_eq!(
+            TieredStore::parse_tiers("int2,int4"),
+            Some(vec![QuantKind::Int2, QuantKind::Int4])
+        );
+        assert_eq!(
+            TieredStore::parse_tiers(" int8 , f32 "),
+            Some(vec![QuantKind::Int8, QuantKind::F32])
+        );
+        assert_eq!(TieredStore::parse_tiers("int4,warp"), None);
+        assert_eq!(TieredStore::parse_tiers(""), Some(Vec::new()));
+    }
+
+    #[test]
+    fn policy_selects_by_urgency_and_slack() {
+        let tiers = [QuantKind::Int2, QuantKind::Int4, QuantKind::Int8];
+        let fixed = PrecisionPolicy::Fixed;
+        let urg = PrecisionPolicy::Urgency;
+        // fixed always rides the top (sole) tier
+        assert_eq!(fixed.select(&tiers, Priority::OnDemand, 0.0), QuantKind::Int8);
+        assert_eq!(fixed.select(&tiers, Priority::Prefetch, 1.0), QuantKind::Int8);
+        // urgency: on-demand pins the cheapest encoding
+        assert_eq!(urg.select(&tiers, Priority::OnDemand, 1.0), QuantKind::Int2);
+        // prefetch scales with slack
+        assert_eq!(urg.select(&tiers, Priority::Prefetch, 1.0), QuantKind::Int8);
+        assert_eq!(urg.select(&tiers, Priority::Prefetch, 0.5), QuantKind::Int4);
+        assert_eq!(urg.select(&tiers, Priority::Prefetch, 0.0), QuantKind::Int2);
+        assert_eq!(urg.select(&tiers, Priority::Upgrade, 1.0), QuantKind::Int8);
+        // out-of-range slack clamps
+        assert_eq!(urg.select(&tiers, Priority::Prefetch, 9.0), QuantKind::Int8);
+        // single tier degenerates to the constant function
+        let one = [QuantKind::Int4];
+        assert_eq!(urg.select(&one, Priority::OnDemand, 0.3), QuantKind::Int4);
+        assert_eq!(fixed.select(&one, Priority::Prefetch, 0.3), QuantKind::Int4);
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for name in PrecisionPolicy::names() {
+            assert_eq!(PrecisionPolicy::from_name(name).unwrap().name(), *name);
+        }
+        assert!(PrecisionPolicy::from_name("psychic").is_none());
+    }
+}

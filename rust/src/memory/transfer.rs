@@ -44,10 +44,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::memory::device_cache::DeviceCache;
+use crate::memory::device_cache::{DeviceCache, ResidentMeta};
 use crate::memory::host_store::{ExpertF32, HostStore};
 use crate::memory::platform::Platform;
+use crate::memory::quant::QuantKind;
 use crate::memory::sharded_cache::{DeviceId, DeviceSnapshot, ShardedCache};
+use crate::memory::tiered_store::{PrecisionPolicy, TieredStore};
 use crate::model::ExpertId;
 use crate::tensor::Tensor;
 
@@ -61,6 +63,11 @@ pub enum Priority {
     OnDemand,
     /// Speculative load for an upcoming layer.
     Prefetch,
+    /// Background re-transfer of a resident low-tier expert at a higher
+    /// precision tier (docs/tiered-precision.md). Rides the prefetch
+    /// queue — an upgrade must never delay an urgent or speculative load
+    /// — and replaces the resident cache entry when it lands.
+    Upgrade,
 }
 
 // ---------------------------------------------------------------------------
@@ -143,6 +150,7 @@ pub struct LaneStats {
     pub bytes: AtomicU64,
     pub on_demand: AtomicU64,
     pub prefetch: AtomicU64,
+    pub upgrades: AtomicU64,
     pub sim_busy_ns: AtomicU64,
     pub skipped_cached: AtomicU64,
     /// Bytes assigned to this lane and not yet finished/skipped — the
@@ -160,6 +168,8 @@ pub struct LaneSnapshot {
     pub bytes: u64,
     pub on_demand: u64,
     pub prefetch: u64,
+    /// Background precision-upgrade transfers carried by this lane.
+    pub upgrades: u64,
     /// Simulated wire time this lane has been busy (ms).
     pub busy_ms: f64,
     pub queued_bytes: u64,
@@ -174,6 +184,7 @@ impl LaneStats {
             bytes: self.bytes.load(Ordering::Relaxed),
             on_demand: self.on_demand.load(Ordering::Relaxed),
             prefetch: self.prefetch.load(Ordering::Relaxed),
+            upgrades: self.upgrades.load(Ordering::Relaxed),
             busy_ms: self.sim_busy_ns.load(Ordering::Relaxed) as f64 / 1e6,
             queued_bytes: self.queued_bytes.load(Ordering::Relaxed),
             queued_jobs: self.queued_jobs.load(Ordering::Relaxed),
@@ -199,6 +210,10 @@ pub struct TransferHandle {
     pub n_tiles: usize,
     /// The comm lane this transfer was assigned to.
     pub lane: LaneId,
+    /// The precision tier whose bytes this transfer moves.
+    pub kind: QuantKind,
+    /// Wire bytes of the expert at that tier (what the gauges charge).
+    pub bytes: usize,
 }
 
 struct HandleState {
@@ -211,7 +226,13 @@ struct HandleState {
 }
 
 impl TransferHandle {
-    fn new(id: ExpertId, n_tiles: usize, lane: LaneId) -> TransferHandle {
+    fn new(
+        id: ExpertId,
+        n_tiles: usize,
+        lane: LaneId,
+        kind: QuantKind,
+        bytes: usize,
+    ) -> TransferHandle {
         TransferHandle {
             state: Mutex::new(HandleState {
                 tiles: vec![None; n_tiles],
@@ -224,6 +245,8 @@ impl TransferHandle {
             id,
             n_tiles,
             lane,
+            kind,
+            bytes,
         }
     }
 
@@ -308,6 +331,8 @@ pub struct CompletionEvent {
     pub kind: CompletionKind,
     /// Which lane carried the data (per-lane queue-delay attribution).
     pub lane: LaneId,
+    /// Which precision tier's bytes arrived (per-tier attribution).
+    pub tier: QuantKind,
 }
 
 /// Bounded arrival-order queue of completion events, the compute stream's
@@ -376,6 +401,10 @@ struct Job {
     id: ExpertId,
     /// Owning device shard (resolved once at request time).
     device: DeviceId,
+    /// Precision tier this job moves (chosen at request time).
+    kind: QuantKind,
+    /// Wire bytes of the expert at that tier (enqueue/dequeue symmetric).
+    bytes: usize,
     handle: Arc<TransferHandle>,
     priority: Priority,
 }
@@ -387,8 +416,26 @@ pub struct TransferStats {
     pub bytes: AtomicU64,
     pub on_demand: AtomicU64,
     pub prefetch: AtomicU64,
+    /// Completed background precision upgrades.
+    pub upgrades: AtomicU64,
     pub sim_busy_ns: AtomicU64,
     pub skipped_cached: AtomicU64,
+    /// Per-tier transfer counts, indexed by [`QuantKind::tier_index`].
+    pub tier_transfers: [AtomicU64; QuantKind::COUNT],
+    /// Per-tier wire bytes moved, indexed by [`QuantKind::tier_index`].
+    pub tier_bytes: [AtomicU64; QuantKind::COUNT],
+    /// Per-tier completed upgrades (by *target* tier).
+    pub tier_upgrades: [AtomicU64; QuantKind::COUNT],
+}
+
+/// Point-in-time per-tier transfer volumes, one entry per configured
+/// tier (`ServerStats.tiers`, micro/fig9 tables).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TierSnapshot {
+    pub kind: QuantKind,
+    pub transfers: u64,
+    pub bytes: u64,
+    pub upgrades: u64,
 }
 
 /// Completed prefetches parked until the target layer consumes them —
@@ -396,7 +443,7 @@ pub struct TransferStats {
 /// managed cache (so a layer with a zero cache allocation still benefits
 /// from prefetching). Bounded FIFO.
 pub struct Staging {
-    map: Mutex<(HashMap<ExpertId, Arc<ExpertF32>>, Vec<ExpertId>)>,
+    map: Mutex<(HashMap<ExpertId, (Arc<ExpertF32>, ResidentMeta)>, Vec<ExpertId>)>,
     cap: usize,
 }
 
@@ -405,9 +452,9 @@ impl Staging {
         Staging { map: Mutex::new((HashMap::new(), Vec::new())), cap }
     }
 
-    fn put(&self, id: ExpertId, v: Arc<ExpertF32>) {
+    fn put(&self, id: ExpertId, v: Arc<ExpertF32>, meta: ResidentMeta) {
         let mut g = self.map.lock().unwrap();
-        if g.0.insert(id, v).is_none() {
+        if g.0.insert(id, (v, meta)).is_none() {
             g.1.push(id);
         }
         while g.1.len() > self.cap {
@@ -416,8 +463,10 @@ impl Staging {
         }
     }
 
-    /// Consume a staged expert (single use — it moves to the cache or dies).
-    pub fn take(&self, id: ExpertId) -> Option<Arc<ExpertF32>> {
+    /// Consume a staged expert and its source-tier metadata (single use —
+    /// it moves to the cache or dies; the consumer forwards the meta so
+    /// the cache's byte gauges stay honest).
+    pub fn take(&self, id: ExpertId) -> Option<(Arc<ExpertF32>, ResidentMeta)> {
         let mut g = self.map.lock().unwrap();
         let v = g.0.remove(&id);
         if v.is_some() {
@@ -489,7 +538,11 @@ pub struct TransferEngine {
     policy: LanePolicy,
     /// Round-robin cursor (single-device assignment).
     rr: AtomicU64,
-    store: Arc<HostStore>,
+    /// Tiered expert store: one encoding per configured precision tier
+    /// (a single tier for the historical one-kind engine).
+    tiers: Arc<TieredStore>,
+    /// Which tier a fresh transfer rides (`--precision-policy`).
+    precision: PrecisionPolicy,
     /// The device-sharded cache set every lane drains into (a single
     /// shard for the historical one-device engine). Placement drives the
     /// lane affinity of [`TransferEngine::request`].
@@ -563,6 +616,33 @@ impl TransferEngine {
         time_scale: f64,
         lanes: LaneConfig,
     ) -> TransferEngine {
+        Self::with_tiers(
+            Arc::new(TieredStore::single(store)),
+            PrecisionPolicy::Fixed,
+            cache,
+            platform,
+            n_tiles,
+            time_scale,
+            lanes,
+        )
+    }
+
+    /// Spawn the engine over a tiered mixed-precision store: every fresh
+    /// transfer is assigned a [`QuantKind`] tier by `precision` (or
+    /// explicitly via [`TransferEngine::request_at`]) and charges that
+    /// tier's wire bytes. A single-tier store with
+    /// [`PrecisionPolicy::Fixed`] reproduces [`TransferEngine::with_devices`]
+    /// bit-for-bit (docs/tiered-precision.md).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_tiers(
+        tiers: Arc<TieredStore>,
+        precision: PrecisionPolicy,
+        cache: Arc<ShardedCache>,
+        platform: Platform,
+        n_tiles: usize,
+        time_scale: f64,
+        lanes: LaneConfig,
+    ) -> TransferEngine {
         assert!(n_tiles >= 1);
         assert!(lanes.count >= 1, "need at least one comm lane");
         assert!(
@@ -571,7 +651,7 @@ impl TransferEngine {
         );
         let in_flight = Arc::new(InFlight::new());
         let stats = Arc::new(TransferStats::default());
-        let staging = Arc::new(Staging::new(4 * store.n_experts));
+        let staging = Arc::new(Staging::new(4 * tiers.n_experts()));
         let completions = Arc::new(CompletionBoard::new());
         let shutdown = Arc::new(AtomicBool::new(false));
         let n_devices = cache.n_devices();
@@ -603,7 +683,7 @@ impl TransferEngine {
                 let worker = {
                     let ctx = CommCtx {
                         lane: lane_id,
-                        store: Arc::clone(&store),
+                        tiers: Arc::clone(&tiers),
                         cache: Arc::clone(&cache),
                         platform: platform.clone(),
                         n_tiles,
@@ -642,7 +722,8 @@ impl TransferEngine {
             lanes: lane_set,
             policy: lanes.policy,
             rr: AtomicU64::new(0),
-            store,
+            tiers,
+            precision,
             cache,
             lane_groups,
             rr_dev,
@@ -672,6 +753,50 @@ impl TransferEngine {
     /// The sharded cache set the lanes publish into.
     pub fn sharded_cache(&self) -> &Arc<ShardedCache> {
         &self.cache
+    }
+
+    /// The tiered expert store the lanes read from (single-tier for the
+    /// historical engine shape).
+    pub fn tiered_store(&self) -> &Arc<TieredStore> {
+        &self.tiers
+    }
+
+    pub fn precision(&self) -> PrecisionPolicy {
+        self.precision
+    }
+
+    /// Highest configured tier — the encoding lookups prefer resident
+    /// and the upgrade path promotes toward.
+    pub fn preferred_tier(&self) -> QuantKind {
+        self.tiers.highest()
+    }
+
+    /// Per-tier transfer volumes, one entry per configured tier
+    /// (`ServerStats.tiers`, micro/fig9 tables).
+    pub fn tier_snapshots(&self) -> Vec<TierSnapshot> {
+        self.tiers
+            .tiers()
+            .iter()
+            .map(|&k| {
+                let ti = k.tier_index();
+                TierSnapshot {
+                    kind: k,
+                    transfers: self.stats.tier_transfers[ti].load(Ordering::Relaxed),
+                    bytes: self.stats.tier_bytes[ti].load(Ordering::Relaxed),
+                    upgrades: self.stats.tier_upgrades[ti].load(Ordering::Relaxed),
+                }
+            })
+            .collect()
+    }
+
+    /// In-flight transfers bound to one device shard (the per-device
+    /// prefetch window's occupancy signal). A `LoadAware` expert that is
+    /// in flight is always bound, so the peek resolves every entry.
+    pub fn pending_for_device(&self, device: DeviceId) -> usize {
+        let g = self.in_flight.map.lock().unwrap();
+        g.keys()
+            .filter(|&&id| self.cache.device_of_peek(id) == Some(device))
+            .count()
     }
 
     /// Lanes with affinity to `device`: lane l serves device
@@ -741,7 +866,8 @@ impl TransferEngine {
                 LanePolicy::LeastQueuedBytes => self.least_queued(group.iter().copied()),
                 LanePolicy::Pinned => match priority {
                     Priority::OnDemand => group[0],
-                    Priority::Prefetch => self.least_queued(group[1..].iter().copied()),
+                    // prefetches AND upgrades stay off the reserved lane
+                    _ => self.least_queued(group[1..].iter().copied()),
                 },
             };
         }
@@ -752,15 +878,43 @@ impl TransferEngine {
             LanePolicy::LeastQueuedBytes => self.least_queued(0..n),
             LanePolicy::Pinned => match priority {
                 Priority::OnDemand => 0,
-                Priority::Prefetch => self.least_queued(1..n),
+                _ => self.least_queued(1..n),
             },
         }
     }
 
     /// Enqueue a load (idempotent: joins an in-flight transfer if any; an
     /// on-demand request for an in-flight *prefetch* promotes it to the
-    /// urgent queue of the lane that owns it).
+    /// urgent queue of the lane that owns it). The precision tier is
+    /// chosen by the engine's [`PrecisionPolicy`] at full slack.
     pub fn request(&self, id: ExpertId, priority: Priority) -> Arc<TransferHandle> {
+        self.request_with_slack(id, priority, 1.0)
+    }
+
+    /// [`TransferEngine::request`] with an explicit slack signal ∈ [0, 1]
+    /// — the caller's estimate of how much schedule headroom the load has
+    /// (1.0 = pure speculation, 0.0 = needed imminently). Only the
+    /// `Urgency` policy reads it (docs/tiered-precision.md).
+    pub fn request_with_slack(
+        &self,
+        id: ExpertId,
+        priority: Priority,
+        slack: f64,
+    ) -> Arc<TransferHandle> {
+        let kind = self.precision.select(self.tiers.tiers(), priority, slack);
+        self.request_at(id, priority, kind)
+    }
+
+    /// Enqueue a load at an explicit precision tier (the upgrade path
+    /// names its target directly). Joining an in-flight transfer returns
+    /// that transfer's handle — and its tier — whatever was asked for.
+    pub fn request_at(
+        &self,
+        id: ExpertId,
+        priority: Priority,
+        kind: QuantKind,
+    ) -> Arc<TransferHandle> {
+        assert!(self.tiers.has(kind), "{} is not a configured tier", kind.name());
         let mut g = self.in_flight.map.lock().unwrap();
         if let Some((lane, h)) = g.get(&id) {
             let (lane, h) = (*lane, Arc::clone(h));
@@ -773,16 +927,16 @@ impl TransferEngine {
         }
         let device = self.cache.device_of(id);
         let lane = self.assign_lane(device, priority);
-        let handle = Arc::new(TransferHandle::new(id, self.n_tiles, lane));
-        g.insert(id, (lane, Arc::clone(&handle)));
-        drop(g);
         // Queued-load accounting uses the same byte figure the lane thread
         // will subtract on completion, so both the lane and device gauges
         // drain back to exactly zero.
-        let bytes = self.store.expert_transfer_bytes(id) as u64;
-        self.lanes[lane].stats.enqueue(bytes);
-        self.device_queued[device].fetch_add(bytes, Ordering::Relaxed);
-        let job = Job { id, device, handle: Arc::clone(&handle), priority };
+        let bytes = self.tiers.expert_transfer_bytes(id, kind);
+        let handle = Arc::new(TransferHandle::new(id, self.n_tiles, lane, kind, bytes));
+        g.insert(id, (lane, Arc::clone(&handle)));
+        drop(g);
+        self.lanes[lane].stats.enqueue(bytes as u64);
+        self.device_queued[device].fetch_add(bytes as u64, Ordering::Relaxed);
+        let job = Job { id, device, kind, bytes, handle: Arc::clone(&handle), priority };
         let l = &self.lanes[lane];
         // A dead lane (halt_lane fault injection, or a crashed worker) has
         // dropped its receivers, so the send fails. Don't panic the
@@ -791,7 +945,7 @@ impl TransferEngine {
         // the lane per its dead-lane diagnostics.
         let _ = match priority {
             Priority::OnDemand => l.urgent_tx.send(job),
-            Priority::Prefetch => l.prefetch_tx.send(job),
+            _ => l.prefetch_tx.send(job),
         };
         let _ = l.wake_tx.send(());
         handle
@@ -903,7 +1057,8 @@ impl Drop for TransferEngine {
 
 struct CommCtx {
     lane: LaneId,
-    store: Arc<HostStore>,
+    /// Tiered store: each job decodes from its own tier's encodings.
+    tiers: Arc<TieredStore>,
     /// Device-routed cache set: inserts land on the owning shard.
     cache: Arc<ShardedCache>,
     platform: Platform,
@@ -997,19 +1152,31 @@ fn comm_loop(ctx: CommCtx) {
 }
 
 /// Set up an Active transfer, or complete it immediately from the cache
-/// (prefetch no-op path).
+/// (prefetch/upgrade no-op path).
 fn admit(ctx: &CommCtx, job: Job) -> Option<Active> {
-    if job.priority == Priority::Prefetch && ctx.cache.contains(job.id) {
+    // A prefetch is satisfied by any resident copy; an upgrade only by a
+    // copy at (or above) its target tier — re-moving equal-or-higher
+    // precision bytes would waste the link.
+    let satisfied = match job.priority {
+        Priority::OnDemand => false,
+        Priority::Prefetch => ctx.cache.contains(job.id),
+        Priority::Upgrade => ctx
+            .cache
+            .resident_meta(job.id)
+            .is_some_and(|m| m.kind.bits() >= job.kind.bits()),
+    };
+    if satisfied {
         let full = ctx
             .cache
             .get(job.id)
-            .unwrap_or_else(|| Arc::new(ctx.store.dequantize(job.id)));
+            .unwrap_or_else(|| Arc::new(ctx.tiers.store(job.kind).dequantize(job.id)));
         for t in 0..ctx.n_tiles {
             job.handle.publish_tile(t, Arc::clone(&full));
             ctx.completions.push(CompletionEvent {
                 id: job.id,
                 kind: CompletionKind::Tile(t),
                 lane: ctx.lane,
+                tier: job.kind,
             });
         }
         job.handle.publish_full(full);
@@ -1019,18 +1186,21 @@ fn admit(ctx: &CommCtx, job: Job) -> Option<Active> {
             id: job.id,
             kind: CompletionKind::Full,
             lane: ctx.lane,
+            tier: job.kind,
         });
-        let bytes = ctx.store.expert_transfer_bytes(job.id) as u64;
-        ctx.lane_stats.dequeue(bytes);
-        ctx.device_queued[job.device].fetch_sub(bytes, Ordering::Relaxed);
-        ctx.in_flight.remove(job.id);
+        ctx.lane_stats.dequeue(job.bytes as u64);
+        ctx.device_queued[job.device].fetch_sub(job.bytes as u64, Ordering::Relaxed);
         ctx.stats.skipped_cached.fetch_add(1, Ordering::Relaxed);
         ctx.lane_stats.skipped_cached.fetch_add(1, Ordering::Relaxed);
+        // registry removal last: quiesce() returning implies the counters
+        // above are already published
+        ctx.in_flight.remove(job.id);
         return None;
     }
-    let q = ctx.store.get(job.id);
-    let bytes = q.size_bytes();
-    let total_time = ctx.platform.transfer_time(bytes, ctx.store.expert_bytes_f32) * ctx.time_scale;
+    let store = ctx.tiers.store(job.kind);
+    let bytes = store.get(job.id).size_bytes();
+    debug_assert_eq!(bytes, job.bytes, "request-time and admit-time bytes must agree");
+    let total_time = ctx.platform.transfer_time(bytes, store.expert_bytes_f32) * ctx.time_scale;
     Some(Active {
         job,
         next_tile: 0,
@@ -1042,15 +1212,15 @@ fn admit(ctx: &CommCtx, job: Job) -> Option<Active> {
 
 /// Move one tile of `a` across the simulated link. Returns completion.
 fn transfer_tile(ctx: &CommCtx, a: &mut Active) -> bool {
-    let q = ctx.store.get(a.job.id);
-    let f = q.f;
+    let store = ctx.tiers.store(a.job.kind);
+    let f = store.get(a.job.id).f;
     let f_step = f / ctx.n_tiles;
     let t = a.next_tile;
     let t_start = Instant::now();
     let f_lo = t * f_step;
     let f_hi = if t + 1 == ctx.n_tiles { f } else { (t + 1) * f_step };
-    // Real work: decode this tile's bytes.
-    let tile = Arc::new(ctx.store.dequantize_tile(a.job.id, f_lo, f_hi));
+    // Real work: decode this tile's bytes at the job's tier.
+    let tile = Arc::new(store.dequantize_tile(a.job.id, f_lo, f_hi));
     // Simulated wire time for the remainder of the tile.
     let elapsed = t_start.elapsed().as_secs_f64();
     if a.tile_time > elapsed {
@@ -1064,6 +1234,7 @@ fn transfer_tile(ctx: &CommCtx, a: &mut Active) -> bool {
         id: a.job.id,
         kind: CompletionKind::Tile(t),
         lane: ctx.lane,
+        tier: a.job.kind,
     });
     a.tiles.push(tile);
     a.next_tile += 1;
@@ -1072,20 +1243,29 @@ fn transfer_tile(ctx: &CommCtx, a: &mut Active) -> bool {
 
 /// Assemble + publish a completed transfer.
 fn finish(ctx: &CommCtx, a: Active) {
-    let q = ctx.store.get(a.job.id);
+    let q = ctx.tiers.store(a.job.kind).get(a.job.id);
     let (d, f) = (q.d, q.f);
     let full = Arc::new(assemble(d, f, f / ctx.n_tiles, &a.tiles));
+    let meta = ResidentMeta { kind: a.job.kind, bytes: a.bytes };
     match a.job.priority {
-        // On-demand loads were needed *now*: straight into the LRU cache.
+        // On-demand loads were needed *now*: straight into the LRU cache,
+        // with the source tier + wire bytes on the entry.
         Priority::OnDemand => {
-            ctx.cache.insert(a.job.id, Arc::clone(&full));
+            ctx.cache.insert_tiered(a.job.id, Arc::clone(&full), meta);
+        }
+        // An upgrade only ever *replaces* the resident copy it improves
+        // (atomic check-and-replace). If the target was evicted while
+        // the re-transfer was on the wire, the bytes are dropped — the
+        // copy is still published on the handle for any joined waiter.
+        Priority::Upgrade => {
+            ctx.cache.replace_if_resident(a.job.id, Arc::clone(&full), meta);
         }
         // Prefetches are speculative: park them in staging only. They are
         // promoted into the LRU cache at first use (scheduler::build_plan);
         // inserting them eagerly would evict known-recently-useful experts
         // for predicted ones — measurable cache pollution.
         Priority::Prefetch => {
-            ctx.staging.put(a.job.id, Arc::clone(&full));
+            ctx.staging.put(a.job.id, Arc::clone(&full), meta);
         }
     }
     a.job.handle.publish_full(full);
@@ -1095,14 +1275,16 @@ fn finish(ctx: &CommCtx, a: Active) {
         id: a.job.id,
         kind: CompletionKind::Full,
         lane: ctx.lane,
+        tier: a.job.kind,
     });
-    let q_bytes = ctx.store.expert_transfer_bytes(a.job.id) as u64;
-    ctx.lane_stats.dequeue(q_bytes);
-    ctx.device_queued[a.job.device].fetch_sub(q_bytes, Ordering::Relaxed);
-    ctx.in_flight.remove(a.job.id);
+    ctx.lane_stats.dequeue(a.job.bytes as u64);
+    ctx.device_queued[a.job.device].fetch_sub(a.job.bytes as u64, Ordering::Relaxed);
 
+    let ti = a.job.kind.tier_index();
     ctx.stats.transfers.fetch_add(1, Ordering::Relaxed);
     ctx.stats.bytes.fetch_add(a.bytes as u64, Ordering::Relaxed);
+    ctx.stats.tier_transfers[ti].fetch_add(1, Ordering::Relaxed);
+    ctx.stats.tier_bytes[ti].fetch_add(a.bytes as u64, Ordering::Relaxed);
     ctx.lane_stats.transfers.fetch_add(1, Ordering::Relaxed);
     ctx.lane_stats.bytes.fetch_add(a.bytes as u64, Ordering::Relaxed);
     match a.job.priority {
@@ -1114,7 +1296,15 @@ fn finish(ctx: &CommCtx, a: Active) {
             ctx.stats.prefetch.fetch_add(1, Ordering::Relaxed);
             ctx.lane_stats.prefetch.fetch_add(1, Ordering::Relaxed);
         }
+        Priority::Upgrade => {
+            ctx.stats.upgrades.fetch_add(1, Ordering::Relaxed);
+            ctx.stats.tier_upgrades[ti].fetch_add(1, Ordering::Relaxed);
+            ctx.lane_stats.upgrades.fetch_add(1, Ordering::Relaxed);
+        }
     };
+    // registry removal last: quiesce() returning implies every counter
+    // above is already published
+    ctx.in_flight.remove(a.job.id);
 }
 
 /// Stitch f-tiles back into full [d,f]/[f,d] matrices.
@@ -1279,12 +1469,14 @@ mod tests {
                 w2: Tensor::zeros(vec![1]),
             })
         };
-        staging.put((0, 0), dummy(0));
-        staging.put((0, 1), dummy(1));
-        staging.put((0, 2), dummy(2)); // evicts (0,0)
+        let meta = ResidentMeta { kind: QuantKind::Int4, bytes: 16 };
+        staging.put((0, 0), dummy(0), meta);
+        staging.put((0, 1), dummy(1), meta);
+        staging.put((0, 2), dummy(2), meta); // evicts (0,0)
         assert_eq!(staging.len(), 2);
         assert!(staging.take((0, 0)).is_none());
-        assert!(staging.take((0, 1)).is_some());
+        let (_, m) = staging.take((0, 1)).expect("staged");
+        assert_eq!(m, meta, "staging must preserve the source-tier meta");
         assert!(staging.take((0, 2)).is_some());
     }
 
@@ -1342,7 +1534,7 @@ mod tests {
             assert!(h.try_tile(t).is_some(), "tile {t} landed");
         }
         // a fresh handle has nothing available
-        let h2 = TransferHandle::new((9, 9), 4, 0);
+        let h2 = TransferHandle::new((9, 9), 4, 0, QuantKind::F32, 0);
         assert!(h2.try_full().is_none());
         assert!(h2.try_tile(0).is_none());
     }
@@ -1367,7 +1559,12 @@ mod tests {
     fn board_is_bounded() {
         let board = CompletionBoard::new();
         for i in 0..(BOARD_CAP + 10) {
-            board.push(CompletionEvent { id: (0, i), kind: CompletionKind::Full, lane: 0 });
+            board.push(CompletionEvent {
+                id: (0, i),
+                kind: CompletionKind::Full,
+                lane: 0,
+                tier: QuantKind::F32,
+            });
         }
         assert_eq!(board.len(), BOARD_CAP);
         // oldest events were dropped
@@ -1721,5 +1918,162 @@ mod tests {
             .collect();
         assert_eq!(lanes, vec![0, 1, 2, 0, 1, 2]);
         engine.quiesce();
+    }
+
+    // -- tiered precision -----------------------------------------------------
+
+    fn setup_tiered(
+        kinds: &[QuantKind],
+        precision: PrecisionPolicy,
+        alloc: Vec<usize>,
+        platform: &str,
+        scale: f64,
+    ) -> (Arc<TieredStore>, Arc<DeviceCache>, TransferEngine) {
+        let cfg = test_config();
+        let w = fake_weights(&cfg, 7);
+        let tiers = Arc::new(TieredStore::build(&cfg, &w, kinds).unwrap());
+        let cache = Arc::new(DeviceCache::new(alloc));
+        let engine = TransferEngine::with_tiers(
+            Arc::clone(&tiers),
+            precision,
+            Arc::new(ShardedCache::single(Arc::clone(&cache))),
+            Platform::preset(platform).unwrap(),
+            4,
+            scale,
+            LaneConfig::default(),
+        );
+        (tiers, cache, engine)
+    }
+
+    #[test]
+    fn urgency_policy_routes_tiers_and_counts_bytes() {
+        let (tiers, cache, engine) = setup_tiered(
+            &[QuantKind::Int2, QuantKind::Int8],
+            PrecisionPolicy::Urgency,
+            vec![8, 8],
+            "instant",
+            0.0,
+        );
+        // on-demand rides the lowest tier, full-slack prefetch the highest
+        let od = engine.request((0, 0), Priority::OnDemand);
+        assert_eq!(od.kind, QuantKind::Int2);
+        assert_eq!(od.bytes, tiers.expert_transfer_bytes((0, 0), QuantKind::Int2));
+        let pf = engine.request((0, 1), Priority::Prefetch);
+        assert_eq!(pf.kind, QuantKind::Int8);
+        od.wait_full();
+        pf.wait_full();
+        engine.quiesce();
+        // resident meta records the source tier + wire bytes
+        let m = cache.resident_meta((0, 0)).expect("on-demand landed in cache");
+        assert_eq!(m.kind, QuantKind::Int2);
+        assert_eq!(m.bytes, od.bytes);
+        // per-tier counters attribute each transfer's bytes to its tier
+        let snaps = engine.tier_snapshots();
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(snaps[0].kind, QuantKind::Int2);
+        assert_eq!(snaps[0].transfers, 1);
+        assert_eq!(snaps[0].bytes, od.bytes as u64);
+        assert_eq!(snaps[1].kind, QuantKind::Int8);
+        assert_eq!(snaps[1].transfers, 1);
+        assert_eq!(snaps[1].bytes, pf.bytes as u64);
+        assert_eq!(
+            engine.stats.bytes.load(Ordering::Relaxed),
+            (od.bytes + pf.bytes) as u64,
+            "tier bytes must sum to the aggregate gauge"
+        );
+        // slack scales the prefetch tier down toward the urgent encoding
+        let low = engine.request_with_slack((1, 0), Priority::Prefetch, 0.0);
+        assert_eq!(low.kind, QuantKind::Int2);
+        engine.quiesce();
+    }
+
+    #[test]
+    fn upgrade_replaces_resident_copy_at_higher_tier() {
+        let (tiers, cache, engine) = setup_tiered(
+            &[QuantKind::Int2, QuantKind::Int8],
+            PrecisionPolicy::Urgency,
+            vec![8, 8],
+            "instant",
+            0.0,
+        );
+        engine.request((0, 3), Priority::OnDemand).wait_full(); // int2 resident
+        engine.quiesce();
+        assert_eq!(cache.resident_meta((0, 3)).unwrap().kind, QuantKind::Int2);
+        let up = engine.request_at((0, 3), Priority::Upgrade, QuantKind::Int8);
+        assert_eq!(up.kind, QuantKind::Int8);
+        let full = up.wait_full();
+        engine.quiesce();
+        // the resident entry now carries the int8 decode + its byte charge
+        let m = cache.resident_meta((0, 3)).unwrap();
+        assert_eq!(m.kind, QuantKind::Int8);
+        assert_eq!(m.bytes, tiers.expert_transfer_bytes((0, 3), QuantKind::Int8));
+        let direct = tiers.store(QuantKind::Int8).dequantize((0, 3));
+        assert_eq!(full.w1.data, direct.w1.data);
+        assert_eq!(engine.stats.upgrades.load(Ordering::Relaxed), 1);
+        // a second upgrade to the same (or lower) tier is a no-op skip
+        engine.request_at((0, 3), Priority::Upgrade, QuantKind::Int8).wait_full();
+        engine.quiesce();
+        assert_eq!(engine.stats.upgrades.load(Ordering::Relaxed), 1);
+        assert_eq!(engine.stats.skipped_cached.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn upgrade_landing_after_eviction_does_not_reinsert() {
+        // Layer 0 holds a single expert. While an upgrade for (0,0) is on
+        // the (slow) wire, another insert evicts it — the landed upgrade
+        // must be dropped, not re-inserted over the live resident.
+        let (tiers, cache, engine) = setup_tiered(
+            &[QuantKind::Int2, QuantKind::Int8],
+            PrecisionPolicy::Urgency,
+            vec![1, 8],
+            "rtx4090",
+            1.0,
+        );
+        engine.request((0, 0), Priority::OnDemand).wait_full(); // int2 resident
+        engine.quiesce();
+        let up = engine.request_at((0, 0), Priority::Upgrade, QuantKind::Int8);
+        // evict the target while the upgrade transfers (~ms of wire time)
+        cache.insert(
+            (0, 1),
+            Arc::new(tiers.store(QuantKind::Int2).dequantize((0, 1))),
+        );
+        assert!(!cache.contains((0, 0)), "capacity-1 layer evicted the target");
+        up.wait_full();
+        engine.quiesce();
+        assert!(
+            !cache.contains((0, 0)),
+            "landed upgrade must not evict the live resident to re-insert"
+        );
+        assert!(cache.contains((0, 1)));
+        assert_eq!(engine.stats.upgrades.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn fixed_policy_single_tier_matches_historical_bytes() {
+        // The single-tier tiered engine must charge exactly the wire
+        // bytes the historical HostStore engine charges.
+        let (_store, _cache, legacy) = setup(QuantKind::Int4, vec![8, 8], "instant", 0.0);
+        let (_tiers, _tc, tiered) = setup_tiered(
+            &[QuantKind::Int4],
+            PrecisionPolicy::Fixed,
+            vec![8, 8],
+            "instant",
+            0.0,
+        );
+        for e in 0..4 {
+            legacy.request((0, e), Priority::OnDemand);
+            tiered.request((0, e), Priority::OnDemand);
+        }
+        legacy.quiesce();
+        tiered.quiesce();
+        assert_eq!(
+            legacy.stats.bytes.load(Ordering::Relaxed),
+            tiered.stats.bytes.load(Ordering::Relaxed)
+        );
+        assert_eq!(tiered.tier_snapshots().len(), 1);
+        assert_eq!(
+            tiered.tier_snapshots()[0].bytes,
+            tiered.stats.bytes.load(Ordering::Relaxed)
+        );
     }
 }

@@ -11,7 +11,7 @@ use anyhow::{bail, Result};
 
 pub use crate::coordinator::batcher::{FinishReason, SamplingParams};
 pub use crate::memory::sharded_cache::DeviceSnapshot;
-pub use crate::memory::transfer::LaneSnapshot;
+pub use crate::memory::transfer::{LaneSnapshot, TierSnapshot};
 use crate::model::tokenizer::ByteTokenizer;
 use crate::util::json::Json;
 
@@ -227,6 +227,10 @@ pub struct ServerStats {
     /// device order; a single entry for the historical one-device
     /// engine); empty when the backend has no cache (mock).
     pub devices: Vec<DeviceSnapshot>,
+    /// Per-precision-tier transfer volumes (one entry per configured
+    /// tier, ascending bits; a single entry for single-tier engines);
+    /// empty when the backend has no transfer engine (mock).
+    pub tiers: Vec<TierSnapshot>,
 }
 
 impl ServerStats {
@@ -243,6 +247,8 @@ impl ServerStats {
                         ("resident", Json::Num(d.resident as f64)),
                         ("capacity", Json::Num(d.capacity as f64)),
                         ("queued_bytes", Json::Num(d.queued_bytes as f64)),
+                        ("resident_bytes", Json::Num(d.resident_bytes as f64)),
+                        ("capacity_bytes", Json::Num(d.capacity_bytes as f64)),
                     ])
                 })
                 .collect(),
@@ -257,9 +263,23 @@ impl ServerStats {
                         ("bytes", Json::Num(l.bytes as f64)),
                         ("on_demand", Json::Num(l.on_demand as f64)),
                         ("prefetch", Json::Num(l.prefetch as f64)),
+                        ("upgrades", Json::Num(l.upgrades as f64)),
                         ("busy_ms", Json::Num(l.busy_ms)),
                         ("queued_bytes", Json::Num(l.queued_bytes as f64)),
                         ("queued_jobs", Json::Num(l.queued_jobs as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let tiers = Json::Arr(
+            self.tiers
+                .iter()
+                .map(|t| {
+                    Json::obj(vec![
+                        ("tier", Json::Str(t.kind.name().into())),
+                        ("transfers", Json::Num(t.transfers as f64)),
+                        ("bytes", Json::Num(t.bytes as f64)),
+                        ("upgrades", Json::Num(t.upgrades as f64)),
                     ])
                 })
                 .collect(),
@@ -279,6 +299,7 @@ impl ServerStats {
             ("uptime_s", Json::Num(self.uptime_s)),
             ("lanes", lanes),
             ("devices", devices),
+            ("tiers", tiers),
         ])
     }
 }
@@ -352,9 +373,10 @@ mod tests {
         assert_eq!(j.get("served").and_then(|v| v.as_usize()), Some(2));
         assert_eq!(j.get("queued").and_then(|v| v.as_usize()), Some(1));
         assert!(j.get("tokens_per_sec").is_some());
-        // lanes/devices always present, empty without a transfer engine
+        // lanes/devices/tiers always present, empty without a transfer engine
         assert_eq!(j.get("lanes").and_then(|l| l.as_arr()).map(|a| a.len()), Some(0));
         assert_eq!(j.get("devices").and_then(|d| d.as_arr()).map(|a| a.len()), Some(0));
+        assert_eq!(j.get("tiers").and_then(|t| t.as_arr()).map(|a| a.len()), Some(0));
     }
 
     #[test]
@@ -369,6 +391,8 @@ mod tests {
                     resident: 5,
                     capacity: 8,
                     queued_bytes: 4096,
+                    resident_bytes: 2048,
+                    capacity_bytes: 65536,
                 },
                 DeviceSnapshot { device: 1, misses: 3, ..Default::default() },
             ],
@@ -384,8 +408,47 @@ mod tests {
         assert_eq!(devices[0].get("resident").and_then(|v| v.as_usize()), Some(5));
         assert_eq!(devices[0].get("capacity").and_then(|v| v.as_usize()), Some(8));
         assert_eq!(devices[0].get("queued_bytes").and_then(|v| v.as_usize()), Some(4096));
+        assert_eq!(
+            devices[0].get("resident_bytes").and_then(|v| v.as_usize()),
+            Some(2048)
+        );
+        assert_eq!(
+            devices[0].get("capacity_bytes").and_then(|v| v.as_usize()),
+            Some(65536)
+        );
         assert_eq!(devices[1].get("device").and_then(|v| v.as_usize()), Some(1));
         assert_eq!(devices[1].get("misses").and_then(|v| v.as_usize()), Some(3));
+    }
+
+    #[test]
+    fn stats_serialize_per_tier_entries() {
+        use crate::memory::quant::QuantKind;
+        let s = ServerStats {
+            tiers: vec![
+                TierSnapshot {
+                    kind: QuantKind::Int2,
+                    transfers: 5,
+                    bytes: 1000,
+                    upgrades: 0,
+                },
+                TierSnapshot {
+                    kind: QuantKind::Int8,
+                    transfers: 2,
+                    bytes: 1600,
+                    upgrades: 2,
+                },
+            ],
+            ..Default::default()
+        };
+        let j = s.to_json();
+        let tiers = j.get("tiers").and_then(|t| t.as_arr()).expect("tiers array");
+        assert_eq!(tiers.len(), 2);
+        assert_eq!(tiers[0].get("tier").and_then(|v| v.as_str()), Some("int2"));
+        assert_eq!(tiers[0].get("transfers").and_then(|v| v.as_usize()), Some(5));
+        assert_eq!(tiers[0].get("bytes").and_then(|v| v.as_usize()), Some(1000));
+        assert_eq!(tiers[0].get("upgrades").and_then(|v| v.as_usize()), Some(0));
+        assert_eq!(tiers[1].get("tier").and_then(|v| v.as_str()), Some("int8"));
+        assert_eq!(tiers[1].get("upgrades").and_then(|v| v.as_usize()), Some(2));
     }
 
     #[test]

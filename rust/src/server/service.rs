@@ -40,6 +40,9 @@ pub struct PerfSnapshot {
     /// Per-device expert-cache shard counters (empty for backends
     /// without a cache, e.g. the mock).
     pub devices: Vec<crate::memory::sharded_cache::DeviceSnapshot>,
+    /// Per-precision-tier transfer volumes (empty for backends without
+    /// a transfer engine, e.g. the mock).
+    pub tiers: Vec<crate::memory::transfer::TierSnapshot>,
 }
 
 /// What the service needs from a decode engine. [`Engine`] is the real
@@ -82,6 +85,7 @@ impl Backend for Engine {
             token_p99_ms: self.trace.token_latency.p99() * 1e3,
             lanes: self.xfer.lane_snapshots(),
             devices: self.xfer.device_snapshots(),
+            tiers: self.xfer.tier_snapshots(),
         }
     }
 }
@@ -334,6 +338,7 @@ impl ServiceHandle {
             uptime_s: g.started_at.elapsed().as_secs_f64(),
             lanes: g.perf.lanes.clone(),
             devices: g.perf.devices.clone(),
+            tiers: g.perf.tiers.clone(),
         }
     }
 

@@ -83,7 +83,7 @@ impl Backend for MockBackend {
             tokens_per_sec: self.steps as f64,
             token_p50_ms: 0.01,
             token_p99_ms: 0.02,
-            lanes: Vec::new(),
+            ..PerfSnapshot::default()
         }
     }
 }

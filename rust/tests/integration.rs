@@ -329,6 +329,10 @@ fn tile_wise_engine_matches_expert_wise() {
         cache_budget: 8, // small cache -> plenty of on-demand (tile) loads
         schedule: mode,
         quant: QuantKind::F32,
+        tiers: Vec::new(),
+        precision: adapmoe::memory::tiered_store::PrecisionPolicy::Fixed,
+        upgrade_budget: 0,
+        tier_mode: adapmoe::coordinator::scheduler::TierMode::Degrade,
         platform: Platform::preset("instant").unwrap(),
         n_tiles: 4,
         time_scale: 0.0,

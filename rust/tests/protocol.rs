@@ -244,9 +244,10 @@ fn stats_round_trip_is_nonempty_and_counts() {
     assert!(stats.get("tokens_per_sec").and_then(|v| v.as_f64()).unwrap() > 0.0);
     assert!(stats.get("request_p50_ms").and_then(|v| v.as_f64()).unwrap() >= 0.0);
     assert!(stats.get("uptime_s").and_then(|v| v.as_f64()).unwrap() >= 0.0);
-    // per-lane and per-device arrays always ride the wire; the mock
-    // backend has no transfer engine or cache shards, so both are empty
-    // (non-empty device entries are round-tripped in server::api tests)
+    // per-lane, per-device and per-tier arrays always ride the wire; the
+    // mock backend has no transfer engine or cache shards, so all are
+    // empty (non-empty device/tier entries are round-tripped in
+    // server::api tests)
     assert_eq!(
         stats.get("lanes").and_then(|l| l.as_arr()).map(|a| a.len()),
         Some(0),
@@ -256,6 +257,11 @@ fn stats_round_trip_is_nonempty_and_counts() {
         stats.get("devices").and_then(|d| d.as_arr()).map(|a| a.len()),
         Some(0),
         "devices array must round-trip"
+    );
+    assert_eq!(
+        stats.get("tiers").and_then(|t| t.as_arr()).map(|a| a.len()),
+        Some(0),
+        "tiers array must round-trip"
     );
 
     // ping + malformed lines on the same connection

@@ -1,0 +1,335 @@
+//! Tiered mixed-precision store determinism + policy suite (artifact-free).
+//!
+//! Locks down the acceptance properties of docs/tiered-precision.md:
+//!
+//! * a single-tier tiered engine is **bit-for-bit** the historical
+//!   `--quant` engine — same output bits, same transfer byte counts;
+//! * out-of-order multi-tier arrivals are deterministic: the
+//!   completion-driven drain reproduces the serial drain's bits no matter
+//!   which tier's bytes land first;
+//! * degrade-instead-of-miss never stalls the executor when a lower-tier
+//!   copy is resident;
+//! * background upgrades never preempt urgent loads (the pinned-lane
+//!   reservation holds for `Priority::Upgrade`);
+//! * the wire bytes the engine charges equal `QuantExpert::size_bytes`
+//!   at every tier.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use adapmoe::coordinator::executor::{run_layer_parallel, run_layer_serial};
+use adapmoe::coordinator::scheduler::{build_plan, build_plan_tiered, ScheduleMode, TierMode};
+use adapmoe::memory::device_cache::DeviceCache;
+use adapmoe::memory::host_store::HostStore;
+use adapmoe::memory::platform::Platform;
+use adapmoe::memory::quant::QuantKind;
+use adapmoe::memory::sharded_cache::ShardedCache;
+use adapmoe::memory::tiered_store::{PrecisionPolicy, TieredStore};
+use adapmoe::memory::transfer::{LaneConfig, LanePolicy, Priority, TransferEngine};
+use adapmoe::tensor::Tensor;
+use adapmoe::testutil::{micro_config, synthetic_weights};
+use adapmoe::util::rng::Rng;
+use adapmoe::util::threadpool::ThreadPool;
+
+const SEED: u64 = 41;
+
+fn legacy_engine(
+    kind: QuantKind,
+    platform: &str,
+    scale: f64,
+) -> (Arc<HostStore>, Arc<DeviceCache>, TransferEngine) {
+    let cfg = micro_config();
+    let w = synthetic_weights(&cfg, SEED);
+    let store = Arc::new(HostStore::build(&cfg, &w, kind).unwrap());
+    let cache = Arc::new(DeviceCache::new(vec![8, 8]));
+    let xfer = TransferEngine::new(
+        Arc::clone(&store),
+        Arc::clone(&cache),
+        Platform::preset(platform).unwrap(),
+        4,
+        scale,
+    );
+    (store, cache, xfer)
+}
+
+fn tiered_engine(
+    kinds: &[QuantKind],
+    precision: PrecisionPolicy,
+    lanes: LaneConfig,
+    platform: &str,
+    scale: f64,
+) -> (Arc<TieredStore>, Arc<DeviceCache>, TransferEngine) {
+    let cfg = micro_config();
+    let w = synthetic_weights(&cfg, SEED);
+    let tiers = Arc::new(TieredStore::build(&cfg, &w, kinds).unwrap());
+    let cache = Arc::new(DeviceCache::new(vec![8, 8]));
+    let xfer = TransferEngine::with_tiers(
+        Arc::clone(&tiers),
+        precision,
+        Arc::new(ShardedCache::single(Arc::clone(&cache))),
+        Platform::preset(platform).unwrap(),
+        4,
+        scale,
+        lanes,
+    );
+    (tiers, cache, xfer)
+}
+
+fn inputs(b: usize, n_experts: usize, seed: u64) -> (Tensor, Vec<Vec<f32>>) {
+    let cfg = micro_config();
+    let mut rng = Rng::new(seed);
+    let x = Tensor::new(
+        vec![b, cfg.d_model],
+        (0..b * cfg.d_model).map(|_| rng.f32() - 0.5).collect(),
+    )
+    .unwrap();
+    let coef: Vec<Vec<f32>> = (0..n_experts)
+        .map(|_| (0..b).map(|_| rng.f32()).collect())
+        .collect();
+    (x, coef)
+}
+
+/// `--tiers int4` (one tier, no upgrades) is the current `--quant int4`
+/// path: same output bits, same transfer byte counts.
+#[test]
+fn single_tier_is_bit_for_bit_the_quant_path() {
+    let computes: Vec<usize> = (0..6).collect();
+    let (x, coef) = inputs(4, 8, 7);
+
+    let (legacy_store, legacy_cache, legacy) = legacy_engine(QuantKind::Int4, "instant", 0.0);
+    let plan = build_plan(0, &computes, &[], &legacy_cache, &legacy);
+    let legacy_out = run_layer_serial(&plan, &x, &coef, ScheduleMode::ExpertWise, 4, &legacy_cache);
+    legacy.quiesce();
+
+    let (tiers, tiered_cache, tiered) = tiered_engine(
+        &[QuantKind::Int4],
+        PrecisionPolicy::Fixed,
+        LaneConfig::default(),
+        "instant",
+        0.0,
+    );
+    let plan = build_plan(0, &computes, &[], &tiered_cache, &tiered);
+    let tiered_out = run_layer_serial(&plan, &x, &coef, ScheduleMode::ExpertWise, 4, &tiered_cache);
+    tiered.quiesce();
+
+    // identical logit contributions, bit for bit
+    assert_eq!(legacy_out.acc.data, tiered_out.acc.data);
+    // identical wire byte counts, total and per expert
+    assert_eq!(
+        legacy.stats.bytes.load(Ordering::Relaxed),
+        tiered.stats.bytes.load(Ordering::Relaxed)
+    );
+    assert_eq!(
+        legacy.stats.transfers.load(Ordering::Relaxed),
+        tiered.stats.transfers.load(Ordering::Relaxed)
+    );
+    for &e in &computes {
+        assert_eq!(
+            legacy_store.expert_transfer_bytes((0, e)),
+            tiers.expert_transfer_bytes((0, e), QuantKind::Int4)
+        );
+    }
+    // the tiered engine's single tier carries everything
+    let snap = tiered.tier_snapshots();
+    assert_eq!(snap.len(), 1);
+    assert_eq!(snap[0].kind, QuantKind::Int4);
+    assert_eq!(snap[0].bytes, tiered.stats.bytes.load(Ordering::Relaxed));
+    assert_eq!(snap[0].upgrades, 0);
+}
+
+/// Mixed-tier transfers arriving out of order: int2 bytes land long
+/// before int8 bytes on the calibrated link, so the completion-driven
+/// drain consumes them in a different order than the serial drain — and
+/// must still produce the same bits (canonical reduction).
+#[test]
+fn multi_tier_ooo_arrivals_are_deterministic() {
+    let kinds = [QuantKind::Int2, QuantKind::Int8];
+    let computes: Vec<usize> = (0..6).collect();
+    let (x, coef) = inputs(4, 8, 9);
+    // pin tiers per expert: evens ride int2 (fast), odds int8 (slow)
+    let tier_of = |e: usize| if e % 2 == 0 { QuantKind::Int2 } else { QuantKind::Int8 };
+
+    let run = |completion: bool| {
+        let (_tiers, cache, xfer) = tiered_engine(
+            &kinds,
+            PrecisionPolicy::Urgency,
+            LaneConfig::default(),
+            "rtx4090",
+            1.0,
+        );
+        // enqueue in inverted order so plan order != arrival order
+        for e in computes.iter().rev() {
+            xfer.request_at((0, *e), Priority::Prefetch, tier_of(*e));
+        }
+        let plan = build_plan(0, &computes, &[], &cache, &xfer);
+        assert_eq!(plan.on_demand_issued, 0, "must join the in-flight transfers");
+        let out = if completion {
+            let pool = ThreadPool::new(3);
+            run_layer_parallel(
+                &plan,
+                &x,
+                &coef,
+                ScheduleMode::ExpertWise,
+                4,
+                &cache,
+                &xfer,
+                &pool,
+            )
+        } else {
+            run_layer_serial(&plan, &x, &coef, ScheduleMode::ExpertWise, 4, &cache)
+        };
+        xfer.quiesce();
+        // every expert's resident copy records the tier it rode
+        for &e in &computes {
+            assert_eq!(cache.resident_meta((0, e)).unwrap().kind, tier_of(e));
+        }
+        out
+    };
+
+    let serial = run(false);
+    let par = run(true);
+    assert_eq!(serial.consumed, computes, "serial drains in plan order");
+    assert_eq!(
+        serial.acc.data, par.acc.data,
+        "mixed-tier OOO arrivals must not change the output bits"
+    );
+    // per-tier queue delay was attributed for both tiers in the serial
+    // (head-of-line) drain
+    assert!(serial.queue_delay_by_tier.contains_key(&QuantKind::Int2.tier_index()));
+}
+
+/// Degrade-instead-of-miss: a resident lower-tier copy is served ready —
+/// the executor never parks on the completion board for it.
+#[test]
+fn degrade_never_stalls_executor_on_resident_low_tier() {
+    let (_tiers, cache, xfer) = tiered_engine(
+        &[QuantKind::Int2, QuantKind::Int8],
+        PrecisionPolicy::Urgency,
+        LaneConfig::default(),
+        "instant",
+        0.0,
+    );
+    let computes: Vec<usize> = (0..3).collect();
+    // land int2 (below-preferred) copies
+    for &e in &computes {
+        xfer.request((0, e), Priority::OnDemand).wait_full();
+    }
+    xfer.quiesce();
+    for &e in &computes {
+        assert_eq!(cache.resident_meta((0, e)).unwrap().kind, QuantKind::Int2);
+    }
+
+    let plan = build_plan_tiered(0, &computes, &[], &cache, &xfer, TierMode::Degrade);
+    assert_eq!(plan.n_ready(), 3, "degraded residents must come back ready");
+    assert_eq!(plan.n_pending(), 0);
+    assert_eq!(plan.on_demand_issued, 0);
+    assert_eq!(plan.degraded, 3);
+    let (x, coef) = inputs(2, 8, 11);
+    let pool = ThreadPool::new(2);
+    let out = run_layer_parallel(
+        &plan,
+        &x,
+        &coef,
+        ScheduleMode::ExpertWise,
+        4,
+        &cache,
+        &xfer,
+        &pool,
+    );
+    assert_eq!(out.stall_ns, 0, "no pending work: the drain must never park");
+    assert_eq!(out.queue_delay_ns, 0);
+
+    // strict mode re-fetches the same residents at the preferred tier
+    let plan = build_plan_tiered(0, &computes, &[], &cache, &xfer, TierMode::Strict);
+    assert_eq!(plan.n_pending(), 3);
+    assert_eq!(plan.degraded, 0);
+    for (_, h) in plan.pending_items() {
+        assert_eq!(h.kind, QuantKind::Int8);
+        h.wait_full();
+    }
+    xfer.quiesce();
+}
+
+/// The pinned-lane reservation holds for upgrades: they ride the
+/// non-reserved lanes, and an urgent load issued *after* a burst of slow
+/// upgrades still completes first.
+#[test]
+fn upgrades_never_preempt_urgent_loads() {
+    // lane 0 (reserved, on-demand) at instant speed; lane 1 calibrated —
+    // upgrade traffic parks there for milliseconds.
+    let (_tiers, cache, xfer) = tiered_engine(
+        &[QuantKind::Int2, QuantKind::Int8],
+        PrecisionPolicy::Urgency,
+        LaneConfig::new(2, LanePolicy::Pinned).with_time_scales(vec![0.0, 1.0]),
+        "rtx4090",
+        1.0,
+    );
+    // land int2 residents to upgrade (urgent lane, instant)
+    for e in 0..3 {
+        xfer.request((0, e), Priority::OnDemand).wait_full();
+    }
+    xfer.quiesce();
+    // a burst of upgrades: all must avoid the reserved lane
+    let ups: Vec<_> = (0..3)
+        .map(|e| xfer.request_at((0, e), Priority::Upgrade, QuantKind::Int8))
+        .collect();
+    for up in &ups {
+        assert_ne!(up.lane, 0, "upgrade must never ride the reserved lane");
+    }
+    // an urgent load issued afterwards completes while upgrades drag on
+    let urgent = xfer.request((1, 0), Priority::OnDemand);
+    assert_eq!(urgent.lane, 0);
+    urgent.wait_full();
+    assert!(
+        ups.iter().any(|u| !u.is_complete()),
+        "urgent load must finish before the slow upgrade burst drains"
+    );
+    xfer.quiesce();
+    // every upgrade landed and promoted its resident entry
+    for e in 0..3 {
+        assert_eq!(cache.resident_meta((0, e)).unwrap().kind, QuantKind::Int8);
+    }
+    let snaps = xfer.lane_snapshots();
+    assert_eq!(snaps[0].upgrades, 0, "reserved lane carried no upgrades");
+    assert_eq!(snaps[1].upgrades, 3);
+    assert_eq!(xfer.stats.upgrades.load(Ordering::Relaxed), 3);
+}
+
+/// The wire bytes the engine charges at every tier equal the stored
+/// `QuantExpert::size_bytes` — the property that keeps the simulated
+/// link, the gauges and the byte-denominated cache in one currency.
+#[test]
+fn engine_charges_match_quant_expert_size_bytes_per_tier() {
+    let kinds = [QuantKind::Int2, QuantKind::Int4, QuantKind::Int8];
+    let (tiers, _cache, xfer) = tiered_engine(
+        &kinds,
+        PrecisionPolicy::Urgency,
+        LaneConfig::default(),
+        "instant",
+        0.0,
+    );
+    let cfg = micro_config();
+    let mut rng = Rng::new(13);
+    let mut expect_total = 0u64;
+    for i in 0..12 {
+        let id = (i % cfg.n_layers, rng.usize_below(cfg.n_experts));
+        let kind = kinds[i % kinds.len()];
+        let before = xfer.stats.bytes.load(Ordering::Relaxed);
+        let h = xfer.request_at(id, Priority::OnDemand, kind);
+        assert_eq!(h.bytes, tiers.store(kind).get(id).size_bytes());
+        h.wait_full();
+        xfer.quiesce();
+        let delta = xfer.stats.bytes.load(Ordering::Relaxed) - before;
+        assert_eq!(
+            delta as usize,
+            tiers.store(kind).get(id).size_bytes(),
+            "charged bytes must equal the stored encoding at {id:?}/{}",
+            kind.name()
+        );
+        expect_total += delta;
+    }
+    assert_eq!(xfer.stats.bytes.load(Ordering::Relaxed), expect_total);
+    // per-tier counters partition the total exactly
+    let by_tier: u64 = xfer.tier_snapshots().iter().map(|t| t.bytes).sum();
+    assert_eq!(by_tier, expect_total);
+}
