@@ -18,12 +18,14 @@ use adapmoe::memory::platform::Platform;
 use adapmoe::memory::quant::{QuantKind, QuantTensor};
 use adapmoe::memory::sharded_cache::{Placement, ShardedCache};
 use adapmoe::memory::tiered_store::{PrecisionPolicy, TieredStore};
+use adapmoe::memory::faults::FaultPlan;
 use adapmoe::memory::transfer::{LaneConfig, LanePolicy, Priority, TransferEngine};
 use adapmoe::model::config::ModelConfig;
 use adapmoe::model::weights::Weights;
 use adapmoe::runtime::{f32_literal, tensor_to_literal, Runtime};
 use adapmoe::tensor::Tensor;
 use adapmoe::testutil::synthetic_weights;
+use adapmoe::util::json::Json;
 use adapmoe::util::rng::Rng;
 use adapmoe::util::threadpool::ThreadPool;
 use adapmoe::util::timer::{fmt_duration, measure, Bench, Table};
@@ -382,11 +384,128 @@ fn tier_drain_case() {
     println!(" byte volume — the win the urgency-driven bitwidth selection buys)");
 }
 
+/// Fault-layer overhead: the two-lane completion-driven drain under
+/// three regimes — fault-free, one lane dead mid-drain (failover), and a
+/// retry storm (one lane drops every admit). The per-regime wall/stall
+/// figures are also written to `BENCH_faults.json` so CI keeps a recorded
+/// perf trajectory for the degraded paths. Needs no artifacts.
+fn faults_drain_case() {
+    let cfg = ModelConfig {
+        name: "bench-faults".into(),
+        vocab_size: 64,
+        d_model: 128,
+        n_heads: 2,
+        head_dim: 64,
+        n_layers: 1,
+        n_experts: 8,
+        top_k: 2,
+        d_ff: 512,
+        max_seq: 8,
+        rms_eps: 1e-5,
+        batch_sizes: vec![4],
+    };
+    let weights = synthetic_weights(&cfg, 46);
+    let store = Arc::new(HostStore::build(&cfg, &weights, QuantKind::Int4).unwrap());
+    let n = cfg.n_experts;
+    let b = 4usize;
+    let mut rng = Rng::new(19);
+    let x = Tensor::new(
+        vec![b, cfg.d_model],
+        (0..b * cfg.d_model).map(|_| rng.f32() - 0.5).collect(),
+    )
+    .unwrap();
+    let coef: Vec<Vec<f32>> = (0..n)
+        .map(|e| vec![1.0 / (e as f32 + 2.0); b])
+        .collect();
+
+    println!("\n=== fault-layer drain: fault-free vs dead lane vs retry storm (rtx4090, int4, 2 lanes) ===");
+    println!("(8 on-demand experts; the chaos regimes must finish with zero dropped experts)");
+    let mut table = Table::new(&[
+        "regime", "wall (ms)", "stall (ms)", "retries", "failovers", "dropped",
+    ]);
+    let mut rows = Vec::new();
+    for regime in ["fault-free", "dead-lane", "retry-storm"] {
+        let cache = Arc::new(DeviceCache::new(vec![2]));
+        let xfer = TransferEngine::with_lanes(
+            Arc::clone(&store),
+            Arc::clone(&cache),
+            Platform::preset("rtx4090").unwrap(),
+            4,
+            1.0,
+            LaneConfig::new(2, LanePolicy::RoundRobin),
+        );
+        if regime == "retry-storm" {
+            // lane 0 drops every job it admits: each of its experts costs
+            // one timeout-free retry hop onto lane 1
+            xfer.apply_fault_plan(&FaultPlan::parse("0:flaky:0:1").unwrap(), 0);
+        }
+        for e in (0..n).rev() {
+            xfer.request((0, e), Priority::Prefetch);
+        }
+        let computes: Vec<usize> = (0..n).collect();
+        let plan = build_plan(0, &computes, &[], &cache, &xfer);
+        if regime == "dead-lane" {
+            xfer.halt_lane(1);
+        }
+        let pool = ThreadPool::new(4);
+        let t0 = Instant::now();
+        let out = run_layer_parallel(
+            &plan,
+            &x,
+            &coef,
+            ScheduleMode::ExpertWise,
+            4,
+            &cache,
+            &xfer,
+            &pool,
+        );
+        let wall = t0.elapsed().as_secs_f64();
+        let report = xfer.quiesce().expect("chaos drain must quiesce clean");
+        table.row(&[
+            regime.to_string(),
+            format!("{:.1}", wall * 1e3),
+            format!("{:.1}", out.stall_ns as f64 / 1e6),
+            format!("{}", report.retries),
+            format!("{}", report.failovers),
+            format!("{}", out.dropped.len()),
+        ]);
+        rows.push(Json::obj(vec![
+            ("regime", Json::Str(regime.into())),
+            ("wall_ms", Json::Num(wall * 1e3)),
+            ("stall_ms", Json::Num(out.stall_ns as f64 / 1e6)),
+            ("retries", Json::Num(report.retries as f64)),
+            ("timeouts", Json::Num(report.timeouts as f64)),
+            ("failovers", Json::Num(report.failovers as f64)),
+            ("failed", Json::Num(report.failed.len() as f64)),
+            ("consumed", Json::Num(out.consumed.len() as f64)),
+            ("recovered", Json::Num(out.recovered as f64)),
+            ("dropped", Json::Num(out.dropped.len() as f64)),
+        ]));
+    }
+    table.print();
+    let artifact = Json::obj(vec![
+        ("bench", Json::Str("faults".into())),
+        ("platform", Json::Str("rtx4090".into())),
+        ("quant", Json::Str("int4".into())),
+        ("lanes", Json::Num(2.0)),
+        ("experts", Json::Num(n as f64)),
+        ("batch", Json::Num(b as f64)),
+        ("regimes", Json::Arr(rows)),
+    ]);
+    match std::fs::write("BENCH_faults.json", artifact.to_string() + "\n") {
+        Ok(()) => println!("(perf trajectory written to BENCH_faults.json)"),
+        Err(e) => println!("(could not write BENCH_faults.json: {e})"),
+    }
+    println!("(dead-lane adds one failover hop, retry-storm one retry per lane-0 expert;");
+    println!(" both must keep dropped at 0 — degradation only begins past the retry budget)");
+}
+
 fn main() {
     moe_pipeline_case();
     lane_drain_case();
     device_drain_case();
     tier_drain_case();
+    faults_drain_case();
 
     let Some(dir) = artifacts_dir() else { return };
     let (cfg, manifest) = ModelConfig::load_manifest(&dir).expect("manifest");

@@ -47,6 +47,7 @@ use crate::coordinator::profile::Profile;
 use crate::coordinator::scheduler::{build_plan_tiered, ScheduleMode, TierMode};
 use crate::coordinator::trace::{Phase, TraceCollector};
 use crate::memory::device_cache::DeviceCache;
+use crate::memory::faults::FaultPlan;
 use crate::memory::host_store::{ExpertF32, HostStore};
 use crate::memory::platform::Platform;
 use crate::memory::quant::QuantKind;
@@ -118,6 +119,11 @@ pub struct EngineConfig {
     /// are not `Send`, so the parallel path trades the Pallas kernel for
     /// host math with identical-bits reduction.
     pub compute_workers: usize,
+    /// Scripted lane/device fault injection (`--fault-plan`,
+    /// docs/fault-tolerance.md): each event fires when decode reaches its
+    /// step. `None` (every preset) leaves the engine bit-for-bit
+    /// identical to a fault-free build.
+    pub fault_plan: Option<FaultPlan>,
 }
 
 /// Non-expert weights kept device-resident as literals.
@@ -191,6 +197,9 @@ pub struct Engine {
     /// Latest per-layer predicted expert sets (per row), for β tracking and
     /// the prefetch-extension rule.
     predicted: Vec<Option<Vec<HashSet<usize>>>>,
+    /// Decode steps completed — the clock [`EngineConfig::fault_plan`]
+    /// events are keyed by.
+    decode_steps: usize,
     /// Artifact name suffix for the configured batch.
     suffix: String,
 }
@@ -281,6 +290,7 @@ impl Engine {
             pool,
             trace: TraceCollector::new(n_layers),
             predicted: (0..n_layers).map(|_| None).collect(),
+            decode_steps: 0,
             ecfg,
         })
     }
@@ -320,6 +330,12 @@ impl Engine {
             return Ok(Vec::new());
         }
         let t0 = Instant::now();
+        // Fire this step's scripted faults before any transfer is issued,
+        // so a recorded plan replays against the same engine state.
+        if let Some(plan) = &self.ecfg.fault_plan {
+            self.xfer.apply_fault_plan(plan, self.decode_steps);
+        }
+        self.decode_steps += 1;
         let b = self.ecfg.batch;
         let l_total = self.cfg.n_layers;
         let mut tok = vec![0i32; b];
@@ -507,6 +523,7 @@ impl Engine {
                 for (&tier, &ns) in &outcome.queue_delay_by_tier {
                     self.trace.record_tier_queue_delay(tier, ns);
                 }
+                self.trace.record_faults(layer, outcome.recovered, &outcome.dropped);
                 self.trace
                     .record_phase(Phase::MoeWait, t_phase.elapsed().as_nanos() as u64);
                 outcome.acc
@@ -547,7 +564,7 @@ impl Engine {
                     self.ecfg.schedule,
                     self.ecfg.n_tiles,
                     &self.cache,
-                    &self.xfer.completions,
+                    &self.xfer,
                     |arrived| {
                         let (expert, y) = match arrived {
                             executor::Arrived::Full { expert, weights } => {
@@ -572,6 +589,7 @@ impl Engine {
                 for (&tier, &ns) in &stats.queue_delay_by_tier {
                     self.trace.record_tier_queue_delay(tier, ns);
                 }
+                self.trace.record_faults(layer, stats.recovered, &stats.dropped);
                 self.trace.record_layer_stall(layer, stats.stall_ns);
                 self.trace
                     .record_phase(Phase::MoeWait, t_phase.elapsed().as_nanos() as u64);
@@ -1065,6 +1083,7 @@ mod tests {
             placement,
             whole_layer: false,
             compute_workers: 0,
+            fault_plan: None,
         }
     }
 

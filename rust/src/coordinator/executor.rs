@@ -35,6 +35,13 @@
 //! expert into its owning shard, while the canonical reduction keeps the
 //! output bits independent of which device won the race
 //! (rust/tests/devices.rs locks this down).
+//!
+//! When the transfer engine's fault pump gives up on a transfer
+//! ([`TransferHandle::is_failed`]), the drain walks the **degradation
+//! ladder** (docs/fault-tolerance.md) instead of wedging: serve a
+//! resident copy of any tier, else a replica from a non-owning shard,
+//! else drop the expert from the plan the way AdapMoE's adaptive gating
+//! drops low-sensitivity experts — the token always completes.
 
 use std::cell::Cell;
 use std::collections::HashMap;
@@ -48,7 +55,7 @@ use anyhow::Result;
 use crate::coordinator::scheduler::{ExecPlan, ScheduleMode, WorkItem};
 use crate::memory::device_cache::{ExpertCache, ResidentMeta};
 use crate::memory::host_store::ExpertF32;
-use crate::memory::transfer::{CompletionBoard, TransferEngine, TransferHandle};
+use crate::memory::transfer::{TransferEngine, TransferHandle};
 use crate::tensor::Tensor;
 use crate::util::threadpool::ThreadPool;
 
@@ -75,6 +82,14 @@ pub struct LayerOutcome {
     /// Pending experts in the order they were consumed (completion order
     /// for the arrival-order drain, plan order for the serial one).
     pub consumed: Vec<usize>,
+    /// Experts whose transfer failed but were served from the degradation
+    /// ladder (resident copy of any tier, or a replica shard).
+    pub recovered: u64,
+    /// Experts dropped from the layer entirely: transfer failed and no
+    /// fallback copy existed. Tiles that landed before the failure still
+    /// contribute (they are exact partial sums); the missing remainder is
+    /// treated as zero, AdapMoE-gating-style.
+    pub dropped: Vec<usize>,
 }
 
 /// Wait accounting from [`drain_arrival_order`].
@@ -86,8 +101,14 @@ pub struct DrainStats {
     /// Queue delay attributed to the precision tier each expert/tile was
     /// encoded at (key = `QuantKind::tier_index`).
     pub queue_delay_by_tier: HashMap<usize, u64>,
-    /// Pending experts in consumption (arrival) order.
+    /// Pending experts in consumption (arrival) order. Dropped experts
+    /// are *not* listed here; `consumed.len() + dropped.len()` equals the
+    /// pending count.
     pub consumed: Vec<usize>,
+    /// Failed transfers served from the degradation ladder.
+    pub recovered: u64,
+    /// Failed transfers with no fallback copy — skipped, in failure order.
+    pub dropped: Vec<usize>,
 }
 
 /// A unit of pending work handed to the consume callback, in arrival order.
@@ -147,13 +168,39 @@ fn since(at: Instant) -> u64 {
     Instant::now().saturating_duration_since(at).as_nanos() as u64
 }
 
+/// Slice the f-range `[f_lo, f_hi)` out of a full expert — the layout
+/// twin of `HostStore::dequantize_tile`, used by the degradation ladder
+/// to re-create the missing tiles of a failed transfer from a recovered
+/// resident/replica copy (w1/w3 are `[d, f]` so the tile gathers columns;
+/// w2 is `[f, d]` so its rows are contiguous).
+fn slice_tile(w: &ExpertF32, f_lo: usize, f_hi: usize) -> ExpertF32 {
+    let d = w.w1.dims[0];
+    let f = w.w1.dims[1];
+    let width = f_hi - f_lo;
+    let mut t1 = Vec::with_capacity(d * width);
+    let mut t3 = Vec::with_capacity(d * width);
+    for r in 0..d {
+        t1.extend_from_slice(&w.w1.data[r * f + f_lo..r * f + f_hi]);
+        t3.extend_from_slice(&w.w3.data[r * f + f_lo..r * f + f_hi]);
+    }
+    let d_out = w.w2.dims[1];
+    let t2 = w.w2.data[f_lo * d_out..f_hi * d_out].to_vec();
+    ExpertF32 {
+        w1: Tensor { dims: vec![d, width], data: t1 },
+        w3: Tensor { dims: vec![d, width], data: t3 },
+        w2: Tensor { dims: vec![width, d_out], data: t2 },
+    }
+}
+
 /// Consume `pending` transfers in arrival order: sweep the handles for
 /// newly landed experts/tiles, feed each to `consume` on the calling
-/// thread, promote completed experts into `cache`, and park on `board`
-/// when nothing is consumable. A wait only counts toward `stall_ns` when
-/// `count_wait()` is true at its start — the parallel path passes a
-/// pool-idle check there so waits that overlap worker compute are not
-/// misattributed as stalls.
+/// thread, promote completed experts into `cache`, and park on the
+/// engine's completion board when nothing is consumable. A wait only
+/// counts toward `stall_ns` when `count_wait()` is true at its start —
+/// the parallel path passes a pool-idle check there so waits that
+/// overlap worker compute are not misattributed as stalls. Transfers the
+/// fault pump abandons are served through the degradation ladder (module
+/// doc), so the drain terminates for every fault pattern.
 #[allow(clippy::too_many_arguments)]
 pub fn drain_arrival_order(
     layer: usize,
@@ -161,10 +208,11 @@ pub fn drain_arrival_order(
     mode: ScheduleMode,
     n_tiles: usize,
     cache: &dyn ExpertCache,
-    board: &CompletionBoard,
+    xfer: &TransferEngine,
     mut consume: impl FnMut(Arrived<'_>) -> Result<()>,
     mut count_wait: impl FnMut() -> bool,
 ) -> Result<DrainStats> {
+    let board = &xfer.completions;
     // Anything already landed is found by the first sweep; queued stale
     // events would only cause harmless extra sweeps, so drop them.
     board.clear();
@@ -186,6 +234,20 @@ pub fn drain_arrival_order(
         queue_delay_by_lane: HashMap::new(),
         queue_delay_by_tier: HashMap::new(),
         consumed: Vec::new(),
+        recovered: 0,
+        dropped: Vec::new(),
+    };
+    // Degradation ladder, step 1 and 2: a resident copy of any tier
+    // (TierMode::Degrade leaves those behind), else a replica on a
+    // non-owning shard — promoted into `cache` so the next layer hits.
+    let fallback_copy = |cache: &dyn ExpertCache, expert: usize| {
+        let id = (layer, expert);
+        cache.get(id).or_else(|| {
+            xfer.sharded_cache().find_replica(id).map(|(w, m)| {
+                cache.insert_tiered(id, Arc::clone(&w), m);
+                w
+            })
+        })
     };
     let mut remaining = pend.len();
     while remaining > 0 {
@@ -203,6 +265,17 @@ pub fn drain_arrival_order(
                         consume(Arrived::Full { expert: p.expert, weights: &wts })?;
                         cache.insert_tiered((layer, p.expert), wts, meta);
                         stats.consumed.push(p.expert);
+                        p.done = true;
+                        remaining -= 1;
+                        progress = true;
+                    } else if p.handle.is_failed() {
+                        if let Some(wts) = fallback_copy(cache, p.expert) {
+                            consume(Arrived::Full { expert: p.expert, weights: &wts })?;
+                            stats.recovered += 1;
+                            stats.consumed.push(p.expert);
+                        } else {
+                            stats.dropped.push(p.expert);
+                        }
                         p.done = true;
                         remaining -= 1;
                         progress = true;
@@ -227,17 +300,55 @@ pub fn drain_arrival_order(
                     }
                     if p.tiles == n_tiles {
                         // assemble+publish of the full expert trails the
-                        // last tile by microseconds
-                        let wts = p.handle.wait_full();
-                        cache.insert_tiered((layer, p.expert), wts, meta);
-                        stats.consumed.push(p.expert);
+                        // last tile by microseconds — but the fault pump
+                        // can abandon the ticket in that window, so poll
+                        // instead of blocking. A failure here costs only
+                        // the cache promotion; every tile was consumed.
+                        if let Some((wts, _)) = p.handle.try_full() {
+                            cache.insert_tiered((layer, p.expert), wts, meta);
+                            stats.consumed.push(p.expert);
+                            p.done = true;
+                            remaining -= 1;
+                        } else if p.handle.is_failed() {
+                            stats.consumed.push(p.expert);
+                            p.done = true;
+                            remaining -= 1;
+                            progress = true;
+                        }
+                    } else if p.handle.is_failed() {
+                        // Mid-expert failure: re-create the missing tiles
+                        // from a fallback copy so the partial sums already
+                        // dispatched stay valid, else drop the remainder.
+                        if let Some(full) = fallback_copy(cache, p.expert) {
+                            let step = full.w1.dims[1] / n_tiles;
+                            while p.tiles < n_tiles {
+                                let t = p.tiles;
+                                let tile =
+                                    Arc::new(slice_tile(&full, t * step, (t + 1) * step));
+                                consume(Arrived::Tile {
+                                    expert: p.expert,
+                                    index: t,
+                                    tile: &tile,
+                                })?;
+                                p.tiles += 1;
+                            }
+                            stats.recovered += 1;
+                            stats.consumed.push(p.expert);
+                        } else {
+                            stats.dropped.push(p.expert);
+                        }
                         p.done = true;
                         remaining -= 1;
+                        progress = true;
                     }
                 }
             }
         }
         if remaining > 0 && !progress {
+            // Drive the engine's fault machinery from the consumer side:
+            // deadline timeouts, retries and failover all fire from here,
+            // so a drain stuck on a dead lane unsticks itself.
+            xfer.pump_faults();
             let counts = count_wait();
             let t_wait = Instant::now();
             let _ = board.wait_pop(WAIT_SLICE);
@@ -310,6 +421,8 @@ pub fn run_layer_serial(
         queue_delay_by_lane,
         queue_delay_by_tier,
         consumed,
+        recovered: 0,
+        dropped: Vec::new(),
     }
 }
 
@@ -384,7 +497,7 @@ pub fn run_layer_parallel(
         mode,
         n_tiles,
         cache,
-        &xfer.completions,
+        xfer,
         |arrived| {
             match arrived {
                 Arrived::Full { expert, weights } => {
@@ -411,7 +524,11 @@ pub fn run_layer_parallel(
     let mut acc = Tensor::zeros(x.dims.clone());
     for subs in slots {
         for y in subs {
-            acc.add_assign(&y.expect("every dispatched sub-result lands"));
+            // A None sub belongs to a dropped expert (degradation ladder
+            // exhausted): its contribution is zero by construction.
+            if let Some(y) = y {
+                acc.add_assign(&y);
+            }
         }
     }
     LayerOutcome {
@@ -421,6 +538,8 @@ pub fn run_layer_parallel(
         queue_delay_by_lane: stats.queue_delay_by_lane,
         queue_delay_by_tier: stats.queue_delay_by_tier,
         consumed: stats.consumed,
+        recovered: stats.recovered,
+        dropped: stats.dropped,
     }
 }
 
@@ -658,7 +777,7 @@ mod tests {
             ScheduleMode::ExpertWise,
             4,
             &cache,
-            &xfer.completions,
+            &xfer,
             |arrived| {
                 if let Arrived::Full { expert, weights } = arrived {
                     let y = expert_ffn_host(&x, weights, &coef[expert]);

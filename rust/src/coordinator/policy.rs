@@ -16,6 +16,7 @@ use crate::coordinator::gating::GatingPolicy;
 use crate::coordinator::prefetch::PrefetchConfig;
 use crate::coordinator::profile::Profile;
 use crate::coordinator::scheduler::{ScheduleMode, TierMode};
+use crate::memory::faults::FaultPlan;
 use crate::memory::platform::Platform;
 use crate::memory::quant::QuantKind;
 use crate::memory::sharded_cache::Placement;
@@ -53,6 +54,8 @@ pub struct RunSettings {
     /// Per-device in-flight prefetch cap (`--prefetch-device-cap`;
     /// `None` = global window only).
     pub prefetch_per_device: Option<usize>,
+    /// Scripted fault injection (`--fault-plan`; `None` = fault-free).
+    pub fault_plan: Option<FaultPlan>,
 }
 
 impl RunSettings {
@@ -74,6 +77,7 @@ impl RunSettings {
             precision: PrecisionPolicy::Fixed,
             upgrade_budget: 0,
             prefetch_per_device: None,
+            fault_plan: None,
         }
     }
 }
@@ -114,6 +118,7 @@ pub fn method(name: &str, s: &RunSettings, profile: &Profile) -> Option<EngineCo
         lanes: LaneConfig::new(s.n_lanes, s.lane_policy),
         devices: s.n_devices,
         placement: s.placement,
+        fault_plan: s.fault_plan.clone(),
     };
     let mut cfg = match name {
         // DeepSpeed/FlexGen-style dense offloading: loads every expert of
@@ -273,6 +278,17 @@ mod tests {
         assert_eq!(d.precision, PrecisionPolicy::Fixed);
         assert_eq!(d.upgrade_budget, 0);
         assert_eq!(d.prefetch.max_outstanding_per_device, None);
+    }
+
+    #[test]
+    fn fault_plan_propagates_to_config() {
+        let p = Profile::synthetic(4);
+        let mut s = settings();
+        s.fault_plan = Some(FaultPlan::parse("2:halt:0").unwrap());
+        let cfg = method("adapmoe", &s, &p).unwrap();
+        assert_eq!(cfg.fault_plan, s.fault_plan);
+        // default stays fault-free
+        assert!(method("adapmoe", &settings(), &p).unwrap().fault_plan.is_none());
     }
 
     #[test]

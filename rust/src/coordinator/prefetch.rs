@@ -294,7 +294,7 @@ mod tests {
         // the other device's budget is untouched
         let still = plan_requests_with_mass(0, &predicted, &probs, &cache, &xfer, Some(2));
         assert_eq!(still.len(), 2);
-        xfer.quiesce();
+        xfer.quiesce().unwrap();
         // uncapped path unchanged
         let all = plan_requests(0, &predicted, &probs, &cache, &xfer);
         assert_eq!(all.len(), 4);

@@ -271,7 +271,7 @@ mod tests {
             .collect();
         assert_eq!(kinds, vec!["ready", "pending", "extra"]);
         assert_eq!(plan.n_compute(), 2);
-        xfer.quiesce();
+        xfer.quiesce().unwrap();
     }
 
     #[test]
@@ -294,7 +294,7 @@ mod tests {
         let (_store, cache, xfer) = fixture(vec![8, 8], "instant");
         xfer.request((0, 6), crate::memory::transfer::Priority::Prefetch)
             .wait_full();
-        xfer.quiesce();
+        xfer.quiesce().unwrap();
         assert!(xfer.staging_contains((0, 6)));
         assert!(!cache.contains((0, 6)));
         let plan = build_plan(0, &[6], &[], &cache, &xfer);
@@ -313,7 +313,7 @@ mod tests {
         let (store, cache, xfer) = fixture(vec![1, 8], "instant");
         cache.insert((0, 0), Arc::new(store.dequantize((0, 0))));
         xfer.request((0, 5), Priority::Prefetch).wait_full();
-        xfer.quiesce();
+        xfer.quiesce().unwrap();
         assert!(xfer.staging_contains((0, 5)));
         let (_, _, ev_before) = cache.stats();
         let plan = build_plan(0, &[5], &[], &cache, &xfer);
@@ -350,7 +350,7 @@ mod tests {
             for &e in &staged {
                 xfer.request((0, e), Priority::Prefetch).wait_full();
             }
-            xfer.quiesce();
+            xfer.quiesce().unwrap();
             let plan = build_plan(0, &staged, &[], &cache, &xfer);
             crate::prop_assert!(
                 plan.on_demand_issued == 0,
@@ -396,7 +396,7 @@ mod tests {
         );
         // land an int2 (below-preferred) copy of expert (0, 2)
         xfer.request((0, 2), Priority::OnDemand).wait_full();
-        xfer.quiesce();
+        xfer.quiesce().unwrap();
         assert_eq!(cache.resident_meta((0, 2)).unwrap().kind, QuantKind::Int2);
 
         // Degrade: the low-tier resident is served ready — no stall, no load
@@ -416,7 +416,7 @@ mod tests {
         let (_, h) = plan.pending_items().next().unwrap();
         assert_eq!(h.kind, QuantKind::Int8);
         h.wait_full();
-        xfer.quiesce();
+        xfer.quiesce().unwrap();
         assert_eq!(cache.resident_meta((0, 2)).unwrap().kind, QuantKind::Int8);
         // at-preferred residents are plain hits in both modes
         let plan = build_plan_tiered(0, &[2], &[], &cache, &xfer, TierMode::Strict);
@@ -432,7 +432,7 @@ mod tests {
         assert_eq!(plan.n_compute(), 1);
         assert_eq!(plan.queue.len(), 4, "extras ride in the unified queue");
         assert_eq!(plan.on_demand_issued, 4);
-        xfer.quiesce();
+        xfer.quiesce().unwrap();
         // extra loads landed in cache even though not computed
         assert!(cache.contains((1, 1)) && cache.contains((1, 2)) && cache.contains((1, 3)));
     }

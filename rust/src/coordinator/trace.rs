@@ -64,6 +64,14 @@ pub struct TraceCollector {
     /// Lookups served from a resident copy below the preferred tier
     /// (degrade-instead-of-miss accepted lower precision over a stall).
     pub degraded_hits: u64,
+    /// Experts served through the degradation ladder after their transfer
+    /// failed (resident copy of any tier, or a replica shard) — see
+    /// docs/fault-tolerance.md.
+    pub fault_recovered: u64,
+    /// Experts dropped from a layer plan entirely (transfer failed and no
+    /// fallback copy existed), as (layer, expert) pairs in drop order —
+    /// the audit trail that marks a token as degraded.
+    pub dropped_experts: Vec<(usize, usize)>,
     /// Whether to collect the Fig. 3 similarity series. Off by default:
     /// it forces the engine to keep a copy of the previous layer's hidden
     /// state every layer, which is pure overhead on the serving path.
@@ -94,6 +102,8 @@ impl TraceCollector {
             queue_delay_lane_ns: Vec::new(),
             queue_delay_tier_ns: Vec::new(),
             degraded_hits: 0,
+            fault_recovered: 0,
+            dropped_experts: Vec::new(),
             collect_similarity: false,
             phase_ns: [0; Phase::COUNT],
             token_latency: Summary::new(),
@@ -209,6 +219,14 @@ impl TraceCollector {
     /// the preferred tier).
     pub fn record_degraded_hits(&mut self, count: u64) {
         self.degraded_hits += count;
+    }
+
+    /// Degradation-ladder accounting for one layer's drain: experts
+    /// served from a fallback copy after a failed transfer, and experts
+    /// dropped from the plan outright.
+    pub fn record_faults(&mut self, layer: usize, recovered: u64, dropped: &[usize]) {
+        self.fault_recovered += recovered;
+        self.dropped_experts.extend(dropped.iter().map(|&e| (layer, e)));
     }
 
     pub fn record_phase(&mut self, phase: Phase, ns: u64) {
@@ -404,6 +422,17 @@ mod tests {
         t.record_degraded_hits(3);
         t.record_degraded_hits(1);
         assert_eq!(t.degraded_hits, 4);
+    }
+
+    #[test]
+    fn fault_recovery_and_drops_accumulate() {
+        let mut t = TraceCollector::new(3);
+        assert_eq!(t.fault_recovered, 0);
+        assert!(t.dropped_experts.is_empty());
+        t.record_faults(1, 2, &[5]);
+        t.record_faults(2, 0, &[0, 7]);
+        assert_eq!(t.fault_recovered, 2);
+        assert_eq!(t.dropped_experts, vec![(1, 5), (2, 0), (2, 7)]);
     }
 
     #[test]

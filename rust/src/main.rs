@@ -19,6 +19,7 @@ use adapmoe::coordinator::cache_plan;
 use adapmoe::coordinator::engine::Engine;
 use adapmoe::coordinator::policy::{self, RunSettings};
 use adapmoe::coordinator::profile::Profile;
+use adapmoe::memory::faults::FaultPlan;
 use adapmoe::memory::platform::Platform;
 use adapmoe::memory::quant::QuantKind;
 use adapmoe::memory::sharded_cache::Placement;
@@ -87,6 +88,10 @@ fn usage() {
                              (default: 0 = off)\n\
            --prefetch-device-cap N  per-device in-flight prefetch cap\n\
                              (default: 0 = global window only)\n\
+           --fault-plan PLAN scripted lane/device faults, ;-separated\n\
+                             STEP:KIND:ARG events, e.g. 3:halt:1;5:slow:0:4\n\
+                             (kinds: halt|slow|flaky|delay|blackout —\n\
+                             docs/fault-tolerance.md)\n\
            --prompt TEXT     (generate) prompt text\n\
            --max-new N       (generate) tokens to generate (default: 64)\n\
            --temperature X   (generate) sampling temperature, 0 = greedy (default: 0)\n\
@@ -151,6 +156,13 @@ fn build_engine(args: &Args, default_batch: usize) -> Result<Engine> {
     }
     let cap = args.usize_or("prefetch-device-cap", 0);
     settings.prefetch_per_device = (cap > 0).then_some(cap);
+    if let Some(spec) = args.get("fault-plan") {
+        let plan = FaultPlan::parse(spec).context("bad --fault-plan (see --help)")?;
+        if !plan.is_empty() {
+            eprintln!("[adapmoe] fault plan armed: {plan}");
+            settings.fault_plan = Some(plan);
+        }
+    }
     let method = args.str_or("method", "adapmoe");
     let ecfg = policy::method(&method, &settings, &profile)
         .with_context(|| format!("unknown method '{method}'"))?;

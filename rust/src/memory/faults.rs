@@ -1,0 +1,194 @@
+//! Scripted fault injection for the transfer engine's chaos harness
+//! (docs/fault-tolerance.md).
+//!
+//! A [`FaultPlan`] is a list of [`FaultEvent`]s keyed by decode step; the
+//! engine applies every event whose step matches the current one via
+//! [`crate::memory::transfer::TransferEngine::apply_fault_plan`]. Plans
+//! are pure data — parse/format round-trips bit-for-bit, so a recorded
+//! plan replays exactly (the chaos regression suite relies on this).
+//!
+//! Grammar (`--fault-plan`): `;`-separated events, each
+//! `STEP:KIND[:ARG[:ARG]]`:
+//!
+//! | event              | meaning                                           |
+//! |--------------------|---------------------------------------------------|
+//! | `3:halt:1`         | halt lane 1 at decode step 3                      |
+//! | `5:slow:0:4`       | lane 0 wire time ×4 from step 5 on                |
+//! | `8:flaky:1:3`      | lane 1 drops every 3rd admitted job from step 8   |
+//! | `2:delay:0:7`      | lane 0 adds 7 ms of wire time per tile from step 2|
+//! | `10:blackout:0`    | halt every lane serving device 0 at step 10       |
+
+use std::fmt;
+
+use anyhow::{anyhow, bail, Result};
+
+/// One injectable fault. Lane/device indices are validated against the
+/// live engine at injection time, not at parse time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultAction {
+    /// Stop a lane's worker without draining its queue.
+    HaltLane(usize),
+    /// Multiply a lane's simulated wire time by the factor (1.0 = nominal).
+    SlowLane(usize, f64),
+    /// Make a lane drop every k-th job it admits (0 turns the fault off).
+    FlakyLane(usize, u64),
+    /// Add a fixed per-tile delay (milliseconds) to a lane's wire time.
+    DelayLane(usize, u64),
+    /// Halt every lane in a device's affinity group.
+    Blackout(usize),
+}
+
+/// A [`FaultAction`] scheduled for one decode step.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub step: usize,
+    pub action: FaultAction,
+}
+
+/// An ordered fault script, applied step by step during decode.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+fn parse_num<T: std::str::FromStr>(event: &str, field: &str) -> Result<T> {
+    field
+        .parse()
+        .map_err(|_| anyhow!("fault event '{event}': bad number '{field}'"))
+}
+
+impl FaultPlan {
+    /// Parse the CLI grammar above. Empty segments are skipped, so both
+    /// `""` and trailing `;` are legal.
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut events = Vec::new();
+        for part in s.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = part.split(':').collect();
+            if fields.len() < 3 {
+                bail!("fault event '{part}': want STEP:KIND:ARG[:ARG]");
+            }
+            let step: usize = parse_num(part, fields[0])?;
+            let arg3 = || -> Result<&str> {
+                fields
+                    .get(3)
+                    .copied()
+                    .ok_or_else(|| anyhow!("fault event '{part}': missing argument"))
+            };
+            let action = match fields[1] {
+                "halt" => FaultAction::HaltLane(parse_num(part, fields[2])?),
+                "slow" => {
+                    FaultAction::SlowLane(parse_num(part, fields[2])?, parse_num(part, arg3()?)?)
+                }
+                "flaky" => {
+                    FaultAction::FlakyLane(parse_num(part, fields[2])?, parse_num(part, arg3()?)?)
+                }
+                "delay" => {
+                    FaultAction::DelayLane(parse_num(part, fields[2])?, parse_num(part, arg3()?)?)
+                }
+                "blackout" => FaultAction::Blackout(parse_num(part, fields[2])?),
+                other => bail!(
+                    "fault event '{part}': unknown kind '{other}' \
+                     (want halt|slow|flaky|delay|blackout)"
+                ),
+            };
+            events.push(FaultEvent { step, action });
+        }
+        Ok(FaultPlan { events })
+    }
+
+    /// Events scheduled for `step`, in script order.
+    pub fn at(&self, step: usize) -> impl Iterator<Item = &FaultAction> {
+        self.events
+            .iter()
+            .filter(move |e| e.step == step)
+            .map(|e| &e.action)
+    }
+
+    /// Last step that carries an event (None for an empty plan).
+    pub fn last_step(&self) -> Option<usize> {
+        self.events.iter().map(|e| e.step).max()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+impl fmt::Display for FaultAction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultAction::HaltLane(l) => write!(f, "halt:{l}"),
+            FaultAction::SlowLane(l, x) => write!(f, "slow:{l}:{x}"),
+            FaultAction::FlakyLane(l, k) => write!(f, "flaky:{l}:{k}"),
+            FaultAction::DelayLane(l, ms) => write!(f, "delay:{l}:{ms}"),
+            FaultAction::Blackout(d) => write!(f, "blackout:{d}"),
+        }
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, ev) in self.events.iter().enumerate() {
+            if i > 0 {
+                f.write_str(";")?;
+            }
+            write!(f, "{}:{}", ev.step, ev.action)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_kinds_and_roundtrip() {
+        let src = "3:halt:1;5:slow:0:4;8:flaky:1:3;2:delay:0:7;10:blackout:0";
+        let plan = FaultPlan::parse(src).unwrap();
+        assert_eq!(plan.len(), 5);
+        assert_eq!(plan.events[0].step, 3);
+        assert_eq!(plan.events[0].action, FaultAction::HaltLane(1));
+        assert_eq!(plan.events[1].action, FaultAction::SlowLane(0, 4.0));
+        assert_eq!(plan.events[2].action, FaultAction::FlakyLane(1, 3));
+        assert_eq!(plan.events[3].action, FaultAction::DelayLane(0, 7));
+        assert_eq!(plan.events[4].action, FaultAction::Blackout(0));
+        assert_eq!(plan.last_step(), Some(10));
+        // format → parse is bit-for-bit stable (chaos replay relies on it)
+        let printed = plan.to_string();
+        assert_eq!(printed, src);
+        assert_eq!(FaultPlan::parse(&printed).unwrap(), plan);
+    }
+
+    #[test]
+    fn at_filters_by_step_in_script_order() {
+        let plan = FaultPlan::parse("1:halt:0;2:slow:1:9;1:flaky:0:2").unwrap();
+        let at1: Vec<&FaultAction> = plan.at(1).collect();
+        assert_eq!(at1, vec![&FaultAction::HaltLane(0), &FaultAction::FlakyLane(0, 2)]);
+        assert_eq!(plan.at(0).count(), 0);
+        assert_eq!(plan.at(2).count(), 1);
+    }
+
+    #[test]
+    fn empty_and_trailing_separators_are_legal() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert_eq!(FaultPlan::parse("1:halt:0;").unwrap().len(), 1);
+        assert_eq!(FaultPlan::parse(" 1:halt:0 ; 2:halt:1 ").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn bad_events_name_the_offender() {
+        for bad in ["x:halt:0", "1:warp:0", "1:slow:0", "1:halt", "1:flaky:0:x"] {
+            let err = FaultPlan::parse(bad).expect_err(bad);
+            assert!(format!("{err}").contains("fault event"), "{bad}: {err}");
+        }
+    }
+}

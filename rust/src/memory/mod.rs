@@ -12,9 +12,12 @@
 //! precision variants and picks the bit width per transfer by urgency
 //! (docs/tiered-precision.md), which makes the caches byte-denominated:
 //! entries carry their source tier + wire bytes and layers can hold a
-//! byte budget on top of the expert-count budget.
+//! byte budget on top of the expert-count budget. [`faults`] scripts
+//! lane/device fault injection against [`transfer`]'s health, retry and
+//! failover machinery (docs/fault-tolerance.md).
 
 pub mod device_cache;
+pub mod faults;
 pub mod host_store;
 pub mod platform;
 pub mod quant;

@@ -301,6 +301,25 @@ impl ShardedCache {
         Some(self.device_of(id))
     }
 
+    /// Degraded-serving fallback (docs/fault-tolerance.md): a copy of
+    /// `id` resident on a *non-owning* shard — e.g. left behind by an
+    /// earlier placement epoch or a replicated hot expert. Scans shards
+    /// in device order and returns the first copy with its source-tier
+    /// meta; `None` when no replica exists (single-shard sets always
+    /// answer `None` — the owning copy is not a replica).
+    pub fn find_replica(&self, id: ExpertId) -> Option<(Arc<ExpertF32>, ResidentMeta)> {
+        let owner = self.device_of_peek(id);
+        for (d, shard) in self.shards.iter().enumerate() {
+            if Some(d) == owner {
+                continue;
+            }
+            if let (Some(w), Some(meta)) = (shard.get(id), shard.resident_meta(id)) {
+                return Some((w, meta));
+            }
+        }
+        None
+    }
+
     /// Resident experts of one layer, merged across shards in device
     /// order (each shard's slice is LRU→MRU).
     pub fn resident(&self, layer: usize) -> Vec<usize> {

@@ -34,17 +34,28 @@
 //! policies bit-for-bit. Per-device queued bytes are tracked alongside
 //! the per-lane gauges and surfaced through
 //! [`TransferEngine::device_snapshots`] (docs/sharded-backends.md).
+//!
+//! Transfers are fault tolerant (docs/fault-tolerance.md): every lane
+//! carries a circuit-breaker health state ([`LaneHealth`]), jobs carry an
+//! optional deadline and retry budget ([`FaultConfig`]), and the engine's
+//! fault pump re-issues work off dead lanes onto healthy ones in the same
+//! device-affinity group. A transfer that exhausts the ladder is *failed*
+//! ([`TransferHandle::is_failed`]) rather than stranded, and
+//! [`TransferEngine::quiesce`] returns a structured [`FaultReport`]. With
+//! no injected faults and no deadline the machinery is inert and the
+//! engine's behavior is bit-for-bit the pre-fault-layer one.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::memory::device_cache::{DeviceCache, ResidentMeta};
+use crate::memory::faults::{FaultAction, FaultPlan};
 use crate::memory::host_store::{ExpertF32, HostStore};
 use crate::memory::platform::Platform;
 use crate::memory::quant::QuantKind;
@@ -55,6 +66,13 @@ use crate::tensor::Tensor;
 
 /// Index of a comm lane (0-based).
 pub type LaneId = usize;
+
+/// Lock that shrugs off poisoning: a comm worker that panicked mid-tile
+/// must not cascade into lock-poisoning aborts on the engine or serving
+/// threads — registries and counters stay readable for the fault report.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Priority class of a transfer job.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -113,6 +131,100 @@ impl LanePolicy {
     }
 }
 
+/// Circuit-breaker health of one comm lane. Health only ratchets toward
+/// `Dead` in this engine generation: a `Suspect` lane (observed timeouts
+/// or drops) keeps serving but is avoided for retries, and a `Dead` lane
+/// (halted, or its worker exited) never recovers — its jobs fail over.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LaneHealth {
+    #[default]
+    Healthy,
+    Suspect,
+    Dead,
+}
+
+impl LaneHealth {
+    fn from_u8(v: u8) -> LaneHealth {
+        match v {
+            0 => LaneHealth::Healthy,
+            1 => LaneHealth::Suspect,
+            _ => LaneHealth::Dead,
+        }
+    }
+
+    /// Wire name (`ServerStats.lanes[].health`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            LaneHealth::Healthy => "healthy",
+            LaneHealth::Suspect => "suspect",
+            LaneHealth::Dead => "dead",
+        }
+    }
+}
+
+/// Fault-tolerance knobs of a lane set. Inert by default: no `deadline`
+/// means the timeout/retry machinery never fires, and `failover` only
+/// acts when a lane actually dies — so a zero-fault run is bit-for-bit
+/// identical to an engine without the fault layer.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultConfig {
+    /// Per-attempt transfer deadline (queue wait + wire time). `None`
+    /// disables timeout detection entirely.
+    pub deadline: Option<Duration>,
+    /// Re-sends allowed after the first attempt before the transfer is
+    /// failed ([`TransferHandle::is_failed`]).
+    pub max_retries: u32,
+    /// Base backoff before a retry re-send; doubles per retry.
+    pub backoff: Duration,
+    /// Re-issue the jobs of a dead lane on a live one (same
+    /// device-affinity group first). When off, a dead lane strands its
+    /// jobs and [`TransferEngine::quiesce_for`] reports it as an error.
+    pub failover: bool,
+}
+
+impl Default for FaultConfig {
+    fn default() -> FaultConfig {
+        FaultConfig {
+            deadline: None,
+            max_retries: 2,
+            backoff: Duration::from_millis(10),
+            failover: true,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Legacy semantics (pre-fault-layer): no deadlines, no failover.
+    pub fn disabled() -> FaultConfig {
+        FaultConfig { failover: false, ..FaultConfig::default() }
+    }
+}
+
+/// Structured fault-layer summary, the success value of
+/// [`TransferEngine::quiesce`]. Counters are cumulative over the engine's
+/// lifetime; `failed` lists transfers abandoned after exhausting the
+/// retry/failover ladder (their handles report
+/// [`TransferHandle::is_failed`] and never complete).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultReport {
+    pub retries: u64,
+    pub timeouts: u64,
+    pub failovers: u64,
+    pub failed: Vec<ExpertId>,
+    pub dead_lanes: Vec<LaneId>,
+}
+
+impl FaultReport {
+    /// No fault-layer activity at all (the zero-fault fast path).
+    pub fn is_clean(&self) -> bool {
+        self.retries == 0
+            && self.timeouts == 0
+            && self.failovers == 0
+            && self.failed.is_empty()
+            && self.dead_lanes.is_empty()
+    }
+}
+
 /// Lane-set shape of a [`TransferEngine`].
 #[derive(Clone, Debug)]
 pub struct LaneConfig {
@@ -123,22 +235,35 @@ pub struct LaneConfig {
     /// Tests use asymmetric values to force out-of-order arrivals across
     /// lanes; ops can model an unevenly shared physical link.
     pub time_scales: Vec<f64>,
+    /// Fault-tolerance knobs (deadline/retry/failover); inert by default.
+    pub faults: FaultConfig,
 }
 
 impl Default for LaneConfig {
     fn default() -> LaneConfig {
-        LaneConfig { count: 1, policy: LanePolicy::RoundRobin, time_scales: Vec::new() }
+        LaneConfig {
+            count: 1,
+            policy: LanePolicy::RoundRobin,
+            time_scales: Vec::new(),
+            faults: FaultConfig::default(),
+        }
     }
 }
 
 impl LaneConfig {
     pub fn new(count: usize, policy: LanePolicy) -> LaneConfig {
-        LaneConfig { count, policy, time_scales: Vec::new() }
+        LaneConfig { count, policy, ..LaneConfig::default() }
     }
 
     /// Builder: per-lane wire-clock multipliers (len must equal `count`).
     pub fn with_time_scales(mut self, scales: Vec<f64>) -> LaneConfig {
         self.time_scales = scales;
+        self
+    }
+
+    /// Builder: deadline/retry/failover behavior.
+    pub fn with_faults(mut self, faults: FaultConfig) -> LaneConfig {
+        self.faults = faults;
         self
     }
 }
@@ -158,6 +283,14 @@ pub struct LaneStats {
     pub queued_bytes: AtomicU64,
     /// Jobs assigned and not yet finished/skipped.
     pub queued_jobs: AtomicU64,
+    /// Re-sends of this lane's timed-out/dropped jobs (fault layer).
+    pub retries: AtomicU64,
+    /// Per-attempt deadline expiries observed on this lane.
+    pub timeouts: AtomicU64,
+    /// Jobs re-issued *off* this lane after it died.
+    pub failovers: AtomicU64,
+    /// Circuit-breaker state, stored as `LaneHealth as u8`.
+    health: AtomicU8,
 }
 
 /// Point-in-time copy of one lane's counters, for `ServerStats` / benches.
@@ -174,6 +307,11 @@ pub struct LaneSnapshot {
     pub busy_ms: f64,
     pub queued_bytes: u64,
     pub queued_jobs: u64,
+    /// Circuit-breaker state of the lane's worker.
+    pub health: LaneHealth,
+    pub retries: u64,
+    pub timeouts: u64,
+    pub failovers: u64,
 }
 
 impl LaneStats {
@@ -188,7 +326,21 @@ impl LaneStats {
             busy_ms: self.sim_busy_ns.load(Ordering::Relaxed) as f64 / 1e6,
             queued_bytes: self.queued_bytes.load(Ordering::Relaxed),
             queued_jobs: self.queued_jobs.load(Ordering::Relaxed),
+            health: self.health(),
+            retries: self.retries.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
         }
+    }
+
+    fn health(&self) -> LaneHealth {
+        LaneHealth::from_u8(self.health.load(Ordering::SeqCst))
+    }
+
+    /// Health only ratchets toward `Dead` (no automatic recovery): a
+    /// concurrent `Suspect` mark can never mask a death.
+    fn set_health(&self, h: LaneHealth) {
+        self.health.fetch_max(h as u8, Ordering::SeqCst);
     }
 
     fn enqueue(&self, bytes: u64) {
@@ -206,6 +358,9 @@ impl LaneStats {
 pub struct TransferHandle {
     state: Mutex<HandleState>,
     cond: Condvar,
+    /// Set when the fault pump abandoned the transfer (retry budget or
+    /// failover ladder exhausted). A failed handle never publishes `full`.
+    failed: AtomicBool,
     pub id: ExpertId,
     pub n_tiles: usize,
     /// The comm lane this transfer was assigned to.
@@ -242,6 +397,7 @@ impl TransferHandle {
                 tiles_done: 0,
             }),
             cond: Condvar::new(),
+            failed: AtomicBool::new(false),
             id,
             n_tiles,
             lane,
@@ -252,19 +408,24 @@ impl TransferHandle {
 
     /// Block until tile `t` has arrived; returns its dequantized slice
     /// (w1/w3 column tile + w2 row tile — see HostStore::dequantize_tile).
+    /// Blocks forever on a failed transfer — fault-aware consumers poll
+    /// [`TransferHandle::try_tile`] + [`TransferHandle::is_failed`].
     pub fn wait_tile(&self, t: usize) -> Arc<ExpertF32> {
-        let mut g = self.state.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.state);
         while g.tiles[t].is_none() {
-            g = self.cond.wait(g).unwrap();
+            g = self.cond.wait(g).unwrap_or_else(PoisonError::into_inner);
         }
         g.tiles[t].clone().unwrap()
     }
 
-    /// Block until the whole expert has arrived.
+    /// Block until the whole expert has arrived. Blocks forever on a
+    /// failed transfer — fault-aware consumers poll
+    /// [`TransferHandle::try_full`] + [`TransferHandle::is_failed`]
+    /// (see `coordinator::executor::drain_arrival_order`).
     pub fn wait_full(&self) -> Arc<ExpertF32> {
-        let mut g = self.state.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.state);
         while g.full.is_none() {
-            g = self.cond.wait(g).unwrap();
+            g = self.cond.wait(g).unwrap_or_else(PoisonError::into_inner);
         }
         g.full.clone().unwrap()
     }
@@ -273,7 +434,7 @@ impl TransferHandle {
     /// The instant lets the consumer attribute queue delay (time the data
     /// sat ready before compute picked it up) separately from true stalls.
     pub fn try_full(&self) -> Option<(Arc<ExpertF32>, Instant)> {
-        let g = self.state.lock().unwrap();
+        let g = lock_unpoisoned(&self.state);
         match (&g.full, g.full_at) {
             (Some(w), Some(at)) => Some((Arc::clone(w), at)),
             _ => None,
@@ -282,7 +443,7 @@ impl TransferHandle {
 
     /// Non-blocking: tile `t` plus its arrival instant, if landed.
     pub fn try_tile(&self, t: usize) -> Option<(Arc<ExpertF32>, Instant)> {
-        let g = self.state.lock().unwrap();
+        let g = lock_unpoisoned(&self.state);
         match (&g.tiles[t], g.tiles_at[t]) {
             (Some(w), Some(at)) => Some((Arc::clone(w), at)),
             _ => None,
@@ -290,15 +451,22 @@ impl TransferHandle {
     }
 
     pub fn is_complete(&self) -> bool {
-        self.state.lock().unwrap().full.is_some()
+        lock_unpoisoned(&self.state).full.is_some()
+    }
+
+    /// Whether the fault pump abandoned this transfer. Terminal: a failed
+    /// transfer never completes, and its consumer must take the
+    /// degradation ladder (resident lower tier → replica shard → drop).
+    pub fn is_failed(&self) -> bool {
+        self.failed.load(Ordering::SeqCst)
     }
 
     pub fn tiles_done(&self) -> usize {
-        self.state.lock().unwrap().tiles_done
+        lock_unpoisoned(&self.state).tiles_done
     }
 
     fn publish_tile(&self, t: usize, data: Arc<ExpertF32>) {
-        let mut g = self.state.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.state);
         g.tiles[t] = Some(data);
         g.tiles_at[t] = Some(Instant::now());
         g.tiles_done += 1;
@@ -306,9 +474,17 @@ impl TransferHandle {
     }
 
     fn publish_full(&self, data: Arc<ExpertF32>) {
-        let mut g = self.state.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.state);
         g.full = Some(data);
         g.full_at = Some(Instant::now());
+        self.cond.notify_all();
+    }
+
+    /// Mark the transfer abandoned and wake blocking waiters so they can
+    /// re-check state (fault-aware ones poll `is_failed`).
+    fn fail(&self) {
+        self.failed.store(true, Ordering::SeqCst);
+        drop(lock_unpoisoned(&self.state));
         self.cond.notify_all();
     }
 }
@@ -359,7 +535,7 @@ impl CompletionBoard {
     }
 
     fn push(&self, ev: CompletionEvent) {
-        let mut g = self.q.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.q);
         if g.len() >= BOARD_CAP {
             g.pop_front();
         }
@@ -369,27 +545,30 @@ impl CompletionBoard {
 
     /// Pop the oldest event without blocking.
     pub fn try_pop(&self) -> Option<CompletionEvent> {
-        self.q.lock().unwrap().pop_front()
+        lock_unpoisoned(&self.q).pop_front()
     }
 
     /// Pop the oldest event, blocking up to `timeout` for one to arrive.
     pub fn wait_pop(&self, timeout: Duration) -> Option<CompletionEvent> {
-        let mut g = self.q.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.q);
         if let Some(ev) = g.pop_front() {
             return Some(ev);
         }
-        let (mut g, _) = self.cv.wait_timeout(g, timeout).unwrap();
+        let (mut g, _) = self
+            .cv
+            .wait_timeout(g, timeout)
+            .unwrap_or_else(PoisonError::into_inner);
         g.pop_front()
     }
 
     /// Drop queued events (start-of-layer hygiene: anything already landed
     /// is found by the executor's initial handle sweep).
     pub fn clear(&self) {
-        self.q.lock().unwrap().clear();
+        lock_unpoisoned(&self.q).clear();
     }
 
     pub fn len(&self) -> usize {
-        self.q.lock().unwrap().len()
+        lock_unpoisoned(&self.q).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -420,6 +599,14 @@ pub struct TransferStats {
     pub upgrades: AtomicU64,
     pub sim_busy_ns: AtomicU64,
     pub skipped_cached: AtomicU64,
+    /// Re-sends of timed-out or dropped jobs (fault layer).
+    pub retries: AtomicU64,
+    /// Per-attempt deadline expiries observed.
+    pub timeouts: AtomicU64,
+    /// Jobs re-issued off a dead lane onto a live one.
+    pub failovers: AtomicU64,
+    /// Transfers abandoned after exhausting the retry/failover ladder.
+    pub failed: AtomicU64,
     /// Per-tier transfer counts, indexed by [`QuantKind::tier_index`].
     pub tier_transfers: [AtomicU64; QuantKind::COUNT],
     /// Per-tier wire bytes moved, indexed by [`QuantKind::tier_index`].
@@ -453,7 +640,7 @@ impl Staging {
     }
 
     fn put(&self, id: ExpertId, v: Arc<ExpertF32>, meta: ResidentMeta) {
-        let mut g = self.map.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.map);
         if g.0.insert(id, (v, meta)).is_none() {
             g.1.push(id);
         }
@@ -467,7 +654,7 @@ impl Staging {
     /// it moves to the cache or dies; the consumer forwards the meta so
     /// the cache's byte gauges stay honest).
     pub fn take(&self, id: ExpertId) -> Option<(Arc<ExpertF32>, ResidentMeta)> {
-        let mut g = self.map.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.map);
         let v = g.0.remove(&id);
         if v.is_some() {
             if let Some(pos) = g.1.iter().position(|&e| e == id) {
@@ -478,7 +665,7 @@ impl Staging {
     }
 
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().0.len()
+        lock_unpoisoned(&self.map).0.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -486,11 +673,44 @@ impl Staging {
     }
 }
 
+/// One in-flight transfer's registry entry. `lane`/`device`/`bytes`
+/// mirror the gauge charge taken at request time (failover migrates the
+/// lane part); the retry/claim fields drive
+/// [`TransferEngine::pump_faults`].
+struct Ticket {
+    lane: LaneId,
+    handle: Arc<TransferHandle>,
+    priority: Priority,
+    kind: QuantKind,
+    device: DeviceId,
+    bytes: usize,
+    /// Re-sends so far (bounded by [`FaultConfig::max_retries`]).
+    retries: u32,
+    /// When the current attempt was (re-)sent; deadlines measure from here.
+    issued_at: Instant,
+    /// Backoff gate: a staged retry is not re-sent before this instant.
+    not_before: Option<Instant>,
+    /// A timed-out/dropped attempt waiting out its backoff re-send.
+    needs_reissue: bool,
+    /// Completion claim: set by whichever finisher (lane worker or the
+    /// fault pump's failure path) got there first; everyone else must
+    /// treat the job as already retired.
+    claimed: bool,
+}
+
+/// The gauge charge a claim winner must release exactly once.
+#[derive(Clone, Copy)]
+struct ClaimInfo {
+    lane: LaneId,
+    device: DeviceId,
+    bytes: usize,
+}
+
 /// In-flight transfer registry shared by the compute thread and every comm
-/// lane: id → (owning lane, handle). The Condvar signals every removal so
+/// lane: id → [`Ticket`]. The Condvar signals every removal so
 /// [`TransferEngine::quiesce`] can sleep instead of poll.
 struct InFlight {
-    map: Mutex<HashMap<ExpertId, (LaneId, Arc<TransferHandle>)>>,
+    map: Mutex<HashMap<ExpertId, Ticket>>,
     drained: Condvar,
 }
 
@@ -500,16 +720,57 @@ impl InFlight {
     }
 
     fn get(&self, id: ExpertId) -> Option<Arc<TransferHandle>> {
-        self.map.lock().unwrap().get(&id).map(|(_, h)| Arc::clone(h))
+        lock_unpoisoned(&self.map).get(&id).map(|t| Arc::clone(&t.handle))
+    }
+
+    /// First-finisher election for `id`: returns the gauge charge to
+    /// release exactly once, or `None` when the job was already claimed
+    /// or retired — the caller then drops its result. Duplicate copies
+    /// (failover/retry races) decode identical bits, so losing the claim
+    /// is always benign.
+    fn claim(&self, id: ExpertId) -> Option<ClaimInfo> {
+        let mut g = lock_unpoisoned(&self.map);
+        match g.get_mut(&id) {
+            Some(t) if !t.claimed => {
+                t.claimed = true;
+                Some(ClaimInfo { lane: t.lane, device: t.device, bytes: t.bytes })
+            }
+            _ => None,
+        }
     }
 
     fn remove(&self, id: ExpertId) {
-        self.map.lock().unwrap().remove(&id);
+        lock_unpoisoned(&self.map).remove(&id);
         self.drained.notify_all();
     }
 
     fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        lock_unpoisoned(&self.map).len()
+    }
+}
+
+/// Dynamic per-lane fault knobs (chaos harness, docs/fault-tolerance.md).
+/// All atomics so the engine thread can flip them while the lane worker
+/// runs; shared between [`Lane`] and its worker's [`CommCtx`].
+struct LaneFaults {
+    /// f64 bits of a wire-time multiplier (`slow` fault; 1.0 = nominal).
+    scale_bits: AtomicU64,
+    /// Extra simulated wire time per tile, in ns (`delay` fault).
+    delay_ns: AtomicU64,
+    /// Drop every k-th admitted job (`flaky` fault; 0 = off).
+    drop_period: AtomicU64,
+    /// Admission counter driving `drop_period`'s phase.
+    admitted: AtomicU64,
+}
+
+impl LaneFaults {
+    fn new() -> LaneFaults {
+        LaneFaults {
+            scale_bits: AtomicU64::new(1.0f64.to_bits()),
+            delay_ns: AtomicU64::new(0),
+            drop_period: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+        }
     }
 }
 
@@ -524,8 +785,11 @@ struct Lane {
     /// analogue). Promotion cannot move a job across lanes.
     promotions: Arc<Mutex<std::collections::HashSet<ExpertId>>>,
     /// Fault injection: stop this lane's worker without draining (tests /
-    /// ops drills for [`TransferEngine::quiesce_for`]'s dead-lane report).
+    /// ops drills; with failover enabled the fault pump re-issues the
+    /// lane's jobs, otherwise [`TransferEngine::quiesce_for`] reports it).
     halt: Arc<AtomicBool>,
+    /// Scripted slow/flaky/delay fault knobs shared with the worker.
+    faults: Arc<LaneFaults>,
     stats: Arc<LaneStats>,
 }
 
@@ -558,6 +822,12 @@ pub struct TransferEngine {
     /// Bytes assigned to each device's transfers and not yet
     /// landed/skipped (mirrors the per-lane `queued_bytes` gauge).
     device_queued: Arc<Vec<AtomicU64>>,
+    /// Deadline/retry/failover behavior ([`LaneConfig::faults`]).
+    faults_cfg: FaultConfig,
+    /// Jobs a flaky lane dropped at admit, reported to the fault pump.
+    fault_dropped: Arc<Mutex<Vec<ExpertId>>>,
+    /// Transfers abandoned by the fault pump ([`FaultReport::failed`]).
+    fault_failed: Mutex<Vec<ExpertId>>,
     in_flight: Arc<InFlight>,
     /// Aggregate counters across lanes.
     pub stats: Arc<TransferStats>,
@@ -669,6 +939,15 @@ impl TransferEngine {
             })
             .collect();
         let rr_dev: Vec<AtomicU64> = (0..n_devices).map(|_| AtomicU64::new(0)).collect();
+        let fault_dropped: Arc<Mutex<Vec<ExpertId>>> = Arc::new(Mutex::new(Vec::new()));
+        // Lane stats are pre-built as a shared vector: after a failover
+        // migrates a job's gauge charge, the *finishing* lane must be able
+        // to release the charge on the lane that currently holds it.
+        let all_stats: Arc<Vec<Arc<LaneStats>>> = Arc::new(
+            (0..lanes.count).map(|_| Arc::new(LaneStats::default())).collect(),
+        );
+        let all_faults: Vec<Arc<LaneFaults>> =
+            (0..lanes.count).map(|_| Arc::new(LaneFaults::new())).collect();
 
         let lane_set: Vec<Lane> = (0..lanes.count)
             .map(|lane_id| {
@@ -677,7 +956,8 @@ impl TransferEngine {
                 let (wake_tx, wake_rx) = channel::<()>();
                 let promotions = Arc::new(Mutex::new(std::collections::HashSet::new()));
                 let halt = Arc::new(AtomicBool::new(false));
-                let lane_stats = Arc::new(LaneStats::default());
+                let lane_stats = Arc::clone(&all_stats[lane_id]);
+                let lane_faults = Arc::clone(&all_faults[lane_id]);
                 let scale =
                     time_scale * lanes.time_scales.get(lane_id).copied().unwrap_or(1.0);
                 let worker = {
@@ -694,12 +974,15 @@ impl TransferEngine {
                         in_flight: Arc::clone(&in_flight),
                         stats: Arc::clone(&stats),
                         lane_stats: Arc::clone(&lane_stats),
+                        all_lane_stats: Arc::clone(&all_stats),
                         device_queued: Arc::clone(&device_queued),
                         staging: Arc::clone(&staging),
                         promotions: Arc::clone(&promotions),
                         completions: Arc::clone(&completions),
                         shutdown: Arc::clone(&shutdown),
                         halt: Arc::clone(&halt),
+                        faults: Arc::clone(&lane_faults),
+                        dropped: Arc::clone(&fault_dropped),
                     };
                     std::thread::Builder::new()
                         .name(format!("adapmoe-comm-{lane_id}"))
@@ -713,6 +996,7 @@ impl TransferEngine {
                     worker: Some(worker),
                     promotions,
                     halt,
+                    faults: lane_faults,
                     stats: lane_stats,
                 }
             })
@@ -728,6 +1012,9 @@ impl TransferEngine {
             lane_groups,
             rr_dev,
             device_queued,
+            faults_cfg: lanes.faults,
+            fault_dropped,
+            fault_failed: Mutex::new(Vec::new()),
             in_flight,
             stats,
             staging,
@@ -793,7 +1080,7 @@ impl TransferEngine {
     /// prefetch window's occupancy signal). A `LoadAware` expert that is
     /// in flight is always bound, so the peek resolves every entry.
     pub fn pending_for_device(&self, device: DeviceId) -> usize {
-        let g = self.in_flight.map.lock().unwrap();
+        let g = lock_unpoisoned(&self.in_flight.map);
         g.keys()
             .filter(|&&id| self.cache.device_of_peek(id) == Some(device))
             .count()
@@ -829,7 +1116,12 @@ impl TransferEngine {
 
     /// Which lane an in-flight transfer rides, if any.
     pub fn lane_of(&self, id: ExpertId) -> Option<LaneId> {
-        self.in_flight.map.lock().unwrap().get(&id).map(|(l, _)| *l)
+        lock_unpoisoned(&self.in_flight.map).get(&id).map(|t| t.lane)
+    }
+
+    /// Circuit-breaker state of one lane.
+    pub fn lane_health(&self, lane: LaneId) -> LaneHealth {
+        self.lanes[lane].stats.health()
     }
 
     /// Lane with the fewest assigned-but-unfinished bytes among
@@ -842,18 +1134,41 @@ impl TransferEngine {
             .expect("non-empty lane group")
     }
 
+    /// Filter `candidates` down to non-dead lanes. Only active when
+    /// failover is enabled — a `FaultConfig::disabled()` engine keeps
+    /// the historical assignment even when lanes die. Falls back to the
+    /// unfiltered candidates when none are live (the caller then strands
+    /// the job and quiesce reports the dead lanes).
+    fn live_lanes(&self, candidates: &[LaneId]) -> Vec<LaneId> {
+        if !self.faults_cfg.failover {
+            return candidates.to_vec();
+        }
+        let live: Vec<LaneId> = candidates
+            .iter()
+            .copied()
+            .filter(|&l| self.lanes[l].stats.health() != LaneHealth::Dead)
+            .collect();
+        if live.is_empty() {
+            candidates.to_vec()
+        } else {
+            live
+        }
+    }
+
     /// Assign a fresh job for `device` to a lane. With one device this
     /// is PR 3's policy logic unchanged; with several, the job is
     /// confined to the owning device's lane group and the policy picks
     /// *within* it (`Pinned` reserves the group's first lane for
-    /// on-demand when the group has more than one lane).
+    /// on-demand when the group has more than one lane). Dead lanes are
+    /// excluded when failover is on; with every lane healthy the pick is
+    /// bit-for-bit the historical one.
     fn assign_lane(&self, device: DeviceId, priority: Priority) -> LaneId {
         let n = self.lanes.len();
         if n == 1 {
             return 0;
         }
         if self.cache.n_devices() > 1 {
-            let group = &self.lane_groups[device];
+            let group = self.live_lanes(&self.lane_groups[device]);
             if group.len() == 1 {
                 return group[0];
             }
@@ -871,14 +1186,20 @@ impl TransferEngine {
                 },
             };
         }
+        let all: Vec<LaneId> = (0..n).collect();
+        let live = self.live_lanes(&all);
+        if live.len() == 1 {
+            return live[0];
+        }
         match self.policy {
             LanePolicy::RoundRobin => {
-                (self.rr.fetch_add(1, Ordering::Relaxed) as usize) % n
+                let k = self.rr.fetch_add(1, Ordering::Relaxed) as usize;
+                live[k % live.len()]
             }
-            LanePolicy::LeastQueuedBytes => self.least_queued(0..n),
+            LanePolicy::LeastQueuedBytes => self.least_queued(live.iter().copied()),
             LanePolicy::Pinned => match priority {
-                Priority::OnDemand => 0,
-                _ => self.least_queued(1..n),
+                Priority::OnDemand => live[0],
+                _ => self.least_queued(live[1..].iter().copied()),
             },
         }
     }
@@ -915,12 +1236,12 @@ impl TransferEngine {
         kind: QuantKind,
     ) -> Arc<TransferHandle> {
         assert!(self.tiers.has(kind), "{} is not a configured tier", kind.name());
-        let mut g = self.in_flight.map.lock().unwrap();
-        if let Some((lane, h)) = g.get(&id) {
-            let (lane, h) = (*lane, Arc::clone(h));
+        let mut g = lock_unpoisoned(&self.in_flight.map);
+        if let Some(t) = g.get(&id) {
+            let (lane, h) = (t.lane, Arc::clone(&t.handle));
             drop(g);
             if priority == Priority::OnDemand {
-                self.lanes[lane].promotions.lock().unwrap().insert(id);
+                lock_unpoisoned(&self.lanes[lane].promotions).insert(id);
                 let _ = self.lanes[lane].wake_tx.send(());
             }
             return h;
@@ -932,7 +1253,22 @@ impl TransferEngine {
         // drain back to exactly zero.
         let bytes = self.tiers.expert_transfer_bytes(id, kind);
         let handle = Arc::new(TransferHandle::new(id, self.n_tiles, lane, kind, bytes));
-        g.insert(id, (lane, Arc::clone(&handle)));
+        g.insert(
+            id,
+            Ticket {
+                lane,
+                handle: Arc::clone(&handle),
+                priority,
+                kind,
+                device,
+                bytes,
+                retries: 0,
+                issued_at: Instant::now(),
+                not_before: None,
+                needs_reissue: false,
+                claimed: false,
+            },
+        );
         drop(g);
         self.lanes[lane].stats.enqueue(bytes as u64);
         self.device_queued[device].fetch_add(bytes as u64, Ordering::Relaxed);
@@ -959,7 +1295,7 @@ impl TransferEngine {
     /// Whether a completed prefetch is parked in staging for `id`.
     pub fn staging_contains(&self, id: ExpertId) -> bool {
         // peek without consuming
-        let g = self.staging.map.lock().unwrap();
+        let g = lock_unpoisoned(&self.staging.map);
         g.0.contains_key(&id)
     }
 
@@ -973,34 +1309,41 @@ impl TransferEngine {
     pub fn halt_lane(&self, lane: LaneId) {
         assert!(lane < self.lanes.len(), "lane {lane} out of range");
         self.lanes[lane].halt.store(true, Ordering::SeqCst);
+        self.lanes[lane].stats.set_health(LaneHealth::Dead);
         let _ = self.lanes[lane].wake_tx.send(());
     }
 
     /// Block until every lane drains (tests / end-of-run barrier). Sleeps
     /// on the in-flight map's Condvar; woken by every completed transfer.
-    /// Panics with the per-lane diagnostic if a lane is dead or the
-    /// backstop elapses — a silent hang would hide which lane wedged.
-    pub fn quiesce(&self) {
-        if let Err(e) = self.quiesce_for(QUIESCE_BACKSTOP) {
-            panic!("{e:#}");
-        }
+    /// Drives the fault pump while waiting, so dead-lane failover, retry
+    /// backoff and flaky-drop re-issue all make progress here. Returns the
+    /// cumulative [`FaultReport`] on success; errors with the per-lane
+    /// diagnostic if a lane wedges past the backstop (or dies with
+    /// failover disabled) — a silent hang would hide which lane wedged.
+    pub fn quiesce(&self) -> Result<FaultReport> {
+        self.quiesce_for(QUIESCE_BACKSTOP)
     }
 
     /// [`TransferEngine::quiesce`] with an explicit backstop. Fails fast —
-    /// without waiting out the backstop — when a lane's worker has exited
-    /// while transfers assigned to it are still in flight, and names every
-    /// lane with pending work (count + liveness) in the error, so a single
-    /// dead lane surfaces as a per-lane report instead of a global timeout.
-    pub fn quiesce_for(&self, backstop: Duration) -> Result<()> {
+    /// without waiting out the backstop — when failover is disabled and a
+    /// lane's worker has exited while transfers assigned to it are still
+    /// in flight, and names every lane with pending work (count +
+    /// liveness) in the error, so a single dead lane surfaces as a
+    /// per-lane report instead of a global timeout. With failover enabled
+    /// a dead lane is not an error: the fault pump re-homes its jobs (or
+    /// fails them terminally) and the drain completes.
+    pub fn quiesce_for(&self, backstop: Duration) -> Result<FaultReport> {
         let deadline = Instant::now() + backstop;
-        let mut g = self.in_flight.map.lock().unwrap();
         loop {
+            self.pump_faults();
+            let g = lock_unpoisoned(&self.in_flight.map);
             if g.is_empty() {
-                return Ok(());
+                drop(g);
+                return Ok(self.fault_report());
             }
             let mut pending = vec![0usize; self.lanes.len()];
-            for (lane, _) in g.values() {
-                pending[*lane] += 1;
+            for t in g.values() {
+                pending[t.lane] += 1;
             }
             let report: Vec<(LaneId, usize, bool)> = self
                 .lanes
@@ -1014,7 +1357,7 @@ impl TransferEngine {
                 })
                 .collect();
             let dead = report.iter().any(|(_, _, alive)| !alive);
-            if dead || Instant::now() >= deadline {
+            if (dead && !self.faults_cfg.failover) || Instant::now() >= deadline {
                 let detail: Vec<String> = report
                     .iter()
                     .map(|(i, n, alive)| {
@@ -1030,13 +1373,257 @@ impl TransferEngine {
                     detail.join("; ")
                 );
             }
-            // Timeout only as a backstop so dead lanes are re-checked.
-            let (ng, _) = self
-                .in_flight
-                .drained
-                .wait_timeout(g, Duration::from_millis(50))
-                .unwrap();
-            g = ng;
+            // Timeout only as a backstop so dead lanes, expired deadlines
+            // and elapsed backoffs are re-checked by the pump.
+            drop(
+                self.in_flight
+                    .drained
+                    .wait_timeout(g, Duration::from_millis(50))
+                    .unwrap_or_else(PoisonError::into_inner),
+            );
+        }
+    }
+
+    /// One pass of the fault pump: ratchet lane health from worker
+    /// liveness, re-home the jobs of dead lanes, time out attempts past
+    /// their deadline, re-send staged retries whose backoff elapsed, and
+    /// terminally fail transfers whose retry/failover ladder is
+    /// exhausted. Idempotent and cheap when nothing is wrong; called from
+    /// [`TransferEngine::quiesce_for`]'s wait loop and after every
+    /// scripted fault injection.
+    pub fn pump_faults(&self) {
+        // Worker liveness → health ratchet (a panicked/halted worker is
+        // indistinguishable from a dead link to its queued jobs).
+        for lane in &self.lanes {
+            let dead = lane.halt.load(Ordering::SeqCst)
+                || lane.worker.as_ref().map(|w| w.is_finished()).unwrap_or(true);
+            if dead {
+                lane.stats.set_health(LaneHealth::Dead);
+            }
+        }
+        let dropped = std::mem::take(&mut *lock_unpoisoned(&self.fault_dropped));
+        let cfg = self.faults_cfg;
+        let now = Instant::now();
+        enum Act {
+            Reissue { id: ExpertId, to: LaneId, from: LaneId, failover: bool },
+            Fail { id: ExpertId },
+        }
+        let mut acts: Vec<Act> = Vec::new();
+        {
+            let mut g = lock_unpoisoned(&self.in_flight.map);
+            for (&id, t) in g.iter_mut() {
+                if t.claimed {
+                    continue;
+                }
+                if self.lanes[t.lane].stats.health() == LaneHealth::Dead {
+                    if !cfg.failover {
+                        continue; // legacy semantics: strand; quiesce reports
+                    }
+                    match self.failover_target(t.device, t.lane) {
+                        Some(to) => {
+                            // Migrate the gauge charge lane→lane inside the
+                            // map lock so exactly one charge is ever alive.
+                            self.lanes[t.lane].stats.dequeue(t.bytes as u64);
+                            self.lanes[to].stats.enqueue(t.bytes as u64);
+                            let from = t.lane;
+                            t.lane = to;
+                            t.issued_at = now;
+                            t.not_before = None;
+                            t.needs_reissue = false;
+                            acts.push(Act::Reissue { id, to, from, failover: true });
+                        }
+                        None => {
+                            t.claimed = true;
+                            acts.push(Act::Fail { id });
+                        }
+                    }
+                    continue;
+                }
+                let timed_out = !t.needs_reissue
+                    && cfg.deadline.is_some_and(|d| {
+                        now.checked_duration_since(t.issued_at)
+                            .is_some_and(|el| el >= d)
+                    });
+                let was_dropped = !t.needs_reissue && dropped.contains(&id);
+                if timed_out || was_dropped {
+                    if timed_out {
+                        self.stats.timeouts.fetch_add(1, Ordering::Relaxed);
+                        self.lanes[t.lane]
+                            .stats
+                            .timeouts
+                            .fetch_add(1, Ordering::Relaxed);
+                    }
+                    self.lanes[t.lane].stats.set_health(LaneHealth::Suspect);
+                    if t.retries >= cfg.max_retries {
+                        t.claimed = true;
+                        acts.push(Act::Fail { id });
+                        continue;
+                    }
+                    t.retries += 1;
+                    t.not_before =
+                        Some(now + cfg.backoff * 2u32.saturating_pow(t.retries - 1));
+                    t.needs_reissue = true;
+                }
+                let due = match t.not_before {
+                    Some(nb) => now >= nb,
+                    None => true,
+                };
+                if t.needs_reissue && due {
+                    // Retry: same lane if it is still fully healthy, else
+                    // the best live lane in the device's affinity group.
+                    let to = if self.lanes[t.lane].stats.health() == LaneHealth::Healthy
+                    {
+                        t.lane
+                    } else {
+                        self.failover_target(t.device, t.lane).unwrap_or(t.lane)
+                    };
+                    if to != t.lane {
+                        self.lanes[t.lane].stats.dequeue(t.bytes as u64);
+                        self.lanes[to].stats.enqueue(t.bytes as u64);
+                    }
+                    let from = t.lane;
+                    t.lane = to;
+                    t.issued_at = now;
+                    t.not_before = None;
+                    t.needs_reissue = false;
+                    acts.push(Act::Reissue { id, to, from, failover: false });
+                }
+            }
+        }
+        for act in acts {
+            match act {
+                Act::Reissue { id, to, from, failover } => {
+                    // Re-read under the lock: the original copy may have
+                    // completed (claimed the ticket) since we staged this.
+                    let job = {
+                        let g = lock_unpoisoned(&self.in_flight.map);
+                        match g.get(&id) {
+                            Some(t) if !t.claimed => Some(Job {
+                                id,
+                                device: t.device,
+                                kind: t.kind,
+                                bytes: t.bytes,
+                                handle: Arc::clone(&t.handle),
+                                priority: t.priority,
+                            }),
+                            _ => None,
+                        }
+                    };
+                    let Some(job) = job else { continue };
+                    if failover {
+                        self.stats.failovers.fetch_add(1, Ordering::Relaxed);
+                        self.lanes[from]
+                            .stats
+                            .failovers
+                            .fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        self.stats.retries.fetch_add(1, Ordering::Relaxed);
+                        self.lanes[to].stats.retries.fetch_add(1, Ordering::Relaxed);
+                    }
+                    // Priority escalation: every re-send rides the urgent
+                    // queue — a retried prefetch is (or soon will be)
+                    // blocking compute. The job keeps its original
+                    // priority so landing semantics are unchanged.
+                    let _ = self.lanes[to].urgent_tx.send(job);
+                    let _ = self.lanes[to].wake_tx.send(());
+                }
+                Act::Fail { id } => {
+                    let info = {
+                        let g = lock_unpoisoned(&self.in_flight.map);
+                        g.get(&id)
+                            .map(|t| (Arc::clone(&t.handle), t.lane, t.device, t.bytes))
+                    };
+                    let Some((handle, lane, device, bytes)) = info else { continue };
+                    handle.fail();
+                    self.lanes[lane].stats.dequeue(bytes as u64);
+                    self.device_queued[device].fetch_sub(bytes as u64, Ordering::Relaxed);
+                    self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                    lock_unpoisoned(&self.fault_failed).push(id);
+                    // registry removal last (same ordering as finish/admit):
+                    // quiesce returning implies the counters are published
+                    self.in_flight.remove(id);
+                }
+            }
+        }
+    }
+
+    /// Best live lane to re-home a job bound to `device`, excluding
+    /// `exclude`: the least-loaded live lane of the device's affinity
+    /// group, falling back to any live lane.
+    fn failover_target(&self, device: DeviceId, exclude: LaneId) -> Option<LaneId> {
+        self.pick_live(self.lane_groups[device].iter().copied(), exclude)
+            .or_else(|| self.pick_live(0..self.lanes.len(), exclude))
+    }
+
+    fn pick_live(
+        &self,
+        candidates: impl Iterator<Item = LaneId>,
+        exclude: LaneId,
+    ) -> Option<LaneId> {
+        candidates
+            .filter(|&l| l != exclude && self.lanes[l].stats.health() != LaneHealth::Dead)
+            .min_by_key(|&l| {
+                (self.lanes[l].stats.queued_bytes.load(Ordering::Relaxed), l)
+            })
+    }
+
+    /// Cumulative fault-layer summary (the success value of
+    /// [`TransferEngine::quiesce`]).
+    pub fn fault_report(&self) -> FaultReport {
+        FaultReport {
+            retries: self.stats.retries.load(Ordering::Relaxed),
+            timeouts: self.stats.timeouts.load(Ordering::Relaxed),
+            failovers: self.stats.failovers.load(Ordering::Relaxed),
+            failed: lock_unpoisoned(&self.fault_failed).clone(),
+            dead_lanes: self
+                .lanes
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| l.stats.health() == LaneHealth::Dead)
+                .map(|(i, _)| i)
+                .collect(),
+        }
+    }
+
+    /// Apply one scripted fault (chaos harness, docs/fault-tolerance.md).
+    /// Lane/device indices are validated here against the live engine.
+    pub fn inject(&self, action: &FaultAction) {
+        match *action {
+            FaultAction::HaltLane(l) => self.halt_lane(l),
+            FaultAction::SlowLane(l, x) => {
+                assert!(l < self.lanes.len(), "lane {l} out of range");
+                self.lanes[l].faults.scale_bits.store(x.to_bits(), Ordering::SeqCst);
+            }
+            FaultAction::FlakyLane(l, k) => {
+                assert!(l < self.lanes.len(), "lane {l} out of range");
+                self.lanes[l].faults.drop_period.store(k, Ordering::SeqCst);
+            }
+            FaultAction::DelayLane(l, ms) => {
+                assert!(l < self.lanes.len(), "lane {l} out of range");
+                self.lanes[l]
+                    .faults
+                    .delay_ns
+                    .store(ms.saturating_mul(1_000_000), Ordering::SeqCst);
+            }
+            FaultAction::Blackout(d) => {
+                assert!(d < self.lane_groups.len(), "device {d} out of range");
+                for &l in &self.lane_groups[d] {
+                    self.halt_lane(l);
+                }
+            }
+        }
+    }
+
+    /// Apply every event of `plan` scheduled for `step`, then pump the
+    /// fault machinery once so the effects act immediately.
+    pub fn apply_fault_plan(&self, plan: &FaultPlan, step: usize) {
+        let mut any = false;
+        for action in plan.at(step) {
+            self.inject(action);
+            any = true;
+        }
+        if any {
+            self.pump_faults();
         }
     }
 }
@@ -1071,12 +1658,21 @@ struct CommCtx {
     in_flight: Arc<InFlight>,
     stats: Arc<TransferStats>,
     lane_stats: Arc<LaneStats>,
+    /// All lanes' stats: a finisher releases the gauge charge on the lane
+    /// the ticket is *charged* to, which failover may have migrated away
+    /// from the executing lane.
+    all_lane_stats: Arc<Vec<Arc<LaneStats>>>,
     device_queued: Arc<Vec<AtomicU64>>,
     staging: Arc<Staging>,
     promotions: Arc<Mutex<std::collections::HashSet<ExpertId>>>,
     completions: Arc<CompletionBoard>,
     shutdown: Arc<AtomicBool>,
     halt: Arc<AtomicBool>,
+    /// This lane's scripted slow/flaky/delay fault knobs.
+    faults: Arc<LaneFaults>,
+    /// Shared drop report: ids this lane dropped at admit (flaky fault),
+    /// consumed by the engine's fault pump.
+    dropped: Arc<Mutex<Vec<ExpertId>>>,
 }
 
 /// An in-progress transfer (tiles published so far).
@@ -1115,7 +1711,7 @@ fn comm_loop(ctx: CommCtx) {
         }
         // Lift prefetches the compute stream is now blocked on.
         {
-            let mut promoted = ctx.promotions.lock().unwrap();
+            let mut promoted = lock_unpoisoned(&ctx.promotions);
             if !promoted.is_empty() {
                 let mut i = 0;
                 while i < background.len() {
@@ -1154,6 +1750,17 @@ fn comm_loop(ctx: CommCtx) {
 /// Set up an Active transfer, or complete it immediately from the cache
 /// (prefetch/upgrade no-op path).
 fn admit(ctx: &CommCtx, job: Job) -> Option<Active> {
+    // Flaky-lane fault: drop every k-th admitted job on the floor. The
+    // registry entry and gauge charge stay alive — the engine's fault
+    // pump observes the drop report and re-issues (or fails) the job.
+    let period = ctx.faults.drop_period.load(Ordering::Relaxed);
+    if period > 0 {
+        let n = ctx.faults.admitted.fetch_add(1, Ordering::Relaxed) + 1;
+        if n % period == 0 {
+            lock_unpoisoned(&ctx.dropped).push(job.id);
+            return None;
+        }
+    }
     // A prefetch is satisfied by any resident copy; an upgrade only by a
     // copy at (or above) its target tier — re-moving equal-or-higher
     // precision bytes would waste the link.
@@ -1166,6 +1773,11 @@ fn admit(ctx: &CommCtx, job: Job) -> Option<Active> {
             .is_some_and(|m| m.kind.bits() >= job.kind.bits()),
     };
     if satisfied {
+        // First-finisher claim: a failover/retry duplicate of a job whose
+        // original copy already retired the ticket must no-op entirely.
+        let Some(ci) = ctx.in_flight.claim(job.id) else {
+            return None;
+        };
         let full = ctx
             .cache
             .get(job.id)
@@ -1188,8 +1800,10 @@ fn admit(ctx: &CommCtx, job: Job) -> Option<Active> {
             lane: ctx.lane,
             tier: job.kind,
         });
-        ctx.lane_stats.dequeue(job.bytes as u64);
-        ctx.device_queued[job.device].fetch_sub(job.bytes as u64, Ordering::Relaxed);
+        // Release the gauge charge where the ticket holds it (failover may
+        // have migrated it off this lane).
+        ctx.all_lane_stats[ci.lane].dequeue(ci.bytes as u64);
+        ctx.device_queued[ci.device].fetch_sub(ci.bytes as u64, Ordering::Relaxed);
         ctx.stats.skipped_cached.fetch_add(1, Ordering::Relaxed);
         ctx.lane_stats.skipped_cached.fetch_add(1, Ordering::Relaxed);
         // registry removal last: quiesce() returning implies the counters
@@ -1221,12 +1835,17 @@ fn transfer_tile(ctx: &CommCtx, a: &mut Active) -> bool {
     let f_hi = if t + 1 == ctx.n_tiles { f } else { (t + 1) * f_step };
     // Real work: decode this tile's bytes at the job's tier.
     let tile = Arc::new(store.dequantize_tile(a.job.id, f_lo, f_hi));
-    // Simulated wire time for the remainder of the tile.
+    // Simulated wire time for the remainder of the tile, degraded by any
+    // injected slow/delay fault (read per tile so a mid-transfer
+    // injection takes effect on the next tile).
+    let scale = f64::from_bits(ctx.faults.scale_bits.load(Ordering::Relaxed));
+    let extra = ctx.faults.delay_ns.load(Ordering::Relaxed) as f64 / 1e9;
+    let tile_time = a.tile_time * scale + extra;
     let elapsed = t_start.elapsed().as_secs_f64();
-    if a.tile_time > elapsed {
-        std::thread::sleep(Duration::from_secs_f64(a.tile_time - elapsed));
+    if tile_time > elapsed {
+        std::thread::sleep(Duration::from_secs_f64(tile_time - elapsed));
     }
-    let busy = (a.tile_time.max(elapsed) * 1e9) as u64;
+    let busy = (tile_time.max(elapsed) * 1e9) as u64;
     ctx.stats.sim_busy_ns.fetch_add(busy, Ordering::Relaxed);
     ctx.lane_stats.sim_busy_ns.fetch_add(busy, Ordering::Relaxed);
     a.job.handle.publish_tile(t, Arc::clone(&tile));
@@ -1243,6 +1862,12 @@ fn transfer_tile(ctx: &CommCtx, a: &mut Active) -> bool {
 
 /// Assemble + publish a completed transfer.
 fn finish(ctx: &CommCtx, a: Active) {
+    // First-finisher claim: when a failover/retry duplicate raced the
+    // original, only the winner publishes, counts, and releases the gauge
+    // charge; the loser's bytes are dropped (identical decode either way).
+    let Some(ci) = ctx.in_flight.claim(a.job.id) else {
+        return;
+    };
     let q = ctx.tiers.store(a.job.kind).get(a.job.id);
     let (d, f) = (q.d, q.f);
     let full = Arc::new(assemble(d, f, f / ctx.n_tiles, &a.tiles));
@@ -1277,8 +1902,10 @@ fn finish(ctx: &CommCtx, a: Active) {
         lane: ctx.lane,
         tier: a.job.kind,
     });
-    ctx.lane_stats.dequeue(a.job.bytes as u64);
-    ctx.device_queued[a.job.device].fetch_sub(a.job.bytes as u64, Ordering::Relaxed);
+    // Release the gauge charge where the ticket holds it (failover may
+    // have migrated it off this lane).
+    ctx.all_lane_stats[ci.lane].dequeue(ci.bytes as u64);
+    ctx.device_queued[ci.device].fetch_sub(ci.bytes as u64, Ordering::Relaxed);
 
     let ti = a.job.kind.tier_index();
     ctx.stats.transfers.fetch_add(1, Ordering::Relaxed);
@@ -1421,7 +2048,7 @@ mod tests {
         cache.insert((0, 1), Arc::new(store.dequantize((0, 1))));
         let h = engine.request((0, 1), Priority::Prefetch);
         h.wait_full();
-        engine.quiesce();
+        engine.quiesce().unwrap();
         assert_eq!(engine.stats.skipped_cached.load(Ordering::Relaxed), 1);
         assert_eq!(engine.stats.transfers.load(Ordering::Relaxed), 0);
     }
@@ -1431,7 +2058,7 @@ mod tests {
         let (_store, _cache, engine) = setup(QuantKind::F32, vec![8, 8], "instant", 0.0);
         engine.request((0, 0), Priority::OnDemand).wait_full();
         engine.request((1, 1), Priority::Prefetch).wait_full();
-        engine.quiesce();
+        engine.quiesce().unwrap();
         assert_eq!(engine.stats.on_demand.load(Ordering::Relaxed), 1);
         assert_eq!(engine.stats.prefetch.load(Ordering::Relaxed), 1);
         assert!(engine.stats.bytes.load(Ordering::Relaxed) > 0);
@@ -1441,7 +2068,7 @@ mod tests {
     fn prefetch_parks_in_staging_not_cache() {
         let (_store, cache, engine) = setup(QuantKind::F32, vec![8, 8], "instant", 0.0);
         engine.request((0, 4), Priority::Prefetch).wait_full();
-        engine.quiesce();
+        engine.quiesce().unwrap();
         assert!(!cache.contains((0, 4)), "speculative load must not pollute LRU");
         assert!(engine.staging_contains((0, 4)));
         // consuming it removes it from staging
@@ -1455,7 +2082,7 @@ mod tests {
     fn on_demand_lands_in_cache_directly() {
         let (_store, cache, engine) = setup(QuantKind::F32, vec![8, 8], "instant", 0.0);
         engine.request((1, 5), Priority::OnDemand).wait_full();
-        engine.quiesce();
+        engine.quiesce().unwrap();
         assert!(cache.contains((1, 5)));
     }
 
@@ -1506,7 +2133,7 @@ mod tests {
         a.wait_full();
         let b = engine.request((0, 5), Priority::OnDemand);
         b.wait_full();
-        engine.quiesce();
+        engine.quiesce().unwrap();
         // 4 tiles + 1 full per expert, expert (0,2) strictly before (0,5)
         let mut seen = Vec::new();
         while let Some(ev) = engine.completions.try_pop() {
@@ -1547,7 +2174,7 @@ mod tests {
             engine.request((0, e), Priority::OnDemand);
         }
         let t0 = Instant::now();
-        engine.quiesce();
+        engine.quiesce().unwrap();
         assert_eq!(engine.pending(), 0);
         assert!(t0.elapsed().as_secs_f64() > 0.0);
         for e in 0..3 {
@@ -1602,7 +2229,7 @@ mod tests {
             .map(|e| engine.request((0, e), Priority::OnDemand).lane)
             .collect();
         assert_eq!(lanes, vec![0, 1, 0, 1]);
-        engine.quiesce();
+        engine.quiesce().unwrap();
         let snaps = engine.lane_snapshots();
         assert_eq!(snaps[0].transfers, 2);
         assert_eq!(snaps[1].transfers, 2);
@@ -1624,7 +2251,7 @@ mod tests {
         let b = engine.request((0, 1), Priority::OnDemand);
         assert_eq!(a.lane, 0, "tie breaks toward the lowest lane");
         assert_eq!(b.lane, 1, "loaded lane 0 must be avoided");
-        engine.quiesce();
+        engine.quiesce().unwrap();
     }
 
     #[test]
@@ -1642,7 +2269,7 @@ mod tests {
             let h = engine.request((0, e), Priority::Prefetch);
             assert_ne!(h.lane, 0, "prefetch must never ride the reserved lane");
         }
-        engine.quiesce();
+        engine.quiesce().unwrap();
         let snaps = engine.lane_snapshots();
         assert_eq!(snaps[0].prefetch, 0, "reserved lane carried no prefetch");
         assert_eq!(snaps[0].on_demand, 1);
@@ -1669,20 +2296,22 @@ mod tests {
             "fast lane must complete while the slow lane still transfers"
         );
         slow.wait_full();
-        engine.quiesce();
+        engine.quiesce().unwrap();
     }
 
     #[test]
     fn quiesce_reports_dead_lane_not_global_timeout() {
-        // Lane 1 is slowed 10× then halted mid-transfer: quiesce_for must
-        // fail fast with a per-lane report instead of waiting out the
-        // backstop or hanging.
+        // Lane 1 is slowed 10× then halted mid-transfer: with failover
+        // disabled (legacy semantics) quiesce_for must fail fast with a
+        // per-lane report instead of waiting out the backstop or hanging.
         let (_store, _cache, engine) = setup_lanes(
             QuantKind::Int4,
             vec![8, 8],
             "rtx4090",
             1.0,
-            LaneConfig::new(2, LanePolicy::RoundRobin).with_time_scales(vec![1.0, 10.0]),
+            LaneConfig::new(2, LanePolicy::RoundRobin)
+                .with_time_scales(vec![1.0, 10.0])
+                .with_faults(FaultConfig::disabled()),
         );
         let a = engine.request((0, 0), Priority::OnDemand); // lane 0, drains
         let _b = engine.request((0, 1), Priority::OnDemand); // lane 1, doomed
@@ -1731,15 +2360,15 @@ mod tests {
     #[test]
     fn request_to_halted_lane_strands_instead_of_panicking() {
         // Pinned policy routes every on-demand job to lane 0; killing that
-        // lane first means the send must fail. The request must not panic —
-        // the job strands in the in-flight registry and quiesce_for names
-        // the dead lane.
+        // lane first means the send must fail. With failover disabled
+        // (legacy semantics) the request must not panic — the job strands
+        // in the in-flight registry and quiesce_for names the dead lane.
         let (_store, _cache, engine) = setup_lanes(
             QuantKind::F32,
             vec![8, 8],
             "instant",
             0.0,
-            LaneConfig::new(2, LanePolicy::Pinned),
+            LaneConfig::new(2, LanePolicy::Pinned).with_faults(FaultConfig::disabled()),
         );
         engine.halt_lane(0);
         while engine.lanes[0]
@@ -1767,6 +2396,131 @@ mod tests {
             assert_eq!(p.name(), *name);
         }
         assert!(LanePolicy::from_name("warp-drive").is_none());
+    }
+
+    // -- fault tolerance ------------------------------------------------------
+
+    #[test]
+    fn failover_reissues_dead_lane_jobs() {
+        // Lane 1 runs 400× slower, takes a job, then dies: the fault pump
+        // must re-home the job onto (instant) lane 0 and quiesce must
+        // drain clean with the failover recorded.
+        let (_store, cache, engine) = setup_lanes(
+            QuantKind::Int4,
+            vec![8, 8],
+            "rtx4090",
+            1.0,
+            LaneConfig::new(2, LanePolicy::RoundRobin)
+                .with_time_scales(vec![0.0, 400.0]),
+        );
+        let a = engine.request((0, 0), Priority::OnDemand); // lane 0
+        let b = engine.request((0, 1), Priority::OnDemand); // lane 1
+        assert_eq!((a.lane, b.lane), (0, 1));
+        engine.halt_lane(1);
+        let report = engine.quiesce().unwrap();
+        assert_eq!(report.failovers, 1, "{report:?}");
+        assert_eq!(report.dead_lanes, vec![1]);
+        assert!(report.failed.is_empty(), "{report:?}");
+        assert!(b.is_complete(), "failed-over transfer must complete");
+        assert!(cache.contains((0, 1)), "failed-over job must land in cache");
+        assert_eq!(engine.lane_health(1), LaneHealth::Dead);
+        // gauges conserve across the lane→lane charge migration
+        let snaps = engine.lane_snapshots();
+        assert!(
+            snaps.iter().all(|s| s.queued_bytes == 0 && s.queued_jobs == 0),
+            "{snaps:?}"
+        );
+        assert_eq!(snaps[1].failovers, 1, "failover attributed to the dead lane");
+        // fresh requests now avoid the dead lane entirely
+        let c = engine.request((0, 2), Priority::OnDemand);
+        assert_eq!(c.lane, 0);
+        engine.quiesce().unwrap();
+    }
+
+    #[test]
+    fn flaky_drops_are_retried_to_completion() {
+        // Lane 0 drops every job it admits; the drop marks it Suspect, so
+        // the retry re-homes onto lane 1 and the transfer still lands.
+        let (_store, cache, engine) = setup_lanes(
+            QuantKind::F32,
+            vec![8, 8],
+            "instant",
+            0.0,
+            LaneConfig::new(2, LanePolicy::RoundRobin),
+        );
+        engine.inject(&FaultAction::FlakyLane(0, 1));
+        let h = engine.request((0, 0), Priority::OnDemand);
+        assert_eq!(h.lane, 0);
+        let report = engine.quiesce().unwrap();
+        assert_eq!(report.retries, 1, "{report:?}");
+        assert!(report.failed.is_empty(), "{report:?}");
+        assert!(report.dead_lanes.is_empty());
+        assert!(h.is_complete());
+        assert!(cache.contains((0, 0)));
+        assert_eq!(engine.lane_health(0), LaneHealth::Suspect);
+        assert_eq!(engine.lane_health(1), LaneHealth::Healthy);
+        // conservation: one request, one transfer, gauges drained
+        assert_eq!(engine.stats.transfers.load(Ordering::Relaxed), 1);
+        let snaps = engine.lane_snapshots();
+        assert!(
+            snaps.iter().all(|s| s.queued_bytes == 0 && s.queued_jobs == 0),
+            "{snaps:?}"
+        );
+    }
+
+    #[test]
+    fn exhausted_retries_fail_the_handle() {
+        // A single flaky lane (drops everything) with a zero-retry budget:
+        // the transfer must fail terminally — not strand quiesce.
+        let (_store, cache, engine) = setup_lanes(
+            QuantKind::F32,
+            vec![8, 8],
+            "instant",
+            0.0,
+            LaneConfig::new(1, LanePolicy::RoundRobin)
+                .with_faults(FaultConfig { max_retries: 0, ..FaultConfig::default() }),
+        );
+        engine.inject(&FaultAction::FlakyLane(0, 1));
+        let h = engine.request((0, 0), Priority::OnDemand);
+        let report = engine.quiesce().unwrap();
+        assert!(h.is_failed(), "exhausted ladder must fail the handle");
+        assert!(!h.is_complete());
+        assert_eq!(report.failed, vec![(0, 0)]);
+        assert_eq!(engine.stats.failed.load(Ordering::Relaxed), 1);
+        assert!(!cache.contains((0, 0)));
+        // the failed job released its gauge charge
+        let snaps = engine.lane_snapshots();
+        assert!(
+            snaps.iter().all(|s| s.queued_bytes == 0 && s.queued_jobs == 0),
+            "{snaps:?}"
+        );
+    }
+
+    #[test]
+    fn fault_plan_injection_applies_at_steps() {
+        let (_store, _cache, engine) = setup_lanes(
+            QuantKind::F32,
+            vec![8, 8],
+            "instant",
+            0.0,
+            LaneConfig::new(2, LanePolicy::RoundRobin),
+        );
+        let plan = FaultPlan::parse("1:slow:0:3;2:halt:1").unwrap();
+        engine.apply_fault_plan(&plan, 0); // no events at step 0
+        assert_eq!(engine.lane_health(0), LaneHealth::Healthy);
+        assert_eq!(engine.lane_health(1), LaneHealth::Healthy);
+        engine.apply_fault_plan(&plan, 1);
+        let scale =
+            f64::from_bits(engine.lanes[0].faults.scale_bits.load(Ordering::Relaxed));
+        assert_eq!(scale, 3.0);
+        assert_eq!(engine.lane_health(1), LaneHealth::Healthy);
+        engine.apply_fault_plan(&plan, 2);
+        assert_eq!(engine.lane_health(1), LaneHealth::Dead);
+        // requests keep landing: assignment avoids the dead lane
+        let h = engine.request((0, 0), Priority::OnDemand);
+        assert_eq!(h.lane, 0);
+        let report = engine.quiesce().unwrap();
+        assert_eq!(report.dead_lanes, vec![1]);
     }
 
     // -- sharded device backends ----------------------------------------------
@@ -1817,7 +2571,7 @@ mod tests {
             let h1 = engine.request((1, e), Priority::OnDemand);
             assert_eq!(h1.lane % 2, 1, "layer 1 rode lane {}", h1.lane);
         }
-        engine.quiesce();
+        engine.quiesce().unwrap();
         // completed loads landed on the owning shard only
         for e in 0..4 {
             assert!(cache.shard(0).contains((0, e)));
@@ -1852,7 +2606,7 @@ mod tests {
         }
         assert_eq!(lanes0, vec![0, 2, 0, 2], "device 0 cycles its own group");
         assert_eq!(lanes1, vec![1, 3, 1, 3], "device 1 cycles its own group");
-        engine.quiesce();
+        engine.quiesce().unwrap();
     }
 
     #[test]
@@ -1875,7 +2629,7 @@ mod tests {
             let h = engine.request(id, Priority::OnDemand);
             assert_eq!(h.lane, expect, "expert {id:?} of device {dev}");
         }
-        engine.quiesce();
+        engine.quiesce().unwrap();
     }
 
     #[test]
@@ -1898,7 +2652,7 @@ mod tests {
         assert_eq!(od1.lane, 1, "device 1 on-demand rides its group head");
         let pf1 = engine.request((1, 1), Priority::Prefetch);
         assert_eq!(pf1.lane, 3);
-        engine.quiesce();
+        engine.quiesce().unwrap();
     }
 
     #[test]
@@ -1917,7 +2671,7 @@ mod tests {
             .map(|e| engine.request((0, e), Priority::OnDemand).lane)
             .collect();
         assert_eq!(lanes, vec![0, 1, 2, 0, 1, 2]);
-        engine.quiesce();
+        engine.quiesce().unwrap();
     }
 
     // -- tiered precision -----------------------------------------------------
@@ -1962,7 +2716,7 @@ mod tests {
         assert_eq!(pf.kind, QuantKind::Int8);
         od.wait_full();
         pf.wait_full();
-        engine.quiesce();
+        engine.quiesce().unwrap();
         // resident meta records the source tier + wire bytes
         let m = cache.resident_meta((0, 0)).expect("on-demand landed in cache");
         assert_eq!(m.kind, QuantKind::Int2);
@@ -1984,7 +2738,7 @@ mod tests {
         // slack scales the prefetch tier down toward the urgent encoding
         let low = engine.request_with_slack((1, 0), Priority::Prefetch, 0.0);
         assert_eq!(low.kind, QuantKind::Int2);
-        engine.quiesce();
+        engine.quiesce().unwrap();
     }
 
     #[test]
@@ -1997,12 +2751,12 @@ mod tests {
             0.0,
         );
         engine.request((0, 3), Priority::OnDemand).wait_full(); // int2 resident
-        engine.quiesce();
+        engine.quiesce().unwrap();
         assert_eq!(cache.resident_meta((0, 3)).unwrap().kind, QuantKind::Int2);
         let up = engine.request_at((0, 3), Priority::Upgrade, QuantKind::Int8);
         assert_eq!(up.kind, QuantKind::Int8);
         let full = up.wait_full();
-        engine.quiesce();
+        engine.quiesce().unwrap();
         // the resident entry now carries the int8 decode + its byte charge
         let m = cache.resident_meta((0, 3)).unwrap();
         assert_eq!(m.kind, QuantKind::Int8);
@@ -2012,7 +2766,7 @@ mod tests {
         assert_eq!(engine.stats.upgrades.load(Ordering::Relaxed), 1);
         // a second upgrade to the same (or lower) tier is a no-op skip
         engine.request_at((0, 3), Priority::Upgrade, QuantKind::Int8).wait_full();
-        engine.quiesce();
+        engine.quiesce().unwrap();
         assert_eq!(engine.stats.upgrades.load(Ordering::Relaxed), 1);
         assert_eq!(engine.stats.skipped_cached.load(Ordering::Relaxed), 1);
     }
@@ -2030,7 +2784,7 @@ mod tests {
             1.0,
         );
         engine.request((0, 0), Priority::OnDemand).wait_full(); // int2 resident
-        engine.quiesce();
+        engine.quiesce().unwrap();
         let up = engine.request_at((0, 0), Priority::Upgrade, QuantKind::Int8);
         // evict the target while the upgrade transfers (~ms of wire time)
         cache.insert(
@@ -2039,7 +2793,7 @@ mod tests {
         );
         assert!(!cache.contains((0, 0)), "capacity-1 layer evicted the target");
         up.wait_full();
-        engine.quiesce();
+        engine.quiesce().unwrap();
         assert!(
             !cache.contains((0, 0)),
             "landed upgrade must not evict the live resident to re-insert"
@@ -2064,8 +2818,8 @@ mod tests {
             legacy.request((0, e), Priority::OnDemand);
             tiered.request((0, e), Priority::OnDemand);
         }
-        legacy.quiesce();
-        tiered.quiesce();
+        legacy.quiesce().unwrap();
+        tiered.quiesce().unwrap();
         assert_eq!(
             legacy.stats.bytes.load(Ordering::Relaxed),
             tiered.stats.bytes.load(Ordering::Relaxed)

@@ -120,7 +120,8 @@ impl GenerationRequest {
 }
 
 /// Lifecycle events of one request, emitted in order:
-/// Queued → Started → Token* → (Done | Cancelled | Error).
+/// Queued → Started → Token* → (Done | Cancelled | Error), or the single
+/// terminal Overloaded when admission shed the request at submit time.
 #[derive(Clone, Debug)]
 pub enum GenerationEvent {
     Queued { id: u64 },
@@ -129,6 +130,10 @@ pub enum GenerationEvent {
     Done { id: u64, tokens: Vec<u32>, finish: FinishReason, queue_ms: f64, total_ms: f64 },
     Cancelled { id: u64 },
     Error { id: u64, message: String },
+    /// The admission queue is at capacity; the request was shed without
+    /// ever being queued (degraded serving — docs/fault-tolerance.md).
+    /// Clients should back off and retry.
+    Overloaded { id: u64 },
 }
 
 impl GenerationEvent {
@@ -139,7 +144,8 @@ impl GenerationEvent {
             | GenerationEvent::Token { id, .. }
             | GenerationEvent::Done { id, .. }
             | GenerationEvent::Cancelled { id }
-            | GenerationEvent::Error { id, .. } => *id,
+            | GenerationEvent::Error { id, .. }
+            | GenerationEvent::Overloaded { id } => *id,
         }
     }
 
@@ -150,6 +156,7 @@ impl GenerationEvent {
             GenerationEvent::Done { .. }
                 | GenerationEvent::Cancelled { .. }
                 | GenerationEvent::Error { .. }
+                | GenerationEvent::Overloaded { .. }
         )
     }
 
@@ -192,6 +199,10 @@ impl GenerationEvent {
                 ("id", Json::Num(*id as f64)),
                 ("error", Json::Str(message.clone())),
             ]),
+            GenerationEvent::Overloaded { id } => Json::obj(vec![
+                ("event", Json::Str("overloaded".into())),
+                ("id", Json::Num(*id as f64)),
+            ]),
         }
     }
 }
@@ -207,6 +218,9 @@ pub struct ServerStats {
     pub served: u64,
     /// Requests cancelled (queued or in-flight).
     pub cancelled: u64,
+    /// Requests shed at admission because the queue was at capacity
+    /// (each one got a terminal Overloaded event).
+    pub shed: u64,
     /// Tokens emitted across all requests.
     pub tokens_generated: u64,
     /// Engine decode throughput (rows × steps / second).
@@ -267,6 +281,10 @@ impl ServerStats {
                         ("busy_ms", Json::Num(l.busy_ms)),
                         ("queued_bytes", Json::Num(l.queued_bytes as f64)),
                         ("queued_jobs", Json::Num(l.queued_jobs as f64)),
+                        ("health", Json::Str(l.health.name().into())),
+                        ("retries", Json::Num(l.retries as f64)),
+                        ("timeouts", Json::Num(l.timeouts as f64)),
+                        ("failovers", Json::Num(l.failovers as f64)),
                     ])
                 })
                 .collect(),
@@ -289,6 +307,7 @@ impl ServerStats {
             ("active", Json::Num(self.active as f64)),
             ("served", Json::Num(self.served as f64)),
             ("cancelled", Json::Num(self.cancelled as f64)),
+            ("shed", Json::Num(self.shed as f64)),
             ("tokens_generated", Json::Num(self.tokens_generated as f64)),
             ("tokens_per_sec", Json::Num(self.tokens_per_sec)),
             ("token_p50_ms", Json::Num(self.token_p50_ms)),
@@ -453,10 +472,20 @@ mod tests {
 
     #[test]
     fn stats_serialize_per_lane_entries() {
+        use crate::memory::transfer::LaneHealth;
         let s = ServerStats {
             lanes: vec![
                 LaneSnapshot { lane: 0, transfers: 3, bytes: 1024, ..Default::default() },
-                LaneSnapshot { lane: 1, on_demand: 2, queued_jobs: 1, ..Default::default() },
+                LaneSnapshot {
+                    lane: 1,
+                    on_demand: 2,
+                    queued_jobs: 1,
+                    health: LaneHealth::Suspect,
+                    retries: 4,
+                    timeouts: 2,
+                    failovers: 1,
+                    ..Default::default()
+                },
             ],
             ..Default::default()
         };
@@ -465,8 +494,27 @@ mod tests {
         assert_eq!(lanes.len(), 2);
         assert_eq!(lanes[0].get("transfers").and_then(|v| v.as_usize()), Some(3));
         assert_eq!(lanes[0].get("bytes").and_then(|v| v.as_usize()), Some(1024));
+        assert_eq!(lanes[0].get("health").and_then(|v| v.as_str()), Some("healthy"));
+        assert_eq!(lanes[0].get("retries").and_then(|v| v.as_usize()), Some(0));
         assert_eq!(lanes[1].get("lane").and_then(|v| v.as_usize()), Some(1));
         assert_eq!(lanes[1].get("on_demand").and_then(|v| v.as_usize()), Some(2));
         assert_eq!(lanes[1].get("queued_jobs").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(lanes[1].get("health").and_then(|v| v.as_str()), Some("suspect"));
+        assert_eq!(lanes[1].get("retries").and_then(|v| v.as_usize()), Some(4));
+        assert_eq!(lanes[1].get("timeouts").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(lanes[1].get("failovers").and_then(|v| v.as_usize()), Some(1));
+    }
+
+    #[test]
+    fn overloaded_event_is_terminal_on_the_wire() {
+        let ev = GenerationEvent::Overloaded { id: 9 };
+        assert!(ev.is_terminal());
+        assert_eq!(ev.id(), 9);
+        let j = ev.to_json();
+        assert_eq!(j.get("event").and_then(|e| e.as_str()), Some("overloaded"));
+        assert_eq!(j.get("id").and_then(|v| v.as_usize()), Some(9));
+        // shed counter rides the stats object
+        let s = ServerStats { shed: 3, ..Default::default() };
+        assert_eq!(s.to_json().get("shed").and_then(|v| v.as_usize()), Some(3));
     }
 }

@@ -14,7 +14,7 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -27,6 +27,20 @@ use crate::util::stats::LatencyWindow;
 
 /// Completed-request latency samples retained for stats percentiles.
 const LATENCY_WINDOW: usize = 4096;
+
+/// Default admission cap: submits beyond this queue depth are shed with a
+/// terminal [`GenerationEvent::Overloaded`] instead of queued — bounded
+/// queues are the service half of degraded serving
+/// (docs/fault-tolerance.md).
+const DEFAULT_QUEUE_CAP: usize = 256;
+
+/// Poison-proof lock: a thread that panicked while holding the state
+/// lock must not take the submit/cancel/stats surface down with it —
+/// the counters stay consistent enough to serve and the server keeps
+/// answering.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Engine-side performance counters surfaced through `stats`.
 #[derive(Clone, Debug, Default)]
@@ -109,6 +123,10 @@ struct State {
     perf: PerfSnapshot,
     /// Decode steps driven so far (throttles perf refreshes).
     steps: u64,
+    /// Requests shed at admission because the queue was at `queue_cap`.
+    shed: u64,
+    /// Admission cap enforced by [`ServiceHandle::submit`].
+    queue_cap: usize,
     started_at: Instant,
 }
 
@@ -137,6 +155,8 @@ impl InferenceService {
             total_ms: LatencyWindow::new(LATENCY_WINDOW),
             perf: PerfSnapshot::default(),
             steps: 0,
+            shed: 0,
+            queue_cap: DEFAULT_QUEUE_CAP,
             started_at: Instant::now(),
         }));
         (InferenceService { shared: Arc::clone(&shared) }, ServiceHandle { shared })
@@ -149,15 +169,15 @@ impl InferenceService {
                 std::thread::sleep(Duration::from_millis(2));
             }
         }
-        Ok(self.shared.lock().unwrap().served)
+        Ok(lock_unpoisoned(&self.shared).served)
     }
 
     /// Drive the loop until every submitted request has retired (in-process
     /// use: CLI generate, tests). Returns completions served so far.
     pub fn run_until_idle<B: Backend>(&self, backend: &mut B) -> Result<u64> {
         loop {
-            if self.shared.lock().unwrap().batcher.idle() {
-                return Ok(self.shared.lock().unwrap().served);
+            if lock_unpoisoned(&self.shared).batcher.idle() {
+                return Ok(lock_unpoisoned(&self.shared).served);
             }
             self.step(backend)?;
         }
@@ -168,7 +188,7 @@ impl InferenceService {
     /// submits/cancels/stats never wait on the model.
     fn step<B: Backend>(&self, backend: &mut B) -> Result<bool> {
         let inputs = {
-            let mut g = self.shared.lock().unwrap();
+            let mut g = lock_unpoisoned(&self.shared);
             // admit new work into free slots, highest priority first
             while g.batcher.queued() > 0 {
                 let Some(row) = backend.acquire_slot() else { break };
@@ -176,7 +196,12 @@ impl InferenceService {
                     backend.release_slot(row);
                     break;
                 }
-                let a = g.batcher.active.last().expect("admit pushed");
+                // admit==1 guarantees a push, but a panic beats a poisoned
+                // lock if the batcher ever breaks that contract
+                let Some(a) = g.batcher.active.last() else {
+                    backend.release_slot(row);
+                    break;
+                };
                 let id = a.req.id;
                 g.start_times.insert(id, Instant::now());
                 if let Some(tx) = g.subs.get(&id) {
@@ -193,7 +218,7 @@ impl InferenceService {
             Ok(o) => o,
             Err(e) => {
                 // the engine is wedged: fail every request loudly
-                let mut g = self.shared.lock().unwrap();
+                let mut g = lock_unpoisoned(&self.shared);
                 for (id, tx) in g.subs.drain() {
                     let _ = tx.send(GenerationEvent::Error {
                         id,
@@ -204,7 +229,7 @@ impl InferenceService {
             }
         };
 
-        let mut g = self.shared.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.shared);
         let sampled = g.batcher.sample_step(&outs);
         for (id, token, index) in g.batcher.apply_step(&sampled) {
             g.tokens_out += 1;
@@ -266,7 +291,13 @@ impl InferenceService {
 
 impl ServiceHandle {
     fn lock(&self) -> MutexGuard<'_, State> {
-        self.shared.lock().unwrap()
+        lock_unpoisoned(&self.shared)
+    }
+
+    /// Override the admission cap (default [`DEFAULT_QUEUE_CAP`]); load
+    /// experiments and tests shrink it to exercise shedding.
+    pub fn set_queue_cap(&self, cap: usize) {
+        self.lock().queue_cap = cap;
     }
 
     /// Submit a request. Returns its id and the private event stream
@@ -286,6 +317,14 @@ impl ServiceHandle {
                 id,
                 message: "empty prompt".into(),
             });
+            return (id, rx);
+        }
+        if g.batcher.queued() >= g.queue_cap {
+            // shed at admission: a terminal Overloaded the client can back
+            // off from beats an unbounded queue that melts tail latency
+            let id = g.batcher.reserve_id();
+            g.shed += 1;
+            let _ = tx.send(GenerationEvent::Overloaded { id });
             return (id, rx);
         }
         let params = SamplingParams {
@@ -328,6 +367,7 @@ impl ServiceHandle {
             active: g.batcher.active.len(),
             served: g.served,
             cancelled: g.cancelled,
+            shed: g.shed,
             tokens_generated: g.tokens_out,
             tokens_per_sec: g.perf.tokens_per_sec,
             token_p50_ms: g.perf.token_p50_ms,
@@ -539,6 +579,33 @@ mod tests {
         };
         assert!(tokens.is_empty());
         assert!(!evs.iter().any(|e| matches!(e, GenerationEvent::Token { .. })));
+    }
+
+    #[test]
+    fn overload_sheds_at_admission_cap() {
+        let mut be = MockBackend::new(1, 64);
+        let (svc, h) = InferenceService::new();
+        h.set_queue_cap(2);
+        let (_a, rx_a) =
+            h.submit(GenerationRequest { max_new: 1, ..GenerationRequest::new("a") });
+        let (_b, rx_b) =
+            h.submit(GenerationRequest { max_new: 1, ..GenerationRequest::new("b") });
+        // queue is at the cap: the third submit is shed with a single
+        // terminal event and never enters the queue
+        let (id_c, rx_c) =
+            h.submit(GenerationRequest { max_new: 1, ..GenerationRequest::new("c") });
+        let evs = drain(&rx_c);
+        assert_eq!(evs.len(), 1, "{evs:?}");
+        assert!(matches!(evs[0], GenerationEvent::Overloaded { id } if id == id_c));
+        assert_eq!(h.stats().shed, 1);
+        assert_eq!(h.stats().queued, 2, "shed request must not occupy the queue");
+        // the admitted requests still complete normally
+        svc.run_until_idle(&mut be).unwrap();
+        assert!(matches!(drain(&rx_a).last(), Some(GenerationEvent::Done { .. })));
+        assert!(matches!(drain(&rx_b).last(), Some(GenerationEvent::Done { .. })));
+        let s = h.stats();
+        assert_eq!(s.served, 2);
+        assert_eq!(s.shed, 1);
     }
 
     #[test]

@@ -14,17 +14,20 @@
 //!      ... one line per token ...
 //!   <- {"event": "done", "id": 0, "text": "...", "tokens": [..],
 //!       "finish": "...", "queue_ms": .., "total_ms": ..}
-//!      (or a terminal {"event": "cancelled"} / {"event": "error"} line)
+//!      (or a terminal {"event": "cancelled"} / {"event": "error"} /
+//!       {"event": "overloaded"} line — the last means the submit was shed
+//!       at admission because the queue was full; back off and retry)
 //!
 //!   -> {"cmd": "cancel", "id": 0}
 //!   <- {"id": 0, "cancelled": true}          // false: id unknown/finished
 //!
 //!   -> {"cmd": "stats"}
 //!   <- {"queued": .., "active": .., "served": .., "cancelled": ..,
-//!       "tokens_generated": .., "tokens_per_sec": .., "token_p50_ms": ..,
-//!       "token_p99_ms": .., "request_p50_ms": .., "request_p99_ms": ..,
-//!       "queue_p50_ms": .., "uptime_s": ..,
-//!       "lanes": [..per comm lane..], "devices": [..per cache shard..]}
+//!       "shed": .., "tokens_generated": .., "tokens_per_sec": ..,
+//!       "token_p50_ms": .., "token_p99_ms": .., "request_p50_ms": ..,
+//!       "request_p99_ms": .., "queue_p50_ms": .., "uptime_s": ..,
+//!       "lanes": [..per comm lane, incl. health/retries/timeouts/
+//!       failovers..], "devices": [..per cache shard..]}
 //!
 //!   -> {"cmd": "ping"}
 //!   <- {"pong": true}
@@ -38,7 +41,7 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::Receiver;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -50,6 +53,11 @@ use crate::util::json::Json;
 
 /// How long a connection waits on a generation before giving up on it.
 const EVENT_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// While waiting on generation events, probe the client socket this often
+/// so a disconnected client cancels its request instead of decoding into
+/// the void for up to [`EVENT_TIMEOUT`].
+const PROBE_INTERVAL: Duration = Duration::from_millis(100);
 
 /// Serve `backend` on `addr` until `shutdown` flips. Blocks the caller
 /// (spawn a thread if needed; PJRT-backed engines must stay on the thread
@@ -92,18 +100,59 @@ pub fn serve<B: Backend>(mut backend: B, addr: &str, shutdown: Arc<AtomicBool>) 
     served
 }
 
+/// Liveness probe over a connection's read half. `peek` answering 0 bytes
+/// means the peer closed its socket; generations the connection is waiting
+/// on should then be cancelled rather than decoded for nobody.
+struct ConnProbe {
+    stream: Option<TcpStream>,
+}
+
+impl ConnProbe {
+    fn new(stream: &TcpStream) -> ConnProbe {
+        ConnProbe { stream: stream.try_clone().ok() }
+    }
+
+    /// Probe-less stand-in for in-memory callers (tests drive
+    /// `handle_line` against a `Vec<u8>` writer with no socket).
+    fn none() -> ConnProbe {
+        ConnProbe { stream: None }
+    }
+
+    /// True when the peer has closed (or broken) the connection. Only
+    /// called from the connection's own thread between line reads, so the
+    /// temporary read timeout never races the `BufReader`.
+    fn client_gone(&self) -> bool {
+        let Some(s) = &self.stream else { return false };
+        if s.set_read_timeout(Some(Duration::from_millis(1))).is_err() {
+            return true;
+        }
+        let mut byte = [0u8; 1];
+        let gone = match s.peek(&mut byte) {
+            Ok(0) => true, // orderly shutdown
+            Ok(_) => false,
+            Err(e) => !matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ),
+        };
+        let _ = s.set_read_timeout(None);
+        gone
+    }
+}
+
 fn handle_conn(stream: TcpStream, handle: ServiceHandle) {
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
+    let probe = ConnProbe::new(&stream);
     let reader = BufReader::new(stream);
     for line in reader.lines() {
         let Ok(line) = line else { break };
         if line.trim().is_empty() {
             continue;
         }
-        let ok = match handle_line(&line, &handle, &mut writer) {
+        let ok = match handle_line(&line, &handle, &mut writer, &probe) {
             Ok(()) => true,
             Err(e) => {
                 let err = Json::obj(vec![("error", Json::Str(format!("{e:#}")))]);
@@ -118,16 +167,21 @@ fn handle_conn(stream: TcpStream, handle: ServiceHandle) {
 
 /// Dispatch one request line, writing one line (commands, non-streamed
 /// generations) or a line per event (streamed generations).
-fn handle_line(line: &str, handle: &ServiceHandle, writer: &mut impl Write) -> Result<()> {
+fn handle_line(
+    line: &str,
+    handle: &ServiceHandle,
+    writer: &mut impl Write,
+    probe: &ConnProbe,
+) -> Result<()> {
     let req = Json::parse(line).context("bad request json")?;
     if req.get("prompt").is_some() {
         let greq = GenerationRequest::from_json(&req)?;
         let stream_mode = greq.stream;
         let (id, rx) = handle.submit(greq);
         let result = if stream_mode {
-            stream_events(&rx, writer)
+            stream_events(&rx, writer, probe)
         } else {
-            collect_completion(&rx, writer)
+            collect_completion(&rx, writer, probe)
         };
         if result.is_err() {
             // client gone or timed out: release the request's slot instead
@@ -156,10 +210,37 @@ fn handle_line(line: &str, handle: &ServiceHandle, writer: &mut impl Write) -> R
     Ok(())
 }
 
-/// Streamed generation: forward every event as its own line.
-fn stream_events(rx: &Receiver<GenerationEvent>, writer: &mut impl Write) -> Result<()> {
+/// Wait for the next generation event, probing the client socket between
+/// short receive slices: a disconnect surfaces as an error here, which the
+/// caller turns into a cancel — without it, a vanished client would hold
+/// its decode slot until [`EVENT_TIMEOUT`].
+fn next_event(rx: &Receiver<GenerationEvent>, probe: &ConnProbe) -> Result<GenerationEvent> {
+    let mut waited = Duration::ZERO;
     loop {
-        let ev = rx.recv_timeout(EVENT_TIMEOUT).context("generation timed out")?;
+        match rx.recv_timeout(PROBE_INTERVAL) {
+            Ok(ev) => return Ok(ev),
+            Err(RecvTimeoutError::Timeout) => {
+                if probe.client_gone() {
+                    bail!("client disconnected mid-generation");
+                }
+                waited += PROBE_INTERVAL;
+                if waited >= EVENT_TIMEOUT {
+                    bail!("generation timed out");
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => bail!("service dropped the event stream"),
+        }
+    }
+}
+
+/// Streamed generation: forward every event as its own line.
+fn stream_events(
+    rx: &Receiver<GenerationEvent>,
+    writer: &mut impl Write,
+    probe: &ConnProbe,
+) -> Result<()> {
+    loop {
+        let ev = next_event(rx, probe)?;
         writeln!(writer, "{}", ev.to_json().to_string())?;
         if ev.is_terminal() {
             return Ok(());
@@ -170,9 +251,13 @@ fn stream_events(rx: &Receiver<GenerationEvent>, writer: &mut impl Write) -> Res
 /// Non-streamed generation: wait for the terminal event, answer one line.
 /// Done lines keep the v1 shape (id/text/tokens/queue_ms/total_ms) plus
 /// the "finish" reason.
-fn collect_completion(rx: &Receiver<GenerationEvent>, writer: &mut impl Write) -> Result<()> {
+fn collect_completion(
+    rx: &Receiver<GenerationEvent>,
+    writer: &mut impl Write,
+    probe: &ConnProbe,
+) -> Result<()> {
     loop {
-        let ev = rx.recv_timeout(EVENT_TIMEOUT).context("generation timed out")?;
+        let ev = next_event(rx, probe)?;
         if !ev.is_terminal() {
             continue;
         }
@@ -223,6 +308,12 @@ pub fn client_generate(addr: &str, req: &GenerationRequest) -> Result<ClientComp
             Some("cancelled") => {
                 out.id = j.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
                 out.finish = "cancelled".into();
+                return Ok(out);
+            }
+            // admission shed: terminal, no tokens — callers back off/retry
+            Some("overloaded") => {
+                out.id = j.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                out.finish = "overloaded".into();
                 return Ok(out);
             }
             // "done" event line (streaming) or the bare completion object
@@ -291,26 +382,27 @@ mod tests {
     #[test]
     fn line_protocol_rejects_garbage_and_answers_commands() {
         let (_service, handle) = InferenceService::new();
+        let probe = ConnProbe::none();
         let mut out = Vec::new();
-        assert!(handle_line("not json", &handle, &mut out).is_err());
-        assert!(handle_line("{\"x\":1}", &handle, &mut out).is_err());
-        assert!(handle_line("{\"cmd\":\"nope\"}", &handle, &mut out).is_err());
-        assert!(handle_line("{\"cmd\":\"cancel\"}", &handle, &mut out).is_err());
+        assert!(handle_line("not json", &handle, &mut out, &probe).is_err());
+        assert!(handle_line("{\"x\":1}", &handle, &mut out, &probe).is_err());
+        assert!(handle_line("{\"cmd\":\"nope\"}", &handle, &mut out, &probe).is_err());
+        assert!(handle_line("{\"cmd\":\"cancel\"}", &handle, &mut out, &probe).is_err());
 
-        handle_line("{\"cmd\":\"ping\"}", &handle, &mut out).unwrap();
+        handle_line("{\"cmd\":\"ping\"}", &handle, &mut out, &probe).unwrap();
         let pong = Json::parse(std::str::from_utf8(&out).unwrap().trim()).unwrap();
         assert_eq!(pong.get("pong").and_then(|b| b.as_bool()), Some(true));
 
         // stats works with an idle service and is non-empty
         let mut out = Vec::new();
-        handle_line("{\"cmd\":\"stats\"}", &handle, &mut out).unwrap();
+        handle_line("{\"cmd\":\"stats\"}", &handle, &mut out, &probe).unwrap();
         let stats = Json::parse(std::str::from_utf8(&out).unwrap().trim()).unwrap();
         assert_eq!(stats.get("served").and_then(|v| v.as_usize()), Some(0));
         assert!(stats.get("uptime_s").is_some());
 
         // cancel with an unknown id answers false rather than erroring
         let mut out = Vec::new();
-        handle_line("{\"cmd\":\"cancel\",\"id\":42}", &handle, &mut out).unwrap();
+        handle_line("{\"cmd\":\"cancel\",\"id\":42}", &handle, &mut out, &probe).unwrap();
         let j = Json::parse(std::str::from_utf8(&out).unwrap().trim()).unwrap();
         assert_eq!(j.get("cancelled").and_then(|b| b.as_bool()), Some(false));
     }

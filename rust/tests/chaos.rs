@@ -1,0 +1,385 @@
+//! Chaos harness: scripted fault plans driven against live multi-lane
+//! transfer engines and the layer executor (artifact-free: synthetic
+//! weights, host math). Locks down what docs/fault-tolerance.md promises:
+//!
+//! 1. **Clean quiesce** — every scripted [`FaultPlan`] drains to an empty
+//!    in-flight registry; nothing strands, nothing hangs.
+//! 2. **Counter conservation** — every request resolves exactly once:
+//!    `transfers + skipped_cached + failed == requests`, and the per-lane
+//!    queued-bytes/jobs gauges return to zero through any sequence of
+//!    timeouts, retries and lane→lane failovers.
+//! 3. **Determinism** — recoverable faults (flaky drops, dead lanes with
+//!    failover) leave output bits identical to the fault-free run, and a
+//!    replayed plan reproduces a degraded run bit-for-bit.
+//! 4. **Idempotent failover** — hammering the fault pump from many threads
+//!    while a lane dies never double-lands or loses a transfer.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use adapmoe::coordinator::executor::{run_layer_parallel, run_layer_serial};
+use adapmoe::coordinator::scheduler::{build_plan, ScheduleMode};
+use adapmoe::memory::device_cache::DeviceCache;
+use adapmoe::memory::faults::FaultPlan;
+use adapmoe::memory::host_store::HostStore;
+use adapmoe::memory::platform::Platform;
+use adapmoe::memory::quant::QuantKind;
+use adapmoe::memory::transfer::{
+    FaultConfig, LaneConfig, LaneHealth, LanePolicy, Priority, TransferEngine,
+};
+use adapmoe::prop_assert;
+use adapmoe::tensor::Tensor;
+use adapmoe::testutil::{micro_config, synthetic_weights};
+use adapmoe::util::prop;
+use adapmoe::util::rng::Rng;
+use adapmoe::util::threadpool::ThreadPool;
+
+fn fixture(
+    quant: QuantKind,
+    platform: &str,
+    scale: f64,
+    lanes: LaneConfig,
+) -> (Arc<HostStore>, Arc<DeviceCache>, TransferEngine) {
+    let cfg = micro_config();
+    let w = synthetic_weights(&cfg, 11);
+    let store = Arc::new(HostStore::build(&cfg, &w, quant).unwrap());
+    let cache = Arc::new(DeviceCache::new(vec![8, 8]));
+    let xfer = TransferEngine::with_lanes(
+        Arc::clone(&store),
+        Arc::clone(&cache),
+        Platform::preset(platform).unwrap(),
+        4,
+        scale,
+        lanes,
+    );
+    (store, cache, xfer)
+}
+
+fn inputs(b: usize, n_experts: usize, seed: u64) -> (Tensor, Vec<Vec<f32>>) {
+    let cfg = micro_config();
+    let mut rng = Rng::new(seed);
+    let x = Tensor::new(
+        vec![b, cfg.d_model],
+        (0..b * cfg.d_model).map(|_| rng.f32() - 0.5).collect(),
+    )
+    .unwrap();
+    let coef: Vec<Vec<f32>> = (0..n_experts)
+        .map(|_| (0..b).map(|_| rng.f32()).collect())
+        .collect();
+    (x, coef)
+}
+
+/// Every scripted plan — halts, slowdowns, flaky drops, delays, a full
+/// device blackout — must quiesce clean with conserved counters and
+/// drained gauges, no matter where in the request stream it strikes.
+#[test]
+fn scripted_plans_quiesce_clean_and_conserve_counters() {
+    let plans = [
+        "0:halt:2",
+        "0:flaky:1:2;1:slow:0:4",
+        "1:delay:0:2;2:halt:1",
+        "1:slow:2:8;1:flaky:0:3;3:halt:0",
+        "2:blackout:0",
+    ];
+    for spec in plans {
+        let plan = FaultPlan::parse(spec).unwrap();
+        let (_s, _cache, xfer) = fixture(
+            QuantKind::F32,
+            "instant",
+            0.0,
+            LaneConfig::new(3, LanePolicy::RoundRobin),
+        );
+        // 3 fresh experts per step (ids stay unique: a duplicate of an
+        // in-flight id joins its ticket instead of opening a new one),
+        // faults injected between waves exactly as Engine::decode_step does
+        let mut issued = 0u64;
+        let mut next = 0usize;
+        for step in 0..=plan.last_step() + 1 {
+            xfer.apply_fault_plan(&plan, step);
+            for _ in 0..3 {
+                let id = (next % 2, next / 2 % 8);
+                next += 1;
+                let pri = if next % 3 == 0 { Priority::OnDemand } else { Priority::Prefetch };
+                xfer.request(id, pri);
+                issued += 1;
+            }
+        }
+        let report = xfer.quiesce().unwrap_or_else(|e| panic!("plan '{spec}': {e:#}"));
+        // conservation: every request resolved exactly once
+        let transfers = xfer.stats.transfers.load(Ordering::Relaxed);
+        let skipped = xfer.stats.skipped_cached.load(Ordering::Relaxed);
+        let failed = xfer.stats.failed.load(Ordering::Relaxed);
+        assert_eq!(
+            transfers + skipped + failed,
+            issued,
+            "plan '{spec}': {transfers} transfers + {skipped} skipped + {failed} failed \
+             != {issued} requests ({report:?})"
+        );
+        assert_eq!(failed as usize, report.failed.len(), "plan '{spec}'");
+        // gauges drain to zero through every failover/retry migration
+        let snaps = xfer.lane_snapshots();
+        assert!(
+            snaps.iter().all(|s| s.queued_bytes == 0 && s.queued_jobs == 0),
+            "plan '{spec}': {snaps:?}"
+        );
+        // scripted lane kills are reflected in the health ladder
+        if spec.contains("halt") || spec.contains("blackout") {
+            assert!(!report.dead_lanes.is_empty(), "plan '{spec}': {report:?}");
+            for &l in &report.dead_lanes {
+                assert_eq!(xfer.lane_health(l), LaneHealth::Dead, "plan '{spec}'");
+            }
+        }
+    }
+}
+
+/// A lane that dies with six transfers in flight: failover re-homes its
+/// jobs, the executor drains every expert, and the accumulated output is
+/// bit-identical to the fault-free single-lane serial baseline — a
+/// recoverable fault must not change a single output bit.
+#[test]
+fn dead_lane_failover_keeps_output_bits() {
+    let experts: Vec<usize> = (0..6).collect();
+    let (x, coef) = inputs(4, 8, 33);
+
+    let serial_out = {
+        let (_s, cache, xfer) =
+            fixture(QuantKind::Int4, "rtx4090", 1.0, LaneConfig::default());
+        for &e in &experts {
+            xfer.request((0, e), Priority::Prefetch);
+        }
+        let plan = build_plan(0, &experts, &[], &cache, &xfer);
+        run_layer_serial(&plan, &x, &coef, ScheduleMode::ExpertWise, 4, &cache)
+    };
+
+    let chaos_out = {
+        // lane 1 is 400× slow and dies right after taking its three jobs;
+        // the pump re-homes them onto (fast) lane 0 mid-drain
+        let lanes = LaneConfig::new(2, LanePolicy::RoundRobin)
+            .with_time_scales(vec![0.0, 400.0]);
+        let (_s, cache, xfer) = fixture(QuantKind::Int4, "rtx4090", 1.0, lanes);
+        for &e in &experts {
+            xfer.request((0, e), Priority::Prefetch);
+        }
+        let plan = build_plan(0, &experts, &[], &cache, &xfer);
+        assert_eq!(plan.n_pending(), 6);
+        xfer.halt_lane(1);
+        let pool = ThreadPool::new(3);
+        let out = run_layer_parallel(
+            &plan,
+            &x,
+            &coef,
+            ScheduleMode::ExpertWise,
+            4,
+            &cache,
+            &xfer,
+            &pool,
+        );
+        let report = xfer.quiesce().unwrap();
+        assert!(report.failovers >= 1, "{report:?}");
+        assert_eq!(report.dead_lanes, vec![1]);
+        assert!(report.failed.is_empty(), "{report:?}");
+        out
+    };
+
+    assert_eq!(chaos_out.consumed.len(), 6, "every expert must land");
+    assert!(chaos_out.dropped.is_empty(), "{:?}", chaos_out.dropped);
+    assert_eq!(
+        serial_out.acc.data, chaos_out.acc.data,
+        "failover must not change output bits"
+    );
+}
+
+/// Exhausted retries degrade the plan AdapMoE-gating-style: the failed
+/// experts are dropped from the reduction (recorded in the outcome), the
+/// survivors still land, and a bit-for-bit replay of the same recorded
+/// plan reproduces the exact same degraded output.
+#[test]
+fn exhausted_retries_drop_experts_and_replay_bit_for_bit() {
+    let experts: Vec<usize> = (0..6).collect();
+    let (x, coef) = inputs(4, 8, 47);
+
+    // baseline: only the three experts that will survive the chaos run
+    let survivors_out = {
+        let (_s, cache, xfer) =
+            fixture(QuantKind::F32, "instant", 0.0, LaneConfig::default());
+        for e in 0..3usize {
+            xfer.request((0, e), Priority::Prefetch);
+        }
+        xfer.quiesce().unwrap();
+        let plan = build_plan(0, &[0, 1, 2], &[], &cache, &xfer);
+        assert_eq!(plan.n_pending(), 0, "survivors must be resident");
+        run_layer_serial(&plan, &x, &coef, ScheduleMode::ExpertWise, 4, &cache)
+    };
+
+    // recorded plan, round-tripped through its wire form as a regression
+    // replay would be
+    let recorded = FaultPlan::parse("0:flaky:0:1").unwrap();
+    let replayed = FaultPlan::parse(&recorded.to_string()).unwrap();
+    assert_eq!(recorded, replayed, "fault plans must replay losslessly");
+
+    let degraded = |plan_to_apply: &FaultPlan| {
+        // zero retry budget on the only lane: every pending transfer
+        // exhausts the ladder and fails terminally
+        let lanes = LaneConfig::new(1, LanePolicy::RoundRobin)
+            .with_faults(FaultConfig { max_retries: 0, ..FaultConfig::default() });
+        let (_s, cache, xfer) = fixture(QuantKind::F32, "instant", 0.0, lanes);
+        for e in 0..3usize {
+            xfer.request((0, e), Priority::Prefetch);
+        }
+        xfer.quiesce().unwrap();
+        xfer.apply_fault_plan(plan_to_apply, 0);
+        for e in 3..6usize {
+            xfer.request((0, e), Priority::OnDemand);
+        }
+        let plan = build_plan(0, &experts, &[], &cache, &xfer);
+        assert_eq!(plan.n_pending(), 3);
+        let pool = ThreadPool::new(2);
+        let out = run_layer_parallel(
+            &plan,
+            &x,
+            &coef,
+            ScheduleMode::ExpertWise,
+            4,
+            &cache,
+            &xfer,
+            &pool,
+        );
+        let report = xfer.quiesce().unwrap();
+        assert_eq!(report.failed.len(), 3, "{report:?}");
+        out
+    };
+
+    let run1 = degraded(&recorded);
+    let run2 = degraded(&replayed);
+
+    // conservation: consumed + dropped covers the whole plan, dropped
+    // experts are exactly the failed transfers
+    let mut dropped = run1.dropped.clone();
+    dropped.sort_unstable();
+    assert_eq!(dropped, vec![3, 4, 5]);
+    assert_eq!(run1.consumed.len() + run1.dropped.len(), 6);
+    // degraded output equals the survivors-only reduction…
+    assert_eq!(
+        run1.acc.data, survivors_out.acc.data,
+        "dropped experts must contribute exactly nothing"
+    );
+    // …and the replayed plan reproduces it bit-for-bit
+    assert_eq!(run1.acc.data, run2.acc.data, "replay must be bit-for-bit");
+    assert_eq!(run1.dropped, run2.dropped);
+}
+
+/// Flaky drops with retry budget left are invisible in the output: the
+/// re-sent transfers land, nothing is dropped, and the bits match the
+/// fault-free serial baseline.
+#[test]
+fn flaky_lane_retries_are_invisible_in_output_bits() {
+    let experts: Vec<usize> = (0..6).collect();
+    let (x, coef) = inputs(3, 8, 59);
+
+    let serial_out = {
+        let (_s, cache, xfer) =
+            fixture(QuantKind::F32, "instant", 0.0, LaneConfig::default());
+        for &e in &experts {
+            xfer.request((0, e), Priority::Prefetch);
+        }
+        let plan = build_plan(0, &experts, &[], &cache, &xfer);
+        run_layer_serial(&plan, &x, &coef, ScheduleMode::ExpertWise, 4, &cache)
+    };
+
+    let chaos_out = {
+        let (_s, cache, xfer) = fixture(
+            QuantKind::F32,
+            "instant",
+            0.0,
+            LaneConfig::new(2, LanePolicy::RoundRobin),
+        );
+        // lane 0 drops every job it admits; retries re-home onto lane 1
+        xfer.apply_fault_plan(&FaultPlan::parse("0:flaky:0:1").unwrap(), 0);
+        for &e in &experts {
+            xfer.request((0, e), Priority::Prefetch);
+        }
+        let plan = build_plan(0, &experts, &[], &cache, &xfer);
+        let pool = ThreadPool::new(2);
+        let out = run_layer_parallel(
+            &plan,
+            &x,
+            &coef,
+            ScheduleMode::ExpertWise,
+            4,
+            &cache,
+            &xfer,
+            &pool,
+        );
+        let report = xfer.quiesce().unwrap();
+        assert!(report.retries >= 1, "{report:?}");
+        assert!(report.failed.is_empty(), "{report:?}");
+        out
+    };
+
+    assert_eq!(chaos_out.consumed.len(), 6);
+    assert!(chaos_out.dropped.is_empty());
+    assert_eq!(serial_out.acc.data, chaos_out.acc.data);
+}
+
+/// Property: killing a random lane under a random in-flight mix while
+/// three threads hammer the fault pump concurrently never double-lands or
+/// loses a transfer — every handle resolves to exactly one of
+/// complete/failed, and the counters conserve.
+#[test]
+fn failover_reissue_is_idempotent_under_concurrent_pumps() {
+    prop::check("failover-idempotent", 10, |rng| {
+        let n_lanes = 2 + rng.usize_below(3);
+        let (_s, _cache, xfer) = fixture(
+            QuantKind::F32,
+            "instant",
+            0.0,
+            LaneConfig::new(n_lanes, LanePolicy::RoundRobin),
+        );
+        let k = 4 + rng.usize_below(9);
+        let ids: Vec<(usize, usize)> = (0..k).map(|i| (i % 2, i / 2)).collect();
+        let handles: Vec<_> = ids
+            .iter()
+            .map(|&id| {
+                let pri = if rng.chance(0.5) { Priority::OnDemand } else { Priority::Prefetch };
+                xfer.request(id, pri)
+            })
+            .collect();
+        let victim = rng.usize_below(n_lanes);
+        xfer.halt_lane(victim);
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| {
+                    for _ in 0..50 {
+                        xfer.pump_faults();
+                        std::thread::sleep(Duration::from_micros(100));
+                    }
+                });
+            }
+            xfer.quiesce().unwrap();
+        });
+        let report = xfer.quiesce().unwrap();
+        let transfers = xfer.stats.transfers.load(Ordering::Relaxed);
+        let skipped = xfer.stats.skipped_cached.load(Ordering::Relaxed);
+        let failed = xfer.stats.failed.load(Ordering::Relaxed);
+        prop_assert!(
+            transfers + skipped + failed == k as u64,
+            "{transfers} transfers + {skipped} skipped + {failed} failed != {k} \
+             requests (victim lane {victim}, {report:?})"
+        );
+        for (h, id) in handles.iter().zip(&ids) {
+            prop_assert!(
+                h.is_complete() != h.is_failed(),
+                "{id:?}: complete={} failed={} — must resolve exactly one way",
+                h.is_complete(),
+                h.is_failed()
+            );
+        }
+        let snaps = xfer.lane_snapshots();
+        prop_assert!(
+            snaps.iter().all(|s| s.queued_bytes == 0 && s.queued_jobs == 0),
+            "gauges must drain: {snaps:?}"
+        );
+        Ok(())
+    });
+}

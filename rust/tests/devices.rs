@@ -147,7 +147,7 @@ fn four_device_out_of_order_arrivals_match_single_device_serial_bits() {
             &xfer,
             &pool,
         );
-        xfer.quiesce();
+        xfer.quiesce().unwrap();
         // every consumed expert was promoted into its owning shard only
         for &e in &experts {
             let dev = cache.device_of((0, e));
@@ -192,7 +192,7 @@ fn per_device_counters_sum_to_global_and_queues_drain() {
     for (_, h) in plan.pending_items() {
         h.wait_full();
     }
-    xfer.quiesce();
+    xfer.quiesce().unwrap();
     // hits: now-resident experts come back ready
     let plan2 = build_plan(0, &[0, 1, 2, 3], &[], &cache, &xfer);
     assert_eq!(plan2.n_ready(), 4);
@@ -229,7 +229,7 @@ fn staged_prefetch_promotes_into_owning_shard_only() {
     // layer 1 is owned by device 1 (2 layers over 2 devices)
     assert_eq!(cache.device_of((1, 6)), 1);
     xfer.request((1, 6), Priority::Prefetch).wait_full();
-    xfer.quiesce();
+    xfer.quiesce().unwrap();
     assert!(xfer.staging_contains((1, 6)));
     assert!(!cache.contains((1, 6)));
     let plan = build_plan(1, &[6], &[], &cache, &xfer);
@@ -244,7 +244,7 @@ fn staged_prefetch_promotes_into_owning_shard_only() {
     // never overflows, and device 0 is untouched throughout.
     cache.shard(1).set_allocation(&[0, 1]);
     xfer.request((1, 7), Priority::Prefetch).wait_full();
-    xfer.quiesce();
+    xfer.quiesce().unwrap();
     let plan = build_plan(1, &[7], &[], &cache, &xfer);
     assert_eq!(plan.n_ready(), 1);
     assert!(cache.shard(1).contains((1, 7)));

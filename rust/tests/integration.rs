@@ -341,6 +341,7 @@ fn tile_wise_engine_matches_expert_wise() {
         lanes: LaneConfig::default(),
         devices: 1,
         placement: Placement::LayerSliced,
+        fault_plan: None,
     };
     let mut ew = Engine::from_artifacts(&dir, mk(ScheduleMode::ExpertWise)).unwrap();
     let mut tw = Engine::from_artifacts(&dir, mk(ScheduleMode::TileWise)).unwrap();

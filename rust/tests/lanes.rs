@@ -182,7 +182,7 @@ fn pinned_assignment_never_starves_reserved_lane() {
                 );
             }
         }
-        xfer.quiesce();
+        xfer.quiesce().unwrap();
         let snaps = xfer.lane_snapshots();
         prop_assert!(
             snaps[0].prefetch == 0,

@@ -230,6 +230,47 @@ fn cancel_queued_request_before_start() {
 }
 
 #[test]
+fn client_disconnect_mid_stream_cancels_generation() {
+    let srv = TestServer::start(17426, 1, 5);
+
+    // start a long streamed generation, read until tokens flow…
+    let req = GenerationRequest {
+        max_new: 100_000,
+        stream: true,
+        ..GenerationRequest::new("a")
+    };
+    let (mut s, mut r) = srv.connect();
+    send(&mut s, &req.to_json());
+    loop {
+        if event_of(&recv(&mut r)) == "token" {
+            break;
+        }
+    }
+    // …then vanish without cancelling: the server's liveness probe must
+    // notice and cancel the request so the slot frees up
+    drop(r);
+    drop(s);
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let stats = tcp::client_stats(&srv.addr).unwrap();
+        if stats.get("cancelled").and_then(|v| v.as_usize()) == Some(1) {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "disconnect never cancelled the request: {stats:?}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // the freed slot serves a fresh request to completion
+    let (text, _q, _t) = tcp::client_request(&srv.addr, "ab", 2).unwrap();
+    assert_eq!(text, "cd");
+    let served = srv.stop();
+    assert_eq!(served, 1);
+}
+
+#[test]
 fn stats_round_trip_is_nonempty_and_counts() {
     let srv = TestServer::start(17424, 2, 0);
 

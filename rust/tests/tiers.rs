@@ -99,7 +99,7 @@ fn single_tier_is_bit_for_bit_the_quant_path() {
     let (legacy_store, legacy_cache, legacy) = legacy_engine(QuantKind::Int4, "instant", 0.0);
     let plan = build_plan(0, &computes, &[], &legacy_cache, &legacy);
     let legacy_out = run_layer_serial(&plan, &x, &coef, ScheduleMode::ExpertWise, 4, &legacy_cache);
-    legacy.quiesce();
+    legacy.quiesce().unwrap();
 
     let (tiers, tiered_cache, tiered) = tiered_engine(
         &[QuantKind::Int4],
@@ -110,7 +110,7 @@ fn single_tier_is_bit_for_bit_the_quant_path() {
     );
     let plan = build_plan(0, &computes, &[], &tiered_cache, &tiered);
     let tiered_out = run_layer_serial(&plan, &x, &coef, ScheduleMode::ExpertWise, 4, &tiered_cache);
-    tiered.quiesce();
+    tiered.quiesce().unwrap();
 
     // identical logit contributions, bit for bit
     assert_eq!(legacy_out.acc.data, tiered_out.acc.data);
@@ -178,7 +178,7 @@ fn multi_tier_ooo_arrivals_are_deterministic() {
         } else {
             run_layer_serial(&plan, &x, &coef, ScheduleMode::ExpertWise, 4, &cache)
         };
-        xfer.quiesce();
+        xfer.quiesce().unwrap();
         // every expert's resident copy records the tier it rode
         for &e in &computes {
             assert_eq!(cache.resident_meta((0, e)).unwrap().kind, tier_of(e));
@@ -214,7 +214,7 @@ fn degrade_never_stalls_executor_on_resident_low_tier() {
     for &e in &computes {
         xfer.request((0, e), Priority::OnDemand).wait_full();
     }
-    xfer.quiesce();
+    xfer.quiesce().unwrap();
     for &e in &computes {
         assert_eq!(cache.resident_meta((0, e)).unwrap().kind, QuantKind::Int2);
     }
@@ -247,7 +247,7 @@ fn degrade_never_stalls_executor_on_resident_low_tier() {
         assert_eq!(h.kind, QuantKind::Int8);
         h.wait_full();
     }
-    xfer.quiesce();
+    xfer.quiesce().unwrap();
 }
 
 /// The pinned-lane reservation holds for upgrades: they ride the
@@ -268,7 +268,7 @@ fn upgrades_never_preempt_urgent_loads() {
     for e in 0..3 {
         xfer.request((0, e), Priority::OnDemand).wait_full();
     }
-    xfer.quiesce();
+    xfer.quiesce().unwrap();
     // a burst of upgrades: all must avoid the reserved lane
     let ups: Vec<_> = (0..3)
         .map(|e| xfer.request_at((0, e), Priority::Upgrade, QuantKind::Int8))
@@ -284,7 +284,7 @@ fn upgrades_never_preempt_urgent_loads() {
         ups.iter().any(|u| !u.is_complete()),
         "urgent load must finish before the slow upgrade burst drains"
     );
-    xfer.quiesce();
+    xfer.quiesce().unwrap();
     // every upgrade landed and promoted its resident entry
     for e in 0..3 {
         assert_eq!(cache.resident_meta((0, e)).unwrap().kind, QuantKind::Int8);
@@ -318,7 +318,7 @@ fn engine_charges_match_quant_expert_size_bytes_per_tier() {
         let h = xfer.request_at(id, Priority::OnDemand, kind);
         assert_eq!(h.bytes, tiers.store(kind).get(id).size_bytes());
         h.wait_full();
-        xfer.quiesce();
+        xfer.quiesce().unwrap();
         let delta = xfer.stats.bytes.load(Ordering::Relaxed) - before;
         assert_eq!(
             delta as usize,
