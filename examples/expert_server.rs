@@ -1,0 +1,122 @@
+//! Artifact server for cacheless coordinators (docs/remote-store.md).
+//!
+//! Publishes an expert store over the length-prefixed TCP protocol so a
+//! coordinator started with `--remote <addr>` can run without local expert
+//! weights. Two modes:
+//!
+//! * **serve** (default): build a store — from `--artifacts DIR` weights,
+//!   or a synthetic micro-model with `--synthetic SEED` — freeze it into an
+//!   [`ArtifactImage`], and serve until killed. `--corrupt-every N` /
+//!   `--drop-every N` arm deterministic chaos for fault drills.
+//! * **probe** (`--probe ADDR`): connect as a client, fetch every expert at
+//!   every published tier, and verify each one is bit-identical to the
+//!   locally rebuilt twin (requires the same `--synthetic SEED` or
+//!   `--artifacts DIR` the server was started with). Exits non-zero on any
+//!   mismatch — CI uses this as the two-process round-trip check.
+//!
+//!     cargo run --release --example expert_server -- --synthetic 7 --addr 127.0.0.1:7501
+//!     cargo run --release --example expert_server -- --synthetic 7 --probe 127.0.0.1:7501
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use adapmoe::memory::quant::QuantKind;
+use adapmoe::memory::tiered_store::TieredStore;
+use adapmoe::model::config::ModelConfig;
+use adapmoe::model::weights::Weights;
+use adapmoe::net::{connect_store, ArtifactImage, ChaosKnobs, StoreServer};
+use adapmoe::testutil::{micro_config, synthetic_weights};
+use adapmoe::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let (cfg, weights) = load_model(&args)?;
+    let kinds = match args.get("tiers") {
+        Some(list) => TieredStore::parse_tiers(list).context("bad --tiers")?,
+        None => vec![QuantKind::Int4],
+    };
+    let local = Arc::new(TieredStore::build(&cfg, &weights, &kinds)?);
+
+    if let Some(addr) = args.get("probe") {
+        return probe(addr, &local);
+    }
+
+    let image = Arc::new(ArtifactImage::from_tiered(&local, cfg.d_model, cfg.d_ff));
+    let knobs = ChaosKnobs {
+        corrupt_every: args.u64_or("corrupt-every", 0),
+        drop_every: args.u64_or("drop-every", 0),
+    };
+    let addr = args.str_or("addr", "127.0.0.1:7501");
+    let srv = StoreServer::spawn_chaotic(image, &addr, knobs)
+        .with_context(|| format!("binding {addr}"))?;
+    // The READY line is the handshake scripts wait for before probing.
+    println!("READY {}", srv.local_addr());
+    eprintln!(
+        "[expert_server] serving {} tiers x {} experts on {} \
+         (corrupt_every={} drop_every={}); kill to stop",
+        kinds.len(),
+        cfg.n_layers * cfg.n_experts,
+        srv.local_addr(),
+        knobs.corrupt_every,
+        knobs.drop_every,
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(1));
+    }
+}
+
+/// Build the reference store the server publishes / the probe compares to.
+fn load_model(args: &Args) -> Result<(ModelConfig, Weights)> {
+    if let Some(dir) = args.get("artifacts") {
+        let dir = PathBuf::from(dir);
+        let (cfg, _manifest) = ModelConfig::load_manifest(&dir)?;
+        let weights = Weights::load(&dir.join("weights.bin"))?;
+        return Ok((cfg, weights));
+    }
+    let seed = args.u64_or("synthetic", 7);
+    let cfg = micro_config();
+    let weights = synthetic_weights(&cfg, seed);
+    Ok((cfg, weights))
+}
+
+/// Fetch every expert at every tier from `addr` and bit-compare against the
+/// local twin store.
+fn probe(addr: &str, local: &TieredStore) -> Result<()> {
+    let (remote, manifest) =
+        connect_store(addr).with_context(|| format!("connecting to {addr}"))?;
+    if manifest.tiers != local.tiers() {
+        bail!(
+            "server publishes tiers {:?}, probe built {:?} — pass the same --tiers",
+            manifest.tiers,
+            local.tiers()
+        );
+    }
+    let mut verified = 0usize;
+    for &kind in &manifest.tiers {
+        let (r, l) = (remote.store(kind), local.store(kind));
+        for layer in 0..manifest.n_layers {
+            for expert in 0..manifest.n_experts {
+                let id = (layer, expert);
+                let (got, want) = (r.get(id), l.get(id));
+                if got != want {
+                    bail!("expert ({layer},{expert}) at {} differs from twin", kind.name());
+                }
+                verified += 1;
+            }
+        }
+    }
+    let c = remote.remote_counters().context("remote store has no counters")?;
+    use std::sync::atomic::Ordering::Relaxed;
+    println!(
+        "PROBE OK {verified} experts bit-identical | fetches={} bytes={} \
+         retries={} checksum_failures={} reconnects={}",
+        c.fetches.load(Relaxed),
+        c.fetched_bytes.load(Relaxed),
+        c.retries.load(Relaxed),
+        c.checksum_failures.load(Relaxed),
+        c.reconnects.load(Relaxed),
+    );
+    Ok(())
+}

@@ -22,6 +22,7 @@ use adapmoe::memory::faults::FaultPlan;
 use adapmoe::memory::transfer::{LaneConfig, LanePolicy, Priority, TransferEngine};
 use adapmoe::model::config::ModelConfig;
 use adapmoe::model::weights::Weights;
+use adapmoe::net::{connect_store, ArtifactImage, ChaosKnobs, StoreServer};
 use adapmoe::runtime::{f32_literal, tensor_to_literal, Runtime};
 use adapmoe::tensor::Tensor;
 use adapmoe::testutil::synthetic_weights;
@@ -145,6 +146,7 @@ fn lane_drain_case() {
     let mut table = Table::new(&[
         "batch", "lanes", "wall (ms)", "stall (ms)", "queue-delay (ms)",
     ]);
+    let mut rows = Vec::new();
     for &b in &[1usize, 4, 16] {
         let mut rng = Rng::new(11 + b as u64);
         let x = Tensor::new(
@@ -190,9 +192,27 @@ fn lane_drain_case() {
                 format!("{:.1}", out.stall_ns as f64 / 1e6),
                 format!("{:.1}", out.queue_delay_ns as f64 / 1e6),
             ]);
+            rows.push(Json::obj(vec![
+                ("batch", Json::Num(b as f64)),
+                ("lanes", Json::Num(lanes as f64)),
+                ("wall_ms", Json::Num(wall * 1e3)),
+                ("stall_ms", Json::Num(out.stall_ns as f64 / 1e6)),
+                ("queue_delay_ms", Json::Num(out.queue_delay_ns as f64 / 1e6)),
+            ]));
         }
     }
     table.print();
+    let artifact = Json::obj(vec![
+        ("bench", Json::Str("lanes".into())),
+        ("platform", Json::Str("rtx4090".into())),
+        ("quant", Json::Str("int4".into())),
+        ("experts", Json::Num(n as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match std::fs::write("BENCH_lanes.json", artifact.to_string() + "\n") {
+        Ok(()) => println!("(perf trajectory written to BENCH_lanes.json)"),
+        Err(e) => println!("(could not write BENCH_lanes.json: {e})"),
+    }
     println!("(wall-clock must shrink as lanes are added: each lane is an independent");
     println!(" simulated wire, so the eight transfers overlap instead of serializing)");
 }
@@ -227,6 +247,7 @@ fn device_drain_case() {
     let mut table = Table::new(&[
         "batch", "devices", "wall (ms)", "stall (ms)", "queue-delay (ms)", "capacity",
     ]);
+    let mut rows = Vec::new();
     for &b in &[1usize, 4, 16] {
         let mut rng = Rng::new(13 + b as u64);
         let x = Tensor::new(
@@ -281,9 +302,29 @@ fn device_drain_case() {
                 format!("{:.1}", out.queue_delay_ns as f64 / 1e6),
                 format!("{capacity}"),
             ]);
+            rows.push(Json::obj(vec![
+                ("batch", Json::Num(b as f64)),
+                ("devices", Json::Num(devices as f64)),
+                ("wall_ms", Json::Num(wall * 1e3)),
+                ("stall_ms", Json::Num(out.stall_ns as f64 / 1e6)),
+                ("queue_delay_ms", Json::Num(out.queue_delay_ns as f64 / 1e6)),
+                ("capacity", Json::Num(capacity as f64)),
+            ]));
         }
     }
     table.print();
+    let artifact = Json::obj(vec![
+        ("bench", Json::Str("devices".into())),
+        ("platform", Json::Str("rtx4090".into())),
+        ("quant", Json::Str("int4".into())),
+        ("placement", Json::Str("expert-hash".into())),
+        ("experts", Json::Num(n as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match std::fs::write("BENCH_devices.json", artifact.to_string() + "\n") {
+        Ok(()) => println!("(perf trajectory written to BENCH_devices.json)"),
+        Err(e) => println!("(could not write BENCH_devices.json: {e})"),
+    }
     println!("(wall-clock shrinks like the lane table — each device's lane is an independent");
     println!(" wire — while aggregate cache capacity grows with the device count)");
 }
@@ -323,6 +364,7 @@ fn tier_drain_case() {
     let mut table = Table::new(&[
         "batch", "tier", "transfers", "bytes moved", "stall (ms)", "queue-delay (ms)",
     ]);
+    let mut rows = Vec::new();
     for &b in &[1usize, 4, 16] {
         let mut rng = Rng::new(17 + b as u64);
         let x = Tensor::new(
@@ -377,9 +419,29 @@ fn tier_drain_case() {
                 format!("{:.1}", out.stall_ns as f64 / 1e6),
                 format!("{:.1}", qd as f64 / 1e6),
             ]);
+            rows.push(Json::obj(vec![
+                ("batch", Json::Num(b as f64)),
+                ("tier", Json::Str(snap.kind.name().into())),
+                ("transfers", Json::Num(snap.transfers as f64)),
+                ("bytes", Json::Num(snap.bytes as f64)),
+                ("stall_ms", Json::Num(out.stall_ns as f64 / 1e6)),
+                ("queue_delay_ms", Json::Num(qd as f64 / 1e6)),
+            ]));
         }
     }
     table.print();
+    let artifact = Json::obj(vec![
+        ("bench", Json::Str("tiers".into())),
+        ("platform", Json::Str("rtx4090".into())),
+        ("tiers", Json::Str("int2,int4".into())),
+        ("policy", Json::Str("urgency".into())),
+        ("experts", Json::Num(n as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match std::fs::write("BENCH_tiers.json", artifact.to_string() + "\n") {
+        Ok(()) => println!("(perf trajectory written to BENCH_tiers.json)"),
+        Err(e) => println!("(could not write BENCH_tiers.json: {e})"),
+    }
     println!("(the int2 rows carry the compute-stalling loads at a fraction of the int4");
     println!(" byte volume — the win the urgency-driven bitwidth selection buys)");
 }
@@ -500,12 +562,148 @@ fn faults_drain_case() {
     println!(" both must keep dropped at 0 — degradation only begins past the retry budget)");
 }
 
+/// Local vs remote expert sourcing: the completion-driven drain with the
+/// store (a) host-resident, (b) behind a loopback artifact server, and
+/// (c) behind a *flaky* artifact server (periodic corrupt payloads +
+/// dropped connections, absorbed by the transport's bounded retries). The
+/// wire clocks charge identical simulated bytes in all three regimes —
+/// what the table shows is the real fetch latency and retry traffic the
+/// remote hop adds (docs/remote-store.md). Written to `BENCH_remote.json`.
+/// Needs no artifacts.
+fn remote_drain_case() {
+    let cfg = ModelConfig {
+        name: "bench-remote".into(),
+        vocab_size: 64,
+        d_model: 128,
+        n_heads: 2,
+        head_dim: 64,
+        n_layers: 1,
+        n_experts: 8,
+        top_k: 2,
+        d_ff: 512,
+        max_seq: 8,
+        rms_eps: 1e-5,
+        batch_sizes: vec![4],
+    };
+    let weights = synthetic_weights(&cfg, 47);
+    let local = Arc::new(TieredStore::build(&cfg, &weights, &[QuantKind::Int4]).unwrap());
+    let image = Arc::new(ArtifactImage::from_tiered(&local, cfg.d_model, cfg.d_ff));
+    let n = cfg.n_experts;
+    let b = 4usize;
+    let mut rng = Rng::new(23);
+    let x = Tensor::new(
+        vec![b, cfg.d_model],
+        (0..b * cfg.d_model).map(|_| rng.f32() - 0.5).collect(),
+    )
+    .unwrap();
+    let coef: Vec<Vec<f32>> = (0..n)
+        .map(|e| vec![1.0 / (e as f32 + 2.0); b])
+        .collect();
+
+    println!("\n=== expert sourcing: local vs remote vs flaky-remote store (rtx4090, int4) ===");
+    println!("(8 on-demand experts over a loopback artifact server; identical simulated wire bytes)");
+    let mut table = Table::new(&[
+        "source", "wall (ms)", "stall (ms)", "remote KiB", "fetch (ms)", "retries", "reconnects",
+    ]);
+    let mut rows = Vec::new();
+    // servers outlive their engines: each connection must stay answerable
+    // through the whole drain
+    let mut servers = Vec::new();
+    for source in ["local", "remote", "remote-flaky"] {
+        let tiers = match source {
+            "local" => Arc::clone(&local),
+            _ => {
+                let knobs = if source == "remote-flaky" {
+                    // periodic faults, never two in a row — converges
+                    // within the transport's bounded attempts
+                    ChaosKnobs { corrupt_every: 5, drop_every: 8 }
+                } else {
+                    ChaosKnobs::default()
+                };
+                let srv = StoreServer::spawn_chaotic(Arc::clone(&image), "127.0.0.1:0", knobs)
+                    .expect("loopback artifact server");
+                let (store, _manifest) = connect_store(&srv.local_addr()).expect("connect");
+                servers.push(srv);
+                Arc::new(store)
+            }
+        };
+        let cache = Arc::new(DeviceCache::new(vec![2]));
+        let xfer = TransferEngine::with_tiers(
+            Arc::clone(&tiers),
+            PrecisionPolicy::Fixed,
+            Arc::new(ShardedCache::single(Arc::clone(&cache))),
+            Platform::preset("rtx4090").unwrap(),
+            4,
+            1.0,
+            LaneConfig::default(),
+        );
+        for e in (0..n).rev() {
+            xfer.request((0, e), Priority::Prefetch);
+        }
+        let computes: Vec<usize> = (0..n).collect();
+        let plan = build_plan(0, &computes, &[], &cache, &xfer);
+        let pool = ThreadPool::new(4);
+        let t0 = Instant::now();
+        let out = run_layer_parallel(
+            &plan,
+            &x,
+            &coef,
+            ScheduleMode::ExpertWise,
+            4,
+            &cache,
+            &xfer,
+            &pool,
+        );
+        let wall = t0.elapsed().as_secs_f64();
+        xfer.quiesce().expect("remote drain must quiesce clean");
+        let s = xfer.source_snapshot();
+        table.row(&[
+            source.to_string(),
+            format!("{:.1}", wall * 1e3),
+            format!("{:.1}", out.stall_ns as f64 / 1e6),
+            format!("{:.1}", s.remote_bytes as f64 / 1024.0),
+            format!("{:.2}", s.fetch_ms),
+            format!("{}", s.retries),
+            format!("{}", s.reconnects),
+        ]);
+        rows.push(Json::obj(vec![
+            ("source", Json::Str(source.into())),
+            ("wall_ms", Json::Num(wall * 1e3)),
+            ("stall_ms", Json::Num(out.stall_ns as f64 / 1e6)),
+            ("local_bytes", Json::Num(s.local_bytes as f64)),
+            ("remote_bytes", Json::Num(s.remote_bytes as f64)),
+            ("fetches", Json::Num(s.fetches as f64)),
+            ("fetch_ms", Json::Num(s.fetch_ms)),
+            ("retries", Json::Num(s.retries as f64)),
+            ("checksum_failures", Json::Num(s.checksum_failures as f64)),
+            ("reconnects", Json::Num(s.reconnects as f64)),
+            ("remote_faults", Json::Num(s.remote_faults as f64)),
+        ]));
+    }
+    table.print();
+    let artifact = Json::obj(vec![
+        ("bench", Json::Str("remote".into())),
+        ("platform", Json::Str("rtx4090".into())),
+        ("quant", Json::Str("int4".into())),
+        ("experts", Json::Num(n as f64)),
+        ("batch", Json::Num(b as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match std::fs::write("BENCH_remote.json", artifact.to_string() + "\n") {
+        Ok(()) => println!("(perf trajectory written to BENCH_remote.json)"),
+        Err(e) => println!("(could not write BENCH_remote.json: {e})"),
+    }
+    println!("(remote rows pay each expert's wire fetch exactly once — the flaky row adds");
+    println!(" only retry/reconnect traffic, never a dropped expert or different bits)");
+}
+
 fn main() {
     moe_pipeline_case();
     lane_drain_case();
     device_drain_case();
     tier_drain_case();
     faults_drain_case();
+    remote_drain_case();
 
     let Some(dir) = artifacts_dir() else { return };
     let (cfg, manifest) = ModelConfig::load_manifest(&dir).expect("manifest");

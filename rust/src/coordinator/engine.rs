@@ -124,6 +124,12 @@ pub struct EngineConfig {
     /// step. `None` (every preset) leaves the engine bit-for-bit
     /// identical to a fault-free build.
     pub fault_plan: Option<FaultPlan>,
+    /// Artifact-server address (`--remote`, docs/remote-store.md): when
+    /// set, the expert store is built cacheless against that server —
+    /// expert bytes are fetched, checksum-verified and pinned on first
+    /// use instead of loaded from local weights. `None` (every preset)
+    /// keeps the store fully local and bit-for-bit identical.
+    pub remote: Option<String>,
 }
 
 /// Non-expert weights kept device-resident as literals.
@@ -235,7 +241,47 @@ impl Engine {
         } else {
             ecfg.tiers.clone()
         };
-        let tiered = Arc::new(TieredStore::build(&cfg, weights, &tier_kinds)?);
+        let tiered = match &ecfg.remote {
+            None => Arc::new(TieredStore::build(&cfg, weights, &tier_kinds)?),
+            Some(addr) => {
+                // Cacheless mode: the store's encodings live on an artifact
+                // server; the manifest must describe exactly the model and
+                // tier set this engine was configured for, or the transfer
+                // clocks and cache budgets would silently diverge from the
+                // local baseline.
+                let (remote, man) = crate::net::remote::connect_store(addr)
+                    .with_context(|| format!("connecting to remote expert store {addr}"))?;
+                if man.n_layers != cfg.n_layers
+                    || man.n_experts != cfg.n_experts
+                    || man.d_model != cfg.d_model
+                    || man.d_ff != cfg.d_ff
+                {
+                    bail!(
+                        "remote store {addr} serves {}x{} experts ({}x{}), \
+                         model wants {}x{} ({}x{})",
+                        man.n_layers,
+                        man.n_experts,
+                        man.d_model,
+                        man.d_ff,
+                        cfg.n_layers,
+                        cfg.n_experts,
+                        cfg.d_model,
+                        cfg.d_ff
+                    );
+                }
+                let mut want = tier_kinds.clone();
+                want.sort_by_key(|k| k.bits());
+                want.dedup();
+                if man.tiers != want {
+                    bail!(
+                        "remote store {addr} publishes tiers {:?}, engine configured for {:?}",
+                        man.tiers,
+                        want
+                    );
+                }
+                Arc::new(remote)
+            }
+        };
         let store = Arc::clone(tiered.base());
 
         let cache = Arc::new(build_sharded_cache(&cfg, &ecfg, &profile));
@@ -1084,6 +1130,7 @@ mod tests {
             whole_layer: false,
             compute_workers: 0,
             fault_plan: None,
+            remote: None,
         }
     }
 

@@ -56,6 +56,8 @@ pub struct RunSettings {
     pub prefetch_per_device: Option<usize>,
     /// Scripted fault injection (`--fault-plan`; `None` = fault-free).
     pub fault_plan: Option<FaultPlan>,
+    /// Artifact-server address (`--remote`; `None` = local store).
+    pub remote: Option<String>,
 }
 
 impl RunSettings {
@@ -78,6 +80,7 @@ impl RunSettings {
             upgrade_budget: 0,
             prefetch_per_device: None,
             fault_plan: None,
+            remote: None,
         }
     }
 }
@@ -119,6 +122,7 @@ pub fn method(name: &str, s: &RunSettings, profile: &Profile) -> Option<EngineCo
         devices: s.n_devices,
         placement: s.placement,
         fault_plan: s.fault_plan.clone(),
+        remote: s.remote.clone(),
     };
     let mut cfg = match name {
         // DeepSpeed/FlexGen-style dense offloading: loads every expert of
@@ -289,6 +293,17 @@ mod tests {
         assert_eq!(cfg.fault_plan, s.fault_plan);
         // default stays fault-free
         assert!(method("adapmoe", &settings(), &p).unwrap().fault_plan.is_none());
+    }
+
+    #[test]
+    fn remote_store_propagates_to_config() {
+        let p = Profile::synthetic(4);
+        let mut s = settings();
+        s.remote = Some("127.0.0.1:9099".into());
+        let cfg = method("adapmoe", &s, &p).unwrap();
+        assert_eq!(cfg.remote.as_deref(), Some("127.0.0.1:9099"));
+        // default stays local
+        assert!(method("adapmoe", &settings(), &p).unwrap().remote.is_none());
     }
 
     #[test]

@@ -21,6 +21,7 @@ pub mod bench_support;
 pub mod coordinator;
 pub mod memory;
 pub mod model;
+pub mod net;
 pub mod runtime;
 pub mod server;
 pub mod tensor;

@@ -26,6 +26,7 @@ use adapmoe::memory::sharded_cache::Placement;
 use adapmoe::memory::tiered_store::{PrecisionPolicy, TieredStore};
 use adapmoe::memory::transfer::LanePolicy;
 use adapmoe::model::tokenizer::{ByteTokenizer, EvalStream};
+use adapmoe::net::{ArtifactImage, StoreServer};
 use adapmoe::server::api::{GenerationEvent, GenerationRequest};
 use adapmoe::server::service::InferenceService;
 use adapmoe::server::tcp;
@@ -92,6 +93,11 @@ fn usage() {
                              STEP:KIND:ARG events, e.g. 3:halt:1;5:slow:0:4\n\
                              (kinds: halt|slow|flaky|delay|blackout —\n\
                              docs/fault-tolerance.md)\n\
+           --remote ADDR     fetch expert weights from an artifact server\n\
+                             instead of local weights (cacheless mode —\n\
+                             docs/remote-store.md)\n\
+           --serve-store ADDR  (serve) also publish this engine's expert\n\
+                             store as an artifact server on ADDR\n\
            --prompt TEXT     (generate) prompt text\n\
            --max-new N       (generate) tokens to generate (default: 64)\n\
            --temperature X   (generate) sampling temperature, 0 = greedy (default: 0)\n\
@@ -158,10 +164,16 @@ fn build_engine(args: &Args, default_batch: usize) -> Result<Engine> {
     settings.prefetch_per_device = (cap > 0).then_some(cap);
     if let Some(spec) = args.get("fault-plan") {
         let plan = FaultPlan::parse(spec).context("bad --fault-plan (see --help)")?;
+        plan.validate(settings.n_lanes, settings.n_devices)
+            .context("bad --fault-plan (see --help)")?;
         if !plan.is_empty() {
             eprintln!("[adapmoe] fault plan armed: {plan}");
             settings.fault_plan = Some(plan);
         }
+    }
+    if let Some(addr) = args.get("remote") {
+        eprintln!("[adapmoe] cacheless mode: expert store at {addr}");
+        settings.remote = Some(addr.to_string());
     }
     let method = args.str_or("method", "adapmoe");
     let ecfg = policy::method(&method, &settings, &profile)
@@ -259,6 +271,22 @@ fn cmd_generate(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let engine = build_engine(args, 4)?;
+    // Optionally publish this engine's expert store so cacheless peers
+    // (`--remote`) can fetch their experts from us (docs/remote-store.md).
+    let _store_server = match args.get("serve-store") {
+        Some(store_addr) => {
+            let image = Arc::new(ArtifactImage::from_tiered(
+                &engine.tiered,
+                engine.cfg.d_model,
+                engine.cfg.d_ff,
+            ));
+            let srv = StoreServer::spawn(image, store_addr)
+                .with_context(|| format!("binding artifact server on {store_addr}"))?;
+            eprintln!("[adapmoe] artifact server on {}", srv.local_addr());
+            Some(srv)
+        }
+        None => None,
+    };
     let addr = args.str_or("addr", "127.0.0.1:7411");
     eprintln!("[adapmoe] serving on {addr} (Ctrl-C to stop)");
     let shutdown = Arc::new(AtomicBool::new(false));

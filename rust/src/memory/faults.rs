@@ -22,8 +22,9 @@ use std::fmt;
 
 use anyhow::{anyhow, bail, Result};
 
-/// One injectable fault. Lane/device indices are validated against the
-/// live engine at injection time, not at parse time.
+/// One injectable fault. Lane/device indices can't be range-checked at
+/// parse time (the engine shape isn't known yet) — callers that do know
+/// it run [`FaultPlan::validate`] before arming the plan.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum FaultAction {
     /// Stop a lane's worker without draining its queue.
@@ -36,6 +37,30 @@ pub enum FaultAction {
     DelayLane(usize, u64),
     /// Halt every lane in a device's affinity group.
     Blackout(usize),
+}
+
+impl FaultAction {
+    /// Kind name as it appears in the grammar.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            FaultAction::HaltLane(_) => "halt",
+            FaultAction::SlowLane(..) => "slow",
+            FaultAction::FlakyLane(..) => "flaky",
+            FaultAction::DelayLane(..) => "delay",
+            FaultAction::Blackout(_) => "blackout",
+        }
+    }
+
+    /// The lane (or device, for blackout) index the action targets.
+    fn target(&self) -> usize {
+        match *self {
+            FaultAction::HaltLane(l)
+            | FaultAction::SlowLane(l, _)
+            | FaultAction::FlakyLane(l, _)
+            | FaultAction::DelayLane(l, _)
+            | FaultAction::Blackout(l) => l,
+        }
+    }
 }
 
 /// A [`FaultAction`] scheduled for one decode step.
@@ -95,9 +120,56 @@ impl FaultPlan {
                      (want halt|slow|flaky|delay|blackout)"
                 ),
             };
+            // Two events with the same (step, kind, target) would race on
+            // one knob in script order — almost certainly a typo'd plan.
+            // Same step + target with *different* kinds stays legal.
+            if events.iter().any(|e: &FaultEvent| {
+                e.step == step
+                    && e.action.kind() == action.kind()
+                    && e.action.target() == action.target()
+            }) {
+                bail!(
+                    "fault event '{part}': duplicate {} on target {} at step {step}",
+                    action.kind(),
+                    action.target()
+                );
+            }
             events.push(FaultEvent { step, action });
         }
         Ok(FaultPlan { events })
+    }
+
+    /// Range-check every event against the engine shape: lane faults must
+    /// name a lane below `n_lanes`, blackouts a device below `n_devices`.
+    /// Parse can't do this (the plan is parsed before the engine exists),
+    /// so the CLI calls it once both counts are known.
+    pub fn validate(&self, n_lanes: usize, n_devices: usize) -> Result<()> {
+        for ev in &self.events {
+            let t = ev.action.target();
+            match ev.action {
+                FaultAction::Blackout(_) => {
+                    if t >= n_devices {
+                        bail!(
+                            "fault event '{}:{}': device {t} out of range \
+                             (engine has {n_devices} devices)",
+                            ev.step,
+                            ev.action
+                        );
+                    }
+                }
+                _ => {
+                    if t >= n_lanes {
+                        bail!(
+                            "fault event '{}:{}': lane {t} out of range \
+                             (engine has {n_lanes} lanes)",
+                            ev.step,
+                            ev.action
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Events scheduled for `step`, in script order.
@@ -186,9 +258,49 @@ mod tests {
 
     #[test]
     fn bad_events_name_the_offender() {
-        for bad in ["x:halt:0", "1:warp:0", "1:slow:0", "1:halt", "1:flaky:0:x"] {
+        for bad in [
+            "x:halt:0",    // non-numeric step
+            "1:warp:0",    // unknown kind
+            "1:slow:0",    // missing factor
+            "1:halt",      // too few fields
+            "1:flaky:0:x", // non-numeric drop period
+            "1:delay:0:1.5", // fractional milliseconds
+            ":halt:0",     // empty step
+            "1::0",        // empty kind
+            "1:blackout",  // blackout without a device
+        ] {
             let err = FaultPlan::parse(bad).expect_err(bad);
             assert!(format!("{err}").contains("fault event"), "{bad}: {err}");
         }
+    }
+
+    #[test]
+    fn duplicate_step_kind_target_rejected() {
+        // exact duplicate
+        let err = FaultPlan::parse("3:halt:1;3:halt:1").unwrap_err();
+        assert!(format!("{err}").contains("duplicate halt"), "{err}");
+        // same (step, kind, target) with a different argument still collides
+        let err = FaultPlan::parse("5:slow:0:4;5:slow:0:8").unwrap_err();
+        assert!(format!("{err}").contains("duplicate slow"), "{err}");
+        // different step, kind, or target are all fine
+        assert_eq!(FaultPlan::parse("3:halt:1;4:halt:1").unwrap().len(), 2);
+        assert_eq!(FaultPlan::parse("3:halt:1;3:flaky:1:2").unwrap().len(), 2);
+        assert_eq!(FaultPlan::parse("3:halt:1;3:halt:0").unwrap().len(), 2);
+        // a lane fault and a blackout of the same index never collide
+        assert_eq!(FaultPlan::parse("3:halt:1;3:blackout:1").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn validate_range_checks_lanes_and_devices() {
+        let plan = FaultPlan::parse("1:halt:0;2:slow:1:9;3:blackout:0").unwrap();
+        assert!(plan.validate(2, 1).is_ok());
+        // lane 1 needs at least 2 lanes
+        let err = plan.validate(1, 1).unwrap_err();
+        assert!(format!("{err}").contains("lane 1 out of range"), "{err}");
+        // blackout device 0 needs at least 1 device
+        let err = plan.validate(2, 0).unwrap_err();
+        assert!(format!("{err}").contains("device 0 out of range"), "{err}");
+        // an empty plan always validates
+        assert!(FaultPlan::parse("").unwrap().validate(0, 0).is_ok());
     }
 }

@@ -4,8 +4,20 @@
 //! bounded set is resident in [`super::device_cache::DeviceCache`] at a
 //! time. The store is immutable after construction and shared by reference
 //! with the transfer engine's comm thread.
+//!
+//! A store is either **local** (every expert quantized up front from the
+//! weights file — the historical shape) or **remote**
+//! ([`HostStore::remote`]): experts live on an artifact server
+//! (`crate::net`, docs/remote-store.md) and are fetched lazily on first
+//! use, then pinned in a host-side slot so every later read — tile decode,
+//! re-transfer, upgrade — is local and bit-identical. The fetch itself is
+//! abstracted behind [`ExpertFetcher`] so this module never depends on a
+//! transport; failures surface through [`HostStore::try_fetch`] as
+//! retryable errors the transfer engine's fault pump handles like a
+//! dropped job.
 
 use std::collections::HashMap;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{bail, Result};
 
@@ -16,7 +28,7 @@ use crate::model::ExpertId;
 use crate::tensor::Tensor;
 
 /// One expert's three matrices, quantized for storage/transfer.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct QuantExpert {
     pub w1: QuantTensor, // [d, f] flattened
     pub w3: QuantTensor, // [d, f]
@@ -39,8 +51,61 @@ pub struct ExpertF32 {
     pub w2: Tensor, // [f, d]
 }
 
+/// Where [`HostStore::try_fetch`] found the bytes: already host-resident
+/// (local build, or a remote expert fetched earlier) vs. pulled over the
+/// wire by *this* call. The transfer engine folds this into its
+/// `local_bytes`/`remote_bytes` source counters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FetchSource {
+    Local,
+    Remote,
+}
+
+/// Transport hook for remote-backed stores: resolve one expert's verified,
+/// decoded weights. Implementations (`crate::net::remote`) own retries,
+/// checksum verification and reconnects; an `Err` here means the expert is
+/// *currently* unavailable — the caller treats it as a retryable fault,
+/// not a corrupt store.
+pub trait ExpertFetcher: Send + Sync {
+    fn fetch(&self, id: ExpertId) -> std::result::Result<QuantExpert, String>;
+}
+
+/// Remote-fetch counters shared between a remote-backed store and its
+/// transport (`SourceSnapshot` on the stats surface). All monotonic.
+#[derive(Default)]
+pub struct FetchCounters {
+    /// Experts pulled over the wire (first-touch fetches that succeeded).
+    pub fetches: std::sync::atomic::AtomicU64,
+    /// Encoded artifact bytes those fetches moved.
+    pub fetched_bytes: std::sync::atomic::AtomicU64,
+    /// Wall-clock nanoseconds spent inside fetches (success or not).
+    pub fetch_ns: std::sync::atomic::AtomicU64,
+    /// In-transport retry attempts (before the engine's own fault ladder).
+    pub retries: std::sync::atomic::AtomicU64,
+    /// Responses rejected by chunk/manifest checksum verification.
+    pub checksum_failures: std::sync::atomic::AtomicU64,
+    /// Connections re-established after a loss.
+    pub reconnects: std::sync::atomic::AtomicU64,
+}
+
+enum Backing {
+    Local(HashMap<ExpertId, QuantExpert>),
+    Remote {
+        /// Lazily filled host pins, indexed `layer * n_experts + expert`.
+        /// `OnceLock` gives stable `&QuantExpert` borrows for the whole
+        /// store lifetime, matching the local HashMap's reference shape.
+        slots: Vec<OnceLock<QuantExpert>>,
+        /// Per-expert wire bytes from the manifest, same indexing —
+        /// metadata reads (gauge charges, cache planning) must never
+        /// trigger a network fetch.
+        sizes: Vec<usize>,
+        fetcher: Arc<dyn ExpertFetcher>,
+        counters: Arc<FetchCounters>,
+    },
+}
+
 pub struct HostStore {
-    experts: HashMap<ExpertId, QuantExpert>,
+    backing: Backing,
     pub kind: QuantKind,
     pub n_layers: usize,
     pub n_experts: usize,
@@ -72,7 +137,7 @@ impl HostStore {
             }
         }
         Ok(HostStore {
-            experts,
+            backing: Backing::Local(experts),
             kind,
             n_layers: cfg.n_layers,
             n_experts: cfg.n_experts,
@@ -80,13 +145,105 @@ impl HostStore {
         })
     }
 
+    /// A store whose experts live on an artifact server and arrive lazily
+    /// through `fetcher` on first use. `sizes` are the manifest's per-expert
+    /// wire bytes (indexed `layer * n_experts + expert`) so metadata reads
+    /// never touch the network; `counters` is shared with the transport so
+    /// the stats surface sees one coherent set of remote-fetch numbers.
+    pub fn remote(
+        kind: QuantKind,
+        n_layers: usize,
+        n_experts: usize,
+        expert_bytes_f32: usize,
+        sizes: Vec<usize>,
+        fetcher: Arc<dyn ExpertFetcher>,
+        counters: Arc<FetchCounters>,
+    ) -> Result<HostStore> {
+        if sizes.len() != n_layers * n_experts {
+            bail!(
+                "remote store wants {} per-expert sizes, manifest gave {}",
+                n_layers * n_experts,
+                sizes.len()
+            );
+        }
+        let slots = (0..sizes.len()).map(|_| OnceLock::new()).collect();
+        Ok(HostStore {
+            backing: Backing::Remote { slots, sizes, fetcher, counters },
+            kind,
+            n_layers,
+            n_experts,
+            expert_bytes_f32,
+        })
+    }
+
+    pub fn is_remote(&self) -> bool {
+        matches!(self.backing, Backing::Remote { .. })
+    }
+
+    /// Remote-fetch counters, when this store is remote-backed.
+    pub fn fetch_counters(&self) -> Option<&Arc<FetchCounters>> {
+        match &self.backing {
+            Backing::Local(_) => None,
+            Backing::Remote { counters, .. } => Some(counters),
+        }
+    }
+
+    fn slot_index(&self, id: ExpertId) -> usize {
+        assert!(
+            id.0 < self.n_layers && id.1 < self.n_experts,
+            "expert ({},{}) out of range ({}x{})",
+            id.0,
+            id.1,
+            self.n_layers,
+            self.n_experts
+        );
+        id.0 * self.n_experts + id.1
+    }
+
+    /// Resolve one expert, fetching it over the wire first when the store
+    /// is remote-backed and the expert has not landed yet. Local stores
+    /// (and already-pinned remote experts) answer `FetchSource::Local`;
+    /// `FetchSource::Remote` means *this call* moved the bytes. An `Err`
+    /// is retryable — the expert stays absent and a later call re-fetches.
+    pub fn try_fetch(
+        &self,
+        id: ExpertId,
+    ) -> std::result::Result<(&QuantExpert, FetchSource), String> {
+        match &self.backing {
+            Backing::Local(experts) => experts
+                .get(&id)
+                .map(|q| (q, FetchSource::Local))
+                .ok_or_else(|| format!("expert ({},{}) not in local store", id.0, id.1)),
+            Backing::Remote { slots, fetcher, .. } => {
+                let slot = &slots[self.slot_index(id)];
+                if let Some(q) = slot.get() {
+                    return Ok((q, FetchSource::Local));
+                }
+                // Fetch outside the OnceLock init so a failure never
+                // wedges the slot. A concurrent double-fetch is benign:
+                // the encodings are deterministic, so whichever copy wins
+                // `set` is bit-identical to the loser's.
+                let fetched = fetcher.fetch(id)?;
+                let _ = slot.set(fetched);
+                Ok((slot.get().expect("slot just initialized"), FetchSource::Remote))
+            }
+        }
+    }
+
     pub fn get(&self, id: ExpertId) -> &QuantExpert {
-        &self.experts[&id]
+        match self.try_fetch(id) {
+            Ok((q, _)) => q,
+            Err(e) => panic!("expert ({},{}) unavailable: {e}", id.0, id.1),
+        }
     }
 
     /// Bytes that cross the simulated link when loading this expert.
+    /// Metadata-only for remote stores (manifest sizes) — never fetches.
     pub fn expert_transfer_bytes(&self, id: ExpertId) -> usize {
-        self.get(id).size_bytes()
+        match &self.backing {
+            Backing::Local(_) => self.get(id).size_bytes(),
+            Backing::Remote { sizes, .. } => sizes[self.slot_index(id)],
+        }
     }
 
     /// Full dequantization of one expert (the non-tiled transfer path).
@@ -207,5 +364,117 @@ mod tests {
         let mut w = fake_weights(&cfg, 5);
         w.tensors.remove("l0.e0.w1");
         assert!(HostStore::build(&cfg, &w, QuantKind::Int4).is_err());
+    }
+
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Fetcher that serves clones out of a local twin store, optionally
+    /// failing the first N calls — the shape `crate::net::remote` fills in
+    /// with a real transport.
+    struct TwinFetcher {
+        twin: Arc<HostStore>,
+        fail_first: AtomicU64,
+        calls: AtomicU64,
+    }
+
+    impl ExpertFetcher for TwinFetcher {
+        fn fetch(&self, id: ExpertId) -> std::result::Result<QuantExpert, String> {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            if self.fail_first.load(Ordering::Relaxed) > 0 {
+                self.fail_first.fetch_sub(1, Ordering::Relaxed);
+                return Err("injected fetch failure".into());
+            }
+            Ok(self.twin.get(id).clone())
+        }
+    }
+
+    fn remote_twin(kind: QuantKind, fail_first: u64) -> (HostStore, Arc<TwinFetcher>) {
+        let cfg = test_config();
+        let w = fake_weights(&cfg, 6);
+        let twin = Arc::new(HostStore::build(&cfg, &w, kind).unwrap());
+        let sizes: Vec<usize> = (0..cfg.n_layers)
+            .flat_map(|l| (0..cfg.n_experts).map(move |e| (l, e)))
+            .map(|id| twin.expert_transfer_bytes(id))
+            .collect();
+        let fetcher = Arc::new(TwinFetcher {
+            twin: Arc::clone(&twin),
+            fail_first: AtomicU64::new(fail_first),
+            calls: AtomicU64::new(0),
+        });
+        let remote = HostStore::remote(
+            kind,
+            cfg.n_layers,
+            cfg.n_experts,
+            cfg.expert_bytes_f32(),
+            sizes,
+            Arc::clone(&fetcher) as Arc<dyn ExpertFetcher>,
+            Arc::new(FetchCounters::default()),
+        )
+        .unwrap();
+        (remote, fetcher)
+    }
+
+    #[test]
+    fn remote_first_touch_fetches_then_pins() {
+        let (remote, fetcher) = remote_twin(QuantKind::Int4, 0);
+        // Metadata reads must not touch the fetcher.
+        let b = remote.expert_transfer_bytes((0, 1));
+        assert!(b > 0);
+        assert_eq!(fetcher.calls.load(Ordering::Relaxed), 0);
+        let (_, src) = remote.try_fetch((0, 1)).unwrap();
+        assert_eq!(src, FetchSource::Remote);
+        // Second read is host-local and does not re-fetch.
+        let (_, src) = remote.try_fetch((0, 1)).unwrap();
+        assert_eq!(src, FetchSource::Local);
+        assert_eq!(fetcher.calls.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn remote_expert_bit_identical_to_twin_every_kind() {
+        for kind in [QuantKind::Int2, QuantKind::Int4, QuantKind::Int8, QuantKind::F32] {
+            let (remote, fetcher) = remote_twin(kind, 0);
+            let id = (1, 2);
+            let (got, _) = remote.try_fetch(id).unwrap();
+            let want = fetcher.twin.get(id);
+            for (g, w) in [(&got.w1, &want.w1), (&got.w3, &want.w3), (&got.w2, &want.w2)] {
+                assert_eq!(g.kind, w.kind);
+                assert_eq!(g.len, w.len);
+                assert_eq!(g.data, w.data);
+                assert_eq!(g.scales, w.scales);
+                assert_eq!(g.mins, w.mins);
+            }
+            assert_eq!(remote.expert_transfer_bytes(id), want.size_bytes());
+        }
+    }
+
+    #[test]
+    fn remote_fetch_failure_is_retryable_not_sticky() {
+        let (remote, fetcher) = remote_twin(QuantKind::Int8, 1);
+        assert!(remote.try_fetch((0, 0)).is_err());
+        // The slot was not wedged by the failure: a retry succeeds and the
+        // expert is pinned from then on.
+        let (_, src) = remote.try_fetch((0, 0)).unwrap();
+        assert_eq!(src, FetchSource::Remote);
+        let (_, src) = remote.try_fetch((0, 0)).unwrap();
+        assert_eq!(src, FetchSource::Local);
+        assert_eq!(fetcher.calls.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn remote_rejects_wrong_size_table() {
+        let fetcher = {
+            let (_, f) = remote_twin(QuantKind::Int4, 0);
+            f
+        };
+        assert!(HostStore::remote(
+            QuantKind::Int4,
+            2,
+            4,
+            1024,
+            vec![16; 3], // wants 8 entries
+            fetcher as Arc<dyn ExpertFetcher>,
+            Arc::new(FetchCounters::default()),
+        )
+        .is_err());
     }
 }

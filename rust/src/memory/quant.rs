@@ -75,7 +75,7 @@ impl QuantKind {
 pub const BLOCK: usize = 64;
 
 /// A quantized 1-D tensor (shape is tracked by the owner).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct QuantTensor {
     pub kind: QuantKind,
     pub len: usize,

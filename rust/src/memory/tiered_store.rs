@@ -73,6 +73,51 @@ impl TieredStore {
         TieredStore { tiers: vec![store.kind], stores: vec![store] }
     }
 
+    /// Assemble a tier set from pre-built stores (the remote path: one
+    /// lazily-fetched [`HostStore::remote`] per tier, all sharing a
+    /// transport). Same invariants as [`TieredStore::build`] — kinds are
+    /// sorted ascending by bits, duplicates and empty sets rejected — plus
+    /// every store must describe the same expert grid.
+    pub fn from_parts(stores: Vec<Arc<HostStore>>) -> Result<TieredStore> {
+        if stores.is_empty() {
+            bail!("tiered store needs at least one precision tier");
+        }
+        let mut stores = stores;
+        stores.sort_by_key(|s| s.kind.bits());
+        for w in stores.windows(2) {
+            if w[0].kind == w[1].kind {
+                bail!("duplicate precision tier {}", w[0].kind.name());
+            }
+            if w[0].n_layers != w[1].n_layers || w[0].n_experts != w[1].n_experts {
+                bail!(
+                    "tier {} is {}x{} experts but tier {} is {}x{}",
+                    w[0].kind.name(),
+                    w[0].n_layers,
+                    w[0].n_experts,
+                    w[1].kind.name(),
+                    w[1].n_layers,
+                    w[1].n_experts
+                );
+            }
+        }
+        let tiers = stores.iter().map(|s| s.kind).collect();
+        Ok(TieredStore { tiers, stores })
+    }
+
+    /// True when any tier is remote-backed (experts arrive over the wire
+    /// on first touch instead of living in host memory up front).
+    pub fn is_remote(&self) -> bool {
+        self.stores.iter().any(|s| s.is_remote())
+    }
+
+    /// The shared remote-fetch counters, when any tier is remote-backed.
+    /// All remote tiers share one transport, so the first hit is the set.
+    pub fn remote_counters(
+        &self,
+    ) -> Option<Arc<crate::memory::host_store::FetchCounters>> {
+        self.stores.iter().find_map(|s| s.fetch_counters().cloned())
+    }
+
     /// Parse a comma-separated tier list (`"int2,int4"`); names as in
     /// [`QuantKind::from_name`]. Returns `None` on any unknown name.
     pub fn parse_tiers(s: &str) -> Option<Vec<QuantKind>> {
@@ -251,6 +296,23 @@ mod tests {
         assert_eq!(
             ts.expert_transfer_bytes((1, 2), QuantKind::Int4),
             hs.expert_transfer_bytes((1, 2))
+        );
+    }
+
+    #[test]
+    fn from_parts_sorts_validates_and_matches_build() {
+        let cfg = micro_config();
+        let w = synthetic_weights(&cfg, 9);
+        let i8s = Arc::new(HostStore::build(&cfg, &w, QuantKind::Int8).unwrap());
+        let i2s = Arc::new(HostStore::build(&cfg, &w, QuantKind::Int2).unwrap());
+        let ts = TieredStore::from_parts(vec![Arc::clone(&i8s), Arc::clone(&i2s)]).unwrap();
+        assert_eq!(ts.tiers(), &[QuantKind::Int2, QuantKind::Int8]);
+        assert!(Arc::ptr_eq(ts.store(QuantKind::Int8), &i8s));
+        assert!(!ts.is_remote());
+        assert!(ts.remote_counters().is_none());
+        assert!(TieredStore::from_parts(vec![]).is_err());
+        assert!(
+            TieredStore::from_parts(vec![Arc::clone(&i2s), Arc::clone(&i2s)]).is_err()
         );
     }
 

@@ -56,7 +56,7 @@ use anyhow::{bail, Result};
 
 use crate::memory::device_cache::{DeviceCache, ResidentMeta};
 use crate::memory::faults::{FaultAction, FaultPlan};
-use crate::memory::host_store::{ExpertF32, HostStore};
+use crate::memory::host_store::{ExpertF32, FetchSource, HostStore};
 use crate::memory::platform::Platform;
 use crate::memory::quant::QuantKind;
 use crate::memory::sharded_cache::{DeviceId, DeviceSnapshot, ShardedCache};
@@ -613,6 +613,16 @@ pub struct TransferStats {
     pub tier_bytes: [AtomicU64; QuantKind::COUNT],
     /// Per-tier completed upgrades (by *target* tier).
     pub tier_upgrades: [AtomicU64; QuantKind::COUNT],
+    /// Wire bytes whose source copy was already host-resident when the
+    /// transfer was admitted. `local_bytes + remote_bytes == bytes`.
+    pub local_bytes: AtomicU64,
+    /// Wire bytes whose source copy the admitting lane first pulled from
+    /// a remote artifact store (docs/remote-store.md).
+    pub remote_bytes: AtomicU64,
+    /// Admits dropped because a remote fetch failed after its transport
+    /// retries — each one re-enters through the engine's fault pump
+    /// exactly like a flaky-lane drop.
+    pub remote_faults: AtomicU64,
 }
 
 /// Point-in-time per-tier transfer volumes, one entry per configured
@@ -623,6 +633,35 @@ pub struct TierSnapshot {
     pub transfers: u64,
     pub bytes: u64,
     pub upgrades: u64,
+}
+
+/// Point-in-time local-vs-remote sourcing counters (`ServerStats.source`,
+/// `BENCH_remote.json`). The first three live on [`TransferStats`] (wire
+/// bytes attributed by where the admitting lane found the source copy);
+/// the rest come from the remote store's shared
+/// [`crate::memory::host_store::FetchCounters`] and stay zero for an
+/// all-local engine.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SourceSnapshot {
+    /// Simulated-wire bytes sourced from an already host-resident copy.
+    pub local_bytes: u64,
+    /// Simulated-wire bytes whose source was fetched remotely at admit.
+    pub remote_bytes: u64,
+    /// Admits dropped into the fault pump by a failed remote fetch.
+    pub remote_faults: u64,
+    /// Successful artifact fetches over the wire.
+    pub fetches: u64,
+    /// Encoded artifact bytes those fetches moved (real network bytes,
+    /// not simulated-link bytes).
+    pub fetched_bytes: u64,
+    /// Wall-clock milliseconds spent inside artifact fetches.
+    pub fetch_ms: f64,
+    /// Transport-level retry attempts (below the engine's fault ladder).
+    pub retries: u64,
+    /// Responses rejected by chunk/manifest checksum verification.
+    pub checksum_failures: u64,
+    /// Connections re-established after a loss.
+    pub reconnects: u64,
 }
 
 /// Completed prefetches parked until the target layer consumes them —
@@ -1074,6 +1113,28 @@ impl TransferEngine {
                 }
             })
             .collect()
+    }
+
+    /// Local-vs-remote sourcing counters (`ServerStats.source`,
+    /// `BENCH_remote.json`): wire-byte attribution from [`TransferStats`]
+    /// merged with the remote store's fetch counters (zeros when every
+    /// tier is local).
+    pub fn source_snapshot(&self) -> SourceSnapshot {
+        let mut s = SourceSnapshot {
+            local_bytes: self.stats.local_bytes.load(Ordering::Relaxed),
+            remote_bytes: self.stats.remote_bytes.load(Ordering::Relaxed),
+            remote_faults: self.stats.remote_faults.load(Ordering::Relaxed),
+            ..SourceSnapshot::default()
+        };
+        if let Some(c) = self.tiers.remote_counters() {
+            s.fetches = c.fetches.load(Ordering::Relaxed);
+            s.fetched_bytes = c.fetched_bytes.load(Ordering::Relaxed);
+            s.fetch_ms = c.fetch_ns.load(Ordering::Relaxed) as f64 / 1e6;
+            s.retries = c.retries.load(Ordering::Relaxed);
+            s.checksum_failures = c.checksum_failures.load(Ordering::Relaxed);
+            s.reconnects = c.reconnects.load(Ordering::Relaxed);
+        }
+        s
     }
 
     /// In-flight transfers bound to one device shard (the per-device
@@ -1682,6 +1743,9 @@ struct Active {
     tiles: Vec<Arc<ExpertF32>>,
     tile_time: f64,
     bytes: usize,
+    /// Where the source copy came from when this transfer was admitted
+    /// (remote = the admitting lane pulled it over the wire just now).
+    source: FetchSource,
 }
 
 /// One comm lane. The unit of work is one *tile*: after every tile the
@@ -1773,15 +1837,27 @@ fn admit(ctx: &CommCtx, job: Job) -> Option<Active> {
             .is_some_and(|m| m.kind.bits() >= job.kind.bits()),
     };
     if satisfied {
+        // Resolve the full copy *before* claiming the ticket: with a
+        // remote-backed store the fallback dequantize may need a wire
+        // fetch, and a failed fetch must leave the ticket unclaimed so
+        // the fault pump can retry the job like any other drop.
+        let full = match ctx.cache.get(job.id) {
+            Some(f) => f,
+            None => {
+                let store = ctx.tiers.store(job.kind);
+                if store.try_fetch(job.id).is_err() {
+                    ctx.stats.remote_faults.fetch_add(1, Ordering::Relaxed);
+                    lock_unpoisoned(&ctx.dropped).push(job.id);
+                    return None;
+                }
+                Arc::new(store.dequantize(job.id))
+            }
+        };
         // First-finisher claim: a failover/retry duplicate of a job whose
         // original copy already retired the ticket must no-op entirely.
         let Some(ci) = ctx.in_flight.claim(job.id) else {
             return None;
         };
-        let full = ctx
-            .cache
-            .get(job.id)
-            .unwrap_or_else(|| Arc::new(ctx.tiers.store(job.kind).dequantize(job.id)));
         for t in 0..ctx.n_tiles {
             job.handle.publish_tile(t, Arc::clone(&full));
             ctx.completions.push(CompletionEvent {
@@ -1812,7 +1888,21 @@ fn admit(ctx: &CommCtx, job: Job) -> Option<Active> {
         return None;
     }
     let store = ctx.tiers.store(job.kind);
-    let bytes = store.get(job.id).size_bytes();
+    // Resolve the source copy. A local store always answers; a remote
+    // store may have to pull the artifact over the wire right here — its
+    // latency lands on this lane's clock, which is exactly where a
+    // cacheless node pays it. A fetch that fails (after the transport's
+    // own bounded retries) is reported like a flaky-lane drop: the ticket
+    // stays alive and the fault pump re-issues or fails the job through
+    // the ordinary retry → failover → degradation ladder.
+    let (bytes, source) = match store.try_fetch(job.id) {
+        Ok((q, source)) => (q.size_bytes(), source),
+        Err(_) => {
+            ctx.stats.remote_faults.fetch_add(1, Ordering::Relaxed);
+            lock_unpoisoned(&ctx.dropped).push(job.id);
+            return None;
+        }
+    };
     debug_assert_eq!(bytes, job.bytes, "request-time and admit-time bytes must agree");
     let total_time = ctx.platform.transfer_time(bytes, store.expert_bytes_f32) * ctx.time_scale;
     Some(Active {
@@ -1821,6 +1911,7 @@ fn admit(ctx: &CommCtx, job: Job) -> Option<Active> {
         tiles: Vec::with_capacity(ctx.n_tiles),
         tile_time: total_time / ctx.n_tiles as f64,
         bytes,
+        source,
     })
 }
 
@@ -1910,6 +2001,13 @@ fn finish(ctx: &CommCtx, a: Active) {
     let ti = a.job.kind.tier_index();
     ctx.stats.transfers.fetch_add(1, Ordering::Relaxed);
     ctx.stats.bytes.fetch_add(a.bytes as u64, Ordering::Relaxed);
+    // Byte-source attribution rides the claim win, so local_bytes +
+    // remote_bytes == bytes holds even when failover duplicates race.
+    let source_bytes = match a.source {
+        FetchSource::Local => &ctx.stats.local_bytes,
+        FetchSource::Remote => &ctx.stats.remote_bytes,
+    };
+    source_bytes.fetch_add(a.bytes as u64, Ordering::Relaxed);
     ctx.stats.tier_transfers[ti].fetch_add(1, Ordering::Relaxed);
     ctx.stats.tier_bytes[ti].fetch_add(a.bytes as u64, Ordering::Relaxed);
     ctx.lane_stats.transfers.fetch_add(1, Ordering::Relaxed);
@@ -2739,6 +2837,124 @@ mod tests {
         let low = engine.request_with_slack((1, 0), Priority::Prefetch, 0.0);
         assert_eq!(low.kind, QuantKind::Int2);
         engine.quiesce().unwrap();
+    }
+
+    // -- remote sourcing ------------------------------------------------------
+
+    /// In-process stand-in for `crate::net::remote::RemoteFetcher`: serves
+    /// clones from a local twin store, failing the first `fail_first`
+    /// calls (a deterministic schedule regardless of lane interleaving).
+    struct TwinFetcher {
+        twin: Arc<crate::memory::host_store::HostStore>,
+        calls: AtomicU64,
+        fail_first: u64,
+    }
+
+    impl crate::memory::host_store::ExpertFetcher for TwinFetcher {
+        fn fetch(
+            &self,
+            id: ExpertId,
+        ) -> std::result::Result<crate::memory::host_store::QuantExpert, String> {
+            let n = self.calls.fetch_add(1, Ordering::Relaxed) + 1;
+            if n <= self.fail_first {
+                return Err("injected fetch failure".into());
+            }
+            Ok(self.twin.get(id).clone())
+        }
+    }
+
+    fn setup_remote(kind: QuantKind, fail_first: u64) -> (Arc<TieredStore>, TransferEngine) {
+        let cfg = test_config();
+        let w = fake_weights(&cfg, 7);
+        let twin = Arc::new(HostStore::build(&cfg, &w, kind).unwrap());
+        let sizes: Vec<usize> = (0..cfg.n_layers)
+            .flat_map(|l| (0..cfg.n_experts).map(move |e| (l, e)))
+            .map(|id| twin.expert_transfer_bytes(id))
+            .collect();
+        let fetcher = Arc::new(TwinFetcher {
+            twin: Arc::clone(&twin),
+            calls: AtomicU64::new(0),
+            fail_first,
+        });
+        let remote = Arc::new(
+            HostStore::remote(
+                kind,
+                cfg.n_layers,
+                cfg.n_experts,
+                cfg.expert_bytes_f32(),
+                sizes,
+                fetcher,
+                Arc::new(crate::memory::host_store::FetchCounters::default()),
+            )
+            .unwrap(),
+        );
+        let tiers = Arc::new(TieredStore::single(remote));
+        let cache = Arc::new(DeviceCache::new(vec![8, 8]));
+        let engine = TransferEngine::with_tiers(
+            Arc::clone(&tiers),
+            PrecisionPolicy::Fixed,
+            Arc::new(ShardedCache::single(cache)),
+            Platform::preset("instant").unwrap(),
+            4,
+            0.0,
+            LaneConfig::default(),
+        );
+        (tiers, engine)
+    }
+
+    #[test]
+    fn remote_source_attribution_conserves_bytes() {
+        let (tiers, engine) = setup_remote(QuantKind::Int4, 0);
+        // first touch: every byte is remote-sourced
+        let h1 = engine.request((0, 0), Priority::OnDemand);
+        let h2 = engine.request((1, 2), Priority::OnDemand);
+        h1.wait_full();
+        h2.wait_full();
+        engine.quiesce().unwrap();
+        let s = engine.source_snapshot();
+        assert_eq!(s.remote_bytes, (h1.bytes + h2.bytes) as u64);
+        assert_eq!(s.local_bytes, 0);
+        assert_eq!(s.remote_faults, 0);
+        // re-transfer of a pinned expert is local-sourced
+        let h3 = engine.request((0, 0), Priority::OnDemand);
+        h3.wait_full();
+        engine.quiesce().unwrap();
+        let s = engine.source_snapshot();
+        assert_eq!(s.local_bytes, h3.bytes as u64);
+        assert_eq!(
+            s.local_bytes + s.remote_bytes,
+            engine.stats.bytes.load(Ordering::Relaxed),
+            "source split must conserve the aggregate byte gauge"
+        );
+        // remote decode is bit-identical to the twin store's
+        let direct = tiers.store(QuantKind::Int4).dequantize((0, 0));
+        assert_eq!(h3.wait_full().w1.data, direct.w1.data);
+    }
+
+    #[test]
+    fn failed_remote_fetch_feeds_fault_pump_and_retries() {
+        // the first fetch fails; the fault pump must re-issue the dropped
+        // admit (quiesce drives the pump) and the retry's fetch succeeds
+        let (_tiers, engine) = setup_remote(QuantKind::Int4, 1);
+        let handles: Vec<_> = (0..4)
+            .map(|e| engine.request((0, e), Priority::OnDemand))
+            .collect();
+        let report = engine.quiesce().unwrap();
+        for h in &handles {
+            h.wait_full();
+        }
+        let s = engine.source_snapshot();
+        assert_eq!(s.remote_faults, 1, "exactly one admit hit the failure");
+        assert!(report.retries >= 1, "drop re-issued through the fault pump");
+        assert_eq!(
+            engine.stats.transfers.load(Ordering::Relaxed),
+            4,
+            "every expert still lands exactly once"
+        );
+        assert_eq!(
+            s.local_bytes + s.remote_bytes,
+            engine.stats.bytes.load(Ordering::Relaxed)
+        );
     }
 
     #[test]

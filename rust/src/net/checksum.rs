@@ -1,0 +1,87 @@
+//! FNV-1a 64-bit checksums for manifest and artifact-chunk verification.
+//!
+//! The remote store needs a checksum that is (a) dependency-free, (b) fast
+//! enough to run over every fetched chunk on the comm lane, and (c) strong
+//! enough that any single-byte corruption is detected with certainty —
+//! FNV-1a mixes every input byte into all 64 state bits, so two inputs
+//! differing in one byte can never collide at the same length (the
+//! property rust/tests/remote.rs locks down). This is *integrity* against
+//! line noise and truncation, not *authentication*: a deliberate attacker
+//! can forge FNV, which is fine for the trusted-cluster artifact fetch
+//! this subsystem models (docs/remote-store.md#integrity).
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64 of `bytes` in one call.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = Hasher::new();
+    h.update(bytes);
+    h.finish()
+}
+
+/// Incremental FNV-1a 64 — feed bytes as they stream in, then `finish`.
+#[derive(Clone)]
+pub struct Hasher {
+    state: u64,
+}
+
+impl Hasher {
+    pub fn new() -> Hasher {
+        Hasher { state: FNV_OFFSET }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.state;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        self.state = h;
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+impl Default for Hasher {
+    fn default() -> Hasher {
+        Hasher::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Reference vectors from the FNV specification.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn incremental_matches_one_shot() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let mut h = Hasher::new();
+        for chunk in data.chunks(37) {
+            h.update(chunk);
+        }
+        assert_eq!(h.finish(), fnv1a(&data));
+    }
+
+    #[test]
+    fn any_single_byte_flip_changes_hash() {
+        let data: Vec<u8> = (0..512u32).map(|i| (i * 31 % 251) as u8).collect();
+        let base = fnv1a(&data);
+        let mut flipped = data.clone();
+        for i in 0..data.len() {
+            flipped[i] ^= 0x5a;
+            assert_ne!(fnv1a(&flipped), base, "flip at {i} undetected");
+            flipped[i] = data[i];
+        }
+    }
+}

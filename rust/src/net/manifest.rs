@@ -1,0 +1,516 @@
+//! Versioned, checksum-verified manifest of every `(tier, layer, expert)`
+//! artifact — plus the artifact byte codec itself.
+//!
+//! The manifest is the remote store's source of truth: for each precision
+//! tier and each expert it records where the encoded artifact lives in the
+//! server's blob (`offset`, `len`), what the transfer engine should charge
+//! for it on the simulated link (`transfer_bytes` — exactly the local
+//! twin's [`QuantExpert::size_bytes`], which is what keeps remote runs
+//! bit-identical in the clock domain), and an FNV-1a checksum per
+//! fixed-size chunk so corruption is localized and detected before any
+//! byte reaches a cache. The serialized form carries its own trailing
+//! checksum; a manifest that fails it never parses. Layout spec:
+//! docs/remote-store.md#manifest.
+
+use crate::memory::host_store::QuantExpert;
+use crate::memory::quant::{QuantKind, QuantTensor, BLOCK};
+use crate::net::checksum::fnv1a;
+use crate::net::wire::WireError;
+
+/// Manifest codec version this build reads and writes.
+pub const MANIFEST_VERSION: u16 = 1;
+
+/// Serialized-manifest magic: `b"AMMF"` (AdapMoE ManiFest), little-endian.
+pub const MANIFEST_MAGIC: u32 = u32::from_le_bytes(*b"AMMF");
+
+/// Default chunk size for artifact checksums (64 KiB).
+pub const DEFAULT_CHUNK: u32 = 64 << 10;
+
+/// One `(tier, layer, expert)` artifact's location and verification data.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    /// Byte offset of the encoded artifact in the server blob.
+    pub offset: u64,
+    /// Encoded length in bytes.
+    pub len: u64,
+    /// What the transfer engine charges on the simulated link — the local
+    /// twin's `QuantExpert::size_bytes()`, *not* the encoded length (the
+    /// encoding adds framing the link-model shouldn't see).
+    pub transfer_bytes: u64,
+    /// FNV-1a 64 per `chunk_size` slice of the encoded bytes (last chunk
+    /// ragged). Verified chunk-by-chunk after every fetch.
+    pub chunks: Vec<u64>,
+}
+
+impl ArtifactEntry {
+    /// Verify `bytes` (the full encoded artifact) against the per-chunk
+    /// checksums. Returns the index of the first bad chunk.
+    pub fn verify(&self, bytes: &[u8], chunk_size: u32) -> Result<(), usize> {
+        if bytes.len() as u64 != self.len {
+            return Err(0);
+        }
+        let cs = chunk_size as usize;
+        let n_chunks = if self.len == 0 { 0 } else { bytes.len().div_ceil(cs) };
+        if n_chunks != self.chunks.len() {
+            return Err(0);
+        }
+        for (i, chunk) in bytes.chunks(cs).enumerate() {
+            if fnv1a(chunk) != self.chunks[i] {
+                return Err(i);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The full artifact index a server publishes and a cacheless coordinator
+/// runs against.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    /// f32 bytes of one expert — the platform-calibration denominator.
+    pub expert_bytes_f32: u64,
+    /// Chunk size the per-artifact checksums were computed over.
+    pub chunk_size: u32,
+    /// Precision tiers, ascending bits, matching a `TieredStore`'s order.
+    pub tiers: Vec<QuantKind>,
+    /// Entries in tier-major order:
+    /// `entries[t * n_layers * n_experts + layer * n_experts + expert]`.
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Entry index for `(kind, layer, expert)`; `None` if the kind is not
+    /// a published tier.
+    pub fn entry(&self, kind: QuantKind, layer: usize, expert: usize) -> Option<&ArtifactEntry> {
+        let t = self.tiers.iter().position(|&k| k == kind)?;
+        if layer >= self.n_layers || expert >= self.n_experts {
+            return None;
+        }
+        let per_tier = self.n_layers * self.n_experts;
+        Some(&self.entries[t * per_tier + layer * self.n_experts + expert])
+    }
+
+    /// Per-expert `transfer_bytes` table for one tier, in the
+    /// `layer * n_experts + expert` order [`HostStore::remote`] wants.
+    pub fn tier_sizes(&self, kind: QuantKind) -> Option<Vec<usize>> {
+        let t = self.tiers.iter().position(|&k| k == kind)?;
+        let per_tier = self.n_layers * self.n_experts;
+        Some(
+            self.entries[t * per_tier..(t + 1) * per_tier]
+                .iter()
+                .map(|e| e.transfer_bytes as usize)
+                .collect(),
+        )
+    }
+
+    /// Serialize: magic, version, shape, tiers, entries, then an FNV-1a
+    /// checksum of everything before it. Little-endian throughout.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&MANIFEST_MAGIC.to_le_bytes());
+        out.extend_from_slice(&MANIFEST_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.n_layers as u32).to_le_bytes());
+        out.extend_from_slice(&(self.n_experts as u32).to_le_bytes());
+        out.extend_from_slice(&(self.d_model as u32).to_le_bytes());
+        out.extend_from_slice(&(self.d_ff as u32).to_le_bytes());
+        out.extend_from_slice(&self.expert_bytes_f32.to_le_bytes());
+        out.extend_from_slice(&self.chunk_size.to_le_bytes());
+        out.push(self.tiers.len() as u8);
+        for t in &self.tiers {
+            out.push(t.tier_index() as u8);
+        }
+        out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for e in &self.entries {
+            out.extend_from_slice(&e.offset.to_le_bytes());
+            out.extend_from_slice(&e.len.to_le_bytes());
+            out.extend_from_slice(&e.transfer_bytes.to_le_bytes());
+            out.extend_from_slice(&(e.chunks.len() as u32).to_le_bytes());
+            for c in &e.chunks {
+                out.extend_from_slice(&c.to_le_bytes());
+            }
+        }
+        let sum = fnv1a(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Parse + verify a serialized manifest. The trailing checksum is
+    /// checked first, so *any* single-byte corruption anywhere in the
+    /// buffer is rejected before field parsing begins.
+    pub fn decode(bytes: &[u8]) -> Result<Manifest, WireError> {
+        if bytes.len() < 8 {
+            return Err(WireError::ShortRead { want: 8, got: bytes.len() });
+        }
+        let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+        let want = u64::from_le_bytes(sum_bytes.try_into().expect("8-byte split"));
+        let got = fnv1a(body);
+        if got != want {
+            return Err(WireError::Corrupt(format!(
+                "manifest checksum {got:#018x} != {want:#018x}"
+            )));
+        }
+        let mut r = Reader { buf: body, pos: 0 };
+        let magic = r.u32()?;
+        if magic != MANIFEST_MAGIC {
+            return Err(WireError::BadFrame(format!("manifest magic {magic:#010x}")));
+        }
+        let version = r.u16()?;
+        if version != MANIFEST_VERSION {
+            return Err(WireError::VersionMismatch { got: version, want: MANIFEST_VERSION });
+        }
+        let n_layers = r.u32()? as usize;
+        let n_experts = r.u32()? as usize;
+        let d_model = r.u32()? as usize;
+        let d_ff = r.u32()? as usize;
+        let expert_bytes_f32 = r.u64()?;
+        let chunk_size = r.u32()?;
+        if chunk_size == 0 {
+            return Err(WireError::Corrupt("manifest chunk_size 0".into()));
+        }
+        let n_tiers = r.u8()? as usize;
+        let mut tiers = Vec::with_capacity(n_tiers);
+        for _ in 0..n_tiers {
+            let idx = r.u8()?;
+            tiers.push(kind_from_tier_index(idx)?);
+        }
+        for w in tiers.windows(2) {
+            if w[0].bits() >= w[1].bits() {
+                return Err(WireError::Corrupt(format!(
+                    "manifest tiers not ascending: {} then {}",
+                    w[0].name(),
+                    w[1].name()
+                )));
+            }
+        }
+        let n_entries = r.u32()? as usize;
+        if n_entries != n_tiers * n_layers * n_experts {
+            return Err(WireError::Corrupt(format!(
+                "manifest has {n_entries} entries, shape wants {}",
+                n_tiers * n_layers * n_experts
+            )));
+        }
+        let mut entries = Vec::with_capacity(n_entries);
+        for _ in 0..n_entries {
+            let offset = r.u64()?;
+            let len = r.u64()?;
+            let transfer_bytes = r.u64()?;
+            let n_chunks = r.u32()? as usize;
+            let want_chunks = if len == 0 { 0 } else { (len as usize).div_ceil(chunk_size as usize) };
+            if n_chunks != want_chunks {
+                return Err(WireError::Corrupt(format!(
+                    "entry of {len} bytes carries {n_chunks} chunk sums, wants {want_chunks}"
+                )));
+            }
+            let mut chunks = Vec::with_capacity(n_chunks);
+            for _ in 0..n_chunks {
+                chunks.push(r.u64()?);
+            }
+            entries.push(ArtifactEntry { offset, len, transfer_bytes, chunks });
+        }
+        if r.pos != body.len() {
+            return Err(WireError::Corrupt(format!(
+                "{} trailing manifest bytes",
+                body.len() - r.pos
+            )));
+        }
+        Ok(Manifest {
+            n_layers,
+            n_experts,
+            d_model,
+            d_ff,
+            expert_bytes_f32,
+            chunk_size,
+            tiers,
+            entries,
+        })
+    }
+}
+
+/// Inverse of [`QuantKind::tier_index`].
+fn kind_from_tier_index(idx: u8) -> Result<QuantKind, WireError> {
+    match idx {
+        0 => Ok(QuantKind::Int2),
+        1 => Ok(QuantKind::Int4),
+        2 => Ok(QuantKind::Int8),
+        3 => Ok(QuantKind::F32),
+        _ => Err(WireError::Corrupt(format!("unknown tier index {idx}"))),
+    }
+}
+
+/// Bounds-checked little-endian reader over a byte slice.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Reader<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8], WireError> {
+        // `n` comes off the wire; compare without `pos + n` so a huge
+        // length field cannot overflow the bound check.
+        if n > self.buf.len() - self.pos {
+            return Err(WireError::ShortRead {
+                want: n,
+                got: self.buf.len() - self.pos,
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Artifact byte codec: one QuantExpert <-> encoded bytes.
+// ---------------------------------------------------------------------------
+
+fn encode_tensor(out: &mut Vec<u8>, t: &QuantTensor) {
+    out.push(t.kind.tier_index() as u8);
+    out.extend_from_slice(&(t.len as u64).to_le_bytes());
+    out.extend_from_slice(&(t.scales.len() as u32).to_le_bytes());
+    for s in &t.scales {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    out.extend_from_slice(&(t.mins.len() as u32).to_le_bytes());
+    for m in &t.mins {
+        out.extend_from_slice(&m.to_le_bytes());
+    }
+    out.extend_from_slice(&(t.data.len() as u64).to_le_bytes());
+    out.extend_from_slice(&t.data);
+}
+
+fn decode_tensor(r: &mut Reader) -> Result<QuantTensor, WireError> {
+    let kind = kind_from_tier_index(r.u8()?)?;
+    let len = r.u64()? as usize;
+    // Every count below is implied by (kind, len); validate against the
+    // codec's own invariants *before* allocating, so a lying length field
+    // is a typed error rather than a giant allocation.
+    let want_blocks = if kind == QuantKind::F32 { 0 } else { len.div_ceil(BLOCK) };
+    let n_scales = r.u32()? as usize;
+    if n_scales != want_blocks {
+        return Err(WireError::Corrupt(format!(
+            "{} tensor of {len} values claims {n_scales} scale blocks, wants {want_blocks}",
+            kind.name()
+        )));
+    }
+    let mut scales = Vec::with_capacity(n_scales);
+    for _ in 0..n_scales {
+        scales.push(f32::from_le_bytes(r.take(4)?.try_into().expect("4 bytes")));
+    }
+    let n_mins = r.u32()? as usize;
+    if n_mins != want_blocks {
+        return Err(WireError::Corrupt(format!(
+            "{} tensor of {len} values claims {n_mins} min blocks, wants {want_blocks}",
+            kind.name()
+        )));
+    }
+    let mut mins = Vec::with_capacity(n_mins);
+    for _ in 0..n_mins {
+        mins.push(f32::from_le_bytes(r.take(4)?.try_into().expect("4 bytes")));
+    }
+    let n_data = r.u64()? as usize;
+    if n_data != kind.bytes_for(len) {
+        return Err(WireError::Corrupt(format!(
+            "{} tensor of {len} values claims {n_data} code bytes, wants {}",
+            kind.name(),
+            kind.bytes_for(len)
+        )));
+    }
+    let data = r.take(n_data)?.to_vec();
+    Ok(QuantTensor { kind, len, scales, mins, data })
+}
+
+/// Serialize one quantized expert as an artifact payload.
+pub fn encode_expert(q: &QuantExpert) -> Vec<u8> {
+    let mut out = Vec::with_capacity(q.size_bytes() + 64);
+    out.extend_from_slice(&(q.d as u32).to_le_bytes());
+    out.extend_from_slice(&(q.f as u32).to_le_bytes());
+    encode_tensor(&mut out, &q.w1);
+    encode_tensor(&mut out, &q.w3);
+    encode_tensor(&mut out, &q.w2);
+    out
+}
+
+/// Decode an artifact payload back into a quantized expert, validating
+/// every length field against the codec's own invariants. Chunk checksums
+/// are verified *before* this runs ([`ArtifactEntry::verify`]), so a
+/// decode failure here means a server-side bug, not line corruption — it
+/// is still surfaced as a retryable `Corrupt` so a flaky server can't
+/// wedge a lane.
+pub fn decode_expert(bytes: &[u8]) -> Result<QuantExpert, WireError> {
+    let mut r = Reader { buf: bytes, pos: 0 };
+    let d = r.u32()? as usize;
+    let f = r.u32()? as usize;
+    let w1 = decode_tensor(&mut r)?;
+    let w3 = decode_tensor(&mut r)?;
+    let w2 = decode_tensor(&mut r)?;
+    for (name, t, want) in [("w1", &w1, d * f), ("w3", &w3, d * f), ("w2", &w2, f * d)] {
+        if t.len != want {
+            return Err(WireError::Corrupt(format!(
+                "{name} has {} values, dims {d}x{f} want {want}",
+                t.len
+            )));
+        }
+    }
+    if r.pos != bytes.len() {
+        return Err(WireError::Corrupt(format!(
+            "{} trailing artifact bytes",
+            bytes.len() - r.pos
+        )));
+    }
+    Ok(QuantExpert { w1, w3, w2, d, f })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::host_store::HostStore;
+    use crate::testutil::{micro_config, synthetic_weights};
+
+    fn sample_manifest() -> Manifest {
+        Manifest {
+            n_layers: 2,
+            n_experts: 3,
+            d_model: 8,
+            d_ff: 16,
+            expert_bytes_f32: 4096,
+            chunk_size: 32,
+            tiers: vec![QuantKind::Int2, QuantKind::Int8],
+            entries: (0..12u64)
+                .map(|i| ArtifactEntry {
+                    offset: i * 100,
+                    len: 70,
+                    transfer_bytes: 64 + i,
+                    chunks: vec![i, i + 1, i + 2], // ceil(70/32) = 3
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let m = sample_manifest();
+        let enc = m.encode();
+        let dec = Manifest::decode(&enc).unwrap();
+        assert_eq!(dec, m);
+    }
+
+    #[test]
+    fn manifest_every_single_byte_corruption_detected() {
+        let enc = sample_manifest().encode();
+        let mut bad = enc.clone();
+        for i in 0..enc.len() {
+            bad[i] ^= 0x01;
+            assert!(
+                Manifest::decode(&bad).is_err(),
+                "flip at byte {i} decoded successfully"
+            );
+            bad[i] = enc[i];
+        }
+    }
+
+    #[test]
+    fn manifest_truncation_detected() {
+        let enc = sample_manifest().encode();
+        for cut in [0, 4, 7, enc.len() / 2, enc.len() - 1] {
+            assert!(Manifest::decode(&enc[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn wrong_version_is_typed() {
+        let m = sample_manifest();
+        let mut enc = m.encode();
+        // bump version field (offset 4..6), then re-seal the checksum
+        enc[4] = 9;
+        let body_len = enc.len() - 8;
+        let sum = crate::net::checksum::fnv1a(&enc[..body_len]);
+        enc[body_len..].copy_from_slice(&sum.to_le_bytes());
+        assert!(matches!(
+            Manifest::decode(&enc),
+            Err(WireError::VersionMismatch { got: 9, want: MANIFEST_VERSION })
+        ));
+    }
+
+    #[test]
+    fn entry_lookup_and_tier_sizes() {
+        let m = sample_manifest();
+        let per_tier = m.n_layers * m.n_experts;
+        let e = m.entry(QuantKind::Int8, 1, 2).unwrap();
+        assert_eq!(e.offset, ((per_tier + 5) * 100) as u64);
+        assert!(m.entry(QuantKind::Int4, 0, 0).is_none());
+        assert!(m.entry(QuantKind::Int8, 2, 0).is_none());
+        let sizes = m.tier_sizes(QuantKind::Int2).unwrap();
+        assert_eq!(sizes.len(), per_tier);
+        assert_eq!(sizes[0], 64);
+        assert!(m.tier_sizes(QuantKind::F32).is_none());
+    }
+
+    #[test]
+    fn entry_verify_catches_chunk_corruption() {
+        let bytes: Vec<u8> = (0..70u8).collect();
+        let chunks = bytes.chunks(32).map(fnv1a).collect();
+        let e = ArtifactEntry { offset: 0, len: 70, transfer_bytes: 70, chunks };
+        assert_eq!(e.verify(&bytes, 32), Ok(()));
+        let mut bad = bytes.clone();
+        bad[40] ^= 0x80; // second chunk
+        assert_eq!(e.verify(&bad, 32), Err(1));
+        assert!(e.verify(&bytes[..69], 32).is_err());
+    }
+
+    #[test]
+    fn expert_codec_roundtrips_every_kind() {
+        let cfg = micro_config();
+        let w = synthetic_weights(&cfg, 11);
+        for kind in [QuantKind::Int2, QuantKind::Int4, QuantKind::Int8, QuantKind::F32] {
+            let hs = HostStore::build(&cfg, &w, kind).unwrap();
+            let q = hs.get((0, 1));
+            let enc = encode_expert(q);
+            let dec = decode_expert(&enc).unwrap();
+            assert_eq!(dec.d, q.d);
+            assert_eq!(dec.f, q.f);
+            for (a, b) in [(&dec.w1, &q.w1), (&dec.w3, &q.w3), (&dec.w2, &q.w2)] {
+                assert_eq!(a.kind, b.kind);
+                assert_eq!(a.len, b.len);
+                assert_eq!(a.scales, b.scales);
+                assert_eq!(a.mins, b.mins);
+                assert_eq!(a.data, b.data);
+            }
+        }
+    }
+
+    #[test]
+    fn expert_codec_rejects_truncation_and_dim_lies() {
+        let cfg = micro_config();
+        let w = synthetic_weights(&cfg, 12);
+        let hs = HostStore::build(&cfg, &w, QuantKind::Int4).unwrap();
+        let enc = encode_expert(hs.get((0, 0)));
+        assert!(decode_expert(&enc[..enc.len() - 1]).is_err());
+        let mut grown = enc.clone();
+        grown.push(0);
+        assert!(decode_expert(&grown).is_err());
+        // lie about d: w1.len no longer matches d*f
+        let mut lied = enc.clone();
+        lied[0] = lied[0].wrapping_add(1);
+        assert!(decode_expert(&lied).is_err());
+    }
+}

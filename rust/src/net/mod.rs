@@ -1,0 +1,38 @@
+//! Remote expert store: multi-node expert fetch over the wire.
+//!
+//! The offloading hierarchy historically ended at the local
+//! [`crate::memory::host_store::HostStore`] — every byte a transfer moved
+//! was already in this process's memory. This module family opens the
+//! distributed regime (OD-MoE's cacheless edge nodes, the artifact
+//! services of production MoE fleets — PAPERS.md): a coordinator started
+//! with `--remote <addr>` holds *no* expert weights; each expert's bytes
+//! are pulled from an artifact server on first use, verified, decoded,
+//! and pinned host-side, after which everything downstream (tiered
+//! transfers, caches, upgrade/retry/failover ladders) behaves exactly as
+//! if the store had been local — bit-for-bit.
+//!
+//! * [`checksum`] — FNV-1a 64 for manifest + chunk integrity.
+//! * [`manifest`] — the versioned `(tier, layer, expert)` artifact index
+//!   and the artifact byte codec.
+//! * [`wire`] — length-prefixed TCP frames, typed [`wire::WireError`]s,
+//!   and the [`wire::RangedReader`] client.
+//! * [`server`] — [`server::ArtifactImage`] (a frozen `TieredStore`) and
+//!   [`server::StoreServer`] (the accept loop `examples/expert_server.rs`
+//!   wraps), plus deterministic [`server::ChaosKnobs`] misbehaviour.
+//! * [`remote`] — [`remote::RemoteClient`] retry/reconnect policy,
+//!   [`remote::RemoteFetcher`] (the `ExpertFetcher` impl), and
+//!   [`remote::connect_store`] (what the engine calls).
+//!
+//! Format, protocol, failure semantics and the determinism argument are
+//! specified in docs/remote-store.md.
+
+pub mod checksum;
+pub mod manifest;
+pub mod remote;
+pub mod server;
+pub mod wire;
+
+pub use manifest::{ArtifactEntry, Manifest};
+pub use remote::{connect_store, RemoteClient, RemoteFetcher};
+pub use server::{ArtifactImage, ChaosKnobs, StoreServer};
+pub use wire::{RangedReader, WireError};

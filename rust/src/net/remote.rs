@@ -1,0 +1,341 @@
+//! Remote expert store client: verified artifact fetch over the wire.
+//!
+//! [`RemoteClient`] owns one lazily-(re)connected [`RangedReader`] and the
+//! retry taxonomy: a `Corrupt` response (chunk checksum mismatch) retries
+//! on the same connection — the socket is fine, the payload was not —
+//! while `Io`/`ShortRead` drop the socket and reconnect. Both paths are
+//! *bounded*; when attempts run out the error propagates to
+//! [`RemoteFetcher::fetch`], which surfaces it as the retryable `Err` the
+//! transfer engine's fault pump treats like a dropped job (retry ladder →
+//! failover → degradation, docs/fault-tolerance.md). So a flaky artifact
+//! server degrades service exactly like a flaky PCIe lane — no new
+//! failure semantics, just a new fault source.
+//!
+//! [`connect_store`] is the one-call entry point `Engine::new` uses for
+//! `--remote <addr>`: fetch + verify the manifest, then build one
+//! lazily-fetching [`HostStore::remote`] per published tier, all sharing
+//! this client and one [`FetchCounters`] set.
+
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::memory::host_store::{ExpertFetcher, FetchCounters, HostStore, QuantExpert};
+use crate::memory::quant::QuantKind;
+use crate::memory::tiered_store::TieredStore;
+use crate::model::ExpertId;
+use crate::net::manifest::{decode_expert, ArtifactEntry, Manifest};
+use crate::net::wire::{RangedReader, WireError};
+
+/// Dial + per-request I/O timeout.
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Fetch attempts per artifact before the failure propagates to the
+/// engine's own fault ladder (which has retries of its own — transport
+/// attempts stay small so a dead server fails fast).
+const MAX_ATTEMPTS: u32 = 3;
+
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// One connection to an artifact server, with bounded retry/reconnect.
+pub struct RemoteClient {
+    addr: String,
+    conn: Option<RangedReader>,
+    counters: Arc<FetchCounters>,
+    max_attempts: u32,
+}
+
+impl RemoteClient {
+    /// Lazy client — no socket until the first request.
+    pub fn new(addr: &str, counters: Arc<FetchCounters>) -> RemoteClient {
+        RemoteClient {
+            addr: addr.to_string(),
+            conn: None,
+            counters,
+            max_attempts: MAX_ATTEMPTS,
+        }
+    }
+
+    #[cfg(test)]
+    pub(crate) fn with_attempts(mut self, n: u32) -> RemoteClient {
+        self.max_attempts = n.max(1);
+        self
+    }
+
+    fn conn(&mut self) -> Result<&mut RangedReader, WireError> {
+        if self.conn.is_none() {
+            let fresh = RangedReader::connect(&self.addr, IO_TIMEOUT)?;
+            self.conn = Some(fresh);
+        }
+        Ok(self.conn.as_mut().expect("just connected"))
+    }
+
+    /// Classify a failure for the retry loop: drop the socket when the
+    /// connection itself is suspect, count what the counters track, and
+    /// say whether another attempt could help.
+    fn note_failure(&mut self, err: &WireError) -> bool {
+        use std::sync::atomic::Ordering;
+        if err.connection_lost() {
+            self.conn = None;
+            self.counters.reconnects.fetch_add(1, Ordering::Relaxed);
+        }
+        if matches!(err, WireError::Corrupt(_)) {
+            self.counters.checksum_failures.fetch_add(1, Ordering::Relaxed);
+        }
+        err.retryable()
+    }
+
+    /// Fetch + verify the manifest (retrying like any other request).
+    pub fn manifest(&mut self) -> Result<Manifest, WireError> {
+        self.with_retry(|conn| {
+            let bytes = conn.fetch_manifest()?;
+            Manifest::decode(&bytes)
+        })
+    }
+
+    /// Fetch one artifact's bytes and verify every chunk checksum. The
+    /// returned bytes are exactly `entry.len` long and chunk-verified —
+    /// but not yet decoded ([`RemoteFetcher`] does that).
+    pub fn fetch_artifact(
+        &mut self,
+        entry: &ArtifactEntry,
+        chunk_size: u32,
+    ) -> Result<Vec<u8>, WireError> {
+        self.with_retry(|conn| {
+            let bytes = conn.fetch_range(entry.offset, entry.len)?;
+            if let Err(chunk) = entry.verify(&bytes, chunk_size) {
+                return Err(WireError::Corrupt(format!(
+                    "artifact chunk {chunk} failed checksum"
+                )));
+            }
+            Ok(bytes)
+        })
+    }
+
+    fn with_retry<T>(
+        &mut self,
+        mut op: impl FnMut(&mut RangedReader) -> Result<T, WireError>,
+    ) -> Result<T, WireError> {
+        use std::sync::atomic::Ordering;
+        let mut attempt = 0;
+        loop {
+            attempt += 1;
+            let result = self.conn().and_then(&mut op);
+            let err = match result {
+                Ok(v) => return Ok(v),
+                Err(e) => e,
+            };
+            let retryable = self.note_failure(&err);
+            if !retryable || attempt >= self.max_attempts {
+                return Err(err);
+            }
+            self.counters.retries.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// [`ExpertFetcher`] for one precision tier, backed by a shared
+/// [`RemoteClient`]. Looks the artifact up in the manifest, pulls +
+/// verifies its bytes, decodes, and sanity-checks the decoded tier.
+pub struct RemoteFetcher {
+    client: Arc<Mutex<RemoteClient>>,
+    manifest: Arc<Manifest>,
+    kind: QuantKind,
+    counters: Arc<FetchCounters>,
+}
+
+impl RemoteFetcher {
+    pub fn new(
+        client: Arc<Mutex<RemoteClient>>,
+        manifest: Arc<Manifest>,
+        kind: QuantKind,
+        counters: Arc<FetchCounters>,
+    ) -> RemoteFetcher {
+        RemoteFetcher { client, manifest, kind, counters }
+    }
+}
+
+impl ExpertFetcher for RemoteFetcher {
+    fn fetch(&self, id: ExpertId) -> Result<QuantExpert, String> {
+        use std::sync::atomic::Ordering;
+        let entry = self
+            .manifest
+            .entry(self.kind, id.0, id.1)
+            .ok_or_else(|| {
+                format!("manifest has no {} artifact for ({},{})", self.kind.name(), id.0, id.1)
+            })?;
+        let start = Instant::now();
+        let fetched = lock_unpoisoned(&self.client)
+            .fetch_artifact(entry, self.manifest.chunk_size)
+            .map_err(|e| e.to_string());
+        self.counters
+            .fetch_ns
+            .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let bytes = fetched?;
+        let q = decode_expert(&bytes).map_err(|e| e.to_string())?;
+        for (name, t) in [("w1", &q.w1), ("w3", &q.w3), ("w2", &q.w2)] {
+            if t.kind != self.kind {
+                return Err(format!(
+                    "artifact for ({},{}) decodes {name} as {}, wanted {}",
+                    id.0,
+                    id.1,
+                    t.kind.name(),
+                    self.kind.name()
+                ));
+            }
+        }
+        self.counters.fetches.fetch_add(1, Ordering::Relaxed);
+        self.counters.fetched_bytes.fetch_add(entry.len, Ordering::Relaxed);
+        Ok(q)
+    }
+}
+
+/// Connect to an artifact server and assemble the cacheless store:
+/// manifest fetch + verify, then one [`HostStore::remote`] per published
+/// tier — every tier sharing one client connection and one counter set.
+/// Returns the tiered store plus the manifest (the engine cross-checks
+/// its shape against the local `ModelConfig`).
+pub fn connect_store(addr: &str) -> Result<(TieredStore, Arc<Manifest>), WireError> {
+    let counters = Arc::new(FetchCounters::default());
+    let mut client = RemoteClient::new(addr, Arc::clone(&counters));
+    let manifest = Arc::new(client.manifest()?);
+    let client = Arc::new(Mutex::new(client));
+    let mut stores = Vec::with_capacity(manifest.tiers.len());
+    for &kind in &manifest.tiers {
+        let sizes = manifest
+            .tier_sizes(kind)
+            .expect("tier list and entries are shape-checked at decode");
+        let fetcher = Arc::new(RemoteFetcher::new(
+            Arc::clone(&client),
+            Arc::clone(&manifest),
+            kind,
+            Arc::clone(&counters),
+        ));
+        let store = HostStore::remote(
+            kind,
+            manifest.n_layers,
+            manifest.n_experts,
+            manifest.expert_bytes_f32 as usize,
+            sizes,
+            fetcher as Arc<dyn ExpertFetcher>,
+            Arc::clone(&counters),
+        )
+        .map_err(|e| WireError::Corrupt(format!("manifest shape: {e}")))?;
+        stores.push(Arc::new(store));
+    }
+    let tiered = TieredStore::from_parts(stores)
+        .map_err(|e| WireError::Corrupt(format!("manifest tiers: {e}")))?;
+    Ok((tiered, manifest))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::server::{ArtifactImage, ChaosKnobs, StoreServer};
+    use crate::testutil::{micro_config, synthetic_weights};
+
+    fn serve(knobs: ChaosKnobs) -> (StoreServer, Arc<ArtifactImage>) {
+        let cfg = micro_config();
+        let w = synthetic_weights(&cfg, 31);
+        let ts = TieredStore::build(&cfg, &w, &[QuantKind::Int2, QuantKind::Int8]).unwrap();
+        let img = Arc::new(ArtifactImage::from_tiered_chunked(&ts, cfg.d_model, cfg.d_ff, 128));
+        let srv = StoreServer::spawn_chaotic(Arc::clone(&img), "127.0.0.1:0", knobs).unwrap();
+        (srv, img)
+    }
+
+    #[test]
+    fn connect_store_builds_remote_tiers_matching_manifest() {
+        let (srv, img) = serve(ChaosKnobs::default());
+        let (ts, m) = connect_store(&srv.local_addr()).unwrap();
+        assert_eq!(*m, img.manifest);
+        assert!(ts.is_remote());
+        assert!(ts.remote_counters().is_some());
+        assert_eq!(ts.tiers(), img.manifest.tiers.as_slice());
+        // metadata reads are manifest-backed, no fetch
+        let c = ts.remote_counters().unwrap();
+        assert_eq!(
+            ts.expert_transfer_bytes((0, 0), QuantKind::Int2) as u64,
+            img.manifest.entries[0].transfer_bytes
+        );
+        assert_eq!(c.fetches.load(std::sync::atomic::Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn fetched_expert_counts_bytes_and_latency() {
+        let (srv, img) = serve(ChaosKnobs::default());
+        let (ts, _) = connect_store(&srv.local_addr()).unwrap();
+        let store = ts.store(QuantKind::Int8);
+        let (_, src) = store.try_fetch((1, 2)).unwrap();
+        assert_eq!(src, crate::memory::host_store::FetchSource::Remote);
+        let c = ts.remote_counters().unwrap();
+        use std::sync::atomic::Ordering;
+        assert_eq!(c.fetches.load(Ordering::Relaxed), 1);
+        let e = img.manifest.entry(QuantKind::Int8, 1, 2).unwrap();
+        assert_eq!(c.fetched_bytes.load(Ordering::Relaxed), e.len);
+        assert!(c.fetch_ns.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn corrupt_responses_retry_until_clean() {
+        // every 2nd response corrupted: each fetch may need a retry but
+        // always converges; checksum_failures records the rejects
+        let (srv, _img) = serve(ChaosKnobs { corrupt_every: 2, drop_every: 0 });
+        let (ts, m) = connect_store(&srv.local_addr()).unwrap();
+        let store = ts.store(QuantKind::Int2);
+        for l in 0..m.n_layers {
+            for e in 0..m.n_experts {
+                assert!(store.try_fetch((l, e)).is_ok(), "expert ({l},{e})");
+            }
+        }
+        let c = ts.remote_counters().unwrap();
+        use std::sync::atomic::Ordering;
+        assert!(c.checksum_failures.load(Ordering::Relaxed) > 0);
+        assert!(c.retries.load(Ordering::Relaxed) > 0);
+        assert_eq!(
+            c.fetches.load(Ordering::Relaxed),
+            (m.n_layers * m.n_experts) as u64
+        );
+    }
+
+    #[test]
+    fn dropped_connections_reconnect() {
+        let (srv, _img) = serve(ChaosKnobs { corrupt_every: 0, drop_every: 3 });
+        let (ts, m) = connect_store(&srv.local_addr()).unwrap();
+        let store = ts.store(QuantKind::Int8);
+        for l in 0..m.n_layers {
+            for e in 0..m.n_experts {
+                assert!(store.try_fetch((l, e)).is_ok(), "expert ({l},{e})");
+            }
+        }
+        let c = ts.remote_counters().unwrap();
+        use std::sync::atomic::Ordering;
+        assert!(c.reconnects.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn exhausted_attempts_surface_as_retryable_error() {
+        // every response corrupted: attempts run dry and the fetch fails,
+        // but a *store-level* retry is still possible (nothing sticky)
+        let (srv, img) = serve(ChaosKnobs { corrupt_every: 1, drop_every: 0 });
+        let counters = Arc::new(FetchCounters::default());
+        let mut client =
+            RemoteClient::new(&srv.local_addr(), Arc::clone(&counters)).with_attempts(2);
+        let e = &img.manifest.entries[0];
+        let got = client.fetch_artifact(e, img.manifest.chunk_size);
+        assert!(matches!(got, Err(WireError::Corrupt(_))));
+        use std::sync::atomic::Ordering;
+        assert_eq!(counters.checksum_failures.load(Ordering::Relaxed), 2);
+        assert_eq!(counters.retries.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn connect_to_dead_address_fails_typed() {
+        // bind-then-drop grabs a port nobody is listening on
+        let free = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        assert!(matches!(connect_store(&free), Err(WireError::Io(_))));
+    }
+}

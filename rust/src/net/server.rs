@@ -1,0 +1,409 @@
+//! Artifact server: publish a [`TieredStore`]'s experts over the wire.
+//!
+//! [`ArtifactImage`] freezes a tiered store into a (manifest, blob) pair —
+//! every expert encoded at every tier, concatenated, with per-chunk FNV
+//! checksums recorded in the manifest. [`StoreServer`] then serves that
+//! image over the `crate::net::wire` protocol from a background accept
+//! loop (same nonblocking-listener shape as `crate::server::tcp`), so a
+//! cacheless coordinator on another process — `examples/expert_server.rs`
+//! is the standalone binary — can run entirely against it.
+//!
+//! [`ChaosKnobs`] makes the server deterministically misbehave for the
+//! fault-injection suite: corrupt every k-th range payload *after* the
+//! chunk checksums were sealed into the manifest (so the frame verifies
+//! but chunk verification fails client-side), or drop every k-th
+//! connection mid-request (client sees a short read and reconnects). Both
+//! count requests globally across connections, so a single-client test
+//! sees an exact fault schedule.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::memory::tiered_store::TieredStore;
+use crate::net::checksum::fnv1a;
+use crate::net::manifest::{encode_expert, ArtifactEntry, Manifest, DEFAULT_CHUNK};
+use crate::net::wire::{
+    read_frame, write_frame, WireError, OP_ERR, OP_GET_MANIFEST, OP_GET_RANGE, OP_MANIFEST,
+    OP_RANGE,
+};
+
+/// A tiered store frozen into servable bytes: the manifest (already
+/// serialized once — it is immutable) plus the artifact blob the range
+/// requests index into.
+pub struct ArtifactImage {
+    pub manifest: Manifest,
+    pub manifest_bytes: Vec<u8>,
+    pub blob: Vec<u8>,
+}
+
+impl ArtifactImage {
+    /// Encode every `(tier, layer, expert)` artifact of `store` with
+    /// `DEFAULT_CHUNK`-sized checksum chunks.
+    pub fn from_tiered(store: &TieredStore, d_model: usize, d_ff: usize) -> ArtifactImage {
+        Self::from_tiered_chunked(store, d_model, d_ff, DEFAULT_CHUNK)
+    }
+
+    /// Same, with an explicit chunk size (tests use small chunks so a
+    /// single expert spans several).
+    pub fn from_tiered_chunked(
+        store: &TieredStore,
+        d_model: usize,
+        d_ff: usize,
+        chunk_size: u32,
+    ) -> ArtifactImage {
+        assert!(chunk_size > 0, "chunk size must be positive");
+        let (n_layers, n_experts) = (store.n_layers(), store.n_experts());
+        let mut blob = Vec::new();
+        let mut entries = Vec::with_capacity(store.n_tiers() * n_layers * n_experts);
+        for &kind in store.tiers() {
+            let hs = store.store(kind);
+            for l in 0..n_layers {
+                for e in 0..n_experts {
+                    let q = hs.get((l, e));
+                    let enc = encode_expert(q);
+                    let chunks =
+                        enc.chunks(chunk_size as usize).map(fnv1a).collect();
+                    entries.push(ArtifactEntry {
+                        offset: blob.len() as u64,
+                        len: enc.len() as u64,
+                        transfer_bytes: q.size_bytes() as u64,
+                        chunks,
+                    });
+                    blob.extend_from_slice(&enc);
+                }
+            }
+        }
+        let manifest = Manifest {
+            n_layers,
+            n_experts,
+            d_model,
+            d_ff,
+            expert_bytes_f32: store.expert_bytes_f32() as u64,
+            chunk_size,
+            tiers: store.tiers().to_vec(),
+            entries,
+        };
+        let manifest_bytes = manifest.encode();
+        ArtifactImage { manifest, manifest_bytes, blob }
+    }
+}
+
+/// Deterministic misbehaviour for the chaos suite. Zero = off (default).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ChaosKnobs {
+    /// Flip one byte in every k-th range response payload (1-indexed by a
+    /// global request counter). The frame checksum is computed over the
+    /// corrupted bytes, so the *frame* verifies and the corruption is only
+    /// caught by the manifest's chunk checksums — exactly the line-noise
+    /// case the integrity layer exists for.
+    pub corrupt_every: u64,
+    /// Close the connection instead of answering every k-th request —
+    /// the client sees a short read and must reconnect.
+    pub drop_every: u64,
+}
+
+/// Background artifact server. Binds on construction (use port 0 for an
+/// ephemeral test port — `local_addr` reports the real one); serves until
+/// dropped or `shutdown` flips.
+pub struct StoreServer {
+    addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    /// Requests answered (all ops), for test assertions.
+    served: Arc<AtomicU64>,
+}
+
+impl StoreServer {
+    pub fn spawn(image: Arc<ArtifactImage>, addr: &str) -> Result<StoreServer, WireError> {
+        Self::spawn_chaotic(image, addr, ChaosKnobs::default())
+    }
+
+    pub fn spawn_chaotic(
+        image: Arc<ArtifactImage>,
+        addr: &str,
+        knobs: ChaosKnobs,
+    ) -> Result<StoreServer, WireError> {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| WireError::Io(format!("binding {addr}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| WireError::Io(e.to_string()))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| WireError::Io(e.to_string()))?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let served = Arc::new(AtomicU64::new(0));
+        // one global request counter so the chaos schedule is exact even
+        // across reconnects
+        let requests = Arc::new(AtomicU64::new(0));
+        let accept_thread = {
+            let shutdown = Arc::clone(&shutdown);
+            let served = Arc::clone(&served);
+            std::thread::Builder::new()
+                .name("adapmoe-store-accept".into())
+                .spawn(move || {
+                    while !shutdown.load(Ordering::SeqCst) {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                let image = Arc::clone(&image);
+                                let shutdown = Arc::clone(&shutdown);
+                                let served = Arc::clone(&served);
+                                let requests = Arc::clone(&requests);
+                                let _ = std::thread::Builder::new()
+                                    .name("adapmoe-store-conn".into())
+                                    .spawn(move || {
+                                        serve_conn(stream, &image, knobs, &shutdown, &served, &requests)
+                                    });
+                            }
+                            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(2));
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                })
+                .map_err(|e| WireError::Io(format!("spawn acceptor: {e}")))?
+        };
+        Ok(StoreServer { addr: local, shutdown, accept_thread: Some(accept_thread), served })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn local_addr(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// Requests answered so far (manifest + range, across connections).
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::SeqCst)
+    }
+
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+}
+
+impl Drop for StoreServer {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// One connection's request loop. Request frames are read with a short
+/// socket timeout so the thread notices `shutdown` while idle; a timeout
+/// can only fire *between* frames (the client writes each request frame
+/// in one `write_all`, and the loop re-reads from scratch only when zero
+/// bytes of the next frame have arrived — mid-frame the blocking reads
+/// below run to completion or error).
+fn serve_conn(
+    stream: TcpStream,
+    image: &ArtifactImage,
+    knobs: ChaosKnobs,
+    shutdown: &AtomicBool,
+    served: &AtomicU64,
+    requests: &AtomicU64,
+) {
+    let mut stream = stream;
+    let _ = stream.set_nodelay(true);
+    while !shutdown.load(Ordering::SeqCst) {
+        // Wait (bounded) for the next request's first byte, then read the
+        // whole frame in blocking mode.
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+        let mut first = [0u8; 1];
+        match stream.peek(&mut first) {
+            Ok(0) => return, // client closed
+            Ok(_) => {}
+            Err(ref e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue;
+            }
+            Err(_) => return,
+        }
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+        let (op, payload) = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => return, // malformed or vanished client: drop the conn
+        };
+        let n = requests.fetch_add(1, Ordering::SeqCst) + 1;
+        if knobs.drop_every > 0 && n % knobs.drop_every == 0 {
+            return; // simulated connection loss
+        }
+        let ok = match op {
+            OP_GET_MANIFEST => {
+                write_frame(&mut stream, OP_MANIFEST, &image.manifest_bytes).is_ok()
+            }
+            OP_GET_RANGE => answer_range(&mut stream, image, knobs, n, &payload).is_ok(),
+            other => {
+                let msg = format!("unknown op {other:#04x}");
+                write_frame(&mut stream, OP_ERR, msg.as_bytes()).is_ok()
+            }
+        };
+        if !ok {
+            return;
+        }
+        served.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+fn answer_range(
+    stream: &mut (impl Write + ?Sized),
+    image: &ArtifactImage,
+    knobs: ChaosKnobs,
+    request_n: u64,
+    payload: &[u8],
+) -> Result<(), WireError> {
+    if payload.len() != 16 {
+        return write_frame(stream, OP_ERR, b"range request wants 16 payload bytes");
+    }
+    let offset = u64::from_le_bytes(payload[..8].try_into().expect("8 bytes")) as usize;
+    let len = u64::from_le_bytes(payload[8..].try_into().expect("8 bytes")) as usize;
+    let end = offset.checked_add(len).filter(|&e| e <= image.blob.len());
+    let Some(end) = end else {
+        let msg = format!(
+            "range {offset}+{len} outside blob of {} bytes",
+            image.blob.len()
+        );
+        return write_frame(stream, OP_ERR, msg.as_bytes());
+    };
+    let mut bytes = image.blob[offset..end].to_vec();
+    if knobs.corrupt_every > 0 && request_n % knobs.corrupt_every == 0 && !bytes.is_empty() {
+        // deterministic single-byte flip; the frame checksum below is
+        // computed over the corrupted payload, so only the manifest's
+        // chunk checksums can catch it
+        let at = (request_n as usize * 131) % bytes.len();
+        bytes[at] ^= 0x40;
+    }
+    write_frame(stream, OP_RANGE, &bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::host_store::HostStore;
+    use crate::memory::quant::QuantKind;
+    use crate::net::manifest::decode_expert;
+    use crate::net::wire::RangedReader;
+    use crate::testutil::{micro_config, synthetic_weights};
+
+    fn image() -> Arc<ArtifactImage> {
+        let cfg = micro_config();
+        let w = synthetic_weights(&cfg, 21);
+        let ts =
+            TieredStore::build(&cfg, &w, &[QuantKind::Int2, QuantKind::Int8]).unwrap();
+        Arc::new(ArtifactImage::from_tiered_chunked(&ts, cfg.d_model, cfg.d_ff, 256))
+    }
+
+    fn connect(srv: &StoreServer) -> RangedReader {
+        RangedReader::connect(&srv.local_addr(), Duration::from_secs(5)).unwrap()
+    }
+
+    #[test]
+    fn image_entries_cover_blob_and_verify() {
+        let img = image();
+        let m = &img.manifest;
+        assert_eq!(m.entries.len(), 2 * m.n_layers * m.n_experts);
+        let mut expect_offset = 0u64;
+        for e in &m.entries {
+            assert_eq!(e.offset, expect_offset);
+            let bytes = &img.blob[e.offset as usize..(e.offset + e.len) as usize];
+            assert_eq!(e.verify(bytes, m.chunk_size), Ok(()));
+            let q = decode_expert(bytes).unwrap();
+            assert_eq!(q.size_bytes() as u64, e.transfer_bytes);
+            expect_offset += e.len;
+        }
+        assert_eq!(expect_offset as usize, img.blob.len());
+    }
+
+    #[test]
+    fn serves_manifest_and_ranges_over_loopback() {
+        let img = image();
+        let srv = StoreServer::spawn(Arc::clone(&img), "127.0.0.1:0").unwrap();
+        let mut r = connect(&srv);
+        let mbytes = r.fetch_manifest().unwrap();
+        let m = Manifest::decode(&mbytes).unwrap();
+        assert_eq!(m, img.manifest);
+        let e = &m.entries[3];
+        let bytes = r.fetch_range(e.offset, e.len).unwrap();
+        assert_eq!(e.verify(&bytes, m.chunk_size), Ok(()));
+        // several requests on one connection
+        let e2 = &m.entries[7];
+        let bytes2 = r.fetch_range(e2.offset, e2.len).unwrap();
+        assert_eq!(e2.verify(&bytes2, m.chunk_size), Ok(()));
+        // the server bumps `served` after writing each response; give its
+        // thread a moment to finish the bookkeeping for the last one
+        for _ in 0..200 {
+            if srv.served() >= 3 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(srv.served() >= 3, "served={}", srv.served());
+    }
+
+    #[test]
+    fn out_of_range_request_is_remote_error_not_hang() {
+        let img = image();
+        let srv = StoreServer::spawn(Arc::clone(&img), "127.0.0.1:0").unwrap();
+        let mut r = connect(&srv);
+        let blob_len = img.blob.len() as u64;
+        assert!(matches!(
+            r.fetch_range(blob_len, 16),
+            Err(WireError::Remote(_))
+        ));
+        // the connection survives a rejected request
+        let e = &img.manifest.entries[0];
+        assert!(r.fetch_range(e.offset, e.len).is_ok());
+        // overflowing offset+len is rejected, not panicking
+        assert!(matches!(
+            r.fetch_range(u64::MAX - 4, 16),
+            Err(WireError::Remote(_))
+        ));
+    }
+
+    #[test]
+    fn corrupt_every_passes_frame_but_fails_chunks() {
+        let img = image();
+        let srv = StoreServer::spawn_chaotic(
+            Arc::clone(&img),
+            "127.0.0.1:0",
+            ChaosKnobs { corrupt_every: 1, drop_every: 0 },
+        )
+        .unwrap();
+        let mut r = connect(&srv);
+        let e = &img.manifest.entries[0];
+        // frame-level fetch succeeds (checksum covers the corrupted bytes)
+        let bytes = r.fetch_range(e.offset, e.len).unwrap();
+        // ...but the manifest's chunk checksums catch the flip
+        assert!(e.verify(&bytes, img.manifest.chunk_size).is_err());
+    }
+
+    #[test]
+    fn drop_every_closes_connection() {
+        let img = image();
+        let srv = StoreServer::spawn_chaotic(
+            Arc::clone(&img),
+            "127.0.0.1:0",
+            ChaosKnobs { corrupt_every: 0, drop_every: 2 },
+        )
+        .unwrap();
+        let mut r = connect(&srv);
+        let e = &img.manifest.entries[0];
+        assert!(r.fetch_range(e.offset, e.len).is_ok()); // request 1
+        let second = r.fetch_range(e.offset, e.len); // request 2: dropped
+        assert!(second.is_err());
+        assert!(second.unwrap_err().connection_lost());
+        // a fresh connection works again
+        let mut r2 = connect(&srv);
+        assert!(r2.fetch_range(e.offset, e.len).is_ok()); // request 3
+    }
+}

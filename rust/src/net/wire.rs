@@ -1,0 +1,302 @@
+//! Length-prefixed TCP frames + the ranged artifact reader.
+//!
+//! One frame = `MAGIC(u32) | op(u8) | payload_len(u32) | payload |
+//! fnv1a(payload)(u64)`, all integers little-endian. Two requests
+//! (manifest, byte range) and three responses (manifest bytes, range
+//! bytes, error string) are enough for a cacheless coordinator: the
+//! manifest tells it where every `(tier, layer, expert)` artifact lives
+//! in the server's blob, and ranged reads pull exactly those bytes. Every
+//! failure mode is a typed [`WireError`] so the transfer engine can tell
+//! retryable transport faults (short read, connection loss, corrupt
+//! frame) from real protocol bugs. Full protocol spec:
+//! docs/remote-store.md.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::net::checksum::fnv1a;
+
+/// Frame magic: `b"AMRS"` (AdapMoE Remote Store), little-endian.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"AMRS");
+
+/// Hard cap on a single frame's payload. Large enough for any expert
+/// artifact of a real model tier; small enough that a corrupt length
+/// field cannot make a reader allocate unboundedly.
+pub const MAX_FRAME: usize = 256 << 20;
+
+/// Request: send me the manifest (empty payload).
+pub const OP_GET_MANIFEST: u8 = 1;
+/// Request: send me `len` blob bytes from `offset` (payload: two u64 LE).
+pub const OP_GET_RANGE: u8 = 2;
+/// Response: serialized manifest bytes.
+pub const OP_MANIFEST: u8 = 0x81;
+/// Response: raw blob bytes for a range request.
+pub const OP_RANGE: u8 = 0x82;
+/// Response: server-side failure, payload is a UTF-8 message.
+pub const OP_ERR: u8 = 0xff;
+
+/// Everything that can go wrong on the wire (or while decoding what came
+/// off it). `Io`/`ShortRead` mean the *connection* is suspect — drop it
+/// and reconnect; `Corrupt` means the bytes arrived but failed
+/// verification — the connection is fine, re-request; `BadFrame` /
+/// `VersionMismatch` are protocol-level bugs and not retryable; `Remote`
+/// carries a server-reported error.
+#[derive(Debug)]
+pub enum WireError {
+    /// Socket-level failure (connect, read, write).
+    Io(String),
+    /// The peer closed mid-frame: wanted `want` bytes, got `got`.
+    ShortRead { want: usize, got: usize },
+    /// Bytes arrived but a checksum or codec check rejected them.
+    Corrupt(String),
+    /// Malformed frame: bad magic, oversized length, unknown op.
+    BadFrame(String),
+    /// Manifest version this build does not speak.
+    VersionMismatch { got: u16, want: u16 },
+    /// The server answered with `OP_ERR`.
+    Remote(String),
+}
+
+impl WireError {
+    /// Should the caller drop the connection before retrying? (`Corrupt`
+    /// re-requests on the same socket; `Io`/`ShortRead` must reconnect.)
+    pub fn connection_lost(&self) -> bool {
+        matches!(self, WireError::Io(_) | WireError::ShortRead { .. })
+    }
+
+    /// Is retrying this failure ever useful? Protocol-level mismatches
+    /// (`BadFrame`, `VersionMismatch`) will fail identically forever.
+    pub fn retryable(&self) -> bool {
+        matches!(
+            self,
+            WireError::Io(_) | WireError::ShortRead { .. } | WireError::Corrupt(_)
+        )
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Io(m) => write!(f, "io: {m}"),
+            WireError::ShortRead { want, got } => {
+                write!(f, "short read: wanted {want} bytes, got {got}")
+            }
+            WireError::Corrupt(m) => write!(f, "corrupt: {m}"),
+            WireError::BadFrame(m) => write!(f, "bad frame: {m}"),
+            WireError::VersionMismatch { got, want } => {
+                write!(f, "manifest version {got}, this build speaks {want}")
+            }
+            WireError::Remote(m) => write!(f, "server error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> WireError {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            // read_exact lost the partial count; 0-of-unknown is still
+            // honest about the failure class.
+            WireError::ShortRead { want: 0, got: 0 }
+        } else {
+            WireError::Io(e.to_string())
+        }
+    }
+}
+
+/// Serialize one frame.
+pub fn encode_frame(op: u8, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(17 + payload.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(op);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&fnv1a(payload).to_le_bytes());
+    out
+}
+
+/// Write one frame to a stream.
+pub fn write_frame(w: &mut impl Write, op: u8, payload: &[u8]) -> Result<(), WireError> {
+    w.write_all(&encode_frame(op, payload))?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame from a stream, verifying magic, length cap and payload
+/// checksum. Blocks until a full frame (or an error) arrives.
+pub fn read_frame(r: &mut impl Read) -> Result<(u8, Vec<u8>), WireError> {
+    let mut head = [0u8; 9];
+    read_exact_counted(r, &mut head)?;
+    let magic = u32::from_le_bytes([head[0], head[1], head[2], head[3]]);
+    if magic != MAGIC {
+        return Err(WireError::BadFrame(format!("magic {magic:#010x}")));
+    }
+    let op = head[4];
+    let len = u32::from_le_bytes([head[5], head[6], head[7], head[8]]) as usize;
+    if len > MAX_FRAME {
+        return Err(WireError::BadFrame(format!("payload length {len} over cap")));
+    }
+    let mut payload = vec![0u8; len];
+    read_exact_counted(r, &mut payload)?;
+    let mut sum = [0u8; 8];
+    read_exact_counted(r, &mut sum)?;
+    let want = u64::from_le_bytes(sum);
+    let got = fnv1a(&payload);
+    if got != want {
+        return Err(WireError::Corrupt(format!(
+            "frame checksum {got:#018x} != {want:#018x}"
+        )));
+    }
+    Ok((op, payload))
+}
+
+/// `read_exact` that reports how many bytes actually arrived on EOF —
+/// the diagnostic the typed `ShortRead` carries.
+fn read_exact_counted(r: &mut impl Read, buf: &mut [u8]) -> Result<(), WireError> {
+    let want = buf.len();
+    let mut got = 0;
+    while got < want {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => return Err(WireError::ShortRead { want, got }),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+/// Client half of the protocol: a connected stream plus the two request
+/// shapes. One outstanding request at a time (request/response lockstep),
+/// which keeps the protocol trivially ordered — the transfer engine's
+/// lanes get their parallelism from multiple readers, not pipelining.
+pub struct RangedReader {
+    stream: TcpStream,
+}
+
+impl RangedReader {
+    /// Connect with a bounded dial + I/O timeout so a dead server surfaces
+    /// as a retryable fault instead of a hang.
+    pub fn connect(addr: &str, timeout: Duration) -> Result<RangedReader, WireError> {
+        let sock_addr = addr
+            .parse()
+            .map_err(|e| WireError::Io(format!("bad address {addr}: {e}")))?;
+        let stream = TcpStream::connect_timeout(&sock_addr, timeout)?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        stream.set_nodelay(true)?;
+        Ok(RangedReader { stream })
+    }
+
+    fn roundtrip(&mut self, op: u8, payload: &[u8]) -> Result<(u8, Vec<u8>), WireError> {
+        write_frame(&mut self.stream, op, payload)?;
+        let (resp_op, resp) = read_frame(&mut self.stream)?;
+        if resp_op == OP_ERR {
+            return Err(WireError::Remote(String::from_utf8_lossy(&resp).into_owned()));
+        }
+        Ok((resp_op, resp))
+    }
+
+    /// Fetch the serialized manifest (decode + verify is the caller's job
+    /// via [`crate::net::manifest::Manifest::decode`]).
+    pub fn fetch_manifest(&mut self) -> Result<Vec<u8>, WireError> {
+        let (op, resp) = self.roundtrip(OP_GET_MANIFEST, &[])?;
+        if op != OP_MANIFEST {
+            return Err(WireError::BadFrame(format!("expected manifest, got op {op:#04x}")));
+        }
+        Ok(resp)
+    }
+
+    /// Fetch exactly `len` blob bytes starting at `offset`. A frame that
+    /// arrives intact but with the wrong byte count is a `ShortRead` —
+    /// the server misbehaved, treat the connection as suspect.
+    pub fn fetch_range(&mut self, offset: u64, len: u64) -> Result<Vec<u8>, WireError> {
+        let mut req = [0u8; 16];
+        req[..8].copy_from_slice(&offset.to_le_bytes());
+        req[8..].copy_from_slice(&len.to_le_bytes());
+        let (op, resp) = self.roundtrip(OP_GET_RANGE, &req)?;
+        if op != OP_RANGE {
+            return Err(WireError::BadFrame(format!("expected range, got op {op:#04x}")));
+        }
+        if resp.len() != len as usize {
+            return Err(WireError::ShortRead { want: len as usize, got: resp.len() });
+        }
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let payload = b"expert bytes".to_vec();
+        let framed = encode_frame(OP_RANGE, &payload);
+        let (op, got) = read_frame(&mut framed.as_slice()).unwrap();
+        assert_eq!(op, OP_RANGE);
+        assert_eq!(got, payload);
+    }
+
+    #[test]
+    fn empty_payload_roundtrip() {
+        let framed = encode_frame(OP_GET_MANIFEST, &[]);
+        let (op, got) = read_frame(&mut framed.as_slice()).unwrap();
+        assert_eq!(op, OP_GET_MANIFEST);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut framed = encode_frame(OP_RANGE, b"x");
+        framed[0] ^= 0xff;
+        assert!(matches!(
+            read_frame(&mut framed.as_slice()),
+            Err(WireError::BadFrame(_))
+        ));
+    }
+
+    #[test]
+    fn payload_corruption_detected() {
+        let mut framed = encode_frame(OP_RANGE, b"some expert data here");
+        // flip one payload byte; header (9) is intact, checksum must catch it
+        framed[12] ^= 0x01;
+        assert!(matches!(
+            read_frame(&mut framed.as_slice()),
+            Err(WireError::Corrupt(_))
+        ));
+    }
+
+    #[test]
+    fn truncation_is_short_read() {
+        let framed = encode_frame(OP_RANGE, b"some expert data here");
+        let cut = &framed[..framed.len() - 3];
+        match read_frame(&mut &cut[..]) {
+            Err(WireError::ShortRead { want, got }) => assert!(got < want),
+            other => panic!("expected ShortRead, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_length_rejected_without_allocation() {
+        let mut framed = encode_frame(OP_RANGE, b"x");
+        framed[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut framed.as_slice()),
+            Err(WireError::BadFrame(_))
+        ));
+    }
+
+    #[test]
+    fn error_taxonomy() {
+        assert!(WireError::Io("x".into()).connection_lost());
+        assert!(WireError::ShortRead { want: 4, got: 0 }.connection_lost());
+        assert!(!WireError::Corrupt("x".into()).connection_lost());
+        assert!(WireError::Corrupt("x".into()).retryable());
+        assert!(!WireError::BadFrame("x".into()).retryable());
+        assert!(!WireError::VersionMismatch { got: 9, want: 1 }.retryable());
+    }
+}

@@ -11,7 +11,7 @@ use anyhow::{bail, Result};
 
 pub use crate::coordinator::batcher::{FinishReason, SamplingParams};
 pub use crate::memory::sharded_cache::DeviceSnapshot;
-pub use crate::memory::transfer::{LaneSnapshot, TierSnapshot};
+pub use crate::memory::transfer::{LaneSnapshot, SourceSnapshot, TierSnapshot};
 use crate::model::tokenizer::ByteTokenizer;
 use crate::util::json::Json;
 
@@ -245,6 +245,9 @@ pub struct ServerStats {
     /// tier, ascending bits; a single entry for single-tier engines);
     /// empty when the backend has no transfer engine (mock).
     pub tiers: Vec<TierSnapshot>,
+    /// Local-vs-remote byte attribution and remote-fetch health
+    /// (docs/remote-store.md); all zeros for local stores.
+    pub source: SourceSnapshot,
 }
 
 impl ServerStats {
@@ -319,6 +322,23 @@ impl ServerStats {
             ("lanes", lanes),
             ("devices", devices),
             ("tiers", tiers),
+            (
+                "source",
+                Json::obj(vec![
+                    ("local_bytes", Json::Num(self.source.local_bytes as f64)),
+                    ("remote_bytes", Json::Num(self.source.remote_bytes as f64)),
+                    ("remote_faults", Json::Num(self.source.remote_faults as f64)),
+                    ("fetches", Json::Num(self.source.fetches as f64)),
+                    ("fetched_bytes", Json::Num(self.source.fetched_bytes as f64)),
+                    ("fetch_ms", Json::Num(self.source.fetch_ms)),
+                    ("retries", Json::Num(self.source.retries as f64)),
+                    (
+                        "checksum_failures",
+                        Json::Num(self.source.checksum_failures as f64),
+                    ),
+                    ("reconnects", Json::Num(self.source.reconnects as f64)),
+                ]),
+            ),
         ])
     }
 }
@@ -503,6 +523,42 @@ mod tests {
         assert_eq!(lanes[1].get("retries").and_then(|v| v.as_usize()), Some(4));
         assert_eq!(lanes[1].get("timeouts").and_then(|v| v.as_usize()), Some(2));
         assert_eq!(lanes[1].get("failovers").and_then(|v| v.as_usize()), Some(1));
+    }
+
+    #[test]
+    fn stats_serialize_source_attribution() {
+        let s = ServerStats {
+            source: SourceSnapshot {
+                local_bytes: 100,
+                remote_bytes: 900,
+                remote_faults: 1,
+                fetches: 9,
+                fetched_bytes: 450,
+                fetch_ms: 12.5,
+                retries: 2,
+                checksum_failures: 1,
+                reconnects: 1,
+            },
+            ..Default::default()
+        };
+        let j = s.to_json();
+        let src = j.get("source").expect("source object");
+        assert_eq!(src.get("local_bytes").and_then(|v| v.as_usize()), Some(100));
+        assert_eq!(src.get("remote_bytes").and_then(|v| v.as_usize()), Some(900));
+        assert_eq!(src.get("remote_faults").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(src.get("fetches").and_then(|v| v.as_usize()), Some(9));
+        assert_eq!(src.get("fetched_bytes").and_then(|v| v.as_usize()), Some(450));
+        assert_eq!(src.get("fetch_ms").and_then(|v| v.as_f64()), Some(12.5));
+        assert_eq!(src.get("retries").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(
+            src.get("checksum_failures").and_then(|v| v.as_usize()),
+            Some(1)
+        );
+        assert_eq!(src.get("reconnects").and_then(|v| v.as_usize()), Some(1));
+        // a default (all-local) stats object reports a zeroed source block
+        let d = ServerStats::default().to_json();
+        let dsrc = d.get("source").expect("source object");
+        assert_eq!(dsrc.get("remote_bytes").and_then(|v| v.as_usize()), Some(0));
     }
 
     #[test]

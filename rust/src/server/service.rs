@@ -57,6 +57,9 @@ pub struct PerfSnapshot {
     /// Per-precision-tier transfer volumes (empty for backends without
     /// a transfer engine, e.g. the mock).
     pub tiers: Vec<crate::memory::transfer::TierSnapshot>,
+    /// Local-vs-remote byte attribution and remote-fetch health (all
+    /// zeros for local stores and backends without a transfer engine).
+    pub source: crate::memory::transfer::SourceSnapshot,
 }
 
 /// What the service needs from a decode engine. [`Engine`] is the real
@@ -100,6 +103,7 @@ impl Backend for Engine {
             lanes: self.xfer.lane_snapshots(),
             devices: self.xfer.device_snapshots(),
             tiers: self.xfer.tier_snapshots(),
+            source: self.xfer.source_snapshot(),
         }
     }
 }
@@ -379,6 +383,7 @@ impl ServiceHandle {
             lanes: g.perf.lanes.clone(),
             devices: g.perf.devices.clone(),
             tiers: g.perf.tiers.clone(),
+            source: g.perf.source,
         }
     }
 

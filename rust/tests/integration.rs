@@ -342,6 +342,7 @@ fn tile_wise_engine_matches_expert_wise() {
         devices: 1,
         placement: Placement::LayerSliced,
         fault_plan: None,
+        remote: None,
     };
     let mut ew = Engine::from_artifacts(&dir, mk(ScheduleMode::ExpertWise)).unwrap();
     let mut tw = Engine::from_artifacts(&dir, mk(ScheduleMode::TileWise)).unwrap();

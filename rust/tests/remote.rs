@@ -1,0 +1,204 @@
+//! Remote expert store integration suite (docs/remote-store.md): a real
+//! loopback [`StoreServer`] on one side, a cacheless coordinator store on
+//! the other. Locks down what the remote subsystem promises:
+//!
+//! 1. **Bit-identity** — a remote-fetched expert is byte-for-byte the
+//!    local `HostStore` twin at every `QuantKind`, and a transfer engine
+//!    draining from a remote store produces outputs bit-identical to the
+//!    all-local engine.
+//! 2. **Integrity** — any single-byte corruption of the serialized
+//!    manifest or an artifact chunk is caught by an FNV checksum; a server
+//!    that corrupts every response never yields a resident expert, and the
+//!    failure is retryable, not sticky.
+//! 3. **Fault fold-in** — flaky connections and corrupt payloads drain
+//!    through the PR 6 retry ladder with conserved counters:
+//!    `local_bytes + remote_bytes == bytes`, every request resolves once.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use adapmoe::memory::device_cache::DeviceCache;
+use adapmoe::memory::platform::Platform;
+use adapmoe::memory::quant::QuantKind;
+use adapmoe::memory::sharded_cache::ShardedCache;
+use adapmoe::memory::tiered_store::{PrecisionPolicy, TieredStore};
+use adapmoe::memory::transfer::{LaneConfig, Priority, TransferEngine};
+use adapmoe::net::{connect_store, ArtifactImage, ChaosKnobs, Manifest, StoreServer};
+use adapmoe::prop_assert;
+use adapmoe::testutil::{micro_config, synthetic_weights};
+use adapmoe::util::prop;
+
+/// Local reference store + the server publishing its frozen image.
+fn serve(kinds: &[QuantKind], knobs: ChaosKnobs) -> (Arc<TieredStore>, StoreServer) {
+    let cfg = micro_config();
+    let w = synthetic_weights(&cfg, 71);
+    let local = Arc::new(TieredStore::build(&cfg, &w, kinds).unwrap());
+    // small chunks so every expert spans several checksum windows
+    let img = Arc::new(ArtifactImage::from_tiered_chunked(&local, cfg.d_model, cfg.d_ff, 256));
+    let srv = StoreServer::spawn_chaotic(Arc::clone(&img), "127.0.0.1:0", knobs).unwrap();
+    (local, srv)
+}
+
+fn engine_over(tiers: Arc<TieredStore>) -> TransferEngine {
+    let cache = Arc::new(DeviceCache::new(vec![8, 8]));
+    TransferEngine::with_tiers(
+        tiers,
+        PrecisionPolicy::Fixed,
+        Arc::new(ShardedCache::single(cache)),
+        Platform::preset("instant").unwrap(),
+        4,
+        0.0,
+        LaneConfig::default(),
+    )
+}
+
+/// Every tier, every expert: the remote store's pinned copy is
+/// bit-identical to the local twin — encodings, scales, packed codes, all
+/// of it — at every quantization kind.
+#[test]
+fn remote_fetch_is_bit_identical_to_local_twin_at_every_kind() {
+    for kind in [QuantKind::F32, QuantKind::Int8, QuantKind::Int4, QuantKind::Int2] {
+        let (local, srv) = serve(&[kind], ChaosKnobs::default());
+        let (remote, m) = connect_store(&srv.local_addr()).unwrap();
+        assert!(remote.is_remote());
+        assert_eq!(m.tiers, vec![kind]);
+        let (r, l) = (remote.store(kind), local.store(kind));
+        for layer in 0..m.n_layers {
+            for expert in 0..m.n_experts {
+                let id = (layer, expert);
+                assert_eq!(r.get(id), l.get(id), "{} expert {id:?}", kind.name());
+                // the clock domain sees identical byte counts too
+                assert_eq!(
+                    r.expert_transfer_bytes(id),
+                    l.expert_transfer_bytes(id),
+                    "{} expert {id:?}",
+                    kind.name()
+                );
+            }
+        }
+        let c = remote.remote_counters().unwrap();
+        assert_eq!(
+            c.fetches.load(Ordering::Relaxed),
+            (m.n_layers * m.n_experts) as u64
+        );
+    }
+}
+
+/// Property: flipping any single byte of a serialized manifest, or any
+/// single byte inside an artifact's range, is detected by checksum.
+#[test]
+fn any_single_byte_corruption_is_detected() {
+    let cfg = micro_config();
+    let w = synthetic_weights(&cfg, 71);
+    let local = TieredStore::build(&cfg, &w, &[QuantKind::Int2, QuantKind::Int8]).unwrap();
+    let img = ArtifactImage::from_tiered_chunked(&local, cfg.d_model, cfg.d_ff, 256);
+    prop::check("remote-single-byte-corruption", 40, |rng| {
+        // a flipped artifact byte fails that entry's chunk verification
+        let e = &img.manifest.entries[rng.usize_below(img.manifest.entries.len())];
+        let (off, len) = (e.offset as usize, e.len as usize);
+        let mut bytes = img.blob[off..off + len].to_vec();
+        let at = rng.usize_below(len);
+        bytes[at] ^= 1 << rng.usize_below(8);
+        prop_assert!(
+            e.verify(&bytes, img.manifest.chunk_size).is_err(),
+            "flip at artifact byte {at} of {len} went undetected"
+        );
+        // a flipped manifest byte fails the manifest's own checksum
+        let mut mbytes = img.manifest_bytes.clone();
+        let mat = rng.usize_below(mbytes.len());
+        mbytes[mat] ^= 1 << rng.usize_below(8);
+        prop_assert!(
+            Manifest::decode(&mbytes).is_err(),
+            "flip at manifest byte {mat} of {} went undetected",
+            mbytes.len()
+        );
+        Ok(())
+    });
+}
+
+/// A server that corrupts every range response can never produce a
+/// resident expert — fetch attempts exhaust, the error surfaces, and the
+/// slot stays fetchable (a later attempt against a healthy server would
+/// succeed; nothing wedges).
+#[test]
+fn always_corrupt_server_never_yields_a_resident_expert() {
+    let (_local, srv) = serve(
+        &[QuantKind::Int4],
+        ChaosKnobs { corrupt_every: 1, drop_every: 0 },
+    );
+    // the manifest op is not corrupted by the chaos knob, so connect works
+    let (remote, _m) = connect_store(&srv.local_addr()).unwrap();
+    let store = remote.store(QuantKind::Int4);
+    let c = remote.remote_counters().unwrap();
+    assert!(store.try_fetch((0, 0)).is_err());
+    let failures_after_first = c.checksum_failures.load(Ordering::Relaxed);
+    assert!(failures_after_first >= 2, "bounded attempts all rejected");
+    // not sticky: the slot is retried (and fails again, attempts growing)
+    assert!(store.try_fetch((0, 0)).is_err());
+    assert!(c.checksum_failures.load(Ordering::Relaxed) > failures_after_first);
+    assert_eq!(c.fetches.load(Ordering::Relaxed), 0, "nothing ever resident");
+}
+
+/// The acceptance drill: a transfer engine drains every expert from a
+/// *flaky* server (periodic corrupt payloads + dropped connections). The
+/// retry ladder absorbs every fault, the drained bits match the all-local
+/// twin engine exactly, and the source counters conserve.
+#[test]
+fn flaky_server_drain_is_bit_identical_with_counters_conserved() {
+    let (local, srv) = serve(
+        &[QuantKind::Int4],
+        // periodic faults, never two in a row: every fetch converges
+        // within the client's bounded attempts
+        ChaosKnobs { corrupt_every: 5, drop_every: 8 },
+    );
+    let (remote, m) = connect_store(&srv.local_addr()).unwrap();
+    let remote_engine = engine_over(Arc::new(remote));
+    let local_engine = engine_over(Arc::clone(&local));
+
+    let mut issued = 0u64;
+    for layer in 0..m.n_layers {
+        for expert in 0..m.n_experts {
+            let id = (layer, expert);
+            let rh = remote_engine.request(id, Priority::OnDemand);
+            let lh = local_engine.request(id, Priority::OnDemand);
+            assert_eq!(
+                rh.wait_full().w1.data,
+                lh.wait_full().w1.data,
+                "expert {id:?} drained different bits"
+            );
+            issued += 1;
+        }
+    }
+    remote_engine.quiesce().unwrap();
+    local_engine.quiesce().unwrap();
+
+    // every request resolved exactly once, all bytes remote-sourced
+    let s = remote_engine.source_snapshot();
+    let bytes = remote_engine.stats.bytes.load(Ordering::Relaxed);
+    assert_eq!(remote_engine.stats.transfers.load(Ordering::Relaxed), issued);
+    assert_eq!(s.local_bytes + s.remote_bytes, bytes);
+    assert_eq!(s.remote_bytes, bytes, "first touches all come off the wire");
+    assert_eq!(s.fetches, issued);
+    assert_eq!(s.remote_faults, 0, "periodic faults never exhaust attempts");
+    // the chaos schedule guarantees both fault species actually fired
+    assert!(s.checksum_failures > 0, "{s:?}");
+    assert!(s.reconnects > 0, "{s:?}");
+    assert!(s.retries > 0, "{s:?}");
+    assert!(s.fetch_ms >= 0.0);
+
+    // a re-transfer of a pinned expert is local-sourced: the wire is only
+    // paid once per expert
+    let h = remote_engine.request((0, 0), Priority::OnDemand);
+    h.wait_full();
+    remote_engine.quiesce().unwrap();
+    let s2 = remote_engine.source_snapshot();
+    assert_eq!(s2.local_bytes, h.bytes as u64);
+    assert_eq!(s2.remote_bytes, s.remote_bytes);
+
+    // the local twin engine reports an all-zero source block
+    let ls = local_engine.source_snapshot();
+    assert_eq!(ls.remote_bytes, 0);
+    assert_eq!(ls.fetches, 0);
+    assert!(local_engine.stats.bytes.load(Ordering::Relaxed) > 0);
+    assert_eq!(ls.local_bytes, local_engine.stats.bytes.load(Ordering::Relaxed));
+}

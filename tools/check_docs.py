@@ -11,6 +11,11 @@ Scans the markdown files under docs/ (plus README.md and ROADMAP.md) for
     rust/src/<a>.rs (longest-prefix match, so paths that go below module
     granularity, e.g. ``crate::mod::Item``, still resolve).
 
+Also cross-checks the CI workflow: every ``cargo test --test NAME`` step
+in .github/workflows/rust.yml must have a matching rust/tests/NAME.rs,
+so a renamed or deleted integration suite fails this check instead of
+silently passing a step that tests nothing.
+
 Exits non-zero listing every reference that does not resolve, so a
 refactor that moves or deletes a module forces the matching docs update
 (docs/architecture.md is the main consumer).
@@ -39,6 +44,11 @@ MOD_RE = re.compile(r"\b(?:crate|adapmoe)((?:::[A-Za-z0-9_]+)+)")
 
 # line-number suffix on a path ref: file.rs:123 or file.rs:123-130
 LINE_SUFFIX_RE = re.compile(r":\d+(?:-\d+)?$")
+
+WORKFLOW = os.path.join(".github", "workflows", "rust.yml")
+
+# named integration-suite steps in CI: cargo test [...] --test NAME
+TEST_STEP_RE = re.compile(r"--test\s+([A-Za-z0-9_-]+)")
 
 
 def path_exists(rel: str) -> bool:
@@ -71,8 +81,23 @@ def check_module(segs):
     return False
 
 
-def main() -> int:
+def check_workflow_tests():
+    """Every --test NAME step in CI must resolve to rust/tests/NAME.rs."""
     missing = []
+    full = os.path.join(REPO, WORKFLOW)
+    if not os.path.exists(full):
+        return missing
+    with open(full, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            for m in TEST_STEP_RE.finditer(line):
+                rel = os.path.join("rust", "tests", m.group(1) + ".rs")
+                if not path_exists(rel):
+                    missing.append((WORKFLOW, lineno, rel))
+    return missing
+
+
+def main() -> int:
+    missing = check_workflow_tests()
     for doc in DOC_FILES:
         full = os.path.join(REPO, doc)
         if not os.path.exists(full):
@@ -92,7 +117,9 @@ def main() -> int:
         for doc, lineno, tok in missing:
             print(f"  {doc}:{lineno}: {tok}")
         return 1
-    print(f"docs link check OK ({len(DOC_FILES)} files scanned)")
+    print(
+        f"docs link check OK ({len(DOC_FILES)} files + {WORKFLOW} scanned)"
+    )
     return 0
 
 
