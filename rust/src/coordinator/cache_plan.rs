@@ -157,6 +157,107 @@ pub fn plan_bytes(inp: &BytePlanInputs) -> BytePlan {
     }
 }
 
+/// Tier-priced planner inputs: each layer prices a cache slot at its own
+/// per-expert wire footprint — the observed resident-tier byte mix the
+/// [`crate::coordinator::sensitivity::SensitivityMap`] cache-planning
+/// consumer feeds in. A layer whose residents sit at a low tier gets
+/// cheaper slots, so the same byte budget buys it more experts.
+#[derive(Clone, Debug)]
+pub struct TierPlanInputs {
+    pub n_experts: usize,
+    /// Total cache budget in bytes.
+    pub budget_bytes: usize,
+    /// Wire bytes of one resident expert, per layer.
+    pub bytes_per_expert: Vec<usize>,
+    pub alpha: Vec<f64>,
+    pub beta: Vec<f64>,
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+/// Ceiling of the DP byte-axis length; real byte budgets are compressed
+/// to at most this many units (prices round *up*, so the budget is never
+/// exceeded — the plan just turns slightly conservative).
+const MAX_BYTE_UNITS: usize = 1 << 16;
+
+/// Knapsack over a byte budget with per-layer slot prices (eq. 19 with a
+/// byte-denominated axis). Uniform prices defer to [`plan_bytes`], so
+/// the uniform configuration stays bit-for-bit identical to the flat
+/// planner; heterogeneous prices run a unit-compressed DP (gcd of the
+/// prices, raised if the table would exceed [`MAX_BYTE_UNITS`]).
+pub fn plan_bytes_tiered(inp: &TierPlanInputs) -> BytePlan {
+    let l = inp.alpha.len();
+    assert_eq!(inp.beta.len(), l, "alpha/beta length mismatch");
+    assert_eq!(inp.bytes_per_expert.len(), l, "bytes_per_expert length mismatch");
+    if l == 0 {
+        return BytePlan { allocation: vec![], byte_budgets: vec![], expected_loads: 0.0 };
+    }
+    let prices: Vec<usize> = inp.bytes_per_expert.iter().map(|&b| b.max(1)).collect();
+    if prices.iter().all(|&p| p == prices[0]) {
+        return plan_bytes(&BytePlanInputs {
+            n_experts: inp.n_experts,
+            budget_bytes: inp.budget_bytes,
+            bytes_per_expert: prices[0],
+            alpha: inp.alpha.clone(),
+            beta: inp.beta.clone(),
+        });
+    }
+
+    let mut unit = prices.iter().fold(0usize, |g, &p| gcd(g, p)).max(1);
+    if inp.budget_bytes / unit > MAX_BYTE_UNITS {
+        unit = (inp.budget_bytes + MAX_BYTE_UNITS - 1) / MAX_BYTE_UNITS;
+    }
+    let unit_price: Vec<usize> =
+        prices.iter().map(|&p| ((p + unit - 1) / unit).max(1)).collect();
+    let t_units = inp.budget_bytes / unit;
+    let n = inp.n_experts;
+    let costs = PlanInputs {
+        n_experts: n,
+        budget: 0, // unused by on_demand_cost
+        alpha: inp.alpha.clone(),
+        beta: inp.beta.clone(),
+    };
+
+    let mut f_prev = vec![0.0f64; t_units + 1];
+    let mut f_cur = vec![0.0f64; t_units + 1];
+    let mut choice = vec![vec![0usize; t_units + 1]; l];
+    for i in 0..l {
+        let price = unit_price[i];
+        for j in 0..=t_units {
+            let mut best = f64::INFINITY;
+            let mut best_k = 0;
+            for k in 0..=n.min(j / price) {
+                let c = f_prev[j - k * price] + on_demand_cost(&costs, i, k);
+                if c < best - 1e-15 {
+                    best = c;
+                    best_k = k;
+                }
+            }
+            f_cur[j] = best;
+            choice[i][j] = best_k;
+        }
+        std::mem::swap(&mut f_prev, &mut f_cur);
+    }
+
+    let mut allocation = vec![0usize; l];
+    let mut j = t_units;
+    for i in (0..l).rev() {
+        allocation[i] = choice[i][j];
+        j -= choice[i][j] * unit_price[i];
+    }
+    BytePlan {
+        byte_budgets: allocation.iter().zip(&prices).map(|(&t, &p)| t * p).collect(),
+        allocation,
+        expected_loads: f_prev[t_units],
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -340,5 +441,147 @@ mod tests {
             beta: vec![0.5; 2],
         });
         assert_eq!(z.allocation.len(), 2);
+    }
+
+    #[test]
+    fn tiered_uniform_prices_defer_to_flat_byte_planner() {
+        // All layers priced alike must be bit-identical to plan_bytes —
+        // the uniform-SensitivityMap determinism guarantee.
+        let inp = inputs(4, 16);
+        let per = 777usize;
+        let flat = plan_bytes(&BytePlanInputs {
+            n_experts: inp.n_experts,
+            budget_bytes: 16 * per + 3,
+            bytes_per_expert: per,
+            alpha: inp.alpha.clone(),
+            beta: inp.beta.clone(),
+        });
+        let tiered = plan_bytes_tiered(&TierPlanInputs {
+            n_experts: inp.n_experts,
+            budget_bytes: 16 * per + 3,
+            bytes_per_expert: vec![per; 4],
+            alpha: inp.alpha.clone(),
+            beta: inp.beta.clone(),
+        });
+        assert_eq!(tiered.allocation, flat.allocation);
+        assert_eq!(tiered.byte_budgets, flat.byte_budgets);
+        assert!((tiered.expected_loads - flat.expected_loads).abs() == 0.0);
+        // empty instance is a no-op, not a panic
+        let e = plan_bytes_tiered(&TierPlanInputs {
+            n_experts: 8,
+            budget_bytes: 100,
+            bytes_per_expert: vec![],
+            alpha: vec![],
+            beta: vec![],
+        });
+        assert!(e.allocation.is_empty() && e.expected_loads == 0.0);
+    }
+
+    #[test]
+    fn tiered_cheap_layers_buy_more_experts() {
+        // Layer 0 residents sit at a quarter the bytes of layer 1's: the
+        // same budget should tilt expert counts toward the cheap layer.
+        let p = plan_bytes_tiered(&TierPlanInputs {
+            n_experts: 8,
+            budget_bytes: 8 * 100,
+            bytes_per_expert: vec![25, 100],
+            alpha: vec![0.2; 2],
+            beta: vec![0.6; 2],
+        });
+        assert!(
+            p.allocation[0] > p.allocation[1],
+            "cheap layer under-cached: {:?}",
+            p.allocation
+        );
+        assert!(p.byte_budgets[0] == p.allocation[0] * 25);
+        assert!(p.byte_budgets.iter().sum::<usize>() <= 800);
+    }
+
+    #[test]
+    fn prop_tiered_dp_matches_bruteforce() {
+        // Heterogeneous small prices: the unit-compressed DP must still
+        // find the byte-feasible optimum (unit = gcd, so no rounding).
+        prop::check("tiered-dp-matches-bruteforce", 40, |rng| {
+            let l = 2 + rng.usize_below(2); // 2..3 layers
+            let n = 3;
+            let prices: Vec<usize> = (0..l).map(|_| 1 + rng.usize_below(4)).collect();
+            let budget = rng.usize_below(20);
+            let inp = TierPlanInputs {
+                n_experts: n,
+                budget_bytes: budget,
+                bytes_per_expert: prices.clone(),
+                alpha: (0..l).map(|_| rng.f64()).collect(),
+                beta: (0..l).map(|_| rng.f64()).collect(),
+            };
+            let p = plan_bytes_tiered(&inp);
+            let costs = PlanInputs {
+                n_experts: n,
+                budget: 0,
+                alpha: inp.alpha.clone(),
+                beta: inp.beta.clone(),
+            };
+            let used: usize = p.allocation.iter().zip(&prices).map(|(&t, &c)| t * c).sum();
+            crate::prop_assert!(used <= budget, "plan over budget: {used} > {budget}");
+            let mut best = f64::INFINITY;
+            let mut stack = vec![Vec::<usize>::new()];
+            while let Some(cur) = stack.pop() {
+                if cur.len() == l {
+                    let bytes: usize =
+                        cur.iter().zip(&prices).map(|(&t, &c)| t * c).sum();
+                    if bytes <= budget {
+                        best = best.min(allocation_cost(&costs, &cur));
+                    }
+                    continue;
+                }
+                for t in 0..=n {
+                    let mut nxt = cur.clone();
+                    nxt.push(t);
+                    stack.push(nxt);
+                }
+            }
+            crate::prop_assert!(
+                (p.expected_loads - best).abs() < 1e-9,
+                "dp={} brute={} inp={:?}",
+                p.expected_loads,
+                best,
+                inp
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_tiered_budget_never_exceeded_and_monotone() {
+        prop::check("tiered-budget-monotone", 60, |rng| {
+            let l = 2 + rng.usize_below(3); // 2..4 layers
+            let prices: Vec<usize> = (0..l).map(|_| 1 + rng.usize_below(8)).collect();
+            let b1 = rng.usize_below(64);
+            let b2 = b1 + rng.usize_below(32);
+            let mk = |budget_bytes| TierPlanInputs {
+                n_experts: 6,
+                budget_bytes,
+                bytes_per_expert: prices.clone(),
+                alpha: (0..l).map(|i| 0.05 + 0.07 * i as f64).collect(),
+                beta: (0..l).map(|i| 0.4 + 0.1 * i as f64).collect(),
+            };
+            let p1 = plan_bytes_tiered(&mk(b1));
+            let p2 = plan_bytes_tiered(&mk(b2));
+            for (p, b) in [(&p1, b1), (&p2, b2)] {
+                let used: usize =
+                    p.allocation.iter().zip(&prices).map(|(&t, &c)| t * c).sum();
+                crate::prop_assert!(used <= b, "over budget: {used} > {b}");
+                crate::prop_assert!(
+                    p.byte_budgets.iter().sum::<usize>() <= b,
+                    "byte ceilings over budget"
+                );
+            }
+            crate::prop_assert!(
+                p2.expected_loads <= p1.expected_loads + 1e-12,
+                "budget {b1} -> {}, {b2} -> {}",
+                p1.expected_loads,
+                p2.expected_loads
+            );
+            Ok(())
+        });
     }
 }

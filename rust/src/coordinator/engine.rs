@@ -45,6 +45,7 @@ use crate::coordinator::gating::GatingPolicy;
 use crate::coordinator::prefetch::{self, PrefetchConfig};
 use crate::coordinator::profile::Profile;
 use crate::coordinator::scheduler::{build_plan_tiered, ScheduleMode, TierMode};
+use crate::coordinator::sensitivity::{LaneIdlePredictor, SensitivityMap, SensitivityPolicy};
 use crate::coordinator::trace::{Phase, TraceCollector};
 use crate::memory::device_cache::DeviceCache;
 use crate::memory::faults::FaultPlan;
@@ -130,6 +131,12 @@ pub struct EngineConfig {
     /// use instead of loaded from local weights. `None` (every preset)
     /// keeps the store fully local and bit-for-bit identical.
     pub remote: Option<String>,
+    /// Which [`SensitivityMap`] drives the four resource consumers —
+    /// tier floors, cache re-planning, eviction/prefetch priority and
+    /// upgrade scheduling (`--sensitivity-policy`, docs/sensitivity.md).
+    /// `Uniform` (every preset) is the identity map, bit-for-bit
+    /// today's behavior.
+    pub sensitivity: SensitivityPolicy,
 }
 
 /// Non-expert weights kept device-resident as literals.
@@ -189,6 +196,13 @@ pub struct Engine {
     pub cache: Arc<ShardedCache>,
     pub xfer: TransferEngine,
     pub profile: Profile,
+    /// The shared sensitivity map — the single source every resource
+    /// consumer reads (docs/sensitivity.md). Also installed on `xfer`
+    /// (tier floors) and `cache` (eviction weights) at construction.
+    sensitivity: Arc<SensitivityMap>,
+    /// Lane idle-time predictor (EWMA of inter-completion gaps) gating
+    /// background upgrades when the map is non-uniform.
+    idle: LaneIdlePredictor,
     kv_k: Vec<Literal>,
     kv_v: Vec<Literal>,
     slots: Slots,
@@ -302,6 +316,15 @@ impl Engine {
             ecfg.time_scale,
             ecfg.lanes.clone(),
         );
+        // One map, four consumers: install it on the transfer engine
+        // (tier floors) and the cache shards (eviction weights); the
+        // engine itself reads it for prefetch priority, re-planning and
+        // upgrade ordering. Uniform policy installs the identity map —
+        // eviction weights stay `None`, so nothing changes bits.
+        let sensitivity =
+            Arc::new(SensitivityMap::from_profile(&profile, ecfg.sensitivity));
+        xfer.set_sensitivity(Arc::clone(&sensitivity));
+        cache.set_eviction_weights(sensitivity.eviction_weights());
 
         let b = ecfg.batch;
         let kv_dims = [b, cfg.n_heads, cfg.max_seq, cfg.head_dim];
@@ -329,6 +352,8 @@ impl Engine {
             cache,
             xfer,
             profile,
+            sensitivity,
+            idle: LaneIdlePredictor::new(),
             kv_k,
             kv_v,
             slots: Slots { pos: vec![0; b], active: vec![false; b] },
@@ -741,11 +766,22 @@ impl Engine {
             &self.xfer,
             self.ecfg.prefetch.max_outstanding_per_device,
         );
+        // Sensitivity re-rank (consumer 3): important layers jump the
+        // queue. Identity under the uniform map, so the request order —
+        // and therefore every lane assignment — is unchanged there.
+        let shaped = !self.sensitivity.is_uniform();
+        let reqs = prefetch::prioritize(reqs, &self.sensitivity);
         for (id, p) in reqs {
             // Slack = 1 - predicted probability: a near-certain expert is
             // close to urgent (lower tier, lands sooner); a speculative
-            // one can afford the high-precision bytes.
-            self.xfer.request_with_slack(id, Priority::Prefetch, 1.0 - p);
+            // one can afford the high-precision bytes. A non-uniform map
+            // floors the slack at the layer's importance so sensitive
+            // layers never ride the lowest tier speculatively.
+            let slack = self.sensitivity.prefetch_slack(id.0, p);
+            self.xfer.request_with_slack(id, Priority::Prefetch, slack);
+            if shaped {
+                self.xfer.note_sensitivity_prefetch();
+            }
         }
         self.predicted[layer] = Some(sets);
         Ok(satisfied)
@@ -759,12 +795,32 @@ impl Engine {
     /// zero transfers in flight, they never contend with prefetches
     /// either.
     fn issue_upgrades(&mut self) {
-        if self.tiered.n_tiers() < 2 || self.xfer.pending() > 0 {
+        if self.tiered.n_tiers() < 2 {
+            return;
+        }
+        // Idle gate (consumer 4). Uniform map: the historical "zero
+        // transfers in flight" test, bit-for-bit. Non-uniform map: the
+        // lane idle-time predictor — an EWMA of each lane's
+        // inter-completion gaps — which also fires when the lanes are
+        // drained *and* past their typical completion cadence, so
+        // upgrades stop thrashing against a prefetch burst that is
+        // about to land.
+        let shaped = !self.sensitivity.is_uniform();
+        if shaped {
+            let snaps = self.xfer.lane_snapshots();
+            self.idle.observe(&snaps);
+            if self.xfer.pending() > 0 || !self.idle.predicted_idle(&snaps) {
+                return;
+            }
+        } else if self.xfer.pending() > 0 {
             return;
         }
         let top = self.tiered.highest();
         let mut budget = self.ecfg.upgrade_budget;
-        for layer in 0..self.cfg.n_layers {
+        // Layer order is the map's upgrade ranking: identity (0..L) when
+        // uniform, importance-descending otherwise — the most sensitive
+        // layers reach the top tier first.
+        for layer in self.sensitivity.upgrade_order(self.cfg.n_layers) {
             for e in self.cache.resident(layer) {
                 let id = (layer, e);
                 let Some(meta) = self.cache.resident_meta(id) else { continue };
@@ -772,6 +828,9 @@ impl Engine {
                     continue; // already at (or above) the top tier
                 }
                 self.xfer.request_at(id, Priority::Upgrade, top);
+                if shaped {
+                    self.xfer.note_sensitivity_upgrade();
+                }
                 budget -= 1;
                 if budget == 0 {
                     return;
@@ -887,6 +946,38 @@ impl Engine {
                 // a post-hoc conversion, and apply_tiered_counts installs
                 // them without transiently shrinking the count caps.
                 let per = self.tiered.base().expert_transfer_bytes((0, 0));
+                if !self.sensitivity.is_uniform() {
+                    // Tier-priced re-plan (consumer 2): price each
+                    // layer's slots at its observed resident-tier byte
+                    // mix, so a layer serving degraded copies gets
+                    // cheaper slots and the DP shifts budget toward it.
+                    let shard = self.cache.shard(0);
+                    let bytes_per_expert: Vec<usize> = (0..self.cfg.n_layers)
+                        .map(|l| {
+                            let resident = shard.resident(l);
+                            let total: usize = resident
+                                .iter()
+                                .filter_map(|&e| shard.resident_meta((l, e)))
+                                .map(|m| m.bytes)
+                                .sum();
+                            if total == 0 {
+                                per
+                            } else {
+                                (total / resident.len()).max(1)
+                            }
+                        })
+                        .collect();
+                    let bp = cache_plan::plan_bytes_tiered(&cache_plan::TierPlanInputs {
+                        n_experts: inputs.n_experts,
+                        budget_bytes: inputs.budget * per,
+                        bytes_per_expert,
+                        alpha: inputs.alpha.clone(),
+                        beta: inputs.beta.clone(),
+                    });
+                    self.xfer.note_sensitivity_plan();
+                    apply_tiered_bytes(self.cache.shard(0), &self.tiered, &bp);
+                    return;
+                }
                 let bp = cache_plan::plan_bytes(&cache_plan::BytePlanInputs {
                     n_experts: inputs.n_experts,
                     budget_bytes: inputs.budget * per,
@@ -924,6 +1015,11 @@ impl Engine {
                 self.cache.shard(d).set_allocation(alloc);
             }
         }
+    }
+
+    /// The shared sensitivity map all four resource consumers read.
+    pub fn sensitivity_map(&self) -> &Arc<SensitivityMap> {
+        &self.sensitivity
     }
 
     pub fn reset_trace(&mut self) {
@@ -1072,6 +1168,24 @@ fn apply_tiered_counts(shard: &DeviceCache, tiered: &TieredStore, counts: &[usiz
     shard.set_allocation(&raised);
 }
 
+/// Install a tier-priced byte plan on one shard: the planner's own
+/// per-layer byte ceilings (already priced at each layer's resident-tier
+/// mix) go in directly, and each count cap is raised to what those bytes
+/// could hold at the *lowest* tier — the same degrade-mode headroom rule
+/// as [`apply_tiered_counts`], ceilings before counts for the same
+/// no-transient-shrink reason.
+fn apply_tiered_bytes(shard: &DeviceCache, tiered: &TieredStore, bp: &cache_plan::BytePlan) {
+    let lo = tiered
+        .store(tiered.lowest())
+        .expert_transfer_bytes((0, 0))
+        .max(1);
+    let n_experts = tiered.n_experts();
+    let raised: Vec<usize> =
+        bp.byte_budgets.iter().map(|&b| (b / lo).min(n_experts)).collect();
+    shard.set_byte_budget(Some(bp.byte_budgets.clone()));
+    shard.set_allocation(&raised);
+}
+
 /// Byte-denominate a freshly built cache: run [`apply_tiered_counts`]
 /// over every shard's just-planned allocation. Construction-time only —
 /// the counts must be the plan's output, not an already-raised
@@ -1131,6 +1245,7 @@ mod tests {
             compute_workers: 0,
             fault_plan: None,
             remote: None,
+            sensitivity: SensitivityPolicy::Uniform,
         }
     }
 

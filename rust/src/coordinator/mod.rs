@@ -12,6 +12,9 @@
 //! * [`batcher`] — continuous batching for the serving front
 //! * [`trace`] — online profiling (α, β, scores, similarity, latency)
 //! * [`profile`] — offline profile loader (artifacts/profile.json)
+//! * [`sensitivity`] — one [`sensitivity::SensitivityMap`] shared by tier
+//!   assignment, cache planning, eviction/prefetch priority and upgrade
+//!   scheduling (docs/sensitivity.md)
 
 pub mod batcher;
 pub mod cache_plan;
@@ -22,4 +25,5 @@ pub mod policy;
 pub mod prefetch;
 pub mod profile;
 pub mod scheduler;
+pub mod sensitivity;
 pub mod trace;

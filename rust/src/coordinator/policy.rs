@@ -16,6 +16,7 @@ use crate::coordinator::gating::GatingPolicy;
 use crate::coordinator::prefetch::PrefetchConfig;
 use crate::coordinator::profile::Profile;
 use crate::coordinator::scheduler::{ScheduleMode, TierMode};
+use crate::coordinator::sensitivity::SensitivityPolicy;
 use crate::memory::faults::FaultPlan;
 use crate::memory::platform::Platform;
 use crate::memory::quant::QuantKind;
@@ -58,6 +59,9 @@ pub struct RunSettings {
     pub fault_plan: Option<FaultPlan>,
     /// Artifact-server address (`--remote`; `None` = local store).
     pub remote: Option<String>,
+    /// Sensitivity map driving the resource consumers
+    /// (`--sensitivity-policy`; `Uniform` = historical behavior).
+    pub sensitivity: SensitivityPolicy,
 }
 
 impl RunSettings {
@@ -81,6 +85,7 @@ impl RunSettings {
             prefetch_per_device: None,
             fault_plan: None,
             remote: None,
+            sensitivity: SensitivityPolicy::Uniform,
         }
     }
 }
@@ -123,6 +128,7 @@ pub fn method(name: &str, s: &RunSettings, profile: &Profile) -> Option<EngineCo
         placement: s.placement,
         fault_plan: s.fault_plan.clone(),
         remote: s.remote.clone(),
+        sensitivity: s.sensitivity,
     };
     let mut cfg = match name {
         // DeepSpeed/FlexGen-style dense offloading: loads every expert of
@@ -304,6 +310,20 @@ mod tests {
         assert_eq!(cfg.remote.as_deref(), Some("127.0.0.1:9099"));
         // default stays local
         assert!(method("adapmoe", &settings(), &p).unwrap().remote.is_none());
+    }
+
+    #[test]
+    fn sensitivity_policy_propagates_to_config() {
+        let p = Profile::synthetic(4);
+        let mut s = settings();
+        s.sensitivity = SensitivityPolicy::Profile;
+        let cfg = method("adapmoe", &s, &p).unwrap();
+        assert_eq!(cfg.sensitivity, SensitivityPolicy::Profile);
+        // every preset defaults to the uniform (identity) map
+        for m in METHODS {
+            let d = method(m, &settings(), &p).unwrap();
+            assert_eq!(d.sensitivity, SensitivityPolicy::Uniform, "{m}");
+        }
     }
 
     #[test]

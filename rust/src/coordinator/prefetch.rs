@@ -164,6 +164,27 @@ pub fn plan_requests_with_mass(
         .collect()
 }
 
+/// Re-rank a prefetch plan by sensitivity: each request's priority key is
+/// `importance(layer) × predicted probability`, sorted descending with a
+/// stable sort so equal keys keep their mass order. Under a uniform
+/// [`SensitivityMap`] every key equals the probability the list is
+/// already sorted by, so the plan comes back bit-for-bit unchanged —
+/// the determinism guarantee of docs/sensitivity.md.
+pub fn prioritize(
+    reqs: Vec<(ExpertId, f64)>,
+    map: &crate::coordinator::sensitivity::SensitivityMap,
+) -> Vec<(ExpertId, f64)> {
+    if map.is_uniform() {
+        return reqs;
+    }
+    let mut keyed: Vec<((ExpertId, f64), f64)> = reqs
+        .into_iter()
+        .map(|(id, p)| ((id, p), map.importance(id.0) * p))
+        .collect();
+    keyed.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+    keyed.into_iter().map(|(r, _)| r).collect()
+}
+
 /// True when every predicted expert for `layer` is resident or staged —
 /// the paper's condition for extending the prefetch horizon to the layer
 /// after ("if the experts needed by the next layer are already cached,
@@ -298,6 +319,24 @@ mod tests {
         // uncapped path unchanged
         let all = plan_requests(0, &predicted, &probs, &cache, &xfer);
         assert_eq!(all.len(), 4);
+    }
+
+    #[test]
+    fn prioritize_is_identity_for_uniform_and_reorders_by_importance() {
+        use crate::coordinator::profile::Profile;
+        use crate::coordinator::sensitivity::{SensitivityMap, SensitivityPolicy};
+        let reqs = vec![((0usize, 1usize), 0.9), ((1, 2), 0.8), ((2, 3), 0.7)];
+        let uni = SensitivityMap::uniform(3);
+        assert_eq!(prioritize(reqs.clone(), &uni), reqs);
+        let mut prof = Profile::synthetic(3);
+        prof.sensitivity = vec![0.1, 0.2, 1.0];
+        let m = SensitivityMap::from_profile(&prof, SensitivityPolicy::Profile);
+        // keys: 0.09, 0.16, 0.70 — importance dominates raw mass order
+        let out = prioritize(reqs, &m);
+        assert_eq!(
+            out.iter().map(|&(id, _)| id).collect::<Vec<_>>(),
+            vec![(2, 3), (1, 2), (0, 1)]
+        );
     }
 
     #[test]

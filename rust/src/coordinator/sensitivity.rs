@@ -1,0 +1,419 @@
+//! The paper's core signal — per-layer Fisher sensitivity — as one shared
+//! data structure every resource decision reads (docs/sensitivity.md).
+//!
+//! AdapMoE derives sensitivity offline (eq. 6–7) and uses it to gate
+//! expert *count*. ROADMAP's "sensitivity-driven resource unification"
+//! extends it to the other three resource axes, EdgeMoE-style
+//! (importance → bit width, PAPERS.md):
+//!
+//! 1. **Tier assignment** — per-layer importance floors the precision
+//!    tier a non-urgent transfer rides
+//!    ([`SensitivityMap::tier_for`], consumed by
+//!    `crate::memory::transfer::TransferEngine::request_with_slack`).
+//! 2. **Cache planning** — importance prices each layer's DP slots at
+//!    its observed resident-tier byte mix
+//!    (`crate::coordinator::cache_plan::plan_bytes_tiered`).
+//! 3. **Eviction / prefetch priority** — importance weights LRU victim
+//!    selection ([`SensitivityMap::eviction_weights`], consumed by
+//!    `crate::memory::device_cache::DeviceCache`) and re-ranks prefetch
+//!    request order (`crate::coordinator::prefetch::prioritize`).
+//! 4. **Upgrade scheduling** — a per-lane EWMA of inter-completion gaps
+//!    ([`LaneIdlePredictor`]) replaces the `pending == 0` heuristic for
+//!    background precision upgrades, and importance orders which layers
+//!    upgrade first ([`SensitivityMap::upgrade_order`]).
+//!
+//! **Determinism contract:** the [`SensitivityPolicy::Uniform`] map is
+//! the identity everywhere — every consumer reproduces the historical
+//! decision bit-for-bit (rust/tests/sensitivity.rs locks this down), so
+//! the default engine shape is unchanged.
+
+use std::time::Instant;
+
+use crate::coordinator::profile::Profile;
+use crate::memory::quant::QuantKind;
+use crate::memory::transfer::LaneSnapshot;
+
+/// Which sensitivity signal the map carries (`--sensitivity-policy`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SensitivityPolicy {
+    /// Every layer equally important — the historical behaviour, bit-for-
+    /// bit (the map is the identity for all four consumers).
+    Uniform,
+    /// Per-layer importance from the offline profile's Fisher
+    /// sensitivities (paper eq. 6–7), normalized to (0, 1].
+    Profile,
+}
+
+impl SensitivityPolicy {
+    pub fn from_name(name: &str) -> Option<SensitivityPolicy> {
+        match name {
+            "uniform" => Some(SensitivityPolicy::Uniform),
+            "profile" => Some(SensitivityPolicy::Profile),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SensitivityPolicy::Uniform => "uniform",
+            SensitivityPolicy::Profile => "profile",
+        }
+    }
+
+    pub fn names() -> &'static [&'static str] {
+        &["uniform", "profile"]
+    }
+}
+
+/// Per-layer importance in (0, 1], shared (behind one `Arc`) by the tier
+/// selector, the cache planner, the eviction/prefetch paths and the
+/// upgrade scheduler — the "one profile, four consumers" refactor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SensitivityMap {
+    policy: SensitivityPolicy,
+    /// Normalized per-layer importance; empty for the uniform map (every
+    /// accessor then degenerates to the identity).
+    importance: Vec<f64>,
+}
+
+impl SensitivityMap {
+    /// The identity map: every consumer behaves exactly as before.
+    pub fn uniform(n_layers: usize) -> SensitivityMap {
+        SensitivityMap {
+            policy: SensitivityPolicy::Uniform,
+            importance: vec![1.0; n_layers],
+        }
+    }
+
+    /// Build from the offline profile. `Uniform` ignores the profile;
+    /// `Profile` normalizes the Fisher sensitivities by their max so the
+    /// most sensitive layer has importance exactly 1.0. A degenerate
+    /// profile (empty or non-positive sensitivities) falls back to the
+    /// uniform map rather than inventing a signal.
+    pub fn from_profile(profile: &Profile, policy: SensitivityPolicy) -> SensitivityMap {
+        let n = profile.sensitivity.len();
+        if policy == SensitivityPolicy::Uniform {
+            return Self::uniform(n);
+        }
+        let max = profile.sensitivity.iter().copied().fold(0.0f64, f64::max);
+        if n == 0 || !max.is_finite() || max <= 0.0 {
+            return Self::uniform(n);
+        }
+        let importance = profile
+            .sensitivity
+            .iter()
+            .map(|&s| (s / max).clamp(0.0, 1.0))
+            .collect();
+        SensitivityMap { policy: SensitivityPolicy::Profile, importance }
+    }
+
+    pub fn policy(&self) -> SensitivityPolicy {
+        self.policy
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.importance.len()
+    }
+
+    /// True for the identity map — consumers take their historical,
+    /// bit-for-bit-unchanged path.
+    pub fn is_uniform(&self) -> bool {
+        self.policy == SensitivityPolicy::Uniform
+    }
+
+    /// Normalized importance of one layer (1.0 for the uniform map and
+    /// for layers beyond the profile, so unknown layers are treated as
+    /// maximally sensitive — the conservative default).
+    pub fn importance(&self, layer: usize) -> f64 {
+        if self.is_uniform() {
+            return 1.0;
+        }
+        self.importance.get(layer).copied().unwrap_or(1.0)
+    }
+
+    /// Offline importance → bit-width assignment (EdgeMoE, PAPERS.md):
+    /// the precision tier a layer's experts should at least ride.
+    /// Monotone in importance: a more important layer never maps to a
+    /// lower tier (property-tested in rust/tests/sensitivity.rs). The
+    /// uniform map pins the top tier, which as a *floor* is inert — the
+    /// engine only consults it under the `Profile` policy.
+    pub fn tier_for(&self, layer: usize, tiers: &[QuantKind]) -> QuantKind {
+        let hi = tiers.len() - 1;
+        let w = self.importance(layer).clamp(0.0, 1.0);
+        tiers[((w * hi as f64).round() as usize).min(hi)]
+    }
+
+    /// Per-layer tier assignment table (offline store construction and
+    /// the docs' worked examples).
+    pub fn tier_assignments(&self, tiers: &[QuantKind]) -> Vec<QuantKind> {
+        (0..self.n_layers().max(1)).map(|l| self.tier_for(l, tiers)).collect()
+    }
+
+    /// Prefetch slack for an expert with normalized predicted probability
+    /// `p`. Uniform: exactly the historical `1.0 - p`. Profile: floored
+    /// at the layer's importance, so a sensitive layer's prefetches keep
+    /// riding a high-precision tier even when the router is near-certain.
+    pub fn prefetch_slack(&self, layer: usize, p: f64) -> f64 {
+        let base = 1.0 - p;
+        if self.is_uniform() {
+            return base;
+        }
+        base.max(self.importance(layer))
+    }
+
+    /// Per-layer eviction weights for the caches, or `None` for the
+    /// uniform map (caches then keep exact LRU).
+    pub fn eviction_weights(&self) -> Option<Vec<f64>> {
+        if self.is_uniform() {
+            None
+        } else {
+            Some(self.importance.clone())
+        }
+    }
+
+    /// Layer visit order for background upgrades: uniform keeps the
+    /// historical `0..n` sweep; profile visits the most sensitive layers
+    /// first (stable on ties, so equal-importance layers keep index
+    /// order and the schedule stays deterministic).
+    pub fn upgrade_order(&self, n_layers: usize) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..n_layers).collect();
+        if !self.is_uniform() {
+            order.sort_by(|&a, &b| {
+                self.importance(b)
+                    .partial_cmp(&self.importance(a))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+        }
+        order
+    }
+}
+
+/// Per-lane EWMA of inter-completion gaps — the upgrade scheduler's
+/// idle-time predictor. The historical heuristic (`pending == 0`) fires
+/// the moment the queues drain, even mid-burst between two waves of
+/// on-demand loads; the predictor instead waits until a lane has been
+/// quiet for at least its *typical* completion gap, so upgrades land in
+/// genuinely idle windows (consumer 4, docs/sensitivity.md).
+#[derive(Debug, Default)]
+pub struct LaneIdlePredictor {
+    lanes: Vec<LaneTrack>,
+    /// EWMA smoothing factor for the gap estimate.
+    alpha: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct LaneTrack {
+    /// Cumulative transfer count at the last observation.
+    transfers: u64,
+    /// When the last completion delta was observed.
+    last_completion: Option<Instant>,
+    /// Smoothed inter-completion gap (seconds); 0 until two deltas seen.
+    ewma_gap: f64,
+}
+
+impl LaneIdlePredictor {
+    pub fn new() -> LaneIdlePredictor {
+        LaneIdlePredictor { lanes: Vec::new(), alpha: 0.3 }
+    }
+
+    /// Feed one per-lane snapshot set; call once per engine step.
+    pub fn observe(&mut self, snaps: &[LaneSnapshot]) {
+        self.observe_at(snaps, Instant::now());
+    }
+
+    fn observe_at(&mut self, snaps: &[LaneSnapshot], now: Instant) {
+        if self.lanes.len() < snaps.len() {
+            self.lanes.resize(
+                snaps.len(),
+                LaneTrack { transfers: 0, last_completion: None, ewma_gap: 0.0 },
+            );
+        }
+        for s in snaps {
+            let t = &mut self.lanes[s.lane];
+            if s.transfers > t.transfers {
+                if let Some(prev) = t.last_completion {
+                    let gap = now.duration_since(prev).as_secs_f64();
+                    t.ewma_gap = if t.ewma_gap == 0.0 {
+                        gap
+                    } else {
+                        self.alpha * gap + (1.0 - self.alpha) * t.ewma_gap
+                    };
+                }
+                t.last_completion = Some(now);
+            }
+            t.transfers = s.transfers;
+        }
+    }
+
+    /// True when every lane looks idle *and likely to stay idle*: no
+    /// queued jobs, and quiet for at least its smoothed completion gap.
+    /// A lane that has never completed anything (or has no gap estimate
+    /// yet) counts as idle when its queue is empty — the predictor must
+    /// not wedge upgrades shut on a cold start.
+    pub fn predicted_idle(&self, snaps: &[LaneSnapshot]) -> bool {
+        self.predicted_idle_at(snaps, Instant::now())
+    }
+
+    fn predicted_idle_at(&self, snaps: &[LaneSnapshot], now: Instant) -> bool {
+        snaps.iter().all(|s| {
+            if s.queued_jobs > 0 {
+                return false;
+            }
+            match self.lanes.get(s.lane) {
+                Some(t) if t.ewma_gap > 0.0 => match t.last_completion {
+                    Some(prev) => {
+                        now.duration_since(prev).as_secs_f64() >= t.ewma_gap
+                    }
+                    None => true,
+                },
+                _ => true,
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    use crate::memory::transfer::LaneHealth;
+
+    fn snap(lane: usize, transfers: u64, queued_jobs: u64) -> LaneSnapshot {
+        LaneSnapshot {
+            lane,
+            transfers,
+            bytes: 0,
+            on_demand: 0,
+            prefetch: 0,
+            upgrades: 0,
+            busy_ms: 0.0,
+            queued_bytes: 0,
+            queued_jobs,
+            health: LaneHealth::Healthy,
+            retries: 0,
+            timeouts: 0,
+            failovers: 0,
+        }
+    }
+
+    #[test]
+    fn uniform_map_is_the_identity_everywhere() {
+        let m = SensitivityMap::uniform(4);
+        assert!(m.is_uniform());
+        let tiers = [QuantKind::Int2, QuantKind::Int4, QuantKind::Int8];
+        for l in 0..6 {
+            assert_eq!(m.importance(l), 1.0);
+            assert_eq!(m.tier_for(l, &tiers), QuantKind::Int8);
+        }
+        // prefetch slack is exactly the historical 1 - p
+        for p in [0.0, 0.25, 0.9, 1.0] {
+            assert_eq!(m.prefetch_slack(2, p), 1.0 - p);
+        }
+        assert!(m.eviction_weights().is_none());
+        assert_eq!(m.upgrade_order(4), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn profile_map_normalizes_and_orders_by_importance() {
+        let p = Profile::synthetic(4); // strictly decreasing sensitivity
+        let m = SensitivityMap::from_profile(&p, SensitivityPolicy::Profile);
+        assert!(!m.is_uniform());
+        assert_eq!(m.importance(0), 1.0, "max-sensitivity layer normalizes to 1");
+        for l in 1..4 {
+            assert!(m.importance(l) < m.importance(l - 1));
+        }
+        // out-of-profile layers default conservative
+        assert_eq!(m.importance(99), 1.0);
+        assert_eq!(m.upgrade_order(4), vec![0, 1, 2, 3]); // already descending
+        // an inverted profile reverses the order
+        let inv = Profile {
+            sensitivity: vec![0.1, 0.2, 0.4, 0.8],
+            ..Profile::synthetic(4)
+        };
+        let mi = SensitivityMap::from_profile(&inv, SensitivityPolicy::Profile);
+        assert_eq!(mi.upgrade_order(4), vec![3, 2, 1, 0]);
+        assert_eq!(mi.eviction_weights().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn degenerate_profiles_fall_back_to_uniform() {
+        let empty = Profile { sensitivity: vec![], ..Profile::synthetic(0) };
+        assert!(SensitivityMap::from_profile(&empty, SensitivityPolicy::Profile)
+            .is_uniform());
+        let zeros = Profile { sensitivity: vec![0.0; 3], ..Profile::synthetic(3) };
+        assert!(SensitivityMap::from_profile(&zeros, SensitivityPolicy::Profile)
+            .is_uniform());
+    }
+
+    #[test]
+    fn tier_for_is_monotone_and_slack_floors_at_importance() {
+        let p = Profile::synthetic(6);
+        let m = SensitivityMap::from_profile(&p, SensitivityPolicy::Profile);
+        let tiers = [QuantKind::Int2, QuantKind::Int4, QuantKind::Int8];
+        for l in 1..6 {
+            assert!(
+                m.tier_for(l, &tiers).bits() <= m.tier_for(l - 1, &tiers).bits(),
+                "layer {l} outranks the more sensitive layer {}",
+                l - 1
+            );
+        }
+        // near-certain prefetch on the most sensitive layer keeps full slack
+        assert_eq!(m.prefetch_slack(0, 0.99), 1.0);
+        // on a low-importance layer the historical signal dominates
+        let w5 = m.importance(5);
+        assert_eq!(m.prefetch_slack(5, 0.1), (1.0f64 - 0.1).max(w5));
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for name in SensitivityPolicy::names() {
+            assert_eq!(SensitivityPolicy::from_name(name).unwrap().name(), *name);
+        }
+        assert!(SensitivityPolicy::from_name("psychic").is_none());
+    }
+
+    #[test]
+    fn idle_predictor_learns_gaps_and_gates_on_them() {
+        let mut p = LaneIdlePredictor::new();
+        let t0 = Instant::now();
+        // cold start: empty queues predict idle
+        assert!(p.predicted_idle_at(&[snap(0, 0, 0)], t0));
+        // a queued job is never idle
+        assert!(!p.predicted_idle_at(&[snap(0, 0, 3)], t0));
+        // two completions 100ms apart establish a gap estimate
+        p.observe_at(&[snap(0, 1, 0)], t0);
+        p.observe_at(&[snap(0, 2, 0)], t0 + Duration::from_millis(100));
+        // 10ms after the last completion: too soon to call it idle
+        assert!(!p.predicted_idle_at(
+            &[snap(0, 2, 0)],
+            t0 + Duration::from_millis(110)
+        ));
+        // 150ms after: quiet past the learned gap — idle
+        assert!(p.predicted_idle_at(
+            &[snap(0, 2, 0)],
+            t0 + Duration::from_millis(250)
+        ));
+        // a second lane with queued work blocks the verdict
+        p.observe_at(&[snap(0, 2, 0), snap(1, 1, 0)], t0 + Duration::from_millis(300));
+        assert!(!p.predicted_idle_at(
+            &[snap(0, 2, 0), snap(1, 1, 2)],
+            t0 + Duration::from_secs(10)
+        ));
+    }
+
+    #[test]
+    fn ewma_smooths_toward_recent_gaps() {
+        let mut p = LaneIdlePredictor::new();
+        let t0 = Instant::now();
+        p.observe_at(&[snap(0, 1, 0)], t0);
+        p.observe_at(&[snap(0, 2, 0)], t0 + Duration::from_millis(100));
+        let g1 = p.lanes[0].ewma_gap;
+        assert!((g1 - 0.1).abs() < 1e-9, "first gap seeds the estimate: {g1}");
+        p.observe_at(&[snap(0, 3, 0)], t0 + Duration::from_millis(400));
+        let g2 = p.lanes[0].ewma_gap;
+        // alpha 0.3 over (0.3s, 0.1s) → 0.16s
+        assert!((g2 - 0.16).abs() < 1e-9, "{g2}");
+    }
+}

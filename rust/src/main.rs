@@ -19,6 +19,7 @@ use adapmoe::coordinator::cache_plan;
 use adapmoe::coordinator::engine::Engine;
 use adapmoe::coordinator::policy::{self, RunSettings};
 use adapmoe::coordinator::profile::Profile;
+use adapmoe::coordinator::sensitivity::SensitivityPolicy;
 use adapmoe::memory::faults::FaultPlan;
 use adapmoe::memory::platform::Platform;
 use adapmoe::memory::quant::QuantKind;
@@ -87,6 +88,9 @@ fn usage() {
                              names several) — docs/tiered-precision.md\n\
            --upgrade-budget N  background precision upgrades per idle moment\n\
                              (default: 0 = off)\n\
+           --sensitivity-policy P  {} (default: uniform) — one map driving\n\
+                             tier floors, cache re-plans, eviction and\n\
+                             upgrade order (docs/sensitivity.md)\n\
            --prefetch-device-cap N  per-device in-flight prefetch cap\n\
                              (default: 0 = global window only)\n\
            --fault-plan PLAN scripted lane/device faults, ;-separated\n\
@@ -113,6 +117,7 @@ fn usage() {
         LanePolicy::names().join("|"),
         Placement::names().join("|"),
         PrecisionPolicy::names().join("|"),
+        SensitivityPolicy::names().join("|"),
     );
 }
 
@@ -160,6 +165,9 @@ fn build_engine(args: &Args, default_batch: usize) -> Result<Engine> {
     if settings.upgrade_budget > 0 && settings.tiers.len() < 2 {
         bail!("--upgrade-budget needs --tiers with at least two tiers");
     }
+    settings.sensitivity =
+        SensitivityPolicy::from_name(&args.str_or("sensitivity-policy", "uniform"))
+            .context("unknown sensitivity policy (see --help)")?;
     let cap = args.usize_or("prefetch-device-cap", 0);
     settings.prefetch_per_device = (cap > 0).then_some(cap);
     if let Some(spec) = args.get("fault-plan") {

@@ -130,6 +130,12 @@ impl LayerState {
             .map(|&(e, _)| e)
             .collect()
     }
+
+    /// Drop one specific resident expert (weighted-eviction path). Its
+    /// queue entries go stale and are skipped/compacted lazily.
+    fn remove(&mut self, e: usize) {
+        self.stamp.remove(&e);
+    }
 }
 
 struct Inner {
@@ -145,15 +151,71 @@ struct Inner {
     byte_budget: Option<Vec<usize>>,
     /// Monotone recency clock shared by every layer's stamp queue.
     clock: u64,
+    /// Per-layer sensitivity importance biasing victim selection
+    /// (consumer 3, docs/sensitivity.md). `None` — the uniform-map
+    /// default — keeps exact LRU.
+    eviction_weights: Option<Vec<f64>>,
     hits: u64,
     misses: u64,
     evictions: u64,
+    /// Evictions where the importance weighting picked a victim other
+    /// than the LRU head (`SensitivitySnapshot.evictions`).
+    bias_evictions: u64,
 }
 
 impl Inner {
-    /// Evict `layer`'s LRU entry, maintaining entry/meta/byte state.
+    /// Pick the next victim for `layer`. Without eviction weights (or
+    /// with at most one resident) this is exact LRU — the historical,
+    /// amortized-O(1) path. With a positive layer weight the highest
+    /// resident tier's entries are penalized by `w * len` LRU ranks, so
+    /// an important layer keeps its high-precision copies and sheds a
+    /// (slightly more recent) low-tier copy instead; ties keep the older
+    /// entry. A layer whose residents all share one tier degenerates to
+    /// the LRU head either way.
+    fn pick_victim(&mut self, layer: usize) -> Option<usize> {
+        let w = self
+            .eviction_weights
+            .as_ref()
+            .and_then(|ws| ws.get(layer))
+            .copied()
+            .unwrap_or(0.0);
+        if w <= 0.0 || self.layers[layer].len() <= 1 {
+            return self.layers[layer].pop_lru();
+        }
+        let order = self.layers[layer].order();
+        let max_bits = order
+            .iter()
+            .filter_map(|&e| self.meta.get(&(layer, e)))
+            .map(|m| m.kind.bits())
+            .max()
+            .unwrap_or(0);
+        let n = order.len() as f64;
+        let mut best: Option<(f64, usize)> = None;
+        for (rank, &e) in order.iter().enumerate() {
+            // entries without meta count as top-tier (protected)
+            let bits = self
+                .meta
+                .get(&(layer, e))
+                .map(|m| m.kind.bits())
+                .unwrap_or(max_bits);
+            let score =
+                rank as f64 + if bits == max_bits { w * n } else { 0.0 };
+            if best.map_or(true, |(bs, _)| score < bs) {
+                best = Some((score, e));
+            }
+        }
+        let (_, victim) = best?;
+        if victim != order[0] {
+            self.bias_evictions += 1;
+        }
+        self.layers[layer].remove(victim);
+        Some(victim)
+    }
+
+    /// Evict `layer`'s next victim (LRU, importance-weighted when
+    /// configured), maintaining entry/meta/byte state.
     fn evict_lru(&mut self, layer: usize) -> Option<usize> {
-        let victim = self.layers[layer].pop_lru()?;
+        let victim = self.pick_victim(layer)?;
         self.entries.remove(&(layer, victim));
         if let Some(m) = self.meta.remove(&(layer, victim)) {
             self.layer_bytes[layer] = self.layer_bytes[layer].saturating_sub(m.bytes);
@@ -206,9 +268,11 @@ impl DeviceCache {
                 layer_bytes: vec![0; n_layers],
                 byte_budget: None,
                 clock: 0,
+                eviction_weights: None,
                 hits: 0,
                 misses: 0,
                 evictions: 0,
+                bias_evictions: 0,
             }),
         }
     }
@@ -280,6 +344,22 @@ impl DeviceCache {
 
     pub fn byte_budget(&self) -> Option<Vec<usize>> {
         self.inner.lock().unwrap().byte_budget.clone()
+    }
+
+    /// Install (or clear) per-layer sensitivity eviction weights
+    /// (consumer 3, docs/sensitivity.md). `None` — the uniform-map
+    /// default — keeps exact LRU victim selection, bit-for-bit.
+    pub fn set_eviction_weights(&self, weights: Option<Vec<f64>>) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(w) = &weights {
+            assert_eq!(w.len(), g.layers.len());
+        }
+        g.eviction_weights = weights;
+    }
+
+    /// Evictions where importance weighting overrode the LRU head.
+    pub fn bias_evictions(&self) -> u64 {
+        self.inner.lock().unwrap().bias_evictions
     }
 
     /// Resident wire bytes of one layer (sum of entry meta bytes).
@@ -669,6 +749,34 @@ mod tests {
             );
         }
         assert_eq!(c2.resident(0).len(), 1);
+    }
+
+    #[test]
+    fn weighted_eviction_protects_high_tier_and_counts_bias() {
+        let c = DeviceCache::new(vec![2]);
+        c.set_eviction_weights(Some(vec![1.0]));
+        // LRU is a high-tier copy, MRU a cheap int2 copy
+        c.insert_tiered((0, 0), dummy(), ResidentMeta { kind: QuantKind::Int8, bytes: 400 });
+        c.insert_tiered((0, 1), dummy(), ResidentMeta { kind: QuantKind::Int2, bytes: 100 });
+        // plain LRU would shed (0,0); the importance weighting protects
+        // the high-tier copy and sheds the more recent int2 one instead
+        let ev =
+            c.insert_tiered((0, 2), dummy(), ResidentMeta { kind: QuantKind::Int8, bytes: 400 });
+        assert_eq!(ev, Some((0, 1)));
+        assert!(c.contains((0, 0)));
+        assert_eq!(c.bias_evictions(), 1);
+        // an all-one-tier layer degenerates to exact LRU (no bias counted)
+        let ev2 =
+            c.insert_tiered((0, 3), dummy(), ResidentMeta { kind: QuantKind::Int8, bytes: 400 });
+        assert_eq!(ev2, Some((0, 0)));
+        assert_eq!(c.bias_evictions(), 1);
+        // clearing the weights restores plain LRU outright
+        c.set_eviction_weights(None);
+        c.insert_tiered((0, 4), dummy(), ResidentMeta { kind: QuantKind::Int2, bytes: 100 });
+        let ev3 =
+            c.insert_tiered((0, 5), dummy(), ResidentMeta { kind: QuantKind::Int2, bytes: 100 });
+        assert_eq!(ev3, Some((0, 3)));
+        assert_eq!(c.bias_evictions(), 1);
     }
 
     #[test]

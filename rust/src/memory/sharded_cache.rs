@@ -398,6 +398,23 @@ impl ShardedCache {
         self.shards.iter().map(|s| s.resident_bytes()).sum()
     }
 
+    /// Install (or clear) per-layer eviction weights on every shard —
+    /// the [`crate::coordinator::sensitivity::SensitivityMap`] eviction
+    /// consumer. Weights are global per layer, so each shard gets the
+    /// same copy; shards with no residents in a layer simply never
+    /// consult it.
+    pub fn set_eviction_weights(&self, weights: Option<Vec<f64>>) {
+        for s in &self.shards {
+            s.set_eviction_weights(weights.clone());
+        }
+    }
+
+    /// Total evictions where the sensitivity bias overrode the plain
+    /// LRU choice, summed across shards.
+    pub fn bias_evictions(&self) -> u64 {
+        self.shards.iter().map(|s| s.bias_evictions()).sum()
+    }
+
     /// Per-device counter snapshots (`queued_bytes` left at 0 — the
     /// transfer engine overlays it, see
     /// [`crate::memory::transfer::TransferEngine::device_snapshots`]).

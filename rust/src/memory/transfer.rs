@@ -54,6 +54,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::sensitivity::SensitivityMap;
 use crate::memory::device_cache::{DeviceCache, ResidentMeta};
 use crate::memory::faults::{FaultAction, FaultPlan};
 use crate::memory::host_store::{ExpertF32, FetchSource, HostStore};
@@ -623,6 +624,19 @@ pub struct TransferStats {
     /// retries — each one re-enters through the engine's fault pump
     /// exactly like a flaky-lane drop.
     pub remote_faults: AtomicU64,
+    /// Transfers whose tier was *raised* by the sensitivity map's
+    /// importance floor (consumer 1, docs/sensitivity.md). Zero for the
+    /// uniform map.
+    pub sens_tier_assigns: AtomicU64,
+    /// Tier-priced cache re-plans driven by the sensitivity map
+    /// (consumer 2; bumped by the engine's replan path).
+    pub sens_plans: AtomicU64,
+    /// Prefetch requests whose slack or rank was shaped by the map
+    /// (consumer 3; bumped by the engine's prefetch path).
+    pub sens_prefetches: AtomicU64,
+    /// Upgrade batches released by the lane idle-time predictor instead
+    /// of the `pending == 0` heuristic (consumer 4).
+    pub sens_upgrades: AtomicU64,
 }
 
 /// Point-in-time per-tier transfer volumes, one entry per configured
@@ -662,6 +676,24 @@ pub struct SourceSnapshot {
     pub checksum_failures: u64,
     /// Connections re-established after a loss.
     pub reconnects: u64,
+}
+
+/// Point-in-time per-consumer sensitivity decision counters
+/// (`ServerStats.sensitivity`, docs/sensitivity.md). All zeros under the
+/// uniform map — the determinism contract made observable.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SensitivitySnapshot {
+    /// Transfers whose tier the importance floor raised (consumer 1).
+    pub tier_assigns: u64,
+    /// Tier-priced DP cache re-plans (consumer 2).
+    pub plans: u64,
+    /// Evictions where importance weighting overrode plain LRU
+    /// (consumer 3, summed across cache shards).
+    pub evictions: u64,
+    /// Prefetch requests shaped by the map (consumer 3).
+    pub prefetches: u64,
+    /// Upgrade batches released by the idle predictor (consumer 4).
+    pub upgrades: u64,
 }
 
 /// Completed prefetches parked until the target layer consumes them —
@@ -846,6 +878,12 @@ pub struct TransferEngine {
     tiers: Arc<TieredStore>,
     /// Which tier a fresh transfer rides (`--precision-policy`).
     precision: PrecisionPolicy,
+    /// Shared per-layer importance (`--sensitivity-policy`): a non-uniform
+    /// map floors the tier of non-urgent transfers at the layer's
+    /// assignment (consumer 1, docs/sensitivity.md). Settable after
+    /// construction (the engine builds the map from the profile once the
+    /// store shape is known); defaults to the uniform identity.
+    sensitivity: Mutex<Arc<SensitivityMap>>,
     /// The device-sharded cache set every lane drains into (a single
     /// shard for the historical one-device engine). Placement drives the
     /// lane affinity of [`TransferEngine::request`].
@@ -1041,12 +1079,14 @@ impl TransferEngine {
             })
             .collect();
 
+        let n_layers = tiers.n_layers();
         TransferEngine {
             lanes: lane_set,
             policy: lanes.policy,
             rr: AtomicU64::new(0),
             tiers,
             precision,
+            sensitivity: Mutex::new(Arc::new(SensitivityMap::uniform(n_layers))),
             cache,
             lane_groups,
             rr_dev,
@@ -1089,6 +1129,50 @@ impl TransferEngine {
 
     pub fn precision(&self) -> PrecisionPolicy {
         self.precision
+    }
+
+    /// Install the shared sensitivity map (consumer 1). The default —
+    /// and the `Uniform` policy — is the identity map, under which
+    /// [`TransferEngine::request_with_slack`] is bit-for-bit the
+    /// historical tier selection.
+    pub fn set_sensitivity(&self, map: Arc<SensitivityMap>) {
+        *lock_unpoisoned(&self.sensitivity) = map;
+    }
+
+    /// The sensitivity map currently floor-ing tier selection.
+    pub fn sensitivity(&self) -> Arc<SensitivityMap> {
+        Arc::clone(&lock_unpoisoned(&self.sensitivity))
+    }
+
+    /// Per-consumer sensitivity decision counters
+    /// (`ServerStats.sensitivity`; all zeros under the uniform map).
+    /// Eviction decisions live on the cache shards and are merged here.
+    pub fn sensitivity_snapshot(&self) -> SensitivitySnapshot {
+        SensitivitySnapshot {
+            tier_assigns: self.stats.sens_tier_assigns.load(Ordering::Relaxed),
+            plans: self.stats.sens_plans.load(Ordering::Relaxed),
+            evictions: self.cache.bias_evictions(),
+            prefetches: self.stats.sens_prefetches.load(Ordering::Relaxed),
+            upgrades: self.stats.sens_upgrades.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Record one sensitivity-shaped cache re-plan (consumer 2; the
+    /// engine's tier-priced DP branch).
+    pub fn note_sensitivity_plan(&self) {
+        self.stats.sens_plans.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one sensitivity-shaped prefetch decision (consumer 3; a
+    /// request whose slack or rank the map changed).
+    pub fn note_sensitivity_prefetch(&self) {
+        self.stats.sens_prefetches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one upgrade issued under the predicted-idle gate
+    /// (consumer 4).
+    pub fn note_sensitivity_upgrade(&self) {
+        self.stats.sens_upgrades.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Highest configured tier — the encoding lookups prefer resident
@@ -1283,7 +1367,21 @@ impl TransferEngine {
         priority: Priority,
         slack: f64,
     ) -> Arc<TransferHandle> {
-        let kind = self.precision.select(self.tiers.tiers(), priority, slack);
+        let mut kind = self.precision.select(self.tiers.tiers(), priority, slack);
+        // Consumer 1 (docs/sensitivity.md): a non-uniform map floors the
+        // tier at the layer's importance assignment. On-demand loads are
+        // exempt — nothing may add bytes to the critical path — and the
+        // uniform map leaves the historical selection untouched.
+        if priority != Priority::OnDemand {
+            let map = self.sensitivity();
+            if !map.is_uniform() {
+                let floor = map.tier_for(id.0, self.tiers.tiers());
+                if floor.bits() > kind.bits() {
+                    kind = floor;
+                    self.stats.sens_tier_assigns.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
         self.request_at(id, priority, kind)
     }
 

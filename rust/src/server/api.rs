@@ -11,7 +11,7 @@ use anyhow::{bail, Result};
 
 pub use crate::coordinator::batcher::{FinishReason, SamplingParams};
 pub use crate::memory::sharded_cache::DeviceSnapshot;
-pub use crate::memory::transfer::{LaneSnapshot, SourceSnapshot, TierSnapshot};
+pub use crate::memory::transfer::{LaneSnapshot, SensitivitySnapshot, SourceSnapshot, TierSnapshot};
 use crate::model::tokenizer::ByteTokenizer;
 use crate::util::json::Json;
 
@@ -248,6 +248,9 @@ pub struct ServerStats {
     /// Local-vs-remote byte attribution and remote-fetch health
     /// (docs/remote-store.md); all zeros for local stores.
     pub source: SourceSnapshot,
+    /// Per-consumer sensitivity-map decision counters
+    /// (docs/sensitivity.md); all zeros under the uniform policy.
+    pub sensitivity: SensitivitySnapshot,
 }
 
 impl ServerStats {
@@ -337,6 +340,19 @@ impl ServerStats {
                         Json::Num(self.source.checksum_failures as f64),
                     ),
                     ("reconnects", Json::Num(self.source.reconnects as f64)),
+                ]),
+            ),
+            (
+                "sensitivity",
+                Json::obj(vec![
+                    (
+                        "tier_assigns",
+                        Json::Num(self.sensitivity.tier_assigns as f64),
+                    ),
+                    ("plans", Json::Num(self.sensitivity.plans as f64)),
+                    ("evictions", Json::Num(self.sensitivity.evictions as f64)),
+                    ("prefetches", Json::Num(self.sensitivity.prefetches as f64)),
+                    ("upgrades", Json::Num(self.sensitivity.upgrades as f64)),
                 ]),
             ),
         ])
@@ -559,6 +575,31 @@ mod tests {
         let d = ServerStats::default().to_json();
         let dsrc = d.get("source").expect("source object");
         assert_eq!(dsrc.get("remote_bytes").and_then(|v| v.as_usize()), Some(0));
+    }
+
+    #[test]
+    fn stats_serialize_sensitivity_counters() {
+        let s = ServerStats {
+            sensitivity: SensitivitySnapshot {
+                tier_assigns: 4,
+                plans: 3,
+                evictions: 2,
+                prefetches: 7,
+                upgrades: 1,
+            },
+            ..Default::default()
+        };
+        let j = s.to_json();
+        let sj = j.get("sensitivity").expect("sensitivity object");
+        assert_eq!(sj.get("tier_assigns").and_then(|v| v.as_usize()), Some(4));
+        assert_eq!(sj.get("plans").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(sj.get("evictions").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(sj.get("prefetches").and_then(|v| v.as_usize()), Some(7));
+        assert_eq!(sj.get("upgrades").and_then(|v| v.as_usize()), Some(1));
+        // a default (uniform-policy) stats object reports an all-zero block
+        let d = ServerStats::default().to_json();
+        let dj = d.get("sensitivity").expect("sensitivity object");
+        assert_eq!(dj.get("tier_assigns").and_then(|v| v.as_usize()), Some(0));
     }
 
     #[test]

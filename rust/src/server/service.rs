@@ -60,6 +60,9 @@ pub struct PerfSnapshot {
     /// Local-vs-remote byte attribution and remote-fetch health (all
     /// zeros for local stores and backends without a transfer engine).
     pub source: crate::memory::transfer::SourceSnapshot,
+    /// Per-consumer sensitivity decision counters (all zeros under the
+    /// uniform map — docs/sensitivity.md).
+    pub sensitivity: crate::memory::transfer::SensitivitySnapshot,
 }
 
 /// What the service needs from a decode engine. [`Engine`] is the real
@@ -104,6 +107,7 @@ impl Backend for Engine {
             devices: self.xfer.device_snapshots(),
             tiers: self.xfer.tier_snapshots(),
             source: self.xfer.source_snapshot(),
+            sensitivity: self.xfer.sensitivity_snapshot(),
         }
     }
 }
@@ -384,6 +388,7 @@ impl ServiceHandle {
             devices: g.perf.devices.clone(),
             tiers: g.perf.tiers.clone(),
             source: g.perf.source,
+            sensitivity: g.perf.sensitivity,
         }
     }
 

@@ -83,6 +83,15 @@ impl Backend for MockBackend {
             tokens_per_sec: self.steps as f64,
             token_p50_ms: 0.01,
             token_p99_ms: 0.02,
+            // Nonzero per-consumer counters so protocol tests can assert
+            // the sensitivity block survives the stats round trip.
+            sensitivity: crate::memory::transfer::SensitivitySnapshot {
+                tier_assigns: 5,
+                plans: 4,
+                evictions: 3,
+                prefetches: 2,
+                upgrades: 1,
+            },
             ..PerfSnapshot::default()
         }
     }

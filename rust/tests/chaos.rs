@@ -32,7 +32,6 @@ use adapmoe::prop_assert;
 use adapmoe::tensor::Tensor;
 use adapmoe::testutil::{micro_config, synthetic_weights};
 use adapmoe::util::prop;
-use adapmoe::util::rng::Rng;
 use adapmoe::util::threadpool::ThreadPool;
 
 fn fixture(
@@ -58,7 +57,7 @@ fn fixture(
 
 fn inputs(b: usize, n_experts: usize, seed: u64) -> (Tensor, Vec<Vec<f32>>) {
     let cfg = micro_config();
-    let mut rng = Rng::new(seed);
+    let mut rng = prop::rng_for("chaos-inputs", seed);
     let x = Tensor::new(
         vec![b, cfg.d_model],
         (0..b * cfg.d_model).map(|_| rng.f32() - 0.5).collect(),

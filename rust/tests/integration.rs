@@ -343,6 +343,7 @@ fn tile_wise_engine_matches_expert_wise() {
         placement: Placement::LayerSliced,
         fault_plan: None,
         remote: None,
+        sensitivity: adapmoe::coordinator::sensitivity::SensitivityPolicy::Uniform,
     };
     let mut ew = Engine::from_artifacts(&dir, mk(ScheduleMode::ExpertWise)).unwrap();
     let mut tw = Engine::from_artifacts(&dir, mk(ScheduleMode::TileWise)).unwrap();

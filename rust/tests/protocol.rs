@@ -304,6 +304,14 @@ fn stats_round_trip_is_nonempty_and_counts() {
         Some(0),
         "tiers array must round-trip"
     );
+    // the sensitivity block rides the wire; the mock backend reports
+    // fixed nonzero counters so a dropped field fails here
+    let sens = stats.get("sensitivity").expect("sensitivity object must round-trip");
+    assert_eq!(sens.get("tier_assigns").and_then(|v| v.as_usize()), Some(5));
+    assert_eq!(sens.get("plans").and_then(|v| v.as_usize()), Some(4));
+    assert_eq!(sens.get("evictions").and_then(|v| v.as_usize()), Some(3));
+    assert_eq!(sens.get("prefetches").and_then(|v| v.as_usize()), Some(2));
+    assert_eq!(sens.get("upgrades").and_then(|v| v.as_usize()), Some(1));
 
     // ping + malformed lines on the same connection
     let (mut s, mut r) = srv.connect();

@@ -1,0 +1,284 @@
+//! SensitivityMap determinism + property suite (artifact-free).
+//!
+//! Locks down the contract of docs/sensitivity.md:
+//!
+//! * the **uniform** map is the identity everywhere — an engine with the
+//!   uniform map explicitly installed (and its prefetches routed through
+//!   the sensitivity-aware priority/slack helpers) produces bits and byte
+//!   counters identical to an untouched engine, under both the serial
+//!   drain and a 4-lane out-of-order completion drain;
+//! * offline tier assignment is **monotone in importance**: a more
+//!   important layer never rides a lower precision tier (property test
+//!   over random Fisher profiles);
+//! * importance-weighted eviction **never evicts the last servable
+//!   entry** of a layer: victims are only taken when a layer is at
+//!   capacity, the just-inserted entry is never the victim, and a
+//!   single-slot layer degenerates to plain LRU with zero bias.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use adapmoe::coordinator::executor::{run_layer_parallel, run_layer_serial};
+use adapmoe::coordinator::prefetch;
+use adapmoe::coordinator::profile::Profile;
+use adapmoe::coordinator::scheduler::{build_plan, ScheduleMode};
+use adapmoe::coordinator::sensitivity::{SensitivityMap, SensitivityPolicy};
+use adapmoe::memory::device_cache::{DeviceCache, ResidentMeta};
+use adapmoe::memory::host_store::ExpertF32;
+use adapmoe::memory::platform::Platform;
+use adapmoe::memory::quant::QuantKind;
+use adapmoe::memory::sharded_cache::ShardedCache;
+use adapmoe::memory::tiered_store::{PrecisionPolicy, TieredStore};
+use adapmoe::memory::transfer::{
+    LaneConfig, LanePolicy, Priority, SensitivitySnapshot, TransferEngine,
+};
+use adapmoe::model::ExpertId;
+use adapmoe::prop_assert;
+use adapmoe::tensor::Tensor;
+use adapmoe::testutil::{micro_config, synthetic_weights};
+use adapmoe::util::prop;
+use adapmoe::util::threadpool::ThreadPool;
+
+const SEED: u64 = 47;
+
+fn tiered_engine(lanes: LaneConfig) -> (Arc<DeviceCache>, TransferEngine) {
+    let cfg = micro_config();
+    let w = synthetic_weights(&cfg, SEED);
+    let tiers = Arc::new(
+        TieredStore::build(&cfg, &w, &[QuantKind::Int2, QuantKind::Int8]).unwrap(),
+    );
+    let cache = Arc::new(DeviceCache::new(vec![8, 8]));
+    let xfer = TransferEngine::with_tiers(
+        tiers,
+        PrecisionPolicy::Urgency,
+        Arc::new(ShardedCache::single(Arc::clone(&cache))),
+        Platform::preset("rtx4090").unwrap(),
+        4,
+        1.0,
+        lanes,
+    );
+    (cache, xfer)
+}
+
+fn inputs(b: usize, n_experts: usize) -> (Tensor, Vec<Vec<f32>>) {
+    let cfg = micro_config();
+    let mut rng = prop::rng_for("sensitivity-inputs", 9);
+    let x = Tensor::new(
+        vec![b, cfg.d_model],
+        (0..b * cfg.d_model).map(|_| rng.f32() - 0.5).collect(),
+    )
+    .unwrap();
+    let coef: Vec<Vec<f32>> = (0..n_experts)
+        .map(|_| (0..b).map(|_| rng.f32()).collect())
+        .collect();
+    (x, coef)
+}
+
+/// One prefetch-heavy layer pass. `explicit_uniform` routes every request
+/// through the sensitivity helpers (prioritize + prefetch_slack) with the
+/// uniform map freshly installed; `false` is the untouched historical
+/// engine. `parallel` drains completion-driven on 3 worker threads so
+/// mixed-tier bytes land out of order.
+fn run_pass(explicit_uniform: bool, parallel: bool) -> (Vec<f32>, u64, u64) {
+    let cfg = micro_config();
+    let computes: Vec<usize> = (0..6).collect();
+    // spread of router probabilities → mixed urgency slacks → mixed tiers
+    let probs = [0.95, 0.2, 0.8, 0.05, 0.6, 0.4];
+    let (x, coef) = inputs(4, cfg.n_experts);
+
+    let (cache, xfer) = tiered_engine(LaneConfig::new(
+        if parallel { 4 } else { 1 },
+        LanePolicy::LeastQueuedBytes,
+    ));
+    let map = Arc::new(SensitivityMap::uniform(cfg.n_layers));
+    if explicit_uniform {
+        xfer.set_sensitivity(Arc::clone(&map));
+        cache.set_eviction_weights(map.eviction_weights());
+    }
+
+    // enqueue inverted so plan order != arrival order in the OOO drain
+    let reqs: Vec<(ExpertId, f64)> =
+        computes.iter().rev().map(|&e| ((0usize, e), probs[e])).collect();
+    if explicit_uniform {
+        for (id, p) in prefetch::prioritize(reqs, &map) {
+            xfer.request_with_slack(id, Priority::Prefetch, map.prefetch_slack(id.0, p));
+        }
+    } else {
+        for (id, p) in reqs {
+            xfer.request_with_slack(id, Priority::Prefetch, 1.0 - p);
+        }
+    }
+
+    let plan = build_plan(0, &computes, &[], &cache, &xfer);
+    assert_eq!(plan.on_demand_issued, 0, "must join the in-flight transfers");
+    let out = if parallel {
+        let pool = ThreadPool::new(3);
+        run_layer_parallel(&plan, &x, &coef, ScheduleMode::ExpertWise, 4, &cache, &xfer, &pool)
+    } else {
+        run_layer_serial(&plan, &x, &coef, ScheduleMode::ExpertWise, 4, &cache)
+    };
+    xfer.quiesce().unwrap();
+
+    // the uniform map never counts a shaped decision
+    assert_eq!(
+        xfer.sensitivity_snapshot(),
+        SensitivitySnapshot::default(),
+        "uniform map must leave every consumer counter at zero"
+    );
+    assert_eq!(cache.bias_evictions(), 0);
+    (
+        out.acc.data,
+        xfer.stats.bytes.load(Ordering::Relaxed),
+        xfer.stats.transfers.load(Ordering::Relaxed),
+    )
+}
+
+/// Tentpole acceptance: installing the uniform map changes nothing — not
+/// one bit of output, not one wire byte — whether the drain is serial or
+/// completion-driven across 4 lanes.
+#[test]
+fn uniform_map_is_bit_identical_to_baseline_serial_and_ooo() {
+    let (base_bits, base_bytes, base_xfers) = run_pass(false, false);
+    let (uni_bits, uni_bytes, uni_xfers) = run_pass(true, false);
+    assert_eq!(base_bits, uni_bits, "serial drain: uniform map changed output bits");
+    assert_eq!(base_bytes, uni_bytes, "serial drain: uniform map changed wire bytes");
+    assert_eq!(base_xfers, uni_xfers);
+
+    let (base_bits, base_bytes, base_xfers) = run_pass(false, true);
+    let (uni_bits, uni_bytes, uni_xfers) = run_pass(true, true);
+    assert_eq!(base_bits, uni_bits, "4-lane OOO drain: uniform map changed output bits");
+    assert_eq!(base_bytes, uni_bytes, "4-lane OOO drain: uniform map changed wire bytes");
+    assert_eq!(base_xfers, uni_xfers);
+}
+
+/// Serial and OOO drains agree with each other under the explicit map —
+/// the canonical-reduction guarantee survives the sensitivity plumbing.
+#[test]
+fn uniform_map_ooo_drain_matches_serial_drain() {
+    let (serial_bits, ..) = run_pass(true, false);
+    let (par_bits, ..) = run_pass(true, true);
+    assert_eq!(serial_bits, par_bits);
+}
+
+/// Offline importance → tier assignment is monotone: for any random
+/// Fisher profile, a layer at least as important as another never rides
+/// a lower tier, and the most sensitive layer pins the top tier.
+#[test]
+fn tier_assignment_monotone_in_importance() {
+    let tiers = [QuantKind::Int2, QuantKind::Int4, QuantKind::Int8];
+    prop::check("tier-floor-monotone-in-importance", 60, |rng| {
+        let n = 2 + rng.usize_below(8);
+        let mut p = Profile::synthetic(n);
+        p.sensitivity = (0..n).map(|_| rng.f64() * 10.0).collect();
+        let map = SensitivityMap::from_profile(&p, SensitivityPolicy::Profile);
+        for i in 0..n {
+            for j in 0..n {
+                if map.importance(i) <= map.importance(j) {
+                    let (ti, tj) = (map.tier_for(i, &tiers), map.tier_for(j, &tiers));
+                    prop_assert!(
+                        ti.bits() <= tj.bits(),
+                        "importance {:.3} <= {:.3} but tier {} > {}",
+                        map.importance(i),
+                        map.importance(j),
+                        ti.name(),
+                        tj.name()
+                    );
+                }
+            }
+        }
+        // the argmax layer has importance exactly 1.0 → top tier
+        if let Some(hi) = (0..n).max_by(|&a, &b| {
+            p.sensitivity[a].partial_cmp(&p.sensitivity[b]).unwrap()
+        }) {
+            if p.sensitivity[hi] > 0.0 {
+                prop_assert!(
+                    map.tier_for(hi, &tiers) == tiers[tiers.len() - 1],
+                    "most sensitive layer must ride the top tier"
+                );
+            }
+        }
+        // assignments table agrees with per-layer queries
+        let table = map.tier_assignments(&tiers);
+        for (l, &k) in table.iter().enumerate() {
+            prop_assert!(k == map.tier_for(l, &tiers));
+        }
+        Ok(())
+    });
+}
+
+fn dummy() -> Arc<ExpertF32> {
+    Arc::new(ExpertF32 {
+        w1: Tensor::zeros(vec![2, 2]),
+        w3: Tensor::zeros(vec![2, 2]),
+        w2: Tensor::zeros(vec![2, 2]),
+    })
+}
+
+/// Importance-weighted eviction never evicts the last servable entry:
+/// a victim is taken only when the layer is at capacity (so the layer
+/// never goes empty), the entry just inserted is never the victim, and
+/// a single-slot layer degenerates to plain LRU with zero bias.
+#[test]
+fn weighted_eviction_never_evicts_last_servable_entry() {
+    prop::check("weighted-eviction-preserves-servability", 40, |rng| {
+        let n_layers = 2;
+        let cap = 1 + rng.usize_below(3);
+        let cache = DeviceCache::new(vec![cap; n_layers]);
+        cache.set_eviction_weights(Some(
+            (0..n_layers).map(|_| rng.f64()).collect(),
+        ));
+        let kinds = [
+            (QuantKind::Int2, 100usize),
+            (QuantKind::Int8, 400usize),
+        ];
+        for _ in 0..60 {
+            let layer = rng.usize_below(n_layers);
+            let e = rng.usize_below(6);
+            let (kind, bytes) = kinds[rng.usize_below(2)];
+            let before = cache.resident(layer).len();
+            let already = cache.contains((layer, e));
+            let evicted = cache.insert_tiered((layer, e), dummy(), ResidentMeta { kind, bytes });
+            let after = cache.resident(layer).len();
+            prop_assert!(after >= 1, "layer {layer} left empty after insert");
+            if let Some(v) = evicted {
+                prop_assert!(v != (layer, e), "evicted the entry just inserted");
+                prop_assert!(v.0 == layer, "evicted from another layer");
+                prop_assert!(
+                    before == cap && !already,
+                    "victim taken while layer below capacity ({before}/{cap})"
+                );
+                prop_assert!(after == cap, "layer not full after forced eviction");
+                prop_assert!(
+                    !cache.contains(v),
+                    "victim still resident after eviction"
+                );
+            }
+            prop_assert!(after <= cap, "layer over capacity");
+        }
+        if cap == 1 {
+            prop_assert!(
+                cache.bias_evictions() == 0,
+                "a single-slot layer must keep exact LRU (no bias)"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The uniform map's helper surface is the identity (the exact values the
+/// engine consumers rely on for the bit-for-bit guarantee).
+#[test]
+fn uniform_map_helpers_are_identity() {
+    let map = SensitivityMap::uniform(4);
+    assert!(map.is_uniform());
+    assert_eq!(map.upgrade_order(4), vec![0, 1, 2, 3]);
+    assert_eq!(map.eviction_weights(), None);
+    for l in 0..4 {
+        assert_eq!(map.importance(l), 1.0);
+        for p in [0.0, 0.25, 0.9] {
+            assert_eq!(map.prefetch_slack(l, p), 1.0 - p);
+        }
+    }
+    let reqs: Vec<(ExpertId, f64)> = vec![((0, 3), 0.1), ((1, 0), 0.9)];
+    assert_eq!(prefetch::prioritize(reqs.clone(), &map), reqs);
+}

@@ -28,7 +28,7 @@ use adapmoe::memory::tiered_store::{PrecisionPolicy, TieredStore};
 use adapmoe::memory::transfer::{LaneConfig, LanePolicy, Priority, TransferEngine};
 use adapmoe::tensor::Tensor;
 use adapmoe::testutil::{micro_config, synthetic_weights};
-use adapmoe::util::rng::Rng;
+use adapmoe::util::prop;
 use adapmoe::util::threadpool::ThreadPool;
 
 const SEED: u64 = 41;
@@ -77,7 +77,7 @@ fn tiered_engine(
 
 fn inputs(b: usize, n_experts: usize, seed: u64) -> (Tensor, Vec<Vec<f32>>) {
     let cfg = micro_config();
-    let mut rng = Rng::new(seed);
+    let mut rng = prop::rng_for("tiers-inputs", seed);
     let x = Tensor::new(
         vec![b, cfg.d_model],
         (0..b * cfg.d_model).map(|_| rng.f32() - 0.5).collect(),
@@ -309,7 +309,7 @@ fn engine_charges_match_quant_expert_size_bytes_per_tier() {
         0.0,
     );
     let cfg = micro_config();
-    let mut rng = Rng::new(13);
+    let mut rng = prop::rng_for("tiers-charge-stream", 13);
     let mut expect_total = 0u64;
     for i in 0..12 {
         let id = (i % cfg.n_layers, rng.usize_below(cfg.n_experts));
