@@ -7,9 +7,12 @@
 //! * **serve** (default): build a store — from `--artifacts DIR` weights,
 //!   or a synthetic micro-model with `--synthetic SEED` — freeze it into an
 //!   [`ArtifactImage`], and serve until killed. `--corrupt-every N` /
-//!   `--drop-every N` arm deterministic chaos for fault drills.
-//! * **probe** (`--probe ADDR`): connect as a client, fetch every expert at
-//!   every published tier, and verify each one is bit-identical to the
+//!   `--drop-every N` arm deterministic chaos for fault drills, and
+//!   `--no-ranges` emulates a server built before the batched `GET_RANGES`
+//!   op existed (clients must fall back to per-range fetches).
+//! * **probe** (`--probe ADDR`): connect as a client, warm each layer up
+//!   with one batched `GET_RANGES` prefetch, then fetch every expert at
+//!   every published tier and verify each one is bit-identical to the
 //!   locally rebuilt twin (requires the same `--synthetic SEED` or
 //!   `--artifacts DIR` the server was started with). Exits non-zero on any
 //!   mismatch — CI uses this as the two-process round-trip check.
@@ -47,6 +50,7 @@ fn main() -> Result<()> {
     let knobs = ChaosKnobs {
         corrupt_every: args.u64_or("corrupt-every", 0),
         drop_every: args.u64_or("drop-every", 0),
+        disable_ranges: args.flag("no-ranges"),
     };
     let addr = args.str_or("addr", "127.0.0.1:7501");
     let srv = StoreServer::spawn_chaotic(image, &addr, knobs)
@@ -55,12 +59,13 @@ fn main() -> Result<()> {
     println!("READY {}", srv.local_addr());
     eprintln!(
         "[expert_server] serving {} tiers x {} experts on {} \
-         (corrupt_every={} drop_every={}); kill to stop",
+         (corrupt_every={} drop_every={} no_ranges={}); kill to stop",
         kinds.len(),
         cfg.n_layers * cfg.n_experts,
         srv.local_addr(),
         knobs.corrupt_every,
         knobs.drop_every,
+        knobs.disable_ranges,
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(1));
@@ -97,6 +102,12 @@ fn probe(addr: &str, local: &TieredStore) -> Result<()> {
     for &kind in &manifest.tiers {
         let (r, l) = (remote.store(kind), local.store(kind));
         for layer in 0..manifest.n_layers {
+            // Warm the layer up the way a coalesced transfer group does:
+            // one GET_RANGES round trip on servers that speak it, per-range
+            // fallback on old ones. The loop below then verifies the
+            // batch-landed bytes bit-for-bit.
+            let ids: Vec<_> = (0..manifest.n_experts).map(|e| (layer, e)).collect();
+            r.prefetch(&ids);
             for expert in 0..manifest.n_experts {
                 let id = (layer, expert);
                 let (got, want) = (r.get(id), l.get(id));
@@ -109,11 +120,15 @@ fn probe(addr: &str, local: &TieredStore) -> Result<()> {
     }
     let c = remote.remote_counters().context("remote store has no counters")?;
     use std::sync::atomic::Ordering::Relaxed;
+    if c.batched_fetches.load(Relaxed) == 0 {
+        bail!("probe expected at least one batched warm-up to land");
+    }
     println!(
         "PROBE OK {verified} experts bit-identical | fetches={} bytes={} \
-         retries={} checksum_failures={} reconnects={}",
+         batched_fetches={} retries={} checksum_failures={} reconnects={}",
         c.fetches.load(Relaxed),
         c.fetched_bytes.load(Relaxed),
+        c.batched_fetches.load(Relaxed),
         c.retries.load(Relaxed),
         c.checksum_failures.load(Relaxed),
         c.reconnects.load(Relaxed),

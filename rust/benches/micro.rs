@@ -217,6 +217,151 @@ fn lane_drain_case() {
     println!(" simulated wire, so the eight transfers overlap instead of serializing)");
 }
 
+/// Hot-path drain: row-major baseline vs the expert-major hot path at
+/// b = 1/4/16 and 1 vs 4 comm lanes. The baseline submits eight singleton
+/// transfer requests and drains them serially in plan order with the
+/// row-major kernel; the hot path lets the planner coalesce the misses
+/// into per-device group jobs and drains completion-driven with the
+/// grouped (expert-major, pooled-scratch) kernel. The wire is the
+/// `instant` platform at time_scale 0 so wall-clock measures compute and
+/// orchestration — exactly the part the expert-major rework changes —
+/// and both drains must produce bit-identical accumulators
+/// (rust/tests/hotpath.rs locks the same invariant down). Needs no
+/// artifacts.
+fn hotpath_drain_case() {
+    let cfg = ModelConfig {
+        name: "bench-hotpath".into(),
+        vocab_size: 64,
+        d_model: 128,
+        n_heads: 2,
+        head_dim: 64,
+        n_layers: 1,
+        n_experts: 8,
+        top_k: 2,
+        d_ff: 512,
+        max_seq: 8,
+        rms_eps: 1e-5,
+        batch_sizes: vec![1, 4, 16],
+    };
+    let weights = synthetic_weights(&cfg, 47);
+    let store = Arc::new(HostStore::build(&cfg, &weights, QuantKind::Int4).unwrap());
+    let n = cfg.n_experts;
+
+    println!("\n=== hot-path drain: row-major serial vs expert-major coalesced (instant wire, int4) ===");
+    println!("(8 experts per layer; wire removed so wall-clock isolates compute + orchestration)");
+    let mut table = Table::new(&[
+        "batch", "lanes", "row-major (ms)", "expert-major (ms)", "speedup", "wire jobs",
+    ]);
+    let mut rows = Vec::new();
+    for &b in &[1usize, 4, 16] {
+        let mut rng = Rng::new(13 + b as u64);
+        let x = Tensor::new(
+            vec![b, cfg.d_model],
+            (0..b * cfg.d_model).map(|_| rng.f32() - 0.5).collect(),
+        )
+        .unwrap();
+        let coef: Vec<Vec<f32>> = (0..n)
+            .map(|e| vec![1.0 / (e as f32 + 2.0); b])
+            .collect();
+        for &lanes in &[1usize, 4] {
+            // One timed drain; `grouped` picks the submission shape and
+            // kernel. Fresh cache/engine per run so every rep replays the
+            // same all-miss decode layer.
+            let run = |grouped: bool| {
+                let cache = Arc::new(DeviceCache::new(vec![2]));
+                let xfer = TransferEngine::with_lanes(
+                    Arc::clone(&store),
+                    Arc::clone(&cache),
+                    Platform::preset("instant").unwrap(),
+                    4,
+                    0.0,
+                    LaneConfig::new(lanes, LanePolicy::RoundRobin),
+                );
+                if !grouped {
+                    // Historical shape: one wire job per expert.
+                    for e in (0..n).rev() {
+                        xfer.request((0, e), Priority::Prefetch);
+                    }
+                }
+                let computes: Vec<usize> = (0..n).collect();
+                let plan = build_plan(0, &computes, &[], &cache, &xfer);
+                let pool = ThreadPool::new(4);
+                let t0 = Instant::now();
+                let out = if grouped {
+                    run_layer_parallel(
+                        &plan,
+                        &x,
+                        &coef,
+                        ScheduleMode::ExpertWise,
+                        4,
+                        &cache,
+                        &xfer,
+                        &pool,
+                    )
+                } else {
+                    run_layer_serial(&plan, &x, &coef, ScheduleMode::ExpertWise, 4, &cache)
+                };
+                let wall = t0.elapsed().as_secs_f64();
+                xfer.quiesce().unwrap();
+                use std::sync::atomic::Ordering::Relaxed;
+                (wall, out, xfer.stats.wire_jobs.load(Relaxed))
+            };
+            // Best-of-3 per shape; keep one outcome per shape for the
+            // bit-identity check.
+            let (mut wall_row, mut wall_grp) = (f64::INFINITY, f64::INFINITY);
+            let (mut out_row, mut out_grp) = (None, None);
+            let (mut jobs_row, mut jobs_grp) = (0u64, 0u64);
+            for _ in 0..3 {
+                let (w, o, j) = run(false);
+                wall_row = wall_row.min(w);
+                out_row = Some(o);
+                jobs_row = j;
+                let (w, o, j) = run(true);
+                wall_grp = wall_grp.min(w);
+                out_grp = Some(o);
+                jobs_grp = j;
+            }
+            let (out_row, out_grp) = (out_row.unwrap(), out_grp.unwrap());
+            assert_eq!(
+                out_row.acc.data, out_grp.acc.data,
+                "hot-path drains must stay bit-identical (b={b} lanes={lanes})"
+            );
+            let speedup = wall_row / wall_grp;
+            table.row(&[
+                format!("{b}"),
+                format!("{lanes}"),
+                format!("{:.2}", wall_row * 1e3),
+                format!("{:.2}", wall_grp * 1e3),
+                format!("{speedup:.2}x"),
+                format!("{jobs_grp} vs {jobs_row}"),
+            ]);
+            rows.push(Json::obj(vec![
+                ("batch", Json::Num(b as f64)),
+                ("lanes", Json::Num(lanes as f64)),
+                ("row_major_ms", Json::Num(wall_row * 1e3)),
+                ("expert_major_ms", Json::Num(wall_grp * 1e3)),
+                ("speedup", Json::Num(speedup)),
+                ("wire_jobs_row_major", Json::Num(jobs_row as f64)),
+                ("wire_jobs_expert_major", Json::Num(jobs_grp as f64)),
+            ]));
+        }
+    }
+    table.print();
+    let artifact = Json::obj(vec![
+        ("bench", Json::Str("hotpath".into())),
+        ("platform", Json::Str("instant".into())),
+        ("quant", Json::Str("int4".into())),
+        ("experts", Json::Num(n as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match std::fs::write("BENCH_hotpath.json", artifact.to_string() + "\n") {
+        Ok(()) => println!("(perf trajectory written to BENCH_hotpath.json)"),
+        Err(e) => println!("(could not write BENCH_hotpath.json: {e})"),
+    }
+    println!("(speedup must clear 1.2x at batch 16: the grouped kernel reuses pooled");
+    println!(" scratch and the drain overlaps experts, while wire jobs drop 8 -> 1)");
+}
+
 /// Sharded-device drain: the inverted-arrival completion-driven drain at
 /// 1 vs 2 vs 4 device backends, lanes == devices so every device owns one
 /// comm lane. Unlike [`lane_drain_case`] the cache *capacity* scales with
@@ -616,7 +761,7 @@ fn remote_drain_case() {
                 let knobs = if source == "remote-flaky" {
                     // periodic faults, never two in a row — converges
                     // within the transport's bounded attempts
-                    ChaosKnobs { corrupt_every: 5, drop_every: 8 }
+                    ChaosKnobs { corrupt_every: 5, drop_every: 8, ..ChaosKnobs::default() }
                 } else {
                     ChaosKnobs::default()
                 };
@@ -700,6 +845,7 @@ fn remote_drain_case() {
 fn main() {
     moe_pipeline_case();
     lane_drain_case();
+    hotpath_drain_case();
     device_drain_case();
     tier_drain_case();
     faults_drain_case();

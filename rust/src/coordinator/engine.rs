@@ -60,7 +60,7 @@ use crate::model::weights::Weights;
 use crate::runtime::{f32_literal, i32_literal, literal_to_tensor, tensor_to_literal, Runtime};
 use crate::tensor::Tensor;
 use crate::util::stats::cosine;
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{RowBufferPool, ThreadPool};
 
 /// Per-layer cache budget policy.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -213,6 +213,10 @@ pub struct Engine {
     lit_cache: std::collections::HashMap<crate::model::ExpertId, (usize, [Literal; 3])>,
     /// Host-FFN worker pool (only when `compute_workers > 0`).
     pool: Option<ThreadPool>,
+    /// Recycled scratch for per-row hidden-state copies on the decode hot
+    /// path (similarity snapshots): steady-state decode reuses capacity
+    /// instead of allocating a fresh `Vec<f32>` per row per layer.
+    row_pool: RowBufferPool,
     pub trace: TraceCollector,
     /// Latest per-layer predicted expert sets (per row), for β tracking and
     /// the prefetch-extension rule.
@@ -359,6 +363,7 @@ impl Engine {
             slots: Slots { pos: vec![0; b], active: vec![false; b] },
             lit_cache: std::collections::HashMap::new(),
             pool,
+            row_pool: RowBufferPool::new(),
             trace: TraceCollector::new(n_layers),
             predicted: (0..n_layers).map(|_| None).collect(),
             decode_steps: 0,
@@ -479,10 +484,10 @@ impl Engine {
 
             // Fig. 3 trace: similarity between successive MoE-block inputs.
             if self.trace.similarity_enabled() {
-                if let Some(prev) = &prev_rows {
+                if let Some(prev) = prev_rows.take() {
                     let mut sims = 0.0;
                     let mut cnt = 0;
-                    for (r, row) in prev {
+                    for (r, row) in &prev {
                         if stepping[*r] {
                             sims += cosine(row, h_host.row(*r));
                             cnt += 1;
@@ -491,11 +496,21 @@ impl Engine {
                     if cnt > 0 {
                         self.trace.record_similarity(layer - 1, sims / cnt as f64);
                     }
+                    for (_, row) in prev {
+                        self.row_pool.put(row);
+                    }
                 }
+                // Snapshot into pooled buffers — the next layer returns
+                // them above, so steady state recycles the same capacity.
                 prev_rows = Some(
                     (0..b)
                         .filter(|&r| stepping[r])
-                        .map(|r| (r, h_host.row(r).to_vec()))
+                        .map(|r| {
+                            let src = h_host.row(r);
+                            let mut buf = self.row_pool.take(src.len());
+                            buf.copy_from_slice(src);
+                            (r, buf)
+                        })
                         .collect(),
                 );
             }
@@ -710,6 +725,18 @@ impl Engine {
         self.trace
             .record_token(t0.elapsed().as_secs_f64(), inputs.len() as u64);
 
+        // Park the final layer's similarity snapshot for the next step.
+        if let Some(prev) = prev_rows.take() {
+            for (_, row) in prev {
+                self.row_pool.put(row);
+            }
+        }
+
+        // Single-slot decode (the common serving shape): the logits tensor
+        // *is* the row — move it out instead of copying vocab floats.
+        if b == 1 && inputs.len() == 1 {
+            return Ok(vec![(inputs[0].0, logits.data)]);
+        }
         Ok(inputs
             .iter()
             .map(|&(row, _)| (row, logits.row(row).to_vec()))
@@ -752,7 +779,9 @@ impl Engine {
         stepping: &[bool],
     ) -> Result<bool> {
         let b = self.ecfg.batch;
-        let rows: Vec<Vec<f32>> = (0..b).map(|r| probs.row(r).to_vec()).collect();
+        // Borrowed rows: the prefetch planners only read, so there is no
+        // reason to copy the router probabilities per row.
+        let rows: Vec<&[f32]> = (0..b).map(|r| probs.row(r)).collect();
         let sets = prefetch::predict_sets(&self.ecfg.gating, layer, &rows, stepping);
         // Extension rule evaluated BEFORE issuing this layer's requests:
         // the horizon only moves past layers whose predictions were already

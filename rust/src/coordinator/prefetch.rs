@@ -71,10 +71,10 @@ impl PrefetchConfig {
 
 /// Turn per-row router probabilities for a future layer into per-row
 /// predicted expert sets under the gating policy.
-pub fn predict_sets(
+pub fn predict_sets<R: AsRef<[f32]>>(
     policy: &GatingPolicy,
     layer: usize,
-    probs_rows: &[Vec<f32>],
+    probs_rows: &[R],
     active: &[bool],
 ) -> Vec<HashSet<usize>> {
     probs_rows
@@ -84,7 +84,7 @@ pub fn predict_sets(
             if !active[r] {
                 return HashSet::new();
             }
-            let d: GateDecision = policy.decide(layer, probs);
+            let d: GateDecision = policy.decide(layer, probs.as_ref());
             d.experts.iter().map(|&(e, _)| e).collect()
         })
         .collect()
@@ -93,10 +93,10 @@ pub fn predict_sets(
 /// Experts to request for a predicted layer: union over rows, minus those
 /// already resident or in flight. Order: by total predicted probability
 /// mass (most-likely first) so partial budget goes to the likeliest.
-pub fn plan_requests(
+pub fn plan_requests<R: AsRef<[f32]>>(
     layer: usize,
     predicted: &[HashSet<usize>],
-    probs_rows: &[Vec<f32>],
+    probs_rows: &[R],
     cache: &dyn ExpertCache,
     xfer: &TransferEngine,
 ) -> Vec<ExpertId> {
@@ -113,10 +113,10 @@ pub fn plan_requests(
 /// device shard (counting those already in flight). Experts whose
 /// `LoadAware` device is not yet bound are never capped — capping them
 /// would require binding, which speculative planning must not do.
-pub fn plan_requests_with_mass(
+pub fn plan_requests_with_mass<R: AsRef<[f32]>>(
     layer: usize,
     predicted: &[HashSet<usize>],
-    probs_rows: &[Vec<f32>],
+    probs_rows: &[R],
     cache: &dyn ExpertCache,
     xfer: &TransferEngine,
     per_device_cap: Option<usize>,
@@ -128,7 +128,10 @@ pub fn plan_requests_with_mass(
         union.extend(set.iter().copied());
     }
     for &e in &union {
-        let m: f64 = probs_rows.iter().map(|p| p.get(e).copied().unwrap_or(0.0) as f64).sum();
+        let m: f64 = probs_rows
+            .iter()
+            .map(|p| p.as_ref().get(e).copied().unwrap_or(0.0) as f64)
+            .sum();
         mass.push((e, m));
     }
     mass.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());

@@ -145,7 +145,15 @@ pub fn build_plan_tiered(
     mode: TierMode,
 ) -> ExecPlan {
     let mut ready = Vec::new();
-    let mut pending = Vec::new();
+    // Pending items are recorded first and materialized after the miss
+    // batch goes out: joins carry their handle immediately, misses carry
+    // an index into the batched request (`None` queue slots below).
+    enum Pend {
+        Join(Arc<TransferHandle>),
+        Miss(usize),
+    }
+    let mut pending_spec: Vec<(usize, Pend)> = Vec::new();
+    let mut misses: Vec<ExpertId> = Vec::new();
     let mut extra = Vec::new();
     let mut issued = 0;
     let mut degraded = 0;
@@ -186,28 +194,64 @@ pub fn build_plan_tiered(
             ready.push(WorkItem::Ready { expert: e, weights: w });
         } else if let Some(h) = xfer.in_flight(id) {
             // already being loaded (e.g. by a prefetch): join it
-            pending.push(WorkItem::Pending { expert: e, handle: h });
+            pending_spec.push((e, Pend::Join(h)));
         } else {
-            // Strict misses insist on the preferred tier (that is the
-            // point of refusing the degraded copy); Degrade misses defer
-            // to the engine's precision policy (lowest tier under
-            // urgency).
-            let handle = match mode {
-                TierMode::Strict => xfer.request_at(id, Priority::OnDemand, preferred),
-                TierMode::Degrade => xfer.request(id, Priority::OnDemand),
+            // Fresh miss: collected now, submitted as one coalesced batch
+            // after the loop so the whole plan's misses ride a single
+            // multi-expert wire job per device (docs/hot-path.md). A
+            // repeated expert maps onto the first occurrence's slot.
+            let slot = match misses.iter().position(|&m| m == id) {
+                Some(i) => i,
+                None => {
+                    misses.push(id);
+                    issued += 1;
+                    misses.len() - 1
+                }
             };
-            pending.push(WorkItem::Pending { expert: e, handle });
+            pending_spec.push((e, Pend::Miss(slot)));
+        }
+    }
+    // Strict misses insist on the preferred tier (that is the point of
+    // refusing the degraded copy); Degrade misses defer to the engine's
+    // precision policy — whose on-demand pick is expert-independent, so
+    // one tier covers the whole batch either way.
+    let miss_kind = match mode {
+        TierMode::Strict => preferred,
+        TierMode::Degrade => xfer.on_demand_tier(),
+    };
+    let miss_handles = if misses.is_empty() {
+        Vec::new()
+    } else {
+        xfer.request_group_at(&misses, Priority::OnDemand, miss_kind)
+    };
+    let mut pending: Vec<WorkItem> = pending_spec
+        .into_iter()
+        .map(|(e, p)| WorkItem::Pending {
+            expert: e,
+            handle: match p {
+                Pend::Join(h) => h,
+                Pend::Miss(i) => Arc::clone(&miss_handles[i]),
+            },
+        })
+        .collect();
+    // Extras batch the same way (the miss tickets above are already
+    // registered, so an extra that duplicates a miss joins it via the
+    // in-flight check, exactly as it did when requests were serial).
+    let mut extra_ids: Vec<ExpertId> = Vec::new();
+    let mut extra_experts: Vec<usize> = Vec::new();
+    for &e in extra_loads {
+        let id: ExpertId = (layer, e);
+        if !cache.contains(id) && xfer.in_flight(id).is_none() && !extra_ids.contains(&id) {
+            extra_ids.push(id);
+            extra_experts.push(e);
             issued += 1;
         }
     }
-    for &e in extra_loads {
-        let id: ExpertId = (layer, e);
-        if !cache.contains(id) && xfer.in_flight(id).is_none() {
-            extra.push(WorkItem::ExtraLoad {
-                expert: e,
-                handle: xfer.request(id, Priority::OnDemand),
-            });
-            issued += 1;
+    if !extra_ids.is_empty() {
+        let handles =
+            xfer.request_group_at(&extra_ids, Priority::OnDemand, xfer.on_demand_tier());
+        for (e, handle) in extra_experts.into_iter().zip(handles) {
+            extra.push(WorkItem::ExtraLoad { expert: e, handle });
         }
     }
     let mut queue = ready;
@@ -422,6 +466,26 @@ mod tests {
         let plan = build_plan_tiered(0, &[2], &[], &cache, &xfer, TierMode::Strict);
         assert_eq!(plan.n_ready(), 1);
         assert_eq!(plan.degraded, 0);
+    }
+
+    #[test]
+    fn plan_misses_coalesce_into_one_wire_job() {
+        use std::sync::atomic::Ordering;
+        let (_store, cache, xfer) = fixture(vec![8, 8], "instant");
+        let plan = build_plan(0, &[1, 2, 3], &[], &cache, &xfer);
+        assert_eq!(plan.n_pending(), 3);
+        assert_eq!(plan.on_demand_issued, 3);
+        for (_, h) in plan.pending_items() {
+            h.wait_full();
+        }
+        xfer.quiesce().unwrap();
+        // Three misses, one multi-expert job on the wire — but still one
+        // transfer (and one resident copy) per expert.
+        assert_eq!(xfer.stats.wire_jobs.load(Ordering::Relaxed), 1);
+        assert_eq!(xfer.stats.coalesced_groups.load(Ordering::Relaxed), 1);
+        assert_eq!(xfer.stats.coalesced_members.load(Ordering::Relaxed), 3);
+        assert_eq!(xfer.stats.transfers.load(Ordering::Relaxed), 3);
+        assert!(cache.contains((0, 1)) && cache.contains((0, 2)) && cache.contains((0, 3)));
     }
 
     #[test]

@@ -68,6 +68,16 @@ pub enum FetchSource {
 /// not a corrupt store.
 pub trait ExpertFetcher: Send + Sync {
     fn fetch(&self, id: ExpertId) -> std::result::Result<QuantExpert, String>;
+
+    /// Resolve a batch of experts in one shot. The default loops over
+    /// [`ExpertFetcher::fetch`]; transports with a batched wire op
+    /// (`GET_RANGES`, docs/remote-store.md) override this to fetch the
+    /// whole set in a single round trip. Results are positional: `out[i]`
+    /// decodes `ids[i]`. An `Err` is retryable and leaves no partial
+    /// state the caller must unwind — per-id fetches still work.
+    fn fetch_many(&self, ids: &[ExpertId]) -> std::result::Result<Vec<QuantExpert>, String> {
+        ids.iter().map(|&id| self.fetch(id)).collect()
+    }
 }
 
 /// Remote-fetch counters shared between a remote-backed store and its
@@ -86,6 +96,9 @@ pub struct FetchCounters {
     pub checksum_failures: std::sync::atomic::AtomicU64,
     /// Connections re-established after a loss.
     pub reconnects: std::sync::atomic::AtomicU64,
+    /// Multi-expert round trips (`GET_RANGES`/[`ExpertFetcher::fetch_many`])
+    /// that replaced what would otherwise be one fetch per expert.
+    pub batched_fetches: std::sync::atomic::AtomicU64,
 }
 
 enum Backing {
@@ -227,6 +240,41 @@ impl HostStore {
                 let _ = slot.set(fetched);
                 Ok((slot.get().expect("slot just initialized"), FetchSource::Remote))
             }
+        }
+    }
+
+    /// Best-effort batch warm-up: pull every not-yet-pinned expert of
+    /// `ids` over the wire in one [`ExpertFetcher::fetch_many`] round trip
+    /// and pin the results. A coalesced transfer group calls this before
+    /// admitting its members so a cacheless coordinator pays one network
+    /// round trip per group instead of one per expert. Failures are
+    /// swallowed — each member's own [`HostStore::try_fetch`] retries
+    /// through the ordinary fault ladder. Local stores no-op.
+    pub fn prefetch(&self, ids: &[ExpertId]) {
+        let Backing::Remote { slots, fetcher, counters, .. } = &self.backing else {
+            return;
+        };
+        let missing: Vec<ExpertId> = ids
+            .iter()
+            .copied()
+            .filter(|&id| slots[self.slot_index(id)].get().is_none())
+            .collect();
+        if missing.len() < 2 {
+            // A single miss gains nothing over the per-id path (and an
+            // empty batch is a no-op) — let try_fetch handle it.
+            return;
+        }
+        let Ok(fetched) = fetcher.fetch_many(&missing) else { return };
+        if fetched.len() != missing.len() {
+            return; // malformed batch: fall back to per-id fetches
+        }
+        // Wire-level counters (fetches, bytes, latency) belong to the
+        // fetcher; this one records only that a batch warm-up landed.
+        counters.batched_fetches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        for (&id, q) in missing.iter().zip(fetched) {
+            // A concurrent per-id fetch may have won the slot; bit-identical
+            // encodings make the loser's copy equivalent.
+            let _ = slots[self.slot_index(id)].set(q);
         }
     }
 
@@ -458,6 +506,34 @@ mod tests {
         let (_, src) = remote.try_fetch((0, 0)).unwrap();
         assert_eq!(src, FetchSource::Local);
         assert_eq!(fetcher.calls.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn prefetch_batch_pins_missing_and_skips_pinned() {
+        let (remote, fetcher) = remote_twin(QuantKind::Int4, 0);
+        // Pin one expert the per-id way first.
+        remote.try_fetch((0, 0)).unwrap();
+        assert_eq!(fetcher.calls.load(Ordering::Relaxed), 1);
+        remote.prefetch(&[(0, 0), (0, 1), (0, 2)]);
+        // Only the two missing experts were fetched (the default
+        // fetch_many loops over fetch), in one logical round trip.
+        assert_eq!(fetcher.calls.load(Ordering::Relaxed), 3);
+        let c = remote.fetch_counters().unwrap();
+        assert_eq!(c.batched_fetches.load(Ordering::Relaxed), 1);
+        // Wire counters stay with the transport — the twin fetcher tracks
+        // nothing, so prefetch must not invent fetches of its own.
+        assert_eq!(c.fetches.load(Ordering::Relaxed), 0);
+        assert_eq!(remote.try_fetch((0, 1)).unwrap().1, FetchSource::Local);
+        assert_eq!(remote.try_fetch((0, 2)).unwrap().1, FetchSource::Local);
+        // A single-miss batch is a no-op: the per-id path handles it.
+        remote.prefetch(&[(0, 3)]);
+        assert_eq!(fetcher.calls.load(Ordering::Relaxed), 3);
+        // A failed batch is swallowed and not sticky: the experts stay
+        // absent and per-id fetches still land them.
+        fetcher.fail_first.store(1, Ordering::Relaxed);
+        remote.prefetch(&[(1, 0), (1, 1)]);
+        assert_eq!(c.batched_fetches.load(Ordering::Relaxed), 1);
+        assert_eq!(remote.try_fetch((1, 0)).unwrap().1, FetchSource::Remote);
     }
 
     #[test]

@@ -584,9 +584,43 @@ struct Job {
     /// Precision tier this job moves (chosen at request time).
     kind: QuantKind,
     /// Wire bytes of the expert at that tier (enqueue/dequeue symmetric).
+    /// For a coalesced group this is the *summed* member bytes.
     bytes: usize,
     handle: Arc<TransferHandle>,
     priority: Priority,
+    /// Coalesced multi-expert job ([`TransferEngine::request_group_at`]):
+    /// every expert of one plan bound for the same `(device, tier)`,
+    /// moved under a single wire-clock charge with per-member completion
+    /// publication. Empty for the ordinary one-expert job — `Vec::new()`
+    /// does not allocate, so the singleton hot path stays free.
+    members: Vec<GroupMember>,
+}
+
+/// One expert of a coalesced transfer group (docs/hot-path.md).
+struct GroupMember {
+    id: ExpertId,
+    /// This member's own wire bytes (its share of the group charge).
+    bytes: usize,
+    handle: Arc<TransferHandle>,
+}
+
+/// Recycled member-vec storage for coalesced group jobs: `take` on the
+/// request path, `put` once the lane has expanded the group at admit —
+/// steady-state decode allocates no transfer-side member lists.
+#[derive(Default)]
+struct GroupSlab {
+    slabs: Mutex<Vec<Vec<GroupMember>>>,
+}
+
+impl GroupSlab {
+    fn take(&self) -> Vec<GroupMember> {
+        lock_unpoisoned(&self.slabs).pop().unwrap_or_default()
+    }
+
+    fn put(&self, mut v: Vec<GroupMember>) {
+        v.clear();
+        lock_unpoisoned(&self.slabs).push(v);
+    }
 }
 
 /// Engine-wide counters (aggregate across lanes) exported to benches/metrics.
@@ -637,6 +671,15 @@ pub struct TransferStats {
     /// Upgrade batches released by the lane idle-time predictor instead
     /// of the `pending == 0` heuristic (consumer 4).
     pub sens_upgrades: AtomicU64,
+    /// Jobs handed to a lane queue (request, group request, or fault-pump
+    /// re-send). A coalesced group counts once however many experts it
+    /// carries — `wire_jobs < transfers` is the coalescing win made
+    /// observable (docs/hot-path.md).
+    pub wire_jobs: AtomicU64,
+    /// Multi-expert jobs issued by [`TransferEngine::request_group_at`].
+    pub coalesced_groups: AtomicU64,
+    /// Experts that rode inside those coalesced jobs.
+    pub coalesced_members: AtomicU64,
 }
 
 /// Point-in-time per-tier transfer volumes, one entry per configured
@@ -676,6 +719,9 @@ pub struct SourceSnapshot {
     pub checksum_failures: u64,
     /// Connections re-established after a loss.
     pub reconnects: u64,
+    /// Multi-expert `GET_RANGES` round trips that replaced per-expert
+    /// fetches (coalesced-group warm-ups, docs/hot-path.md).
+    pub batched_fetches: u64,
 }
 
 /// Point-in-time per-consumer sensitivity decision counters
@@ -906,6 +952,9 @@ pub struct TransferEngine {
     /// Transfers abandoned by the fault pump ([`FaultReport::failed`]).
     fault_failed: Mutex<Vec<ExpertId>>,
     in_flight: Arc<InFlight>,
+    /// Member-vec slab shared with every lane: group requests draw their
+    /// member lists here; admit returns them once expanded.
+    group_slab: Arc<GroupSlab>,
     /// Aggregate counters across lanes.
     pub stats: Arc<TransferStats>,
     pub staging: Arc<Staging>,
@@ -1017,6 +1066,7 @@ impl TransferEngine {
             .collect();
         let rr_dev: Vec<AtomicU64> = (0..n_devices).map(|_| AtomicU64::new(0)).collect();
         let fault_dropped: Arc<Mutex<Vec<ExpertId>>> = Arc::new(Mutex::new(Vec::new()));
+        let group_slab = Arc::new(GroupSlab::default());
         // Lane stats are pre-built as a shared vector: after a failover
         // migrates a job's gauge charge, the *finishing* lane must be able
         // to release the charge on the lane that currently holds it.
@@ -1060,6 +1110,7 @@ impl TransferEngine {
                         halt: Arc::clone(&halt),
                         faults: Arc::clone(&lane_faults),
                         dropped: Arc::clone(&fault_dropped),
+                        group_slab: Arc::clone(&group_slab),
                     };
                     std::thread::Builder::new()
                         .name(format!("adapmoe-comm-{lane_id}"))
@@ -1095,6 +1146,7 @@ impl TransferEngine {
             fault_dropped,
             fault_failed: Mutex::new(Vec::new()),
             in_flight,
+            group_slab,
             stats,
             staging,
             completions,
@@ -1181,6 +1233,17 @@ impl TransferEngine {
         self.tiers.highest()
     }
 
+    /// The tier [`TransferEngine::request`] assigns an on-demand load:
+    /// the precision policy's pick at full slack. The sensitivity floor
+    /// never applies to on-demand loads (nothing may add bytes to the
+    /// critical path), so this is the same for every expert — which is
+    /// what lets a plan batch its misses through
+    /// [`TransferEngine::request_group_at`] without changing any tier
+    /// decision.
+    pub fn on_demand_tier(&self) -> QuantKind {
+        self.precision.select(self.tiers.tiers(), Priority::OnDemand, 1.0)
+    }
+
     /// Per-tier transfer volumes, one entry per configured tier
     /// (`ServerStats.tiers`, micro/fig9 tables).
     pub fn tier_snapshots(&self) -> Vec<TierSnapshot> {
@@ -1217,6 +1280,7 @@ impl TransferEngine {
             s.retries = c.retries.load(Ordering::Relaxed);
             s.checksum_failures = c.checksum_failures.load(Ordering::Relaxed);
             s.reconnects = c.reconnects.load(Ordering::Relaxed);
+            s.batched_fetches = c.batched_fetches.load(Ordering::Relaxed);
         }
         s
     }
@@ -1431,7 +1495,16 @@ impl TransferEngine {
         drop(g);
         self.lanes[lane].stats.enqueue(bytes as u64);
         self.device_queued[device].fetch_add(bytes as u64, Ordering::Relaxed);
-        let job = Job { id, device, kind, bytes, handle: Arc::clone(&handle), priority };
+        let job = Job {
+            id,
+            device,
+            kind,
+            bytes,
+            handle: Arc::clone(&handle),
+            priority,
+            members: Vec::new(),
+        };
+        self.stats.wire_jobs.fetch_add(1, Ordering::Relaxed);
         let l = &self.lanes[lane];
         // A dead lane (halt_lane fault injection, or a crashed worker) has
         // dropped its receivers, so the send fails. Don't panic the
@@ -1444,6 +1517,130 @@ impl TransferEngine {
         };
         let _ = l.wake_tx.send(());
         handle
+    }
+
+    /// Enqueue one plan's worth of loads at a shared precision tier,
+    /// coalescing the experts bound for the same device into a single
+    /// multi-expert wire job per device (docs/hot-path.md). Semantics per
+    /// expert are identical to [`TransferEngine::request_at`] — duplicate
+    /// and in-flight ids join the existing transfer (with the same
+    /// on-demand promotion), every expert gets its own handle, ticket and
+    /// completion events, and the returned handles are positional with
+    /// `ids`. What changes is the wire accounting: the group's members
+    /// move under one summed wire-clock charge split pro-rata by bytes,
+    /// and the lane sees one job instead of `ids.len()`.
+    pub fn request_group_at(
+        &self,
+        ids: &[ExpertId],
+        priority: Priority,
+        kind: QuantKind,
+    ) -> Vec<Arc<TransferHandle>> {
+        assert!(self.tiers.has(kind), "{} is not a configured tier", kind.name());
+        let mut handles = Vec::with_capacity(ids.len());
+        let mut promote: Vec<(LaneId, ExpertId)> = Vec::new();
+        // One fresh-member group per device, built under a single registry
+        // lock so the whole plan's misses coalesce atomically (a duplicate
+        // id later in the slice hits the joiner path like any in-flight
+        // transfer).
+        let mut groups: Vec<Option<(LaneId, Vec<GroupMember>)>> =
+            (0..self.cache.n_devices()).map(|_| None).collect();
+        {
+            let mut g = lock_unpoisoned(&self.in_flight.map);
+            for &id in ids {
+                if let Some(t) = g.get(&id) {
+                    handles.push(Arc::clone(&t.handle));
+                    if priority == Priority::OnDemand {
+                        promote.push((t.lane, id));
+                    }
+                    continue;
+                }
+                let device = self.cache.device_of(id);
+                let lane = match &groups[device] {
+                    Some((lane, _)) => *lane,
+                    None => {
+                        let lane = self.assign_lane(device, priority);
+                        groups[device] = Some((lane, self.group_slab.take()));
+                        lane
+                    }
+                };
+                let bytes = self.tiers.expert_transfer_bytes(id, kind);
+                let handle =
+                    Arc::new(TransferHandle::new(id, self.n_tiles, lane, kind, bytes));
+                g.insert(
+                    id,
+                    Ticket {
+                        lane,
+                        handle: Arc::clone(&handle),
+                        priority,
+                        kind,
+                        device,
+                        bytes,
+                        retries: 0,
+                        issued_at: Instant::now(),
+                        not_before: None,
+                        needs_reissue: false,
+                        claimed: false,
+                    },
+                );
+                if let Some((_, members)) = groups[device].as_mut() {
+                    members.push(GroupMember { id, bytes, handle: Arc::clone(&handle) });
+                }
+                handles.push(handle);
+            }
+        }
+        for (lane, id) in promote {
+            lock_unpoisoned(&self.lanes[lane].promotions).insert(id);
+            let _ = self.lanes[lane].wake_tx.send(());
+        }
+        for (device, slot) in groups.into_iter().enumerate() {
+            let Some((lane, mut members)) = slot else { continue };
+            // Gauge charges are per member — exactly what each finisher
+            // (or fault-pump failure) releases.
+            for m in &members {
+                self.lanes[lane].stats.enqueue(m.bytes as u64);
+                self.device_queued[device].fetch_add(m.bytes as u64, Ordering::Relaxed);
+            }
+            self.stats.wire_jobs.fetch_add(1, Ordering::Relaxed);
+            let job = if members.len() == 1 {
+                // A lone miss rides the historical singleton path
+                // bit-for-bit; its member vec goes straight back to the
+                // slab.
+                let m = members.pop().expect("one member");
+                self.group_slab.put(members);
+                Job {
+                    id: m.id,
+                    device,
+                    kind,
+                    bytes: m.bytes,
+                    handle: m.handle,
+                    priority,
+                    members: Vec::new(),
+                }
+            } else {
+                self.stats.coalesced_groups.fetch_add(1, Ordering::Relaxed);
+                self.stats
+                    .coalesced_members
+                    .fetch_add(members.len() as u64, Ordering::Relaxed);
+                Job {
+                    id: members[0].id,
+                    device,
+                    kind,
+                    bytes: members.iter().map(|m| m.bytes).sum(),
+                    handle: Arc::clone(&members[0].handle),
+                    priority,
+                    members,
+                }
+            };
+            let l = &self.lanes[lane];
+            // Dead-lane send failures are tolerated exactly as in
+            // request_at: tickets stay registered as stranded transfers.
+            let _ = match priority {
+                Priority::OnDemand => l.urgent_tx.send(job),
+                _ => l.prefetch_tx.send(job),
+            };
+            let _ = l.wake_tx.send(());
+        }
+        handles
     }
 
     /// Handle for an in-flight transfer, if any.
@@ -1657,6 +1854,8 @@ impl TransferEngine {
                     let job = {
                         let g = lock_unpoisoned(&self.in_flight.map);
                         match g.get(&id) {
+                            // Re-sends are always singletons: a dropped
+                            // group member retries on its own ticket.
                             Some(t) if !t.claimed => Some(Job {
                                 id,
                                 device: t.device,
@@ -1664,6 +1863,7 @@ impl TransferEngine {
                                 bytes: t.bytes,
                                 handle: Arc::clone(&t.handle),
                                 priority: t.priority,
+                                members: Vec::new(),
                             }),
                             _ => None,
                         }
@@ -1683,6 +1883,7 @@ impl TransferEngine {
                     // queue — a retried prefetch is (or soon will be)
                     // blocking compute. The job keeps its original
                     // priority so landing semantics are unchanged.
+                    self.stats.wire_jobs.fetch_add(1, Ordering::Relaxed);
                     let _ = self.lanes[to].urgent_tx.send(job);
                     let _ = self.lanes[to].wake_tx.send(());
                 }
@@ -1832,6 +2033,9 @@ struct CommCtx {
     /// Shared drop report: ids this lane dropped at admit (flaky fault),
     /// consumed by the engine's fault pump.
     dropped: Arc<Mutex<Vec<ExpertId>>>,
+    /// Member-vec slab shared with the engine: expanded group jobs return
+    /// their member lists here for the next plan to reuse.
+    group_slab: Arc<GroupSlab>,
 }
 
 /// An in-progress transfer (tiles published so far).
@@ -1860,16 +2064,13 @@ fn comm_loop(ctx: CommCtx) {
         if ctx.shutdown.load(Ordering::SeqCst) || ctx.halt.load(Ordering::SeqCst) {
             break;
         }
-        // Drain newly arrived jobs.
+        // Drain newly arrived jobs (a coalesced group admits as one
+        // Active per member, all sharing the group's wire-clock charge).
         while let Ok(job) = ctx.urgent_rx.try_recv() {
-            if let Some(a) = admit(&ctx, job) {
-                urgent.push(a);
-            }
+            admit(&ctx, job, &mut urgent);
         }
         while let Ok(job) = ctx.prefetch_rx.try_recv() {
-            if let Some(a) = admit(&ctx, job) {
-                background.push(a);
-            }
+            admit(&ctx, job, &mut background);
         }
         // Lift prefetches the compute stream is now blocked on.
         {
@@ -1909,9 +2110,57 @@ fn comm_loop(ctx: CommCtx) {
     }
 }
 
+/// Admit one arrived job, pushing zero or more [`Active`] transfers onto
+/// `out`. A singleton admits exactly as it always has; a coalesced group
+/// expands into one Active per member, all priced off a *single*
+/// wire-clock charge over the summed bytes (split pro-rata), with one
+/// batched source warm-up for remote-backed stores. Members retired
+/// early — flaky-drop, satisfied-by-cache, failed fetch — simply do not
+/// consume their share of the charge.
+fn admit(ctx: &CommCtx, mut job: Job, out: &mut Vec<Active>) {
+    if job.members.is_empty() {
+        if let Some(a) = admit_one(ctx, job, None) {
+            out.push(a);
+        }
+        return;
+    }
+    let members = std::mem::take(&mut job.members);
+    let store = ctx.tiers.store(job.kind);
+    // One batched source resolve for the whole group: a remote-backed
+    // store pulls every missing member in a single GET_RANGES round trip
+    // (docs/remote-store.md), so the per-member try_fetch below is a
+    // host-local pin read. Best-effort — a failed batch leaves each
+    // member to fetch (and fault-retry) individually.
+    if store.is_remote() {
+        let ids: Vec<ExpertId> = members.iter().map(|m| m.id).collect();
+        store.prefetch(&ids);
+    }
+    let total_bytes: usize = members.iter().map(|m| m.bytes).sum();
+    let total_time =
+        ctx.platform.transfer_time(total_bytes, store.expert_bytes_f32) * ctx.time_scale;
+    for m in &members {
+        let share = total_time * (m.bytes as f64 / total_bytes as f64);
+        let single = Job {
+            id: m.id,
+            device: job.device,
+            kind: job.kind,
+            bytes: m.bytes,
+            handle: Arc::clone(&m.handle),
+            priority: job.priority,
+            members: Vec::new(),
+        };
+        if let Some(a) = admit_one(ctx, single, Some(share)) {
+            out.push(a);
+        }
+    }
+    ctx.group_slab.put(members);
+}
+
 /// Set up an Active transfer, or complete it immediately from the cache
-/// (prefetch/upgrade no-op path).
-fn admit(ctx: &CommCtx, job: Job) -> Option<Active> {
+/// (prefetch/upgrade no-op path). `time_override` is a coalesced group
+/// member's pro-rata share of its group's single wire-clock charge; a
+/// singleton prices its own bytes.
+fn admit_one(ctx: &CommCtx, job: Job, time_override: Option<f64>) -> Option<Active> {
     // Flaky-lane fault: drop every k-th admitted job on the floor. The
     // registry entry and gauge charge stay alive — the engine's fault
     // pump observes the drop report and re-issues (or fails) the job.
@@ -2002,7 +2251,10 @@ fn admit(ctx: &CommCtx, job: Job) -> Option<Active> {
         }
     };
     debug_assert_eq!(bytes, job.bytes, "request-time and admit-time bytes must agree");
-    let total_time = ctx.platform.transfer_time(bytes, store.expert_bytes_f32) * ctx.time_scale;
+    let total_time = match time_override {
+        Some(t) => t,
+        None => ctx.platform.transfer_time(bytes, store.expert_bytes_f32) * ctx.time_scale,
+    };
     Some(Active {
         job,
         next_tile: 0,
@@ -2220,6 +2472,64 @@ mod tests {
         let h2 = engine.request((0, 0), Priority::Prefetch);
         assert!(Arc::ptr_eq(&h1, &h2));
         h1.wait_full();
+    }
+
+    #[test]
+    fn group_request_coalesces_to_one_wire_job() {
+        let (store, cache, engine) = setup(QuantKind::Int4, vec![8, 8], "instant", 0.0);
+        let ids = [(0, 0), (0, 1), (0, 2)];
+        let handles = engine.request_group_at(&ids, Priority::OnDemand, QuantKind::Int4);
+        assert_eq!(handles.len(), 3);
+        for h in &handles {
+            h.wait_full();
+        }
+        engine.quiesce().unwrap();
+        // One job on the wire, three transfers published — every member
+        // got its own completion, residency and bit-exact weights.
+        assert_eq!(engine.stats.wire_jobs.load(Ordering::Relaxed), 1);
+        assert_eq!(engine.stats.coalesced_groups.load(Ordering::Relaxed), 1);
+        assert_eq!(engine.stats.coalesced_members.load(Ordering::Relaxed), 3);
+        assert_eq!(engine.stats.transfers.load(Ordering::Relaxed), 3);
+        for &id in &ids {
+            assert!(cache.contains(id), "member {id:?} not resident");
+            let got = cache.get(id).unwrap();
+            assert_eq!(got.w1.data, store.dequantize(id).w1.data);
+        }
+        // The expanded member vec went back to the slab for the next plan.
+        assert_eq!(lock_unpoisoned(&engine.group_slab.slabs).len(), 1);
+    }
+
+    #[test]
+    fn group_request_joins_in_flight_and_singles_out_lone_miss() {
+        let (_store, cache, engine) = setup(QuantKind::Int4, vec![8, 8], "instant", 0.0);
+        let h0 = engine.request((0, 1), Priority::Prefetch);
+        let handles = engine.request_group_at(&[(0, 0), (0, 1)], Priority::OnDemand, QuantKind::Int4);
+        // The in-flight expert joined the existing transfer (and was
+        // promoted); the lone fresh miss rode a singleton job, so nothing
+        // was counted as a coalesced group.
+        assert!(Arc::ptr_eq(&h0, &handles[1]));
+        for h in &handles {
+            h.wait_full();
+        }
+        engine.quiesce().unwrap();
+        assert_eq!(engine.stats.wire_jobs.load(Ordering::Relaxed), 2);
+        assert_eq!(engine.stats.coalesced_groups.load(Ordering::Relaxed), 0);
+        assert!(cache.contains((0, 0)));
+    }
+
+    #[test]
+    fn group_request_conserves_gauges_and_counters() {
+        let (_store, _cache, engine) = setup(QuantKind::Int4, vec![8, 8], "instant", 0.0);
+        let ids = [(1, 0), (1, 1), (1, 2), (1, 3)];
+        let handles = engine.request_group_at(&ids, Priority::Prefetch, QuantKind::Int4);
+        for h in &handles {
+            h.wait_full();
+        }
+        engine.quiesce().unwrap();
+        // Per-member gauge charges all drained back to zero.
+        assert_eq!(engine.lanes[0].stats.queued_bytes.load(Ordering::Relaxed), 0);
+        assert_eq!(engine.device_queued[0].load(Ordering::Relaxed), 0);
+        assert_eq!(engine.stats.prefetch.load(Ordering::Relaxed), 4);
     }
 
     #[test]

@@ -44,6 +44,11 @@ pub struct RemoteClient {
     conn: Option<RangedReader>,
     counters: Arc<FetchCounters>,
     max_attempts: u32,
+    /// Whether the server understands the batched `GET_RANGES` op.
+    /// Optimistically `true`; flipped off for the rest of the session the
+    /// first time the server answers it with "unknown op" (an old server),
+    /// so every later batch goes straight to per-range fetches.
+    ranges_supported: bool,
 }
 
 impl RemoteClient {
@@ -54,6 +59,7 @@ impl RemoteClient {
             conn: None,
             counters,
             max_attempts: MAX_ATTEMPTS,
+            ranges_supported: true,
         }
     }
 
@@ -113,6 +119,45 @@ impl RemoteClient {
         })
     }
 
+    /// Fetch + chunk-verify several artifacts in one `GET_RANGES` round
+    /// trip. Falls back to per-artifact [`RemoteClient::fetch_artifact`]
+    /// calls when the batch is too small to pay off or the server predates
+    /// the op (sticky — see [`RemoteClient::ranges_supported`]). Results
+    /// are positional with `entries`.
+    pub fn fetch_artifacts(
+        &mut self,
+        entries: &[&ArtifactEntry],
+        chunk_size: u32,
+    ) -> Result<Vec<Vec<u8>>, WireError> {
+        if entries.len() < 2 || !self.ranges_supported {
+            return entries.iter().map(|e| self.fetch_artifact(e, chunk_size)).collect();
+        }
+        let ranges: Vec<(u64, u64)> = entries.iter().map(|e| (e.offset, e.len)).collect();
+        let batched = self.with_retry(|conn| {
+            let parts = conn.fetch_ranges(&ranges)?;
+            for (e, bytes) in entries.iter().zip(&parts) {
+                if let Err(chunk) = e.verify(bytes, chunk_size) {
+                    return Err(WireError::Corrupt(format!(
+                        "batched artifact chunk {chunk} failed checksum"
+                    )));
+                }
+            }
+            Ok(parts)
+        });
+        match batched {
+            Ok(parts) => Ok(parts),
+            Err(WireError::Remote(_)) => {
+                // An old server answered "unknown op" (manifest entries
+                // can't be out of range, so that's the only ERR source).
+                // Remember, and serve this batch — and all later ones —
+                // over the per-range path the server does speak.
+                self.ranges_supported = false;
+                entries.iter().map(|e| self.fetch_artifact(e, chunk_size)).collect()
+            }
+            Err(e) => Err(e),
+        }
+    }
+
     fn with_retry<T>(
         &mut self,
         mut op: impl FnMut(&mut RangedReader) -> Result<T, WireError>,
@@ -154,26 +199,16 @@ impl RemoteFetcher {
     ) -> RemoteFetcher {
         RemoteFetcher { client, manifest, kind, counters }
     }
-}
 
-impl ExpertFetcher for RemoteFetcher {
-    fn fetch(&self, id: ExpertId) -> Result<QuantExpert, String> {
-        use std::sync::atomic::Ordering;
-        let entry = self
-            .manifest
-            .entry(self.kind, id.0, id.1)
-            .ok_or_else(|| {
-                format!("manifest has no {} artifact for ({},{})", self.kind.name(), id.0, id.1)
-            })?;
-        let start = Instant::now();
-        let fetched = lock_unpoisoned(&self.client)
-            .fetch_artifact(entry, self.manifest.chunk_size)
-            .map_err(|e| e.to_string());
-        self.counters
-            .fetch_ns
-            .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        let bytes = fetched?;
-        let q = decode_expert(&bytes).map_err(|e| e.to_string())?;
+    fn entry(&self, id: ExpertId) -> Result<&ArtifactEntry, String> {
+        self.manifest.entry(self.kind, id.0, id.1).ok_or_else(|| {
+            format!("manifest has no {} artifact for ({},{})", self.kind.name(), id.0, id.1)
+        })
+    }
+
+    /// Decode verified artifact bytes and sanity-check the decoded tier.
+    fn decode_checked(&self, id: ExpertId, bytes: &[u8]) -> Result<QuantExpert, String> {
+        let q = decode_expert(bytes).map_err(|e| e.to_string())?;
         for (name, t) in [("w1", &q.w1), ("w3", &q.w3), ("w2", &q.w2)] {
             if t.kind != self.kind {
                 return Err(format!(
@@ -185,9 +220,50 @@ impl ExpertFetcher for RemoteFetcher {
                 ));
             }
         }
+        Ok(q)
+    }
+}
+
+impl ExpertFetcher for RemoteFetcher {
+    fn fetch(&self, id: ExpertId) -> Result<QuantExpert, String> {
+        use std::sync::atomic::Ordering;
+        let entry = self.entry(id)?;
+        let start = Instant::now();
+        let fetched = lock_unpoisoned(&self.client)
+            .fetch_artifact(entry, self.manifest.chunk_size)
+            .map_err(|e| e.to_string());
+        self.counters
+            .fetch_ns
+            .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let q = self.decode_checked(id, &fetched?)?;
         self.counters.fetches.fetch_add(1, Ordering::Relaxed);
         self.counters.fetched_bytes.fetch_add(entry.len, Ordering::Relaxed);
         Ok(q)
+    }
+
+    /// Batched fetch: one `GET_RANGES` round trip for the whole set (with
+    /// per-artifact chunk verification), per-range fallback on old
+    /// servers. Counter accounting mirrors [`RemoteFetcher::fetch`]:
+    /// every expert that lands counts one fetch and its wire bytes.
+    fn fetch_many(&self, ids: &[ExpertId]) -> Result<Vec<QuantExpert>, String> {
+        use std::sync::atomic::Ordering;
+        let entries: Vec<&ArtifactEntry> =
+            ids.iter().map(|&id| self.entry(id)).collect::<Result<_, _>>()?;
+        let start = Instant::now();
+        let fetched = lock_unpoisoned(&self.client)
+            .fetch_artifacts(&entries, self.manifest.chunk_size)
+            .map_err(|e| e.to_string());
+        self.counters
+            .fetch_ns
+            .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let all_bytes = fetched?;
+        let mut out = Vec::with_capacity(ids.len());
+        for ((&id, entry), bytes) in ids.iter().zip(&entries).zip(&all_bytes) {
+            out.push(self.decode_checked(id, bytes)?);
+            self.counters.fetches.fetch_add(1, Ordering::Relaxed);
+            self.counters.fetched_bytes.fetch_add(entry.len, Ordering::Relaxed);
+        }
+        Ok(out)
     }
 }
 
@@ -244,6 +320,20 @@ mod tests {
         (srv, img)
     }
 
+    /// The server bumps `served` *after* answering, so a client can hold a
+    /// response the counter doesn't show yet — spin briefly before
+    /// asserting on exact request counts.
+    fn wait_served(srv: &StoreServer, want: u64) -> u64 {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let n = srv.served();
+            if n >= want || Instant::now() > deadline {
+                return n;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
     #[test]
     fn connect_store_builds_remote_tiers_matching_manifest() {
         let (srv, img) = serve(ChaosKnobs::default());
@@ -277,10 +367,59 @@ mod tests {
     }
 
     #[test]
+    fn prefetch_lands_a_layer_in_one_ranges_round_trip() {
+        let (srv, img) = serve(ChaosKnobs::default());
+        let (ts, m) = connect_store(&srv.local_addr()).unwrap();
+        let store = ts.store(QuantKind::Int2);
+        assert_eq!(wait_served(&srv, 1), 1); // the manifest fetch
+        let ids: Vec<_> = (0..m.n_experts).map(|e| (0, e)).collect();
+        store.prefetch(&ids);
+        // One GET_RANGES request covers the whole layer.
+        assert_eq!(wait_served(&srv, 2), 2);
+        let c = ts.remote_counters().unwrap();
+        use std::sync::atomic::Ordering;
+        assert_eq!(c.batched_fetches.load(Ordering::Relaxed), 1);
+        assert_eq!(c.fetches.load(Ordering::Relaxed), m.n_experts as u64);
+        for &id in &ids {
+            // Pinned by the batch: no further wire traffic, and the bytes
+            // decode to exactly what a per-range fetch would land.
+            let (q, src) = store.try_fetch(id).unwrap();
+            assert_eq!(src, crate::memory::host_store::FetchSource::Local);
+            let e = img.manifest.entry(QuantKind::Int2, id.0, id.1).unwrap();
+            let blob = &img.blob[e.offset as usize..(e.offset + e.len) as usize];
+            assert_eq!(q, &decode_expert(blob).unwrap());
+        }
+        assert_eq!(srv.served(), 2);
+    }
+
+    #[test]
+    fn old_server_falls_back_per_range_and_remembers() {
+        let (srv, _img) =
+            serve(ChaosKnobs { disable_ranges: true, ..ChaosKnobs::default() });
+        let (ts, m) = connect_store(&srv.local_addr()).unwrap();
+        let store = ts.store(QuantKind::Int8);
+        assert_eq!(wait_served(&srv, 1), 1); // the manifest fetch
+        let n = m.n_experts as u64;
+        let ids: Vec<_> = (0..m.n_experts).map(|e| (0, e)).collect();
+        store.prefetch(&ids);
+        // The batch still lands every expert: one refused GET_RANGES,
+        // then per-range fetches.
+        assert_eq!(wait_served(&srv, 2 + n), 2 + n);
+        for &id in &ids {
+            let (_, src) = store.try_fetch(id).unwrap();
+            assert_eq!(src, crate::memory::host_store::FetchSource::Local);
+        }
+        // The refusal is sticky: the next batch never retries the op.
+        let ids: Vec<_> = (0..m.n_experts).map(|e| (1, e)).collect();
+        store.prefetch(&ids);
+        assert_eq!(wait_served(&srv, 2 + 2 * n), 2 + 2 * n);
+    }
+
+    #[test]
     fn corrupt_responses_retry_until_clean() {
         // every 2nd response corrupted: each fetch may need a retry but
         // always converges; checksum_failures records the rejects
-        let (srv, _img) = serve(ChaosKnobs { corrupt_every: 2, drop_every: 0 });
+        let (srv, _img) = serve(ChaosKnobs { corrupt_every: 2, ..ChaosKnobs::default() });
         let (ts, m) = connect_store(&srv.local_addr()).unwrap();
         let store = ts.store(QuantKind::Int2);
         for l in 0..m.n_layers {
@@ -300,7 +439,7 @@ mod tests {
 
     #[test]
     fn dropped_connections_reconnect() {
-        let (srv, _img) = serve(ChaosKnobs { corrupt_every: 0, drop_every: 3 });
+        let (srv, _img) = serve(ChaosKnobs { drop_every: 3, ..ChaosKnobs::default() });
         let (ts, m) = connect_store(&srv.local_addr()).unwrap();
         let store = ts.store(QuantKind::Int8);
         for l in 0..m.n_layers {
@@ -317,7 +456,7 @@ mod tests {
     fn exhausted_attempts_surface_as_retryable_error() {
         // every response corrupted: attempts run dry and the fetch fails,
         // but a *store-level* retry is still possible (nothing sticky)
-        let (srv, img) = serve(ChaosKnobs { corrupt_every: 1, drop_every: 0 });
+        let (srv, img) = serve(ChaosKnobs { corrupt_every: 1, ..ChaosKnobs::default() });
         let counters = Arc::new(FetchCounters::default());
         let mut client =
             RemoteClient::new(&srv.local_addr(), Arc::clone(&counters)).with_attempts(2);

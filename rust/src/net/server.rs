@@ -27,8 +27,8 @@ use crate::memory::tiered_store::TieredStore;
 use crate::net::checksum::fnv1a;
 use crate::net::manifest::{encode_expert, ArtifactEntry, Manifest, DEFAULT_CHUNK};
 use crate::net::wire::{
-    read_frame, write_frame, WireError, OP_ERR, OP_GET_MANIFEST, OP_GET_RANGE, OP_MANIFEST,
-    OP_RANGE,
+    read_frame, write_frame, WireError, OP_ERR, OP_GET_MANIFEST, OP_GET_RANGE, OP_GET_RANGES,
+    OP_MANIFEST, OP_RANGE, OP_RANGES,
 };
 
 /// A tiered store frozen into servable bytes: the manifest (already
@@ -104,6 +104,10 @@ pub struct ChaosKnobs {
     /// Close the connection instead of answering every k-th request —
     /// the client sees a short read and must reconnect.
     pub drop_every: u64,
+    /// Pretend to be a server built before `GET_RANGES` existed: answer
+    /// the op with `OP_ERR` ("unknown op"), exercising the client's
+    /// per-range fallback path.
+    pub disable_ranges: bool,
 }
 
 /// Background artifact server. Binds on construction (use port 0 for an
@@ -243,6 +247,11 @@ fn serve_conn(
                 write_frame(&mut stream, OP_MANIFEST, &image.manifest_bytes).is_ok()
             }
             OP_GET_RANGE => answer_range(&mut stream, image, knobs, n, &payload).is_ok(),
+            // With disable_ranges set the op falls through to the
+            // unknown-op arm below — the exact answer of an old server.
+            OP_GET_RANGES if !knobs.disable_ranges => {
+                answer_ranges(&mut stream, image, knobs, n, &payload).is_ok()
+            }
             other => {
                 let msg = format!("unknown op {other:#04x}");
                 write_frame(&mut stream, OP_ERR, msg.as_bytes()).is_ok()
@@ -284,6 +293,44 @@ fn answer_range(
         bytes[at] ^= 0x40;
     }
     write_frame(stream, OP_RANGE, &bytes)
+}
+
+/// Answer a multi-range request: the payload is a concatenation of
+/// `(offset u64 LE, len u64 LE)` pairs; the response is every range's
+/// bytes concatenated in request order. Any bad pair rejects the whole
+/// request (the client's batch is all-or-nothing and falls back to
+/// per-range fetches). The corruption knob flips one byte of the combined
+/// payload — one `GET_RANGES` counts as one request on the chaos
+/// schedule, like the single round trip it is.
+fn answer_ranges(
+    stream: &mut (impl Write + ?Sized),
+    image: &ArtifactImage,
+    knobs: ChaosKnobs,
+    request_n: u64,
+    payload: &[u8],
+) -> Result<(), WireError> {
+    if payload.is_empty() || payload.len() % 16 != 0 {
+        return write_frame(stream, OP_ERR, b"ranges request wants 16 bytes per range");
+    }
+    let mut bytes = Vec::new();
+    for pair in payload.chunks_exact(16) {
+        let offset = u64::from_le_bytes(pair[..8].try_into().expect("8 bytes")) as usize;
+        let len = u64::from_le_bytes(pair[8..].try_into().expect("8 bytes")) as usize;
+        let end = offset.checked_add(len).filter(|&e| e <= image.blob.len());
+        let Some(end) = end else {
+            let msg = format!(
+                "range {offset}+{len} outside blob of {} bytes",
+                image.blob.len()
+            );
+            return write_frame(stream, OP_ERR, msg.as_bytes());
+        };
+        bytes.extend_from_slice(&image.blob[offset..end]);
+    }
+    if knobs.corrupt_every > 0 && request_n % knobs.corrupt_every == 0 && !bytes.is_empty() {
+        let at = (request_n as usize * 131) % bytes.len();
+        bytes[at] ^= 0x40;
+    }
+    write_frame(stream, OP_RANGES, &bytes)
 }
 
 #[cfg(test)]
@@ -351,6 +398,78 @@ mod tests {
     }
 
     #[test]
+    fn serves_multi_ranges_in_one_round_trip() {
+        let img = image();
+        let srv = StoreServer::spawn(Arc::clone(&img), "127.0.0.1:0").unwrap();
+        let mut r = connect(&srv);
+        let m = &img.manifest;
+        let picks = [3usize, 7, 1];
+        let ranges: Vec<(u64, u64)> =
+            picks.iter().map(|&i| (m.entries[i].offset, m.entries[i].len)).collect();
+        let batched = r.fetch_ranges(&ranges).unwrap();
+        assert_eq!(batched.len(), picks.len());
+        for (&i, bytes) in picks.iter().zip(&batched) {
+            let e = &m.entries[i];
+            assert_eq!(bytes.len(), e.len as usize);
+            assert_eq!(e.verify(bytes, m.chunk_size), Ok(()));
+            // the batch answers exactly what per-range fetches would
+            assert_eq!(bytes, &r.fetch_range(e.offset, e.len).unwrap());
+        }
+        // a bad pair rejects the whole batch, and the connection survives
+        let blob_len = img.blob.len() as u64;
+        assert!(matches!(
+            r.fetch_ranges(&[(0, 8), (blob_len, 16)]),
+            Err(WireError::Remote(_))
+        ));
+        assert!(matches!(r.fetch_ranges(&[]), Err(WireError::Remote(_))));
+        assert!(r.fetch_range(m.entries[0].offset, m.entries[0].len).is_ok());
+    }
+
+    #[test]
+    fn disabled_ranges_answers_unknown_op_like_an_old_server() {
+        let img = image();
+        let srv = StoreServer::spawn_chaotic(
+            Arc::clone(&img),
+            "127.0.0.1:0",
+            ChaosKnobs { disable_ranges: true, ..ChaosKnobs::default() },
+        )
+        .unwrap();
+        let mut r = connect(&srv);
+        let e = &img.manifest.entries[0];
+        match r.fetch_ranges(&[(e.offset, e.len)]) {
+            Err(WireError::Remote(msg)) => {
+                assert!(msg.contains("unknown op"), "msg={msg}")
+            }
+            other => panic!("expected Remote(unknown op), got {other:?}"),
+        }
+        // per-range fetches still work on the same connection — the
+        // client's fallback path needs no reconnect
+        assert!(r.fetch_range(e.offset, e.len).is_ok());
+    }
+
+    #[test]
+    fn corrupt_every_hits_batched_ranges_too() {
+        let img = image();
+        let srv = StoreServer::spawn_chaotic(
+            Arc::clone(&img),
+            "127.0.0.1:0",
+            ChaosKnobs { corrupt_every: 1, ..ChaosKnobs::default() },
+        )
+        .unwrap();
+        let mut r = connect(&srv);
+        let m = &img.manifest;
+        let ranges: Vec<(u64, u64)> =
+            (0..2).map(|i| (m.entries[i].offset, m.entries[i].len)).collect();
+        // the frame verifies (checksum covers the corrupted bytes)...
+        let batched = r.fetch_ranges(&ranges).unwrap();
+        // ...but exactly one member fails its chunk checksums
+        let bad = (0..2)
+            .filter(|&i| m.entries[i].verify(&batched[i], m.chunk_size).is_err())
+            .count();
+        assert_eq!(bad, 1, "one flipped byte lands in exactly one member");
+    }
+
+    #[test]
     fn out_of_range_request_is_remote_error_not_hang() {
         let img = image();
         let srv = StoreServer::spawn(Arc::clone(&img), "127.0.0.1:0").unwrap();
@@ -376,7 +495,7 @@ mod tests {
         let srv = StoreServer::spawn_chaotic(
             Arc::clone(&img),
             "127.0.0.1:0",
-            ChaosKnobs { corrupt_every: 1, drop_every: 0 },
+            ChaosKnobs { corrupt_every: 1, ..ChaosKnobs::default() },
         )
         .unwrap();
         let mut r = connect(&srv);
@@ -393,7 +512,7 @@ mod tests {
         let srv = StoreServer::spawn_chaotic(
             Arc::clone(&img),
             "127.0.0.1:0",
-            ChaosKnobs { corrupt_every: 0, drop_every: 2 },
+            ChaosKnobs { drop_every: 2, ..ChaosKnobs::default() },
         )
         .unwrap();
         let mut r = connect(&srv);

@@ -30,10 +30,18 @@ pub const MAX_FRAME: usize = 256 << 20;
 pub const OP_GET_MANIFEST: u8 = 1;
 /// Request: send me `len` blob bytes from `offset` (payload: two u64 LE).
 pub const OP_GET_RANGE: u8 = 2;
+/// Request: send me several blob ranges in one round trip (payload: a
+/// concatenation of `(offset u64 LE, len u64 LE)` pairs). Servers that
+/// predate the op answer `OP_ERR` ("unknown op"), which clients treat as
+/// the signal to fall back to per-range fetches.
+pub const OP_GET_RANGES: u8 = 3;
 /// Response: serialized manifest bytes.
 pub const OP_MANIFEST: u8 = 0x81;
 /// Response: raw blob bytes for a range request.
 pub const OP_RANGE: u8 = 0x82;
+/// Response: the requested ranges' bytes, concatenated in request order
+/// (the requester splits by its own lengths).
+pub const OP_RANGES: u8 = 0x83;
 /// Response: server-side failure, payload is a UTF-8 message.
 pub const OP_ERR: u8 = 0xff;
 
@@ -225,6 +233,36 @@ impl RangedReader {
             return Err(WireError::ShortRead { want: len as usize, got: resp.len() });
         }
         Ok(resp)
+    }
+
+    /// Fetch several blob ranges in one round trip (`GET_RANGES`),
+    /// returning one byte vector per requested `(offset, len)` pair, in
+    /// request order. The response is a single concatenated payload split
+    /// by the requested lengths — a total that doesn't add up is a
+    /// `ShortRead` (misbehaving server, connection suspect). An old
+    /// server answers `OP_ERR`, surfaced as [`WireError::Remote`] so the
+    /// caller can fall back to [`RangedReader::fetch_range`] per range.
+    pub fn fetch_ranges(&mut self, ranges: &[(u64, u64)]) -> Result<Vec<Vec<u8>>, WireError> {
+        let mut req = Vec::with_capacity(16 * ranges.len());
+        for &(offset, len) in ranges {
+            req.extend_from_slice(&offset.to_le_bytes());
+            req.extend_from_slice(&len.to_le_bytes());
+        }
+        let (op, resp) = self.roundtrip(OP_GET_RANGES, &req)?;
+        if op != OP_RANGES {
+            return Err(WireError::BadFrame(format!("expected ranges, got op {op:#04x}")));
+        }
+        let want: usize = ranges.iter().map(|&(_, len)| len as usize).sum();
+        if resp.len() != want {
+            return Err(WireError::ShortRead { want, got: resp.len() });
+        }
+        let mut out = Vec::with_capacity(ranges.len());
+        let mut at = 0;
+        for &(_, len) in ranges {
+            out.push(resp[at..at + len as usize].to_vec());
+            at += len as usize;
+        }
+        Ok(out)
     }
 }
 

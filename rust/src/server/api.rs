@@ -333,6 +333,10 @@ impl ServerStats {
                     ("remote_faults", Json::Num(self.source.remote_faults as f64)),
                     ("fetches", Json::Num(self.source.fetches as f64)),
                     ("fetched_bytes", Json::Num(self.source.fetched_bytes as f64)),
+                    (
+                        "batched_fetches",
+                        Json::Num(self.source.batched_fetches as f64),
+                    ),
                     ("fetch_ms", Json::Num(self.source.fetch_ms)),
                     ("retries", Json::Num(self.source.retries as f64)),
                     (
@@ -550,6 +554,7 @@ mod tests {
                 remote_faults: 1,
                 fetches: 9,
                 fetched_bytes: 450,
+                batched_fetches: 3,
                 fetch_ms: 12.5,
                 retries: 2,
                 checksum_failures: 1,
@@ -564,6 +569,7 @@ mod tests {
         assert_eq!(src.get("remote_faults").and_then(|v| v.as_usize()), Some(1));
         assert_eq!(src.get("fetches").and_then(|v| v.as_usize()), Some(9));
         assert_eq!(src.get("fetched_bytes").and_then(|v| v.as_usize()), Some(450));
+        assert_eq!(src.get("batched_fetches").and_then(|v| v.as_usize()), Some(3));
         assert_eq!(src.get("fetch_ms").and_then(|v| v.as_f64()), Some(12.5));
         assert_eq!(src.get("retries").and_then(|v| v.as_usize()), Some(2));
         assert_eq!(

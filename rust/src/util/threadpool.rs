@@ -10,9 +10,51 @@ use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Shared pool of reusable `f32` scratch buffers for the decode hot path.
+///
+/// The expert-major FFN ([`crate::coordinator::executor::expert_ffn_host_grouped`])
+/// packs routed rows into a gather buffer and accumulates into a packed
+/// output buffer per call; at `b=16` with several experts per layer that
+/// is thousands of short-lived heap allocations per decode step. Workers
+/// instead `take` a buffer sized to their need (zeroed, retaining the
+/// largest capacity seen) and `put` it back when the scatter is done, so
+/// steady-state decode performs no compute-side heap allocation.
+#[derive(Default)]
+pub struct RowBufferPool {
+    bufs: Mutex<Vec<Vec<f32>>>,
+}
+
+impl RowBufferPool {
+    pub fn new() -> Self {
+        RowBufferPool::default()
+    }
+
+    /// Take a zeroed buffer of exactly `len` elements, reusing a retired
+    /// buffer's capacity when one is available.
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        let mut buf = self.bufs.lock().unwrap().pop().unwrap_or_default();
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn put(&self, buf: Vec<f32>) {
+        self.bufs.lock().unwrap().push(buf);
+    }
+
+    /// Buffers currently parked in the pool (test/introspection hook).
+    pub fn parked(&self) -> usize {
+        self.bufs.lock().unwrap().len()
+    }
+}
+
 pub struct ThreadPool {
     tx: Option<Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
+    /// Scratch buffers shared by every worker (and the submitting thread):
+    /// the grouped expert FFN draws its gather/accumulate storage here.
+    buffers: Arc<RowBufferPool>,
 }
 
 impl ThreadPool {
@@ -35,7 +77,12 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers }
+        ThreadPool { tx: Some(tx), workers, buffers: Arc::new(RowBufferPool::new()) }
+    }
+
+    /// The pool's shared row-buffer scratch.
+    pub fn buffers(&self) -> &Arc<RowBufferPool> {
+        &self.buffers
     }
 
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
@@ -118,5 +165,44 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.submit(|| std::thread::sleep(std::time::Duration::from_millis(10)));
         drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn row_buffer_pool_recycles_capacity() {
+        let pool = RowBufferPool::new();
+        let mut a = pool.take(64);
+        assert_eq!(a.len(), 64);
+        assert!(a.iter().all(|&v| v == 0.0));
+        a[0] = 7.0;
+        let cap = a.capacity();
+        pool.put(a);
+        assert_eq!(pool.parked(), 1);
+        // smaller request reuses the retired buffer's capacity, zeroed
+        let b = pool.take(16);
+        assert_eq!(b.len(), 16);
+        assert!(b.capacity() >= cap);
+        assert!(b.iter().all(|&v| v == 0.0));
+        assert_eq!(pool.parked(), 0);
+    }
+
+    #[test]
+    fn row_buffer_pool_is_shareable_across_threads() {
+        let pool = Arc::new(RowBufferPool::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let p = Arc::clone(&pool);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    let buf = p.take(128);
+                    assert_eq!(buf.len(), 128);
+                    p.put(buf);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // every taken buffer came back
+        assert!(pool.parked() >= 1 && pool.parked() <= 4);
     }
 }

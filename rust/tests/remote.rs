@@ -124,7 +124,7 @@ fn any_single_byte_corruption_is_detected() {
 fn always_corrupt_server_never_yields_a_resident_expert() {
     let (_local, srv) = serve(
         &[QuantKind::Int4],
-        ChaosKnobs { corrupt_every: 1, drop_every: 0 },
+        ChaosKnobs { corrupt_every: 1, ..ChaosKnobs::default() },
     );
     // the manifest op is not corrupted by the chaos knob, so connect works
     let (remote, _m) = connect_store(&srv.local_addr()).unwrap();
@@ -149,7 +149,7 @@ fn flaky_server_drain_is_bit_identical_with_counters_conserved() {
         &[QuantKind::Int4],
         // periodic faults, never two in a row: every fetch converges
         // within the client's bounded attempts
-        ChaosKnobs { corrupt_every: 5, drop_every: 8 },
+        ChaosKnobs { corrupt_every: 5, drop_every: 8, ..ChaosKnobs::default() },
     );
     let (remote, m) = connect_store(&srv.local_addr()).unwrap();
     let remote_engine = engine_over(Arc::new(remote));
