@@ -541,6 +541,13 @@ impl Engine {
                 }
             }
 
+            crate::obs::instant(
+                crate::obs::Track::Decode,
+                crate::obs::Name::GateDecision,
+                layer as u64,
+                needed.len() as u64,
+            );
+
             // β tracking against the prediction made earlier for this layer.
             if let Some(pred) = self.predicted[layer].take() {
                 self.trace.record_prefetch_outcome(layer, &pred, &actual_per_row);
@@ -724,6 +731,12 @@ impl Engine {
 
         self.trace
             .record_token(t0.elapsed().as_secs_f64(), inputs.len() as u64);
+        crate::obs::span(
+            crate::obs::Track::Decode,
+            crate::obs::Name::DecodeStep,
+            0,
+            t0,
+        );
 
         // Park the final layer's similarity snapshot for the next step.
         if let Some(prev) = prev_rows.take() {
@@ -857,6 +870,12 @@ impl Engine {
                     continue; // already at (or above) the top tier
                 }
                 self.xfer.request_at(id, Priority::Upgrade, top);
+                crate::obs::instant(
+                    crate::obs::Track::Decode,
+                    crate::obs::Name::Upgrade,
+                    crate::obs::expert_corr(id),
+                    top.tier_index() as u64,
+                );
                 if shaped {
                     self.xfer.note_sensitivity_upgrade();
                 }

@@ -341,12 +341,25 @@ pub fn drain_arrival_order(
                         remaining -= 1;
                         progress = true;
                     } else if p.handle.is_failed() {
+                        let corr = crate::obs::expert_corr((layer, p.expert));
                         if let Some(wts) = fallback_copy(cache, p.expert) {
                             consume(Arrived::Full { expert: p.expert, weights: &wts })?;
                             stats.recovered += 1;
                             stats.consumed.push(p.expert);
+                            crate::obs::instant(
+                                crate::obs::Track::Decode,
+                                crate::obs::Name::CacheDegrade,
+                                corr,
+                                0,
+                            );
                         } else {
                             stats.dropped.push(p.expert);
+                            crate::obs::instant(
+                                crate::obs::Track::Decode,
+                                crate::obs::Name::Fault,
+                                corr,
+                                0,
+                            );
                         }
                         p.done = true;
                         remaining -= 1;
@@ -391,6 +404,7 @@ pub fn drain_arrival_order(
                         // Mid-expert failure: re-create the missing tiles
                         // from a fallback copy so the partial sums already
                         // dispatched stay valid, else drop the remainder.
+                        let corr = crate::obs::expert_corr((layer, p.expert));
                         if let Some(full) = fallback_copy(cache, p.expert) {
                             let step = full.w1.dims[1] / n_tiles;
                             while p.tiles < n_tiles {
@@ -406,8 +420,20 @@ pub fn drain_arrival_order(
                             }
                             stats.recovered += 1;
                             stats.consumed.push(p.expert);
+                            crate::obs::instant(
+                                crate::obs::Track::Decode,
+                                crate::obs::Name::CacheDegrade,
+                                corr,
+                                0,
+                            );
                         } else {
                             stats.dropped.push(p.expert);
+                            crate::obs::instant(
+                                crate::obs::Track::Decode,
+                                crate::obs::Name::Fault,
+                                corr,
+                                0,
+                            );
                         }
                         p.done = true;
                         remaining -= 1;

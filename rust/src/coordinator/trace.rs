@@ -4,10 +4,10 @@
 use std::collections::HashSet;
 
 use crate::coordinator::cache_plan::PlanInputs;
-use crate::util::stats::{Histogram, Summary};
+use crate::util::stats::{Histogram, LogHistogram, Summary};
 
 /// Decode-step phases for the time breakdown (perf-pass instrumentation).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Phase {
     Attn = 0,
     Gate = 1,
@@ -80,6 +80,11 @@ pub struct TraceCollector {
     pub phase_ns: [u64; Phase::COUNT],
     /// Per-token decode latency (seconds).
     pub token_latency: Summary,
+    /// Log-bucketed per-token latency distribution (for p50/p95/p99 in
+    /// `ServerStats` and the metrics exposition).
+    pub token_hist: LogHistogram,
+    /// Log-bucketed per-arrival lane queue-delay distribution.
+    pub lane_queue_hist: LogHistogram,
     /// Tokens decoded.
     pub tokens: u64,
 }
@@ -107,6 +112,8 @@ impl TraceCollector {
             collect_similarity: false,
             phase_ns: [0; Phase::COUNT],
             token_latency: Summary::new(),
+            token_hist: LogHistogram::new(),
+            lane_queue_hist: LogHistogram::new(),
             tokens: 0,
         }
     }
@@ -186,6 +193,7 @@ impl TraceCollector {
             self.queue_delay_lane_ns.resize(lane + 1, 0);
         }
         self.queue_delay_lane_ns[lane] += ns;
+        self.lane_queue_hist.record(ns as f64 / 1e9);
     }
 
     /// Per-lane queue-delay seconds (index = lane id; empty when the run
@@ -231,6 +239,7 @@ impl TraceCollector {
 
     pub fn record_phase(&mut self, phase: Phase, ns: u64) {
         self.phase_ns[phase as usize] += ns;
+        crate::obs::span_ending_now(crate::obs::Track::Decode, crate::obs::Name::Phase(phase), ns);
     }
 
     /// (name, seconds) pairs for the phase breakdown.
@@ -244,6 +253,7 @@ impl TraceCollector {
 
     pub fn record_token(&mut self, latency_s: f64, rows: u64) {
         self.token_latency.add(latency_s);
+        self.token_hist.record(latency_s);
         self.tokens += rows;
     }
 

@@ -22,6 +22,7 @@ pub mod coordinator;
 pub mod memory;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 pub mod tensor;

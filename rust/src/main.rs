@@ -28,8 +28,8 @@ use adapmoe::memory::tiered_store::{PrecisionPolicy, TieredStore};
 use adapmoe::memory::transfer::LanePolicy;
 use adapmoe::model::tokenizer::{ByteTokenizer, EvalStream};
 use adapmoe::net::{ArtifactImage, StoreServer};
-use adapmoe::server::api::{GenerationEvent, GenerationRequest};
-use adapmoe::server::service::InferenceService;
+use adapmoe::server::api::{GenerationEvent, GenerationRequest, ServerStats};
+use adapmoe::server::service::{stats_from_perf, Backend, InferenceService};
 use adapmoe::server::tcp;
 use adapmoe::util::cli::Args;
 use adapmoe::util::rng::Rng;
@@ -111,7 +111,13 @@ fn usage() {
            --addr HOST:PORT  (serve) bind address (default: 127.0.0.1:7411)\n\
                              wire format: docs/protocol.md (streaming, cancel, stats)\n\
            --tokens N        (profile) eval tokens to decode (default: 200)\n\
-           --budget N        (plan-cache) cache budget in experts",
+           --budget N        (plan-cache) cache budget in experts\n\
+           --trace-out FILE  record a flight-recorder timeline and write it as\n\
+                             Chrome trace-event JSON at exit (open in Perfetto;\n\
+                             docs/observability.md)\n\
+           --metrics-out FILE  (generate|profile) write the Prometheus-style\n\
+                             metrics exposition at exit; under serve use the\n\
+                             {{\"cmd\":\"metrics\"}} wire op instead",
         policy::METHODS.join("|"),
         Platform::names(),
         LanePolicy::names().join("|"),
@@ -119,6 +125,48 @@ fn usage() {
         PrecisionPolicy::names().join("|"),
         SensitivityPolicy::names().join("|"),
     );
+}
+
+/// Arm the flight recorder when `--trace-out FILE` is present; returns the
+/// output path so [`trace_finish`] can dump the timeline after the run.
+fn trace_setup(args: &Args) -> Option<PathBuf> {
+    let path = args.get("trace-out").map(PathBuf::from);
+    if path.is_some() {
+        adapmoe::obs::enable();
+        eprintln!("[adapmoe] flight recorder armed");
+    }
+    path
+}
+
+/// Drain the flight recorder and write Chrome trace-event JSON to `path`
+/// (no-op when `--trace-out` was absent).
+fn trace_finish(args: &Args, path: Option<PathBuf>) -> Result<()> {
+    let Some(path) = path else { return Ok(()) };
+    let events = adapmoe::obs::drain();
+    let dropped = adapmoe::obs::dropped();
+    adapmoe::obs::disable();
+    let n_lanes = args.usize_or("lanes", 1);
+    let n_devices = args.usize_or("devices", 1);
+    let j = adapmoe::obs::chrome_trace(&events, n_lanes, n_devices);
+    std::fs::write(&path, j.to_string())
+        .with_context(|| format!("writing trace to {}", path.display()))?;
+    eprintln!(
+        "[adapmoe] wrote {} trace events to {} ({} dropped)",
+        events.len(),
+        path.display(),
+        dropped
+    );
+    Ok(())
+}
+
+/// Write the Prometheus-style metrics exposition for `stats` when
+/// `--metrics-out FILE` is present.
+fn metrics_finish(args: &Args, stats: &ServerStats) -> Result<()> {
+    let Some(path) = args.get("metrics-out") else { return Ok(()) };
+    let text = adapmoe::obs::metrics::MetricsRegistry::from_server_stats(stats).render();
+    std::fs::write(path, text).with_context(|| format!("writing metrics to {path}"))?;
+    eprintln!("[adapmoe] wrote metrics exposition to {path}");
+    Ok(())
 }
 
 /// Build an engine from CLI flags (shared by generate/serve/profile).
@@ -209,6 +257,7 @@ fn build_engine(args: &Args, default_batch: usize) -> Result<Engine> {
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
+    let trace_out = trace_setup(args);
     let mut engine = build_engine(args, 1)?;
     let prompt_text = args.str_or("prompt", "the model expert gate ");
     if prompt_text.is_empty() {
@@ -274,10 +323,13 @@ fn cmd_generate(args: &Args) -> Result<()> {
         100.0 * h as f64 / (h + m).max(1) as f64,
         100.0 * engine.trace.mean_single_ratio(),
     );
+    metrics_finish(args, &stats_from_perf(&engine.perf()))?;
+    trace_finish(args, trace_out)?;
     Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    let trace_out = trace_setup(args);
     let engine = build_engine(args, 4)?;
     // Optionally publish this engine's expert store so cacheless peers
     // (`--remote`) can fetch their experts from us (docs/remote-store.md).
@@ -300,6 +352,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let shutdown = Arc::new(AtomicBool::new(false));
     let served = tcp::serve(engine, &addr, shutdown)?;
     eprintln!("[adapmoe] served {served} completions");
+    trace_finish(args, trace_out)?;
     Ok(())
 }
 
@@ -330,6 +383,7 @@ fn cmd_plan_cache(args: &Args) -> Result<()> {
 }
 
 fn cmd_profile(args: &Args) -> Result<()> {
+    let trace_out = trace_setup(args);
     let mut engine = build_engine(args, 1)?;
     engine.trace.enable_similarity(); // Fig. 3 series is part of the profile
     let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
@@ -376,5 +430,7 @@ fn cmd_profile(args: &Args) -> Result<()> {
         tr.token_latency.p50() * 1e3,
         tr.stall_ns as f64 / 1e6
     );
+    metrics_finish(args, &stats_from_perf(&engine.perf()))?;
+    trace_finish(args, trace_out)?;
     Ok(())
 }

@@ -161,6 +161,9 @@ struct Inner {
     /// Evictions where the importance weighting picked a victim other
     /// than the LRU head (`SensitivitySnapshot.evictions`).
     bias_evictions: u64,
+    /// Device id this pool models, for flight-recorder track attribution
+    /// only (0 unless [`DeviceCache::set_obs_device`] was called).
+    obs_device: usize,
 }
 
 impl Inner {
@@ -221,6 +224,12 @@ impl Inner {
             self.layer_bytes[layer] = self.layer_bytes[layer].saturating_sub(m.bytes);
         }
         self.evictions += 1;
+        crate::obs::instant(
+            crate::obs::Track::Device(self.obs_device),
+            crate::obs::Name::CacheEvict,
+            crate::obs::expert_corr((layer, victim)),
+            0,
+        );
         Some(victim)
     }
 
@@ -273,8 +282,15 @@ impl DeviceCache {
                 misses: 0,
                 evictions: 0,
                 bias_evictions: 0,
+                obs_device: 0,
             }),
         }
+    }
+
+    /// Tag this pool with the device id it models so flight-recorder
+    /// eviction events land on the right track (purely observational).
+    pub fn set_obs_device(&self, device: usize) {
+        self.inner.lock().unwrap().obs_device = device;
     }
 
     /// Uniform split of `total` experts across `layers` (baseline policy).

@@ -99,6 +99,9 @@ pub struct FetchCounters {
     /// Multi-expert round trips (`GET_RANGES`/[`ExpertFetcher::fetch_many`])
     /// that replaced what would otherwise be one fetch per expert.
     pub batched_fetches: std::sync::atomic::AtomicU64,
+    /// Per-round-trip fetch latency distribution (seconds; lock-free, so
+    /// the transport records through the shared handle).
+    pub fetch_hist: crate::util::stats::LogHistogram,
 }
 
 enum Backing {

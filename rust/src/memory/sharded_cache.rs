@@ -163,7 +163,12 @@ impl ShardedCache {
         ShardedCache {
             shards: allocations
                 .into_iter()
-                .map(|a| Arc::new(DeviceCache::new(a)))
+                .enumerate()
+                .map(|(d, a)| {
+                    let c = Arc::new(DeviceCache::new(a));
+                    c.set_obs_device(d);
+                    c
+                })
                 .collect(),
             placement,
             n_layers,

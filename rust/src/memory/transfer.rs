@@ -1495,6 +1495,12 @@ impl TransferEngine {
         drop(g);
         self.lanes[lane].stats.enqueue(bytes as u64);
         self.device_queued[device].fetch_add(bytes as u64, Ordering::Relaxed);
+        crate::obs::instant(
+            crate::obs::Track::Lane(lane),
+            crate::obs::Name::Enqueue,
+            crate::obs::expert_corr(id),
+            bytes as u64,
+        );
         let job = Job {
             id,
             device,
@@ -1599,6 +1605,12 @@ impl TransferEngine {
             for m in &members {
                 self.lanes[lane].stats.enqueue(m.bytes as u64);
                 self.device_queued[device].fetch_add(m.bytes as u64, Ordering::Relaxed);
+                crate::obs::instant(
+                    crate::obs::Track::Lane(lane),
+                    crate::obs::Name::Enqueue,
+                    crate::obs::expert_corr(m.id),
+                    m.bytes as u64,
+                );
             }
             self.stats.wire_jobs.fetch_add(1, Ordering::Relaxed);
             let job = if members.len() == 1 {
@@ -1875,9 +1887,21 @@ impl TransferEngine {
                             .stats
                             .failovers
                             .fetch_add(1, Ordering::Relaxed);
+                        crate::obs::instant(
+                            crate::obs::Track::Lane(from),
+                            crate::obs::Name::Failover,
+                            crate::obs::expert_corr(id),
+                            to as u64,
+                        );
                     } else {
                         self.stats.retries.fetch_add(1, Ordering::Relaxed);
                         self.lanes[to].stats.retries.fetch_add(1, Ordering::Relaxed);
+                        crate::obs::instant(
+                            crate::obs::Track::Lane(to),
+                            crate::obs::Name::Retry,
+                            crate::obs::expert_corr(id),
+                            0,
+                        );
                     }
                     // Priority escalation: every re-send rides the urgent
                     // queue — a retried prefetch is (or soon will be)
@@ -1899,6 +1923,12 @@ impl TransferEngine {
                     self.device_queued[device].fetch_sub(bytes as u64, Ordering::Relaxed);
                     self.stats.failed.fetch_add(1, Ordering::Relaxed);
                     lock_unpoisoned(&self.fault_failed).push(id);
+                    crate::obs::instant(
+                        crate::obs::Track::Lane(lane),
+                        crate::obs::Name::Fault,
+                        crate::obs::expert_corr(id),
+                        bytes as u64,
+                    );
                     // registry removal last (same ordering as finish/admit):
                     // quiesce returning implies the counters are published
                     self.in_flight.remove(id);
@@ -2229,6 +2259,12 @@ fn admit_one(ctx: &CommCtx, job: Job, time_override: Option<f64>) -> Option<Acti
         ctx.device_queued[ci.device].fetch_sub(ci.bytes as u64, Ordering::Relaxed);
         ctx.stats.skipped_cached.fetch_add(1, Ordering::Relaxed);
         ctx.lane_stats.skipped_cached.fetch_add(1, Ordering::Relaxed);
+        crate::obs::instant(
+            crate::obs::Track::Lane(ctx.lane),
+            crate::obs::Name::Complete,
+            crate::obs::expert_corr(job.id),
+            0,
+        );
         // registry removal last: quiesce() returning implies the counters
         // above are already published
         ctx.in_flight.remove(job.id);
@@ -2255,6 +2291,12 @@ fn admit_one(ctx: &CommCtx, job: Job, time_override: Option<f64>) -> Option<Acti
         Some(t) => t,
         None => ctx.platform.transfer_time(bytes, store.expert_bytes_f32) * ctx.time_scale,
     };
+    crate::obs::instant(
+        crate::obs::Track::Lane(ctx.lane),
+        crate::obs::Name::Admit,
+        crate::obs::expert_corr(job.id),
+        bytes as u64,
+    );
     Some(Active {
         job,
         next_tile: 0,
@@ -2289,6 +2331,12 @@ fn transfer_tile(ctx: &CommCtx, a: &mut Active) -> bool {
     let busy = (tile_time.max(elapsed) * 1e9) as u64;
     ctx.stats.sim_busy_ns.fetch_add(busy, Ordering::Relaxed);
     ctx.lane_stats.sim_busy_ns.fetch_add(busy, Ordering::Relaxed);
+    crate::obs::span(
+        crate::obs::Track::Lane(ctx.lane),
+        crate::obs::Name::Wire,
+        crate::obs::expert_corr(a.job.id),
+        t_start,
+    );
     a.job.handle.publish_tile(t, Arc::clone(&tile));
     ctx.completions.push(CompletionEvent {
         id: a.job.id,
@@ -2313,11 +2361,18 @@ fn finish(ctx: &CommCtx, a: Active) {
     let (d, f) = (q.d, q.f);
     let full = Arc::new(assemble(d, f, f / ctx.n_tiles, &a.tiles));
     let meta = ResidentMeta { kind: a.job.kind, bytes: a.bytes };
+    let corr = crate::obs::expert_corr(a.job.id);
     match a.job.priority {
         // On-demand loads were needed *now*: straight into the LRU cache,
         // with the source tier + wire bytes on the entry.
         Priority::OnDemand => {
             ctx.cache.insert_tiered(a.job.id, Arc::clone(&full), meta);
+            crate::obs::instant(
+                crate::obs::Track::Device(ci.device),
+                crate::obs::Name::CacheInsert,
+                corr,
+                a.bytes as u64,
+            );
         }
         // An upgrade only ever *replaces* the resident copy it improves
         // (atomic check-and-replace). If the target was evicted while
@@ -2325,6 +2380,12 @@ fn finish(ctx: &CommCtx, a: Active) {
         // copy is still published on the handle for any joined waiter.
         Priority::Upgrade => {
             ctx.cache.replace_if_resident(a.job.id, Arc::clone(&full), meta);
+            crate::obs::instant(
+                crate::obs::Track::Tier(a.job.kind.tier_index()),
+                crate::obs::Name::Upgrade,
+                corr,
+                a.bytes as u64,
+            );
         }
         // Prefetches are speculative: park them in staging only. They are
         // promoted into the LRU cache at first use (scheduler::build_plan);
@@ -2377,6 +2438,12 @@ fn finish(ctx: &CommCtx, a: Active) {
             ctx.lane_stats.upgrades.fetch_add(1, Ordering::Relaxed);
         }
     };
+    crate::obs::instant(
+        crate::obs::Track::Lane(ctx.lane),
+        crate::obs::Name::Complete,
+        corr,
+        a.bytes as u64,
+    );
     // registry removal last: quiesce() returning implies every counter
     // above is already published
     ctx.in_flight.remove(a.job.id);

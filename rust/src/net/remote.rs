@@ -235,6 +235,13 @@ impl ExpertFetcher for RemoteFetcher {
         self.counters
             .fetch_ns
             .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.counters.fetch_hist.record(start.elapsed().as_secs_f64());
+        crate::obs::span(
+            crate::obs::Track::Remote,
+            crate::obs::Name::RemoteFetch,
+            crate::obs::expert_corr(id),
+            start,
+        );
         let q = self.decode_checked(id, &fetched?)?;
         self.counters.fetches.fetch_add(1, Ordering::Relaxed);
         self.counters.fetched_bytes.fetch_add(entry.len, Ordering::Relaxed);
@@ -256,6 +263,13 @@ impl ExpertFetcher for RemoteFetcher {
         self.counters
             .fetch_ns
             .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.counters.fetch_hist.record(start.elapsed().as_secs_f64());
+        crate::obs::span(
+            crate::obs::Track::Remote,
+            crate::obs::Name::RemoteFetch,
+            ids.first().map(|&id| crate::obs::expert_corr(id)).unwrap_or(0),
+            start,
+        );
         let all_bytes = fetched?;
         let mut out = Vec::with_capacity(ids.len());
         for ((&id, entry), bytes) in ids.iter().zip(&entries).zip(&all_bytes) {

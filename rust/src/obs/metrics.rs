@@ -1,0 +1,527 @@
+//! Unified metrics registry: one place where every counter family the
+//! stack maintains (server, lanes, devices, tiers, remote source,
+//! sensitivity) plus the log-bucketed latency histograms are collected and
+//! rendered as Prometheus-style text exposition.
+//!
+//! The registry is snapshot-shaped, not live: [`MetricsRegistry::from_server_stats`]
+//! builds it from a [`ServerStats`] point-in-time copy, so rendering never
+//! races the hot path. Served over the v2 line protocol as
+//! `{"cmd":"metrics"}` and dumped by `--metrics-out` (docs/observability.md).
+
+use crate::server::api::ServerStats;
+use crate::util::stats::LogHistogram;
+
+enum Data {
+    /// (rendered label block like `{lane="0"}` or "", value) samples.
+    Samples(Vec<(String, f64)>),
+    Hist(LogHistogram),
+}
+
+struct Family {
+    name: String,
+    kind: &'static str,
+    help: String,
+    data: Data,
+}
+
+/// Ordered collection of metric families; insertion order is render order.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    families: Vec<Family>,
+}
+
+fn labels(pairs: &[(&str, &str)]) -> String {
+    if pairs.is_empty() {
+        return String::new();
+    }
+    let body: Vec<String> = pairs.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+    format!("{{{}}}", body.join(","))
+}
+
+/// Render a value the way our JSON writer does: integral values without a
+/// fractional part, everything else via the shortest f64 repr.
+fn fmt_val(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    fn family(&mut self, name: &str, kind: &'static str, help: &str) -> &mut Family {
+        if let Some(i) = self.families.iter().position(|f| f.name == name) {
+            return &mut self.families[i];
+        }
+        self.families.push(Family {
+            name: name.to_string(),
+            kind,
+            help: help.to_string(),
+            data: Data::Samples(Vec::new()),
+        });
+        self.families.last_mut().unwrap()
+    }
+
+    /// Add one sample to a counter family (created on first use).
+    pub fn counter(&mut self, name: &str, help: &str, lbl: &[(&str, &str)], v: f64) {
+        let fam = self.family(name, "counter", help);
+        if let Data::Samples(s) = &mut fam.data {
+            s.push((labels(lbl), v));
+        }
+    }
+
+    /// Add one sample to a gauge family (created on first use).
+    pub fn gauge(&mut self, name: &str, help: &str, lbl: &[(&str, &str)], v: f64) {
+        let fam = self.family(name, "gauge", help);
+        if let Data::Samples(s) = &mut fam.data {
+            s.push((labels(lbl), v));
+        }
+    }
+
+    /// Register a histogram family from a [`LogHistogram`] snapshot.
+    pub fn histogram(&mut self, name: &str, help: &str, h: &LogHistogram) {
+        self.families.push(Family {
+            name: name.to_string(),
+            kind: "histogram",
+            help: help.to_string(),
+            data: Data::Hist(h.clone()),
+        });
+    }
+
+    /// Prometheus text exposition: `# HELP` / `# TYPE` headers followed by
+    /// one line per sample; histograms render cumulative `_bucket{le=...}`
+    /// series (nonzero buckets + `+Inf`) plus `_sum`/`_count`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for fam in &self.families {
+            out.push_str(&format!("# HELP {} {}\n", fam.name, fam.help));
+            out.push_str(&format!("# TYPE {} {}\n", fam.name, fam.kind));
+            match &fam.data {
+                Data::Samples(samples) => {
+                    for (lbl, v) in samples {
+                        out.push_str(&format!("{}{} {}\n", fam.name, lbl, fmt_val(*v)));
+                    }
+                }
+                Data::Hist(h) => {
+                    for (bound, cum) in h.cumulative() {
+                        out.push_str(&format!(
+                            "{}_bucket{{le=\"{:e}\"}} {}\n",
+                            fam.name, bound, cum
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{}_bucket{{le=\"+Inf\"}} {}\n",
+                        fam.name,
+                        h.count()
+                    ));
+                    out.push_str(&format!("{}_sum {}\n", fam.name, fmt_val(h.sum_seconds())));
+                    out.push_str(&format!("{}_count {}\n", fam.name, h.count()));
+                }
+            }
+        }
+        out
+    }
+
+    /// Build the full registry from a stats snapshot: every counter family
+    /// `ServerStats` carries, the latency quantile gauges, and the three
+    /// log-bucketed histograms.
+    pub fn from_server_stats(s: &ServerStats) -> MetricsRegistry {
+        let mut r = MetricsRegistry::new();
+
+        // -- server ----------------------------------------------------------
+        r.gauge("adapmoe_requests_queued", "Requests waiting for a slot.", &[], s.queued as f64);
+        r.gauge("adapmoe_requests_active", "Requests currently decoding.", &[], s.active as f64);
+        r.counter("adapmoe_requests_served_total", "Completions delivered.", &[], s.served as f64);
+        r.counter(
+            "adapmoe_requests_cancelled_total",
+            "Requests cancelled queued or in flight.",
+            &[],
+            s.cancelled as f64,
+        );
+        r.counter(
+            "adapmoe_requests_shed_total",
+            "Requests shed at admission (overload).",
+            &[],
+            s.shed as f64,
+        );
+        r.counter(
+            "adapmoe_tokens_generated_total",
+            "Tokens emitted across all requests.",
+            &[],
+            s.tokens_generated as f64,
+        );
+        r.gauge(
+            "adapmoe_tokens_per_sec",
+            "Engine decode throughput (rows x steps / s).",
+            &[],
+            s.tokens_per_sec,
+        );
+        r.gauge("adapmoe_uptime_seconds", "Service uptime.", &[], s.uptime_s);
+        for (q, v) in
+            [("0.5", s.token_p50_ms), ("0.95", s.token_p95_ms), ("0.99", s.token_p99_ms)]
+        {
+            r.gauge(
+                "adapmoe_token_latency_ms",
+                "Per-decode-step latency quantiles (ms).",
+                &[("quantile", q)],
+                v,
+            );
+        }
+        for (q, v) in [("0.5", s.request_p50_ms), ("0.99", s.request_p99_ms)] {
+            r.gauge(
+                "adapmoe_request_latency_ms",
+                "Completed-request latency quantiles (ms, submit to finish).",
+                &[("quantile", q)],
+                v,
+            );
+        }
+        r.gauge(
+            "adapmoe_queue_wait_ms",
+            "Completed-request queue wait quantiles (ms, submit to start).",
+            &[("quantile", "0.5")],
+            s.queue_p50_ms,
+        );
+        for (q, v) in [
+            ("0.5", s.lane_queue_p50_ms),
+            ("0.95", s.lane_queue_p95_ms),
+            ("0.99", s.lane_queue_p99_ms),
+        ] {
+            r.gauge(
+                "adapmoe_lane_queue_delay_ms",
+                "Arrived-but-unconsumed time quantiles across lanes (ms).",
+                &[("quantile", q)],
+                v,
+            );
+        }
+        for (q, v) in
+            [("0.5", s.fetch_p50_ms), ("0.95", s.fetch_p95_ms), ("0.99", s.fetch_p99_ms)]
+        {
+            r.gauge(
+                "adapmoe_remote_fetch_ms",
+                "Remote store fetch round-trip quantiles (ms).",
+                &[("quantile", q)],
+                v,
+            );
+        }
+
+        // -- lanes -----------------------------------------------------------
+        for l in &s.lanes {
+            let lane = l.lane.to_string();
+            let lbl: &[(&str, &str)] = &[("lane", &lane)];
+            let counters: [(&str, &str, f64); 9] = [
+                (
+                    "adapmoe_lane_transfers_total",
+                    "Transfers completed per lane.",
+                    l.transfers as f64,
+                ),
+                ("adapmoe_lane_bytes_total", "Bytes moved per lane.", l.bytes as f64),
+                ("adapmoe_lane_on_demand_total", "On-demand loads per lane.", l.on_demand as f64),
+                ("adapmoe_lane_prefetch_total", "Prefetch loads per lane.", l.prefetch as f64),
+                ("adapmoe_lane_upgrades_total", "Precision upgrades per lane.", l.upgrades as f64),
+                ("adapmoe_lane_busy_ms_total", "Modeled wire occupancy per lane (ms).", l.busy_ms),
+                ("adapmoe_lane_retries_total", "Fault-pump retries per lane.", l.retries as f64),
+                ("adapmoe_lane_timeouts_total", "Transfer timeouts per lane.", l.timeouts as f64),
+                ("adapmoe_lane_failovers_total", "Jobs moved off the lane.", l.failovers as f64),
+            ];
+            for (name, help, v) in counters {
+                r.counter(name, help, lbl, v);
+            }
+            r.gauge(
+                "adapmoe_lane_queued_bytes",
+                "Bytes waiting in the lane queue.",
+                lbl,
+                l.queued_bytes as f64,
+            );
+            r.gauge(
+                "adapmoe_lane_queued_jobs",
+                "Jobs waiting in the lane queue.",
+                lbl,
+                l.queued_jobs as f64,
+            );
+            r.gauge(
+                "adapmoe_lane_health",
+                "Lane health state (1 = in this state).",
+                &[("lane", &lane), ("state", l.health.name())],
+                1.0,
+            );
+        }
+
+        // -- devices ---------------------------------------------------------
+        for d in &s.devices {
+            let dev = d.device.to_string();
+            let lbl: &[(&str, &str)] = &[("device", &dev)];
+            let counters: [(&str, &str, f64); 3] = [
+                ("adapmoe_device_hits_total", "Cache hits per device shard.", d.hits as f64),
+                ("adapmoe_device_misses_total", "Cache misses per device shard.", d.misses as f64),
+                (
+                    "adapmoe_device_evictions_total",
+                    "Evictions per device shard.",
+                    d.evictions as f64,
+                ),
+            ];
+            for (name, help, v) in counters {
+                r.counter(name, help, lbl, v);
+            }
+            let gauges: [(&str, &str, f64); 5] = [
+                (
+                    "adapmoe_device_resident",
+                    "Experts resident per device shard.",
+                    d.resident as f64,
+                ),
+                (
+                    "adapmoe_device_capacity",
+                    "Expert capacity per device shard.",
+                    d.capacity as f64,
+                ),
+                (
+                    "adapmoe_device_queued_bytes",
+                    "Bytes queued toward the device.",
+                    d.queued_bytes as f64,
+                ),
+                (
+                    "adapmoe_device_resident_bytes",
+                    "Resident bytes per device shard.",
+                    d.resident_bytes as f64,
+                ),
+                (
+                    "adapmoe_device_capacity_bytes",
+                    "Byte capacity per device shard.",
+                    d.capacity_bytes as f64,
+                ),
+            ];
+            for (name, help, v) in gauges {
+                r.gauge(name, help, lbl, v);
+            }
+        }
+
+        // -- tiers -----------------------------------------------------------
+        for t in &s.tiers {
+            let lbl: &[(&str, &str)] = &[("tier", t.kind.name())];
+            let counters: [(&str, &str, f64); 3] = [
+                (
+                    "adapmoe_tier_transfers_total",
+                    "Transfers per precision tier.",
+                    t.transfers as f64,
+                ),
+                ("adapmoe_tier_bytes_total", "Bytes moved per precision tier.", t.bytes as f64),
+                ("adapmoe_tier_upgrades_total", "Upgrades landing per tier.", t.upgrades as f64),
+            ];
+            for (name, help, v) in counters {
+                r.counter(name, help, lbl, v);
+            }
+        }
+
+        // -- source (local vs remote store) ----------------------------------
+        let source: [(&str, &str, f64); 10] = [
+            (
+                "adapmoe_source_local_bytes_total",
+                "Bytes served from the local store.",
+                s.source.local_bytes as f64,
+            ),
+            (
+                "adapmoe_source_remote_bytes_total",
+                "Bytes served via the remote store.",
+                s.source.remote_bytes as f64,
+            ),
+            (
+                "adapmoe_remote_faults_total",
+                "Transfers failed on remote fetch.",
+                s.source.remote_faults as f64,
+            ),
+            (
+                "adapmoe_remote_fetches_total",
+                "Remote store fetch round-trips.",
+                s.source.fetches as f64,
+            ),
+            (
+                "adapmoe_remote_fetched_bytes_total",
+                "Bytes fetched from the remote store.",
+                s.source.fetched_bytes as f64,
+            ),
+            (
+                "adapmoe_remote_batched_fetches_total",
+                "Grouped fetch_many round-trips.",
+                s.source.batched_fetches as f64,
+            ),
+            (
+                "adapmoe_remote_fetch_time_ms_total",
+                "Cumulative remote fetch time (ms).",
+                s.source.fetch_ms,
+            ),
+            ("adapmoe_remote_retries_total", "Remote fetch retries.", s.source.retries as f64),
+            (
+                "adapmoe_remote_checksum_failures_total",
+                "Remote fetch checksum failures.",
+                s.source.checksum_failures as f64,
+            ),
+            (
+                "adapmoe_remote_reconnects_total",
+                "Remote store reconnects.",
+                s.source.reconnects as f64,
+            ),
+        ];
+        for (name, help, v) in source {
+            r.counter(name, help, &[], v);
+        }
+
+        // -- sensitivity map -------------------------------------------------
+        let sens: [(&str, &str, f64); 5] = [
+            (
+                "adapmoe_sensitivity_tier_assigns_total",
+                "Sensitivity-driven tier assignments.",
+                s.sensitivity.tier_assigns as f64,
+            ),
+            (
+                "adapmoe_sensitivity_plans_total",
+                "Sensitivity-driven cache plans.",
+                s.sensitivity.plans as f64,
+            ),
+            (
+                "adapmoe_sensitivity_evictions_total",
+                "Sensitivity-ranked evictions.",
+                s.sensitivity.evictions as f64,
+            ),
+            (
+                "adapmoe_sensitivity_prefetches_total",
+                "Sensitivity-ranked prefetches.",
+                s.sensitivity.prefetches as f64,
+            ),
+            (
+                "adapmoe_sensitivity_upgrades_total",
+                "Sensitivity-ranked upgrades.",
+                s.sensitivity.upgrades as f64,
+            ),
+        ];
+        for (name, help, v) in sens {
+            r.counter(name, help, &[], v);
+        }
+
+        // -- latency histograms ----------------------------------------------
+        r.histogram(
+            "adapmoe_token_latency_seconds",
+            "Per-decode-step latency distribution.",
+            &s.token_hist,
+        );
+        r.histogram(
+            "adapmoe_lane_queue_delay_seconds",
+            "Arrived-but-unconsumed time distribution across lanes.",
+            &s.lane_queue_hist,
+        );
+        r.histogram(
+            "adapmoe_remote_fetch_seconds",
+            "Remote store fetch round-trip distribution.",
+            &s.fetch_hist,
+        );
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_counters_gauges_and_labels() {
+        let mut r = MetricsRegistry::new();
+        r.counter("x_total", "An x.", &[], 3.0);
+        r.counter("y_total", "A y.", &[("lane", "0")], 1.0);
+        r.counter("y_total", "A y.", &[("lane", "1")], 2.0);
+        r.gauge("z", "A z.", &[], 0.5);
+        let text = r.render();
+        assert!(text.contains("# HELP x_total An x.\n"));
+        assert!(text.contains("# TYPE x_total counter\n"));
+        assert!(text.contains("\nx_total 3\n"));
+        assert!(text.contains("y_total{lane=\"0\"} 1\n"));
+        assert!(text.contains("y_total{lane=\"1\"} 2\n"));
+        // one header per family even with many samples
+        assert_eq!(text.matches("# TYPE y_total counter").count(), 1);
+        assert!(text.contains("# TYPE z gauge\n"));
+        assert!(text.contains("\nz 0.5\n"));
+    }
+
+    #[test]
+    fn render_histogram_series() {
+        let h = LogHistogram::new();
+        h.record(0.001);
+        h.record(0.001);
+        h.record(0.5);
+        let mut r = MetricsRegistry::new();
+        r.histogram("lat_seconds", "A latency.", &h);
+        let text = r.render();
+        assert!(text.contains("# TYPE lat_seconds histogram\n"));
+        assert!(text.contains("lat_seconds_bucket{le=\"+Inf\"} 3\n"));
+        assert!(text.contains("lat_seconds_count 3\n"));
+        assert!(text.contains("lat_seconds_sum "));
+        // cumulative: the 1ms bucket line carries count 2
+        assert!(text.contains("} 2\n"), "nonzero cumulative bucket rendered:\n{text}");
+    }
+
+    #[test]
+    fn from_server_stats_covers_every_family() {
+        use crate::memory::quant::QuantKind;
+        use crate::server::api::{DeviceSnapshot, LaneSnapshot, TierSnapshot};
+        let mut s = ServerStats {
+            queued: 1,
+            active: 2,
+            served: 3,
+            cancelled: 1,
+            shed: 1,
+            tokens_generated: 64,
+            tokens_per_sec: 10.0,
+            token_p50_ms: 1.0,
+            token_p95_ms: 2.0,
+            token_p99_ms: 3.0,
+            lanes: vec![LaneSnapshot { lane: 0, transfers: 5, ..Default::default() }],
+            devices: vec![DeviceSnapshot { device: 0, hits: 4, ..Default::default() }],
+            tiers: vec![TierSnapshot {
+                kind: QuantKind::Int4,
+                transfers: 2,
+                bytes: 100,
+                upgrades: 1,
+            }],
+            ..Default::default()
+        };
+        s.source.fetches = 7;
+        s.sensitivity.plans = 2;
+        s.token_hist.record(0.002);
+        s.lane_queue_hist.record(0.0005);
+        let text = MetricsRegistry::from_server_stats(&s).render();
+        for fam in [
+            "adapmoe_requests_queued",
+            "adapmoe_requests_active",
+            "adapmoe_requests_served_total",
+            "adapmoe_requests_cancelled_total",
+            "adapmoe_requests_shed_total",
+            "adapmoe_tokens_generated_total",
+            "adapmoe_tokens_per_sec",
+            "adapmoe_uptime_seconds",
+            "adapmoe_token_latency_ms",
+            "adapmoe_request_latency_ms",
+            "adapmoe_queue_wait_ms",
+            "adapmoe_lane_queue_delay_ms",
+            "adapmoe_remote_fetch_ms",
+            "adapmoe_lane_transfers_total",
+            "adapmoe_lane_health",
+            "adapmoe_device_hits_total",
+            "adapmoe_tier_bytes_total",
+            "adapmoe_source_remote_bytes_total",
+            "adapmoe_remote_fetches_total",
+            "adapmoe_sensitivity_plans_total",
+            "adapmoe_token_latency_seconds",
+            "adapmoe_lane_queue_delay_seconds",
+            "adapmoe_remote_fetch_seconds",
+        ] {
+            assert!(text.contains(&format!("# TYPE {fam} ")), "missing family {fam}:\n{text}");
+        }
+        assert!(text.contains("adapmoe_tier_bytes_total{tier=\"int4\"} 100\n"));
+        assert!(text.contains("adapmoe_lane_health{lane=\"0\",state=\"healthy\"} 1\n"));
+        for q in ["0.5", "0.95", "0.99"] {
+            assert!(text.contains(&format!("adapmoe_token_latency_ms{{quantile=\"{q}\"}}")));
+            assert!(text.contains(&format!("adapmoe_lane_queue_delay_ms{{quantile=\"{q}\"}}")));
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Observability: the flight recorder and the unified metrics registry.
+//!
+//! Two pillars (docs/observability.md):
+//!
+//! * [`recorder`] — a process-global, off-by-default event journal. Hot
+//!   paths call [`instant`]/[`span`] unconditionally; when recording is
+//!   disabled each call is a single relaxed atomic load, so the serving
+//!   path pays nothing and stays bit-for-bit identical to an
+//!   un-instrumented build. Drained events export as Chrome trace-event
+//!   JSON ([`chrome_trace`]) viewable in Perfetto.
+//! * [`metrics`] — [`metrics::MetricsRegistry`] unifies every counter
+//!   family in `ServerStats` plus the log-bucketed latency histograms
+//!   into Prometheus-style text exposition, served as `{"cmd":"metrics"}`
+//!   and dumped by `--metrics-out`.
+
+pub mod metrics;
+pub mod recorder;
+
+pub use recorder::{
+    chrome_trace, disable, drain, dropped, enable, enabled, expert_corr, instant, span,
+    span_ending_now, Event, Name, Track,
+};

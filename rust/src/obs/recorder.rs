@@ -1,0 +1,379 @@
+//! Flight recorder: a lock-light, per-thread ring-buffer event journal.
+//!
+//! Every subsystem on the decode path can emit *instants* (a point event)
+//! or *spans* (an interval) onto the thread-local ring it owns. Recording
+//! is globally gated by one relaxed atomic — when disabled every record
+//! call is a single load-and-return, so a disabled run is bit-for-bit
+//! identical to a build without the recorder. When enabled, events land in
+//! a per-thread `VecDeque` behind a `Mutex` that only the owning thread
+//! and `drain()` ever touch, so there is no cross-thread contention on the
+//! hot path. Rings are bounded: overflow drops the oldest event and bumps
+//! a global drop counter rather than blocking or reallocating without
+//! bound.
+//!
+//! `drain()` collects and clears every ring (typically after
+//! `TransferEngine::quiesce`), and [`chrome_trace`] renders the result as
+//! Chrome trace-event JSON loadable in Perfetto: each [`Track`] becomes a
+//! named *process* and each OS thread a row inside it, so spans emitted by
+//! one thread always nest cleanly even when many threads share a track.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+fn lock_unpoisoned<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Per-thread ring capacity (events). Overflow drops the oldest event and
+/// increments [`dropped`].
+const RING_CAP: usize = 1 << 16;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static NEXT_THREAD: AtomicU64 = AtomicU64::new(1);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static REGISTRY: Mutex<Vec<Arc<Mutex<VecDeque<Event>>>>> = Mutex::new(Vec::new());
+
+thread_local! {
+    static HANDLE: RefCell<Option<ThreadRing>> = const { RefCell::new(None) };
+}
+
+struct ThreadRing {
+    thread: u64,
+    ring: Arc<Mutex<VecDeque<Event>>>,
+}
+
+/// Which timeline row family an event belongs to. Tracks render as named
+/// Perfetto processes (see [`chrome_trace`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Track {
+    /// The decode loop itself (phases, gating, steps, upgrades).
+    Decode,
+    /// Serving-layer events.
+    Server,
+    /// Remote expert-store fetches.
+    Remote,
+    /// One comm lane (index = lane id).
+    Lane(usize),
+    /// One device shard (index = device id).
+    Device(usize),
+    /// One precision tier (index = `QuantKind::tier_index`).
+    Tier(usize),
+}
+
+impl Track {
+    /// Stable numeric id for trace export (used as the Chrome `pid`).
+    pub fn tid(self) -> u64 {
+        match self {
+            Track::Decode => 0,
+            Track::Server => 1,
+            Track::Remote => 2,
+            Track::Lane(i) => 10 + i as u64,
+            Track::Device(d) => 100 + d as u64,
+            Track::Tier(t) => 200 + t as u64,
+        }
+    }
+}
+
+/// Event taxonomy. The transfer lifecycle is
+/// `Enqueue → Admit → Wire → Complete` with `Retry`/`Failover`/`Fault`
+/// branching off the fault pump; see docs/observability.md.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Name {
+    /// A decode-step phase span (reuses [`crate::coordinator::trace::Phase`]).
+    Phase(crate::coordinator::trace::Phase),
+    /// Transfer request entered a lane queue.
+    Enqueue,
+    /// Lane admitted the job (dequeued for service).
+    Admit,
+    /// Wire time for one tile (modeled link occupancy).
+    Wire,
+    /// Transfer finished and its results were published.
+    Complete,
+    /// Fault pump reissued a job on the same lane.
+    Retry,
+    /// Fault pump moved a job to a healthy lane.
+    Failover,
+    /// Transfer failed permanently (or an expert was dropped from a plan).
+    Fault,
+    /// Expert inserted into a device cache.
+    CacheInsert,
+    /// Expert evicted from a device cache.
+    CacheEvict,
+    /// Served from a resident copy below the preferred tier.
+    CacheDegrade,
+    /// Adaptive gating decision for one layer (arg = experts needed).
+    GateDecision,
+    /// Precision upgrade issued or completed.
+    Upgrade,
+    /// One remote store fetch round-trip.
+    RemoteFetch,
+    /// One whole decode step.
+    DecodeStep,
+}
+
+impl Name {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Name::Phase(p) => crate::coordinator::trace::Phase::NAMES[p as usize],
+            Name::Enqueue => "enqueue",
+            Name::Admit => "admit",
+            Name::Wire => "wire",
+            Name::Complete => "complete",
+            Name::Retry => "retry",
+            Name::Failover => "failover",
+            Name::Fault => "fault",
+            Name::CacheInsert => "cache_insert",
+            Name::CacheEvict => "cache_evict",
+            Name::CacheDegrade => "cache_degrade",
+            Name::GateDecision => "gate_decision",
+            Name::Upgrade => "upgrade",
+            Name::RemoteFetch => "remote_fetch",
+            Name::DecodeStep => "decode_step",
+        }
+    }
+}
+
+/// One recorded event. `dur_ns == 0` marks an instant; anything else is a
+/// span that *ended* at `ts_ns + dur_ns`. `id` correlates related events
+/// (e.g. all lifecycle events of one expert transfer, see
+/// [`expert_corr`]); `arg` is a free payload (bytes, counts).
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+    pub track: Track,
+    pub name: Name,
+    pub id: u64,
+    pub arg: u64,
+    pub thread: u64,
+}
+
+/// Correlation id for an expert's transfer lifecycle.
+pub fn expert_corr(id: (usize, usize)) -> u64 {
+    ((id.0 as u64) << 32) | id.1 as u64
+}
+
+/// Whether recording is currently on.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn recording on (idempotent). Pins the monotonic epoch on first call.
+pub fn enable() {
+    EPOCH.get_or_init(Instant::now);
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn recording off. Already-buffered events stay until [`drain`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Events dropped to ring overflow since process start.
+pub fn dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+fn push(ev: Event) {
+    HANDLE.with(|h| {
+        let mut slot = h.borrow_mut();
+        let tr = slot.get_or_insert_with(|| {
+            let ring = Arc::new(Mutex::new(VecDeque::new()));
+            lock_unpoisoned(&REGISTRY).push(Arc::clone(&ring));
+            ThreadRing { thread: NEXT_THREAD.fetch_add(1, Ordering::Relaxed), ring }
+        });
+        let mut ring = lock_unpoisoned(&tr.ring);
+        if ring.len() >= RING_CAP {
+            ring.pop_front();
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(Event { thread: tr.thread, ..ev });
+    });
+}
+
+/// Record a point event. No-op (one relaxed load) when disabled.
+pub fn instant(track: Track, name: Name, id: u64, arg: u64) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    push(Event { ts_ns: now_ns(), dur_ns: 0, track, name, id, arg, thread: 0 });
+}
+
+/// Record a span that started at `start` and ends now.
+pub fn span(track: Track, name: Name, id: u64, start: Instant) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let dur_ns = start.elapsed().as_nanos() as u64;
+    let ts_ns = now_ns().saturating_sub(dur_ns);
+    push(Event { ts_ns, dur_ns: dur_ns.max(1), track, name, id, arg: 0, thread: 0 });
+}
+
+/// Record a span of known duration that ends now (for callers that already
+/// measured elapsed time, e.g. `TraceCollector::record_phase`).
+pub fn span_ending_now(track: Track, name: Name, dur_ns: u64) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let ts_ns = now_ns().saturating_sub(dur_ns);
+    push(Event { ts_ns, dur_ns: dur_ns.max(1), track, name, id: 0, arg: 0, thread: 0 });
+}
+
+/// Collect and clear every thread's ring, sorted by start time. Call after
+/// quiesce so in-flight emitters have gone idle.
+pub fn drain() -> Vec<Event> {
+    let rings = lock_unpoisoned(&REGISTRY);
+    let mut out = Vec::new();
+    for ring in rings.iter() {
+        out.extend(lock_unpoisoned(ring).drain(..));
+    }
+    drop(rings);
+    out.sort_by_key(|e| (e.ts_ns, e.track.tid(), e.thread));
+    out
+}
+
+/// Render drained events as Chrome trace-event JSON (Perfetto-loadable).
+///
+/// Tracks map to *processes* (`pid = Track::tid()`) with `process_name`
+/// metadata, and each recording OS thread to a `tid` inside the track —
+/// so one thread's spans always nest within a row, regardless of how many
+/// threads share a track. `n_lanes`/`n_devices` force metadata rows for
+/// every configured lane/device even if it recorded nothing.
+pub fn chrome_trace(events: &[Event], n_lanes: usize, n_devices: usize) -> Json {
+    const TIER_NAMES: [&str; 4] = ["int2", "int4", "int8", "f32"];
+    let mut out = Vec::new();
+    let meta = |pid: u64, name: String| {
+        Json::obj(vec![
+            ("ph", Json::Str("M".into())),
+            ("name", Json::Str("process_name".into())),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(0.0)),
+            ("args", Json::obj(vec![("name", Json::Str(name))])),
+        ])
+    };
+    out.push(meta(Track::Decode.tid(), "decode".into()));
+    out.push(meta(Track::Server.tid(), "server".into()));
+    out.push(meta(Track::Remote.tid(), "remote".into()));
+    for i in 0..n_lanes {
+        out.push(meta(Track::Lane(i).tid(), format!("lane {i}")));
+    }
+    for d in 0..n_devices {
+        out.push(meta(Track::Device(d).tid(), format!("device {d}")));
+    }
+    let mut tiers_seen = [false; TIER_NAMES.len()];
+    for ev in events {
+        if let Track::Tier(t) = ev.track {
+            if t < tiers_seen.len() && !tiers_seen[t] {
+                tiers_seen[t] = true;
+                out.push(meta(Track::Tier(t).tid(), format!("tier {}", TIER_NAMES[t])));
+            }
+        }
+    }
+    for ev in events {
+        let args = Json::obj(vec![
+            ("id", Json::Num(ev.id as f64)),
+            ("arg", Json::Num(ev.arg as f64)),
+        ]);
+        let mut fields = vec![
+            ("name", Json::Str(ev.name.as_str().into())),
+            ("cat", Json::Str("obs".into())),
+            ("pid", Json::Num(ev.track.tid() as f64)),
+            ("tid", Json::Num(ev.thread as f64)),
+            ("ts", Json::Num(ev.ts_ns as f64 / 1e3)),
+            ("args", args),
+        ];
+        if ev.dur_ns == 0 {
+            fields.push(("ph", Json::Str("i".into())));
+            fields.push(("s", Json::Str("t".into())));
+        } else {
+            fields.push(("ph", Json::Str("X".into())));
+            fields.push(("dur", Json::Num(ev.dur_ns as f64 / 1e3)));
+        }
+        out.push(Json::obj(fields));
+    }
+    Json::obj(vec![("traceEvents", Json::Arr(out))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The recorder is process-global and other unit tests may run
+    // concurrently (instrumented code records whenever the gate is open),
+    // so assert on marker ids rather than exact event counts.
+    #[test]
+    fn disabled_is_silent_and_enabled_records() {
+        const MARK: u64 = 0x0b5_0b5_0b5;
+        instant(Track::Decode, Name::GateDecision, MARK, 2);
+        assert!(
+            !drain().iter().any(|e| e.id == MARK),
+            "disabled recorder must buffer nothing"
+        );
+
+        enable();
+        instant(Track::Lane(1), Name::Enqueue, MARK, 128);
+        let t0 = Instant::now();
+        span(Track::Lane(1), Name::Wire, MARK, t0);
+        span_ending_now(Track::Decode, Name::DecodeStep, 1_000);
+        disable();
+        instant(Track::Decode, Name::GateDecision, MARK + 1, 0);
+
+        let evs = drain();
+        assert!(
+            !evs.iter().any(|e| e.id == MARK + 1),
+            "post-disable instants must not record"
+        );
+        assert!(evs.iter().any(|e| e.name == Name::Enqueue
+            && e.track == Track::Lane(1)
+            && e.id == MARK
+            && e.arg == 128
+            && e.dur_ns == 0));
+        assert!(evs
+            .iter()
+            .any(|e| e.name == Name::Wire && e.id == MARK && e.dur_ns >= 1));
+        assert!(evs
+            .iter()
+            .any(|e| e.name == Name::DecodeStep && e.dur_ns == 1_000));
+        assert!(
+            !drain().iter().any(|e| e.id == MARK),
+            "drain clears the rings"
+        );
+
+        let mine: Vec<Event> = evs
+            .iter()
+            .copied()
+            .filter(|e| e.id == MARK || e.name == Name::DecodeStep)
+            .collect();
+        let json = chrome_trace(&mine, 2, 1).to_string();
+        let parsed = Json::parse(&json).expect("chrome trace parses");
+        let tev = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // At least 3 fixed + 2 lane + 1 device metadata rows + 3 events.
+        assert!(tev.len() >= 9);
+        assert!(json.contains("\"lane 1\""));
+        assert!(json.contains("\"device 0\""));
+        assert!(json.contains("process_name"));
+    }
+
+    #[test]
+    fn corr_and_ids_are_stable() {
+        assert_eq!(expert_corr((1, 2)), (1u64 << 32) | 2);
+        assert_eq!(Track::Lane(3).tid(), 13);
+        assert_eq!(Track::Device(2).tid(), 102);
+        assert_eq!(Track::Tier(1).tid(), 201);
+        assert_eq!(Name::Complete.as_str(), "complete");
+        assert_eq!(
+            Name::Phase(crate::coordinator::trace::Phase::Attn).as_str(),
+            "attn"
+        );
+    }
+}

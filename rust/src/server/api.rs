@@ -14,6 +14,7 @@ pub use crate::memory::sharded_cache::DeviceSnapshot;
 pub use crate::memory::transfer::{LaneSnapshot, SensitivitySnapshot, SourceSnapshot, TierSnapshot};
 use crate::model::tokenizer::ByteTokenizer;
 use crate::util::json::Json;
+use crate::util::stats::LogHistogram;
 
 /// A fully-parameterized generation request.
 #[derive(Clone, Debug)]
@@ -227,13 +228,29 @@ pub struct ServerStats {
     pub tokens_per_sec: f64,
     /// Engine per-step latency percentiles (ms).
     pub token_p50_ms: f64,
+    pub token_p95_ms: f64,
     pub token_p99_ms: f64,
     /// Completed-request latency percentiles (ms, submit→finish).
     pub request_p50_ms: f64,
     pub request_p99_ms: f64,
     /// Completed-request queue wait p50 (ms, submit→start).
     pub queue_p50_ms: f64,
+    /// Per-arrival lane queue-delay percentiles (ms), from the
+    /// log-bucketed histogram below.
+    pub lane_queue_p50_ms: f64,
+    pub lane_queue_p95_ms: f64,
+    pub lane_queue_p99_ms: f64,
+    /// Remote fetch round-trip percentiles (ms); zeros for local stores.
+    pub fetch_p50_ms: f64,
+    pub fetch_p95_ms: f64,
+    pub fetch_p99_ms: f64,
     pub uptime_s: f64,
+    /// Log-bucketed latency distributions behind the percentile fields
+    /// (docs/observability.md): per-decode-step latency, per-arrival lane
+    /// queue delay, and remote fetch round-trips.
+    pub token_hist: LogHistogram,
+    pub lane_queue_hist: LogHistogram,
+    pub fetch_hist: LogHistogram,
     /// Per-comm-lane transfer counters (one entry per lane, in lane
     /// order); empty when the backend has no transfer engine (mock).
     pub lanes: Vec<LaneSnapshot>,
@@ -317,11 +334,21 @@ impl ServerStats {
             ("tokens_generated", Json::Num(self.tokens_generated as f64)),
             ("tokens_per_sec", Json::Num(self.tokens_per_sec)),
             ("token_p50_ms", Json::Num(self.token_p50_ms)),
+            ("token_p95_ms", Json::Num(self.token_p95_ms)),
             ("token_p99_ms", Json::Num(self.token_p99_ms)),
             ("request_p50_ms", Json::Num(self.request_p50_ms)),
             ("request_p99_ms", Json::Num(self.request_p99_ms)),
             ("queue_p50_ms", Json::Num(self.queue_p50_ms)),
+            ("lane_queue_p50_ms", Json::Num(self.lane_queue_p50_ms)),
+            ("lane_queue_p95_ms", Json::Num(self.lane_queue_p95_ms)),
+            ("lane_queue_p99_ms", Json::Num(self.lane_queue_p99_ms)),
+            ("fetch_p50_ms", Json::Num(self.fetch_p50_ms)),
+            ("fetch_p95_ms", Json::Num(self.fetch_p95_ms)),
+            ("fetch_p99_ms", Json::Num(self.fetch_p99_ms)),
             ("uptime_s", Json::Num(self.uptime_s)),
+            ("token_hist", self.token_hist.to_json()),
+            ("lane_queue_hist", self.lane_queue_hist.to_json()),
+            ("fetch_hist", self.fetch_hist.to_json()),
             ("lanes", lanes),
             ("devices", devices),
             ("tiers", tiers),
@@ -606,6 +633,36 @@ mod tests {
         let d = ServerStats::default().to_json();
         let dj = d.get("sensitivity").expect("sensitivity object");
         assert_eq!(dj.get("tier_assigns").and_then(|v| v.as_usize()), Some(0));
+    }
+
+    #[test]
+    fn stats_serialize_histograms_and_quantiles() {
+        let mut s = ServerStats { token_p95_ms: 2.5, ..Default::default() };
+        s.token_hist.record(0.002);
+        s.lane_queue_hist.record(0.0005);
+        let j = s.to_json();
+        assert_eq!(j.get("token_p95_ms").and_then(|v| v.as_f64()), Some(2.5));
+        for k in [
+            "lane_queue_p50_ms",
+            "lane_queue_p95_ms",
+            "lane_queue_p99_ms",
+            "fetch_p50_ms",
+            "fetch_p95_ms",
+            "fetch_p99_ms",
+        ] {
+            assert!(j.get(k).is_some(), "missing {k}");
+        }
+        // histograms round-trip through the wire form
+        let th = j.get("token_hist").expect("token_hist");
+        let back = LogHistogram::from_json(th);
+        assert_eq!(back.count(), 1);
+        assert!((back.quantile(0.5) - s.token_hist.quantile(0.5)).abs() < 1e-12);
+        let lq = j.get("lane_queue_hist").expect("lane_queue_hist");
+        assert_eq!(LogHistogram::from_json(lq).count(), 1);
+        assert_eq!(
+            j.get("fetch_hist").and_then(|h| h.get("count")).and_then(|v| v.as_usize()),
+            Some(0)
+        );
     }
 
     #[test]

@@ -48,6 +48,12 @@ pub struct PerfSnapshot {
     pub tokens_per_sec: f64,
     pub token_p50_ms: f64,
     pub token_p99_ms: f64,
+    /// Log-bucketed latency distributions (docs/observability.md):
+    /// per-decode-step latency, per-arrival lane queue delay, and remote
+    /// fetch round-trips (empty for backends without them).
+    pub token_hist: crate::util::stats::LogHistogram,
+    pub lane_queue_hist: crate::util::stats::LogHistogram,
+    pub fetch_hist: crate::util::stats::LogHistogram,
     /// Per-comm-lane transfer counters (empty for backends without a
     /// transfer engine, e.g. the mock).
     pub lanes: Vec<crate::memory::transfer::LaneSnapshot>,
@@ -103,6 +109,13 @@ impl Backend for Engine {
             tokens_per_sec: self.trace.tokens_per_sec(),
             token_p50_ms: self.trace.token_latency.p50() * 1e3,
             token_p99_ms: self.trace.token_latency.p99() * 1e3,
+            token_hist: self.trace.token_hist.clone(),
+            lane_queue_hist: self.trace.lane_queue_hist.clone(),
+            fetch_hist: self
+                .tiered
+                .remote_counters()
+                .map(|c| c.fetch_hist.clone())
+                .unwrap_or_default(),
             lanes: self.xfer.lane_snapshots(),
             devices: self.xfer.device_snapshots(),
             tiers: self.xfer.tier_snapshots(),
@@ -377,23 +390,50 @@ impl ServiceHandle {
             cancelled: g.cancelled,
             shed: g.shed,
             tokens_generated: g.tokens_out,
-            tokens_per_sec: g.perf.tokens_per_sec,
-            token_p50_ms: g.perf.token_p50_ms,
-            token_p99_ms: g.perf.token_p99_ms,
             request_p50_ms: g.total_ms.p50(),
             request_p99_ms: g.total_ms.p99(),
             queue_p50_ms: g.queue_wait_ms.p50(),
             uptime_s: g.started_at.elapsed().as_secs_f64(),
-            lanes: g.perf.lanes.clone(),
-            devices: g.perf.devices.clone(),
-            tiers: g.perf.tiers.clone(),
-            source: g.perf.source,
-            sensitivity: g.perf.sensitivity,
+            ..stats_from_perf(&g.perf)
         }
+    }
+
+    /// Prometheus-style text exposition of every counter family in
+    /// [`ServerStats`], including the log-bucketed latency histograms.
+    pub fn metrics(&self) -> String {
+        crate::obs::metrics::MetricsRegistry::from_server_stats(&self.stats()).render()
     }
 
     pub fn served(&self) -> u64 {
         self.lock().served
+    }
+}
+
+/// Engine-only stats snapshot: every perf-derived field of [`ServerStats`]
+/// (throughput, latency quantiles, counter families, histograms) with the
+/// serving-layer request counters left at zero. Used by `ServiceHandle::stats`
+/// and by CLI `--metrics-out` dumps where no service loop is running.
+pub fn stats_from_perf(perf: &PerfSnapshot) -> ServerStats {
+    ServerStats {
+        tokens_per_sec: perf.tokens_per_sec,
+        token_p50_ms: perf.token_p50_ms,
+        token_p95_ms: perf.token_hist.quantile(0.95) * 1e3,
+        token_p99_ms: perf.token_p99_ms,
+        lane_queue_p50_ms: perf.lane_queue_hist.quantile(0.50) * 1e3,
+        lane_queue_p95_ms: perf.lane_queue_hist.quantile(0.95) * 1e3,
+        lane_queue_p99_ms: perf.lane_queue_hist.quantile(0.99) * 1e3,
+        fetch_p50_ms: perf.fetch_hist.quantile(0.50) * 1e3,
+        fetch_p95_ms: perf.fetch_hist.quantile(0.95) * 1e3,
+        fetch_p99_ms: perf.fetch_hist.quantile(0.99) * 1e3,
+        lanes: perf.lanes.clone(),
+        devices: perf.devices.clone(),
+        tiers: perf.tiers.clone(),
+        source: perf.source,
+        sensitivity: perf.sensitivity,
+        token_hist: perf.token_hist.clone(),
+        lane_queue_hist: perf.lane_queue_hist.clone(),
+        fetch_hist: perf.fetch_hist.clone(),
+        ..ServerStats::default()
     }
 }
 

@@ -29,6 +29,12 @@
 //!       "lanes": [..per comm lane, incl. health/retries/timeouts/
 //!       failovers..], "devices": [..per cache shard..]}
 //!
+//!   -> {"cmd": "metrics"}
+//!   <- {"exposition": "# HELP adapmoe_requests_queued ...\n..."}
+//!      (Prometheus-style text exposition of every ServerStats counter
+//!       family plus the log-bucketed latency histograms; see
+//!       docs/observability.md)
+//!
 //!   -> {"cmd": "ping"}
 //!   <- {"pong": true}
 //!
@@ -192,6 +198,7 @@ fn handle_line(
     }
     let reply = match req.get("cmd").and_then(|c| c.as_str()) {
         Some("stats") => handle.stats().to_json(),
+        Some("metrics") => Json::obj(vec![("exposition", Json::Str(handle.metrics()))]),
         Some("cancel") => {
             let id = req
                 .get("id")
@@ -362,6 +369,15 @@ pub fn client_stats(addr: &str) -> Result<Json> {
     client_cmd(addr, Json::obj(vec![("cmd", Json::Str("stats".into()))]))
 }
 
+/// Fetch the server's Prometheus-style metrics exposition text.
+pub fn client_metrics(addr: &str) -> Result<String> {
+    let j = client_cmd(addr, Json::obj(vec![("cmd", Json::Str("metrics".into()))]))?;
+    j.get("exposition")
+        .and_then(|e| e.as_str())
+        .map(str::to_string)
+        .context("metrics reply missing 'exposition'")
+}
+
 fn client_cmd(addr: &str, cmd: Json) -> Result<Json> {
     let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
     writeln!(stream, "{}", cmd.to_string())?;
@@ -399,6 +415,14 @@ mod tests {
         let stats = Json::parse(std::str::from_utf8(&out).unwrap().trim()).unwrap();
         assert_eq!(stats.get("served").and_then(|v| v.as_usize()), Some(0));
         assert!(stats.get("uptime_s").is_some());
+
+        // metrics answers a text exposition wrapped in one JSON line
+        let mut out = Vec::new();
+        handle_line("{\"cmd\":\"metrics\"}", &handle, &mut out, &probe).unwrap();
+        let j = Json::parse(std::str::from_utf8(&out).unwrap().trim()).unwrap();
+        let text = j.get("exposition").and_then(|e| e.as_str()).unwrap();
+        assert!(text.contains("# TYPE adapmoe_requests_served_total counter"));
+        assert!(text.contains("adapmoe_uptime_seconds"));
 
         // cancel with an unknown id answers false rather than erroring
         let mut out = Vec::new();

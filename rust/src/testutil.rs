@@ -79,6 +79,15 @@ impl Backend for MockBackend {
     }
 
     fn perf(&self) -> PerfSnapshot {
+        // Nonzero histograms so protocol tests can assert the histogram and
+        // quantile fields survive the stats/metrics round trip.
+        let token_hist = crate::util::stats::LogHistogram::default();
+        token_hist.record(0.00001);
+        token_hist.record(0.0001);
+        token_hist.record(0.001);
+        let lane_queue_hist = crate::util::stats::LogHistogram::default();
+        lane_queue_hist.record(0.0002);
+        lane_queue_hist.record(0.002);
         PerfSnapshot {
             tokens_per_sec: self.steps as f64,
             token_p50_ms: 0.01,
@@ -92,6 +101,8 @@ impl Backend for MockBackend {
                 prefetches: 2,
                 upgrades: 1,
             },
+            token_hist,
+            lane_queue_hist,
             ..PerfSnapshot::default()
         }
     }

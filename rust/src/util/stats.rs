@@ -170,6 +170,190 @@ impl Histogram {
     }
 }
 
+/// Log-bucketed latency histogram with interior-mutable (atomic) counters,
+/// so hot paths can record through a shared reference without a lock.
+///
+/// Geometric buckets, 4 per octave (ratio 2^(1/4) ≈ 1.19): bucket `i`
+/// covers `(bound(i-1), bound(i)]` seconds with `bound(i) = 1µs · 2^(i/4)`.
+/// 96 buckets span 1µs .. ~14s; values outside clamp to the end buckets.
+/// Quantiles return the upper bound of the covering bucket, so the
+/// relative error is at most the bucket ratio (~19%). Merging adds
+/// counts bucket-wise and is exact (and associative) on integers.
+pub struct LogHistogram {
+    counts: Vec<std::sync::atomic::AtomicU64>,
+    count: std::sync::atomic::AtomicU64,
+    sum_ns: std::sync::atomic::AtomicU64,
+}
+
+impl LogHistogram {
+    pub const BUCKETS: usize = 96;
+    const BASE: f64 = 1e-6; // bucket 0 upper bound, seconds
+
+    pub fn new() -> Self {
+        LogHistogram {
+            counts: (0..Self::BUCKETS).map(|_| std::sync::atomic::AtomicU64::new(0)).collect(),
+            count: std::sync::atomic::AtomicU64::new(0),
+            sum_ns: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Upper bound of bucket `i` in seconds.
+    pub fn bucket_bound(i: usize) -> f64 {
+        Self::BASE * 2f64.powf(i as f64 / 4.0)
+    }
+
+    fn bucket_of(seconds: f64) -> usize {
+        if !seconds.is_finite() || seconds <= Self::BASE {
+            return 0;
+        }
+        let idx = (4.0 * (seconds / Self::BASE).log2()).ceil() as i64;
+        idx.clamp(0, Self::BUCKETS as i64 - 1) as usize
+    }
+
+    /// Record one sample (seconds). Lock-free; relaxed ordering is fine
+    /// because readers only ever see a point-in-time snapshot.
+    pub fn record(&self, seconds: f64) {
+        use std::sync::atomic::Ordering::Relaxed;
+        let s = if seconds.is_finite() { seconds.max(0.0) } else { 0.0 };
+        self.counts[Self::bucket_of(s)].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        self.sum_ns.fetch_add((s * 1e9) as u64, Relaxed);
+    }
+
+    /// Add `other`'s counts into `self` (bucket-wise integer addition —
+    /// exact and associative).
+    pub fn merge(&self, other: &LogHistogram) {
+        use std::sync::atomic::Ordering::Relaxed;
+        for (a, b) in self.counts.iter().zip(&other.counts) {
+            a.fetch_add(b.load(Relaxed), Relaxed);
+        }
+        self.count.fetch_add(other.count.load(Relaxed), Relaxed);
+        self.sum_ns.fetch_add(other.sum_ns.load(Relaxed), Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    pub fn sum_seconds(&self) -> f64 {
+        self.sum_ns.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Cumulative bucket counts as (upper-bound seconds, count ≤ bound)
+    /// pairs for nonzero buckets — the Prometheus `_bucket{le=...}` series.
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        use std::sync::atomic::Ordering::Relaxed;
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            let n = c.load(Relaxed);
+            if n > 0 {
+                cum += n;
+                out.push((Self::bucket_bound(i), cum));
+            }
+        }
+        out
+    }
+
+    /// Quantile estimate, p in [0,1]: upper bound of the bucket holding
+    /// the ⌈p·n⌉-th smallest sample (0.0 when empty). Overestimates the
+    /// true quantile by at most one bucket ratio (2^(1/4)) for in-range
+    /// samples.
+    pub fn quantile(&self, p: f64) -> f64 {
+        use std::sync::atomic::Ordering::Relaxed;
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = ((p.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c.load(Relaxed);
+            if cum >= target {
+                return Self::bucket_bound(i);
+            }
+        }
+        Self::bucket_bound(Self::BUCKETS - 1)
+    }
+
+    /// Wire form: `{"buckets":[[index,count],...],"count":N,"sum_ns":N}`
+    /// with only nonzero buckets listed.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        use std::sync::atomic::Ordering::Relaxed;
+        let buckets = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.load(Relaxed) > 0)
+            .map(|(i, c)| {
+                Json::Arr(vec![Json::Num(i as f64), Json::Num(c.load(Relaxed) as f64)])
+            })
+            .collect();
+        Json::obj(vec![
+            ("buckets", Json::Arr(buckets)),
+            ("count", Json::Num(self.count() as f64)),
+            ("sum_ns", Json::Num(self.sum_ns.load(Relaxed) as f64)),
+        ])
+    }
+
+    /// Parse the wire form; out-of-range bucket indices are clamped into
+    /// the last bucket so a newer peer can't crash an older one.
+    pub fn from_json(j: &crate::util::json::Json) -> LogHistogram {
+        use std::sync::atomic::Ordering::Relaxed;
+        let h = LogHistogram::new();
+        if let Some(buckets) = j.get("buckets").and_then(|b| b.as_arr()) {
+            for pair in buckets {
+                if let Some(p) = pair.as_arr() {
+                    if p.len() == 2 {
+                        let i = (p[0].as_f64().unwrap_or(0.0) as usize).min(Self::BUCKETS - 1);
+                        let n = p[1].as_f64().unwrap_or(0.0) as u64;
+                        h.counts[i].fetch_add(n, Relaxed);
+                    }
+                }
+            }
+        }
+        if let Some(n) = j.get("count").and_then(|v| v.as_f64()) {
+            h.count.store(n as u64, Relaxed);
+        }
+        if let Some(n) = j.get("sum_ns").and_then(|v| v.as_f64()) {
+            h.sum_ns.store(n as u64, Relaxed);
+        }
+        h
+    }
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram::new()
+    }
+}
+
+impl Clone for LogHistogram {
+    fn clone(&self) -> Self {
+        let h = LogHistogram::new();
+        h.merge(self);
+        h
+    }
+}
+
+impl std::fmt::Debug for LogHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "LogHistogram {{ count: {}, sum_s: {:.6}, p50: {:.6}, p99: {:.6} }}",
+            self.count(),
+            self.sum_seconds(),
+            self.quantile(0.5),
+            self.quantile(0.99)
+        )
+    }
+}
+
 /// Cosine similarity between two equal-length vectors.
 pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
     assert_eq!(a.len(), b.len());
@@ -244,5 +428,117 @@ mod tests {
         assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-9);
         assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-9);
         assert!((cosine(&[1.0, 1.0], &[-1.0, -1.0]) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log_histogram_basics() {
+        let h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0.0); // empty is safe
+        h.record(0.001); // 1ms
+        h.record(0.001);
+        h.record(0.1); // 100ms
+        assert_eq!(h.count(), 3);
+        assert!((h.sum_seconds() - 0.102).abs() < 1e-6);
+        // p50 bucket covers 1ms: bound within one ratio above
+        let p50 = h.quantile(0.5);
+        assert!(p50 >= 0.001 && p50 <= 0.001 * 2f64.powf(0.25) * 1.0001, "p50={p50}");
+        // p99 lands in the 100ms bucket
+        let p99 = h.quantile(0.99);
+        assert!(p99 >= 0.1 && p99 <= 0.1 * 2f64.powf(0.25) * 1.0001, "p99={p99}");
+        // sub-microsecond and degenerate samples clamp to bucket 0
+        h.record(1e-9);
+        h.record(-1.0);
+        h.record(f64::NAN);
+        assert_eq!(h.count(), 6);
+        assert!((h.quantile(0.0) - LogHistogram::bucket_bound(0)).abs() < 1e-12);
+        // cumulative series is monotone and ends at the total count
+        let cum = h.cumulative();
+        assert!(cum.windows(2).all(|w| w[0].1 <= w[1].1 && w[0].0 < w[1].0));
+        assert_eq!(cum.last().unwrap().1, 6);
+    }
+
+    #[test]
+    fn log_histogram_json_roundtrip() {
+        let h = LogHistogram::new();
+        for v in [2e-6, 5e-4, 0.02, 3.0, 100.0] {
+            h.record(v);
+        }
+        let j = h.to_json();
+        let back = LogHistogram::from_json(&j);
+        assert_eq!(back.count(), h.count());
+        assert!((back.sum_seconds() - h.sum_seconds()).abs() < 1e-9);
+        assert_eq!(back.to_json().to_string(), j.to_string());
+        // an empty histogram round-trips too
+        let e = LogHistogram::from_json(&LogHistogram::new().to_json());
+        assert!(e.is_empty());
+    }
+
+    #[test]
+    fn log_histogram_merge_is_associative() {
+        use crate::util::prop;
+        prop::check("log-hist-merge-assoc", 50, |rng| {
+            let hists: Vec<LogHistogram> = (0..3)
+                .map(|_| {
+                    let h = LogHistogram::new();
+                    let n = 1 + (rng.next_u64() % 40) as usize;
+                    for _ in 0..n {
+                        // span the full range, 1µs .. ~10s, log-uniform
+                        h.record(1e-6 * 2f64.powf(rng.f64() * 23.0));
+                    }
+                    h
+                })
+                .collect();
+            // (a ⊕ b) ⊕ c
+            let left = hists[0].clone();
+            left.merge(&hists[1]);
+            left.merge(&hists[2]);
+            // a ⊕ (b ⊕ c)
+            let bc = hists[1].clone();
+            bc.merge(&hists[2]);
+            let right = hists[0].clone();
+            right.merge(&bc);
+            crate::prop_assert!(
+                left.to_json().to_string() == right.to_json().to_string(),
+                "merge not associative: {left:?} vs {right:?}"
+            );
+            crate::prop_assert!(
+                left.count() == hists.iter().map(|h| h.count()).sum::<u64>(),
+                "merged count mismatch"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn log_histogram_quantile_brackets_true_quantile() {
+        use crate::util::prop;
+        let ratio = 2f64.powf(0.25);
+        prop::check("log-hist-quantile-bound", 50, |rng| {
+            let h = LogHistogram::new();
+            let n = 1 + (rng.next_u64() % 200) as usize;
+            let mut vals: Vec<f64> = (0..n)
+                // strictly inside the histogram range: (1µs, ~0.5s)
+                .map(|_| 1e-6 * 2f64.powf(0.1 + rng.f64() * 18.0))
+                .collect();
+            for &v in &vals {
+                h.record(v);
+            }
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for &p in &[0.5, 0.95, 0.99] {
+                let rank = ((p * n as f64).ceil() as usize).max(1);
+                let true_q = vals[rank - 1];
+                let est = h.quantile(p);
+                crate::prop_assert!(
+                    est >= true_q * (1.0 - 1e-9),
+                    "p{p}: estimate {est} below true quantile {true_q}"
+                );
+                crate::prop_assert!(
+                    est <= true_q * ratio * (1.0 + 1e-9),
+                    "p{p}: estimate {est} above true quantile {true_q} by more than one bucket"
+                );
+            }
+            Ok(())
+        });
     }
 }

@@ -1,0 +1,321 @@
+//! Observability acceptance tests (artifact-free: synthetic weights,
+//! host-math executor). Locks down what `docs/observability.md` promises:
+//!
+//! 1. **Zero-cost when off** — a 4-lane/2-device out-of-order drain with
+//!    the recorder disabled produces bit-identical output to the same
+//!    drain with it enabled (and to a disabled re-run): recording never
+//!    perturbs logits, only observes them.
+//! 2. **Conserved lifecycle** — the enabled run journals a conserved
+//!    transfer lifecycle (every `complete` correlates to an `enqueue`)
+//!    and exports a Perfetto-loadable Chrome trace with every configured
+//!    lane/device as a named track; CI re-validates the emitted file with
+//!    `tools/check_trace.py`.
+//! 3. **Unified exposition** — the metrics registry renders every counter
+//!    family a [`ServerStats`] carries, plus p50/p95/p99 quantile series
+//!    for token latency and lane queue delay.
+//! 4. **Publish-before-remove** — after `quiesce()` the per-lane counters
+//!    account for every transfer and all queue gauges read zero, so a
+//!    stats/metrics snapshot taken after quiesce never under-reports.
+//!
+//! Everything lives in one `#[test]` because the recorder gate is
+//! process-global: a second concurrently-running test that moves experts
+//! would journal into the same rings and break the conservation counts.
+
+use std::sync::Arc;
+
+use adapmoe::coordinator::executor::run_layer_parallel;
+use adapmoe::coordinator::scheduler::{build_plan, ScheduleMode};
+use adapmoe::memory::host_store::HostStore;
+use adapmoe::memory::platform::Platform;
+use adapmoe::memory::quant::QuantKind;
+use adapmoe::memory::sharded_cache::{Placement, ShardedCache};
+use adapmoe::memory::transfer::{
+    LaneConfig, LanePolicy, Priority, SensitivitySnapshot, TransferEngine,
+};
+use adapmoe::obs;
+use adapmoe::obs::metrics::MetricsRegistry;
+use adapmoe::server::api::ServerStats;
+use adapmoe::tensor::Tensor;
+use adapmoe::testutil::{micro_config, synthetic_weights};
+use adapmoe::util::json::Json;
+use adapmoe::util::rng::Rng;
+use adapmoe::util::stats::LogHistogram;
+use adapmoe::util::threadpool::ThreadPool;
+
+const N_LANES: usize = 4;
+const N_DEVICES: usize = 2;
+const EXPERTS: usize = 8;
+
+fn fixture() -> (Arc<ShardedCache>, TransferEngine) {
+    let cfg = micro_config();
+    let w = synthetic_weights(&cfg, 11);
+    let store = Arc::new(HostStore::build(&cfg, &w, QuantKind::Int4).unwrap());
+    let cache = Arc::new(ShardedCache::new(
+        vec![vec![8, 8]; N_DEVICES],
+        Placement::ExpertHash,
+    ));
+    // Skewed per-lane wire clocks scramble completion order across the
+    // lane groups, same shape as the devices.rs determinism test.
+    let lanes = LaneConfig::new(N_LANES, LanePolicy::RoundRobin)
+        .with_time_scales(vec![1.2, 0.9, 0.6, 0.3]);
+    let xfer = TransferEngine::with_devices(
+        Arc::clone(&store),
+        Arc::clone(&cache),
+        Platform::preset("rtx4090").unwrap(),
+        4,
+        1.0,
+        lanes,
+    );
+    (cache, xfer)
+}
+
+fn inputs() -> (Tensor, Vec<Vec<f32>>) {
+    let cfg = micro_config();
+    let mut rng = Rng::new(33);
+    let b = 4;
+    let x = Tensor::new(
+        vec![b, cfg.d_model],
+        (0..b * cfg.d_model).map(|_| rng.f32() - 0.5).collect(),
+    )
+    .unwrap();
+    let coef: Vec<Vec<f32>> = (0..EXPERTS)
+        .map(|_| (0..b).map(|_| rng.f32()).collect())
+        .collect();
+    (x, coef)
+}
+
+/// Prefetch all of layer 0, join the in-flight transfers into a plan and
+/// drain it in arrival order. Returns the reduced output bits, the
+/// consumption order and the engine (for counter asserts).
+fn drain_once() -> (Vec<f32>, Vec<usize>, TransferEngine) {
+    let experts: Vec<usize> = (0..EXPERTS).collect();
+    let (x, coef) = inputs();
+    let (cache, xfer) = fixture();
+    for &e in &experts {
+        xfer.request((0, e), Priority::Prefetch);
+    }
+    let plan = build_plan(0, &experts, &[], &cache, &xfer);
+    assert_eq!(plan.n_pending(), EXPERTS, "in-flight prefetches must be joined");
+    let pool = ThreadPool::new(4);
+    let out = run_layer_parallel(
+        &plan,
+        &x,
+        &coef,
+        ScheduleMode::ExpertWise,
+        4,
+        &cache,
+        &xfer,
+        &pool,
+    );
+    xfer.quiesce().unwrap();
+    (out.acc.data.clone(), out.consumed.clone(), xfer)
+}
+
+#[test]
+fn recorder_is_invisible_conserved_and_metrics_cover_stats() {
+    // -- 1. disabled baseline ------------------------------------------------
+    assert!(!obs::enabled());
+    let (bits_off, _, _) = drain_once();
+    assert!(
+        obs::drain().is_empty(),
+        "disabled recorder must journal nothing"
+    );
+
+    // -- 2. enabled run: same bits, conserved lifecycle ----------------------
+    obs::enable();
+    let (bits_on, consumed, xfer) = drain_once();
+    obs::disable();
+    let events = obs::drain();
+
+    assert_eq!(
+        bits_off, bits_on,
+        "recording must not perturb output bits"
+    );
+    let (bits_off2, _, _) = drain_once();
+    assert_eq!(bits_off2, bits_off, "disabled re-run must reproduce");
+    assert_eq!(consumed.len(), EXPERTS);
+    assert_ne!(
+        consumed,
+        (0..EXPERTS).collect::<Vec<_>>(),
+        "skewed lane clocks must scramble arrival order"
+    );
+
+    let ids = |name: obs::Name| -> Vec<u64> {
+        events
+            .iter()
+            .filter(|e| e.name == name)
+            .map(|e| e.id)
+            .collect()
+    };
+    let enqueued = ids(obs::Name::Enqueue);
+    let completed = ids(obs::Name::Complete);
+    assert_eq!(enqueued.len(), EXPERTS, "one enqueue per requested expert");
+    assert_eq!(completed.len(), EXPERTS, "one complete per requested expert");
+    for id in &completed {
+        assert!(
+            enqueued.contains(id),
+            "complete {id:#x} without a matching enqueue"
+        );
+    }
+    assert!(
+        !ids(obs::Name::Admit).is_empty(),
+        "admissions must be journaled"
+    );
+    assert!(
+        events.iter().any(|e| e.name == obs::Name::Wire && e.dur_ns > 0),
+        "wire occupancy must be journaled as spans"
+    );
+    assert!(
+        !events.iter().any(|e| e.name == obs::Name::Fault),
+        "fault-free drain must journal no faults"
+    );
+    let lanes_seen: std::collections::HashSet<u64> = events
+        .iter()
+        .filter(|e| matches!(e.track, obs::Track::Lane(_)))
+        .map(|e| e.track.tid())
+        .collect();
+    assert!(
+        lanes_seen.len() >= 2,
+        "round-robin must spread events over lanes: {lanes_seen:?}"
+    );
+
+    // -- 3. Chrome trace export (CI runs tools/check_trace.py on it) ---------
+    let trace = obs::chrome_trace(&events, N_LANES, N_DEVICES);
+    std::fs::create_dir_all("target").unwrap();
+    std::fs::write("target/obs_trace.json", trace.to_string()).unwrap();
+    let parsed = Json::parse(&trace.to_string()).expect("trace is valid json");
+    let tev = parsed
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert!(tev.len() >= 3 + N_LANES + N_DEVICES + events.len());
+    let text = trace.to_string();
+    for track in ["\"lane 0\"", "\"lane 3\"", "\"device 0\"", "\"device 1\""] {
+        assert!(text.contains(track), "trace must name track {track}");
+    }
+
+    // -- 4. publish-before-remove: post-quiesce snapshots are complete -------
+    let lanes = xfer.lane_snapshots();
+    assert_eq!(
+        lanes.iter().map(|l| l.transfers).sum::<u64>(),
+        EXPERTS as u64,
+        "lane counters must account for every transfer after quiesce"
+    );
+    assert!(
+        lanes.iter().all(|l| l.queued_bytes == 0 && l.queued_jobs == 0),
+        "lane queue gauges must drain to zero: {lanes:?}"
+    );
+    assert!(
+        xfer.device_snapshots().iter().all(|d| d.queued_bytes == 0),
+        "device queue gauges must drain to zero"
+    );
+
+    // -- 5. metrics exposition covers every ServerStats family ---------------
+    let token_hist = LogHistogram::default();
+    for s in [0.0008, 0.0012, 0.0030] {
+        token_hist.record(s);
+    }
+    let lane_queue_hist = LogHistogram::default();
+    for s in [0.0001, 0.0004] {
+        lane_queue_hist.record(s);
+    }
+    let stats = ServerStats {
+        queued: 1,
+        active: 1,
+        served: 2,
+        cancelled: 1,
+        shed: 1,
+        tokens_generated: 64,
+        tokens_per_sec: 12.5,
+        token_p50_ms: 0.8,
+        token_p95_ms: token_hist.quantile(0.95) * 1e3,
+        token_p99_ms: 3.0,
+        request_p50_ms: 5.0,
+        request_p99_ms: 9.0,
+        queue_p50_ms: 0.5,
+        lane_queue_p50_ms: lane_queue_hist.quantile(0.50) * 1e3,
+        lane_queue_p95_ms: lane_queue_hist.quantile(0.95) * 1e3,
+        lane_queue_p99_ms: lane_queue_hist.quantile(0.99) * 1e3,
+        uptime_s: 1.0,
+        lanes: xfer.lane_snapshots(),
+        devices: xfer.device_snapshots(),
+        tiers: xfer.tier_snapshots(),
+        source: xfer.source_snapshot(),
+        sensitivity: SensitivitySnapshot {
+            tier_assigns: 5,
+            plans: 4,
+            evictions: 3,
+            prefetches: 2,
+            upgrades: 1,
+        },
+        token_hist,
+        lane_queue_hist,
+        ..ServerStats::default()
+    };
+    let text = MetricsRegistry::from_server_stats(&stats).render();
+    for family in [
+        "adapmoe_requests_queued",
+        "adapmoe_requests_active",
+        "adapmoe_requests_served_total",
+        "adapmoe_requests_cancelled_total",
+        "adapmoe_requests_shed_total",
+        "adapmoe_tokens_generated_total",
+        "adapmoe_tokens_per_sec",
+        "adapmoe_uptime_seconds",
+        "adapmoe_token_latency_ms",
+        "adapmoe_request_latency_ms",
+        "adapmoe_queue_wait_ms",
+        "adapmoe_lane_queue_delay_ms",
+        "adapmoe_remote_fetch_ms",
+        "adapmoe_lane_transfers_total",
+        "adapmoe_lane_bytes_total",
+        "adapmoe_lane_on_demand_total",
+        "adapmoe_lane_prefetch_total",
+        "adapmoe_lane_upgrades_total",
+        "adapmoe_lane_busy_ms_total",
+        "adapmoe_lane_queued_bytes",
+        "adapmoe_lane_queued_jobs",
+        "adapmoe_lane_health",
+        "adapmoe_lane_retries_total",
+        "adapmoe_lane_timeouts_total",
+        "adapmoe_lane_failovers_total",
+        "adapmoe_device_hits_total",
+        "adapmoe_device_misses_total",
+        "adapmoe_device_evictions_total",
+        "adapmoe_device_resident",
+        "adapmoe_device_capacity",
+        "adapmoe_device_queued_bytes",
+        "adapmoe_device_resident_bytes",
+        "adapmoe_device_capacity_bytes",
+        "adapmoe_tier_transfers_total",
+        "adapmoe_tier_bytes_total",
+        "adapmoe_tier_upgrades_total",
+        "adapmoe_source_local_bytes_total",
+        "adapmoe_source_remote_bytes_total",
+        "adapmoe_remote_faults_total",
+        "adapmoe_remote_fetches_total",
+        "adapmoe_remote_fetched_bytes_total",
+        "adapmoe_remote_batched_fetches_total",
+        "adapmoe_remote_fetch_time_ms_total",
+        "adapmoe_remote_retries_total",
+        "adapmoe_remote_checksum_failures_total",
+        "adapmoe_remote_reconnects_total",
+        "adapmoe_sensitivity_tier_assigns_total",
+        "adapmoe_sensitivity_plans_total",
+        "adapmoe_sensitivity_evictions_total",
+        "adapmoe_sensitivity_prefetches_total",
+        "adapmoe_sensitivity_upgrades_total",
+        "adapmoe_token_latency_seconds",
+        "adapmoe_lane_queue_delay_seconds",
+        "adapmoe_remote_fetch_seconds",
+    ] {
+        assert!(text.contains(family), "exposition missing family {family}:\n{text}");
+    }
+    for q in ["0.5", "0.95", "0.99"] {
+        assert!(text.contains(&format!("adapmoe_token_latency_ms{{quantile=\"{q}\"}}")));
+        assert!(text.contains(&format!("adapmoe_lane_queue_delay_ms{{quantile=\"{q}\"}}")));
+    }
+    // The drain's real int4 tier traffic rides the tier family labels.
+    assert!(text.contains("adapmoe_tier_transfers_total{tier=\"int4\"} 8\n"));
+    assert!(text.contains("adapmoe_token_latency_seconds_count 3\n"));
+}

@@ -333,6 +333,73 @@ fn stats_round_trip_is_nonempty_and_counts() {
 }
 
 #[test]
+fn metrics_exposition_and_histograms_ride_the_wire() {
+    let srv = TestServer::start(17427, 2, 0);
+
+    let (text, _q, _t) = tcp::client_request(&srv.addr, "ab", 3).unwrap();
+    assert_eq!(text, "cde");
+
+    // stats carries the new quantile fields and the raw histogram objects;
+    // the mock backend records fixed samples so the counts are known
+    let stats = tcp::client_stats(&srv.addr).unwrap();
+    for key in [
+        "token_p95_ms",
+        "lane_queue_p50_ms",
+        "lane_queue_p95_ms",
+        "lane_queue_p99_ms",
+        "fetch_p50_ms",
+        "fetch_p95_ms",
+        "fetch_p99_ms",
+    ] {
+        assert!(
+            stats.get(key).and_then(|v| v.as_f64()).unwrap() >= 0.0,
+            "{key} must ride the wire"
+        );
+    }
+    let th = adapmoe::util::stats::LogHistogram::from_json(
+        stats.get("token_hist").expect("token_hist must round-trip"),
+    );
+    assert_eq!(th.count(), 3);
+    let lh = adapmoe::util::stats::LogHistogram::from_json(
+        stats.get("lane_queue_hist").expect("lane_queue_hist must round-trip"),
+    );
+    assert_eq!(lh.count(), 2);
+    let fh = adapmoe::util::stats::LogHistogram::from_json(
+        stats.get("fetch_hist").expect("fetch_hist must round-trip"),
+    );
+    assert!(fh.is_empty(), "mock backend records no remote fetches");
+    // p95 over the mock's {10µs, 100µs, 1ms} token samples upper-bounds 1ms
+    assert!(
+        stats.get("token_p95_ms").and_then(|v| v.as_f64()).unwrap() >= 1.0,
+        "token p95 must cover the slowest recorded sample"
+    );
+
+    // the metrics op answers a Prometheus-style exposition covering every
+    // counter family plus quantile series for the recorded histograms
+    let text = tcp::client_metrics(&srv.addr).unwrap();
+    for needle in [
+        "# TYPE adapmoe_requests_served_total counter",
+        "adapmoe_requests_served_total 1",
+        "adapmoe_tokens_generated_total 3",
+        "adapmoe_uptime_seconds",
+        "adapmoe_token_latency_ms{quantile=\"0.5\"}",
+        "adapmoe_token_latency_ms{quantile=\"0.95\"}",
+        "adapmoe_token_latency_ms{quantile=\"0.99\"}",
+        "adapmoe_lane_queue_delay_ms{quantile=\"0.95\"}",
+        "adapmoe_remote_fetch_ms{quantile=\"0.99\"}",
+        "# TYPE adapmoe_token_latency_seconds histogram",
+        "adapmoe_token_latency_seconds_count 3",
+        "# TYPE adapmoe_lane_queue_delay_seconds histogram",
+        "adapmoe_lane_queue_delay_seconds_count 2",
+        "adapmoe_sensitivity_tier_assigns_total 5",
+    ] {
+        assert!(text.contains(needle), "metrics exposition missing {needle:?}:\n{text}");
+    }
+
+    srv.stop();
+}
+
+#[test]
 fn priority_and_sampling_params_ride_the_wire() {
     let srv = TestServer::start(17425, 1, 2);
 

@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Bench-regression guard for the expert-major hot path.
+
+Compares the freshly refreshed rust/BENCH_hotpath.json (written in place
+by ``cargo bench --bench micro``) against the committed copy
+(``git show HEAD:rust/BENCH_hotpath.json``). Fails when any row's
+expert-major speedup fell more than ``--tolerance`` (default 10%) below
+the committed value — a structural slowdown in the batched compute or
+coalesced transfer path shows up here even while correctness tests stay
+green. Speedups may freely improve; only regressions fail.
+
+Rows are matched on (batch, lanes). A row present in the committed table
+but missing from the refreshed one is an error (silent coverage loss);
+new rows in the refreshed table are ignored.
+
+Usage: python3 tools/check_bench.py [--file rust/BENCH_hotpath.json]
+                                    [--tolerance 0.10]
+"""
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def rows_by_key(doc):
+    return {(r["batch"], r["lanes"]): r for r in doc["rows"]}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--file", default="rust/BENCH_hotpath.json")
+    ap.add_argument("--tolerance", type=float, default=0.10)
+    args = ap.parse_args()
+
+    path = os.path.join(REPO, args.file)
+    try:
+        with open(path) as f:
+            fresh = rows_by_key(json.load(f))
+    except (OSError, ValueError, KeyError) as e:
+        print(f"check_bench: cannot load {args.file}: {e}", file=sys.stderr)
+        return 1
+
+    try:
+        committed_text = subprocess.run(
+            ["git", "show", f"HEAD:{args.file}"],
+            cwd=REPO,
+            capture_output=True,
+            text=True,
+            check=True,
+        ).stdout
+        committed = rows_by_key(json.loads(committed_text))
+    except (subprocess.CalledProcessError, ValueError, KeyError) as e:
+        print(f"check_bench: cannot load committed {args.file}: {e}", file=sys.stderr)
+        return 1
+
+    failures = []
+    for key, base in sorted(committed.items()):
+        row = fresh.get(key)
+        if row is None:
+            failures.append(f"row batch={key[0]} lanes={key[1]} vanished from {args.file}")
+            continue
+        floor = base["speedup"] * (1.0 - args.tolerance)
+        if row["speedup"] < floor:
+            failures.append(
+                f"batch={key[0]} lanes={key[1]}: speedup {row['speedup']:.3f} "
+                f"fell below {floor:.3f} (committed {base['speedup']:.3f} "
+                f"- {args.tolerance:.0%})"
+            )
+        else:
+            print(
+                f"check_bench: batch={key[0]} lanes={key[1]} speedup "
+                f"{row['speedup']:.3f} vs committed {base['speedup']:.3f} — ok"
+            )
+
+    if failures:
+        for f_ in failures:
+            print(f"check_bench: {f_}", file=sys.stderr)
+        return 1
+    print(f"check_bench: OK — {len(committed)} rows within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

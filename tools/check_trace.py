@@ -1,0 +1,124 @@
+#!/usr/bin/env python3
+"""Validate a flight-recorder Chrome trace (Perfetto JSON) export.
+
+Checks, in order:
+
+  1. the file parses as JSON and carries a non-empty ``traceEvents`` array;
+  2. within each (pid, tid) row, ``X`` spans nest properly: sorted by
+     start time, a span that begins inside an open span must also end
+     inside it (a small epsilon absorbs µs rounding from the ns journal);
+  3. the transfer lifecycle conserves: every ``complete`` event's
+     correlation id (``args.id``) also appears on an ``enqueue`` event;
+  4. ``process_name`` metadata covers every configured lane and device
+     track (``--lanes N`` / ``--devices D``), so a renamed or dropped
+     track fails loudly instead of rendering an anonymous row.
+
+Exits non-zero listing every violation. CI runs this on the trace the
+rust/tests/obs.rs drain writes to rust/target/obs_trace.json.
+
+Usage: python3 tools/check_trace.py TRACE.json --lanes 4 --devices 2
+"""
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+# µs of slack when comparing span edges: the journal stamps ns, the
+# Chrome export rounds to fractional µs.
+EPS = 0.005
+
+
+def check_nesting(events, errors):
+    rows = defaultdict(list)
+    for ev in events:
+        if ev.get("ph") == "X":
+            rows[(ev.get("pid"), ev.get("tid"))].append(ev)
+    for (pid, tid), spans in sorted(rows.items()):
+        spans.sort(key=lambda e: (e["ts"], -e.get("dur", 0.0)))
+        stack = []  # (name, start, end)
+        for ev in spans:
+            start, end = ev["ts"], ev["ts"] + ev.get("dur", 0.0)
+            while stack and start >= stack[-1][2] - EPS:
+                stack.pop()
+            if stack and end > stack[-1][2] + EPS:
+                errors.append(
+                    f"pid={pid} tid={tid}: span '{ev['name']}' "
+                    f"[{start:.3f}, {end:.3f}] overflows enclosing "
+                    f"'{stack[-1][0]}' [{stack[-1][1]:.3f}, {stack[-1][2]:.3f}]"
+                )
+            stack.append((ev["name"], start, end))
+
+
+def check_lifecycle(events, errors):
+    enqueued = set()
+    completes = []
+    for ev in events:
+        if ev.get("ph") == "M":
+            continue
+        corr = ev.get("args", {}).get("id")
+        if ev.get("name") == "enqueue":
+            enqueued.add(corr)
+        elif ev.get("name") == "complete":
+            completes.append(corr)
+    for corr in completes:
+        if corr not in enqueued:
+            errors.append(f"complete id={corr} has no matching enqueue")
+    if completes and not enqueued:
+        errors.append("trace has completes but no enqueues at all")
+
+
+def check_tracks(events, n_lanes, n_devices, errors):
+    names = {
+        ev.get("args", {}).get("name")
+        for ev in events
+        if ev.get("ph") == "M" and ev.get("name") == "process_name"
+    }
+    expected = ["decode", "server", "remote"]
+    expected += [f"lane {i}" for i in range(n_lanes)]
+    expected += [f"device {d}" for d in range(n_devices)]
+    for want in expected:
+        if want not in names:
+            errors.append(f"missing process_name metadata for track '{want}'")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="Chrome trace-event JSON file")
+    ap.add_argument("--lanes", type=int, default=1, help="configured lane count")
+    ap.add_argument("--devices", type=int, default=1, help="configured device count")
+    args = ap.parse_args()
+
+    try:
+        with open(args.trace) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check_trace: cannot load {args.trace}: {e}", file=sys.stderr)
+        return 1
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        print("check_trace: no traceEvents array", file=sys.stderr)
+        return 1
+
+    errors = []
+    check_nesting(events, errors)
+    check_lifecycle(events, errors)
+    check_tracks(events, args.lanes, args.devices, errors)
+
+    if errors:
+        for e in errors:
+            print(f"check_trace: {e}", file=sys.stderr)
+        print(f"check_trace: {len(errors)} violation(s) in {args.trace}", file=sys.stderr)
+        return 1
+    n_spans = sum(1 for e in events if e.get("ph") == "X")
+    n_inst = sum(1 for e in events if e.get("ph") == "i")
+    print(
+        f"check_trace: OK — {len(events)} entries "
+        f"({n_spans} spans, {n_inst} instants) in {args.trace}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
